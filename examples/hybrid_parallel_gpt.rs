@@ -1,0 +1,65 @@
+//! Hybrid parallelism on the simulated paper testbed (Fig 16 scenario):
+//! pick any (dp, mp, pp) factorization from the CLI and watch the compiler
+//! derive the whole communication structure from SBP hints.
+//!
+//! Run: `cargo run --release --example hybrid_parallel_gpt -- --dp 2 --mp 8 --pp 2`
+
+use oneflow::actor::Engine;
+use oneflow::compiler::{compile, CompileOptions, PhysKernel};
+use oneflow::config::Args;
+use oneflow::models::{gpt_sim, GptSimConfig};
+use oneflow::runtime::SimBackend;
+use oneflow::util::fmt;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let mut cfg = GptSimConfig::new(
+        args.usize("dp", 2),
+        args.usize("mp", 8),
+        args.usize("pp", 2),
+        args.usize("batch", 64),
+        args.usize("hidden", 3072),
+        args.usize("layers", 32),
+    );
+    cfg.checkpoint = true;
+    println!(
+        "GPT {:.1}B params on {} simulated V100s (dp={} mp={} pp={})",
+        cfg.params() / 1e9,
+        cfg.n_devices(),
+        cfg.dp,
+        cfg.mp,
+        cfg.pp
+    );
+    let (g, loss, upd) = gpt_sim(&cfg);
+    let plan = compile(&g, &[loss], &upd, &CompileOptions::default());
+    let mut allreduce = 0;
+    let mut pulls = 0;
+    for n in plan.boxing_nodes() {
+        match &n.kernel {
+            PhysKernel::Boxing { in_place, out_place, in_nd, .. } => {
+                if !in_place.same_devices(out_place) {
+                    pulls += 1;
+                } else if in_nd.0.iter().any(|s| s.is_partial()) {
+                    allreduce += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    println!(
+        "plan: {} physical ops, {} collectives ({} reduce-class, {} cross-stage pulls)",
+        plan.nodes.len(),
+        plan.boxing_count(),
+        allreduce,
+        pulls
+    );
+    let pieces = args.usize("pieces", 4);
+    let report = Engine::new(plan, Arc::new(SimBackend)).run(pieces);
+    println!(
+        "virtual iteration time {} | {} samples/s | {} moved/iter",
+        fmt::secs(report.makespan / pieces as f64),
+        (report.throughput() * cfg.global_batch as f64) as u64,
+        fmt::bytes(report.comm_bytes / pieces as f64),
+    );
+}

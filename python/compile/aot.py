@@ -1,0 +1,100 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO **text** artifacts the rust
+runtime loads via PJRT (`rust/src/runtime/pjrt.rs`).
+
+Text, not `.serialize()`: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which the bundled xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--dp N] [--layers L] ...
+
+Emits:
+    artifacts/gpt_train.hlo.txt   train step for one dp shard:
+                                  (params..., ids, labels) ->
+                                  (loss_vec, grads...)
+    artifacts/gpt_meta.json       shapes/dtypes/param list for the rust side
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import GptConfig, train_step_sum_grads
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--dp", type=int, default=1, help="data-parallel shards")
+    ap.add_argument("--batch", type=int, default=8, help="global batch size")
+    ap.add_argument("--vocab", type=int, default=256)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--heads", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = GptConfig(
+        vocab=args.vocab,
+        seq=args.seq,
+        d_model=args.d_model,
+        n_layers=args.layers,
+        n_heads=args.heads,
+    )
+    assert args.batch % args.dp == 0, "global batch must divide by dp"
+    shard_b = args.batch // args.dp
+
+    os.makedirs(args.out, exist_ok=True)
+
+    def step(*flat):
+        n = len(cfg.param_shapes())
+        params = list(flat[:n])
+        ids, labels = flat[n], flat[n + 1]
+        return tuple(train_step_sum_grads(params, ids, labels, cfg))
+
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in cfg.param_shapes()]
+    specs.append(jax.ShapeDtypeStruct((shard_b, cfg.seq), jnp.int32))
+    specs.append(jax.ShapeDtypeStruct((shard_b, cfg.seq), jnp.int32))
+    lowered = jax.jit(step).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(args.out, "gpt_train.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+
+    meta = {
+        "vocab": cfg.vocab,
+        "seq": cfg.seq,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "dp": args.dp,
+        "global_batch": args.batch,
+        "shard_batch": shard_b,
+        "param_shapes": [list(s) for s in cfg.param_shapes()],
+        "param_count": int(cfg.param_count()),
+        "artifact": "gpt_train.hlo.txt",
+        "outputs": "loss_vec(shard_b*seq), then grads per param (summed loss)",
+    }
+    with open(os.path.join(args.out, "gpt_meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(
+        f"wrote {path} ({len(text) / 1e6:.1f} MB HLO text), "
+        f"{meta['param_count'] / 1e6:.2f}M params, shard batch {shard_b}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""L1 Pallas kernel: fused MatMul + bias + activation.
+
+The TPU re-think of the CUDA fused-GEMM epilogue (DESIGN.md
+§Hardware-Adaptation): BlockSpecs move (bm, bk) x (bk, bn) tiles HBM->VMEM;
+the K grid dimension is innermost ("arbitrary" semantics) so the output tile
+stays resident in VMEM as the accumulator across the reduction — the role
+the threadblock's shared-memory accumulator plays on GPU — and the bias +
+activation epilogue runs once, in-register, when the last K tile retires.
+This is the kernel-fusion mechanism the paper credits for OneFlow's
+single-device edge over Megatron-LM (§6.5).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU efficiency is *estimated* from the BlockSpec (see
+EXPERIMENTS.md §Perf and `vmem_footprint_bytes`).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SQRT_2_OVER_PI = 0.7978845608028654
+
+
+def _gelu(y):
+    return 0.5 * y * (1.0 + jnp.tanh(SQRT_2_OVER_PI * (y + 0.044715 * y * y * y)))
+
+
+def _apply_act(y, act):
+    if act == "gelu":
+        return _gelu(y)
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    return y
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, nk, act):
+    """One (i, j, k) grid step: accumulate into the resident output tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = _apply_act(o_ref[...] + b_ref[...][None, :], act)
+
+
+def _pick_block(n, target):
+    """Largest divisor of n that is <= target (tiles must divide evenly)."""
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("act", "bm", "bn", "bk"))
+def fused_matmul_bias_act(x, w, b, act="gelu", bm=128, bn=128, bk=128):
+    """`act(x @ w + b)` as a single Pallas kernel (forward only).
+
+    Block sizes default to the MXU-friendly 128 and shrink to divisors of the
+    problem for small shapes.
+    """
+    m, kdim = x.shape
+    k2, n = w.shape
+    assert kdim == k2 and b.shape == (n,)
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(kdim, bk)
+    nk = kdim // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, act="gelu"):
+    """Differentiable fused linear layer: Pallas forward, analytic backward."""
+    return fused_matmul_bias_act(x, w, b, act)
+
+
+def _fwd(x, w, b, act):
+    return fused_matmul_bias_act(x, w, b, act), (x, w, b)
+
+
+def _bwd(act, res, dy):
+    x, w, b = res
+    pre = x @ w + b[None, :]
+    if act == "gelu":
+        u = SQRT_2_OVER_PI * (pre + 0.044715 * pre**3)
+        t = jnp.tanh(u)
+        du = SQRT_2_OVER_PI * (1.0 + 3 * 0.044715 * pre * pre)
+        dact = 0.5 * (1.0 + t) + 0.5 * pre * (1.0 - t * t) * du
+    elif act == "relu":
+        dact = (pre > 0).astype(pre.dtype)
+    else:
+        dact = jnp.ones_like(pre)
+    dpre = dy * dact
+    return dpre @ w.T, x.T @ dpre, dpre.sum(axis=0)
+
+
+fused_linear.defvjp(_fwd, _bwd)
+
+
+def vmem_footprint_bytes(bm=128, bn=128, bk=128, dtype_bytes=4):
+    """Estimated VMEM residency of one grid step: x tile + w tile + out tile
+    (+ bias). Used by EXPERIMENTS.md §Perf to check the BlockSpec fits the
+    ~16 MiB VMEM budget of a TPU core with double-buffering headroom."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn + bn)
+
+
+def mxu_utilization_estimate(bm=128, bn=128, bk=128):
+    """Fraction of MXU-issue slots doing useful work for one step, assuming
+    128x128 systolic tiles: full when all block dims are multiples of 128."""
+    eff = 1.0
+    for d in (bm, bn, bk):
+        eff *= min(d, 128) / 128.0 if d < 128 else 1.0
+    return eff

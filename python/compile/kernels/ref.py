@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+signal (pytest compares kernel output and gradients against these)."""
+
+import jax
+import jax.numpy as jnp
+
+SQRT_2_OVER_PI = 0.7978845608028654
+
+
+def gelu(y):
+    """tanh-approximation GELU (matches the rust native kernel)."""
+    return 0.5 * y * (1.0 + jnp.tanh(SQRT_2_OVER_PI * (y + 0.044715 * y**3)))
+
+
+def fused_linear_ref(x, w, b, act="gelu"):
+    y = x @ w + b[None, :]
+    if act == "gelu":
+        return gelu(y)
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    return y
+
+
+def softmax_xent_ref(logits, labels):
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return lse - ll

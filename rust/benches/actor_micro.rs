@@ -1,0 +1,68 @@
+//! Actor-runtime microbenchmarks (§Perf): message throughput, per-action
+//! scheduling overhead, and compile latency for a paper-scale plan. These
+//! are the numbers behind the `dispatch_overhead` the baseline profiles use.
+
+use oneflow::actor::Engine;
+use oneflow::bench::{time_n, Table};
+use oneflow::compiler::{compile, CompileOptions};
+use oneflow::graph::{LogicalGraph, OpKind};
+use oneflow::models::{gpt_sim, GptSimConfig};
+use oneflow::placement::Placement;
+use oneflow::runtime::SimBackend;
+use oneflow::sbp::{s, NdSbp};
+use oneflow::tensor::DType;
+use oneflow::util::fmt;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn chain_plan(len: usize, ndev: usize) -> oneflow::compiler::PhysPlan {
+    let p = Placement::node(0, ndev);
+    let mut g = LogicalGraph::new();
+    let mut t = g.add1("x", OpKind::Input { shape: [ndev, 4].into(), dtype: DType::F32 }, &[], p.clone());
+    g.hint_tensor(t, NdSbp::d1(s(0)));
+    for i in 0..len {
+        t = g.add1(format!("id{i}"), OpKind::Identity, &[t], p.clone());
+    }
+    compile(&g, &[t], &HashMap::new(), &CompileOptions { fuse: false, ..Default::default() })
+}
+
+fn main() {
+    let mut tab = Table::new("Actor runtime microbenchmarks", &["metric", "value"]);
+
+    // 1. end-to-end actions/second through the full protocol (1 queue thread)
+    let pieces = 200;
+    let plan = chain_plan(64, 1);
+    let timing = time_n(1, 5, || {
+        let engine = Engine::new(plan.clone(), Arc::new(SimBackend));
+        let r = engine.run(pieces);
+        assert_eq!(r.pieces, pieces);
+    });
+    let actions = (64 + 2) * pieces; // +input +fetch
+    let per_action = timing.mean_secs / actions as f64;
+    tab.row(&["chain actions/s (1 thread)".into(), fmt::rate(1.0 / per_action)]);
+    tab.row(&["per-action overhead".into(), fmt::secs(per_action)]);
+
+    // 2. cross-thread message cost: same chain split over 4 devices
+    let plan4 = chain_plan(64, 4);
+    let t4 = time_n(1, 5, || {
+        let engine = Engine::new(plan4.clone(), Arc::new(SimBackend));
+        engine.run(pieces);
+    });
+    let actions4 = (64 + 2) * pieces * 4;
+    tab.row(&["per-action overhead (4 queue threads)".into(), fmt::secs(t4.mean_secs / actions4 as f64)]);
+
+    // 3. compiler latency on a paper-scale plan (GPT 2x8x2 hybrid = 32 dev)
+    let mut cfg = GptSimConfig::new(2, 8, 2, 64, 2304, 24);
+    cfg.devs_per_node = 8;
+    let tc = time_n(1, 3, || {
+        let (g, loss, upd) = gpt_sim(&cfg);
+        let plan = compile(&g, &[loss], &upd, &CompileOptions::default());
+        assert!(plan.nodes.len() > 500);
+    });
+    let (g, loss, upd) = gpt_sim(&cfg);
+    let plan = compile(&g, &[loss], &upd, &CompileOptions::default());
+    tab.row(&["GPT 32-dev compile latency".into(), fmt::secs(tc.mean_secs)]);
+    tab.row(&["  physical ops".into(), plan.nodes.len().to_string()]);
+    tab.row(&["  boxing ops".into(), plan.boxing_count().to_string()]);
+    tab.print();
+}

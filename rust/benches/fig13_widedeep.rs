@@ -1,0 +1,56 @@
+//! Fig 13 reproduction: Wide & Deep vs HugeCTR — per-iteration latency and
+//! per-device memory as vocabulary grows. Paper shape: OneFlow lower latency
+//! and memory; HugeCTR OOMs past 51.2M ids (16 GB devices).
+
+use oneflow::actor::Engine;
+use oneflow::baselines::Framework;
+use oneflow::bench::Table;
+use oneflow::compiler::compile;
+use oneflow::exec::DeviceModel;
+use oneflow::models::wide_deep::{table_bytes, wide_deep};
+use oneflow::placement::Placement;
+use oneflow::runtime::SimBackend;
+use oneflow::util::fmt;
+use std::sync::Arc;
+
+fn main() {
+    let ndev = 8;
+    let pl = Placement::node(0, ndev);
+    let mut tab = Table::new(
+        "Fig 13 — Wide&Deep on 8 GPUs vs vocabulary size",
+        &["vocab (M)", "OneFlow latency", "OneFlow mem/GPU", "HugeCTR latency", "HugeCTR mem/GPU"],
+    );
+    for vocab_m in [3.2f64, 6.4, 12.8, 25.6, 51.2, 102.4] {
+        let vocab = (vocab_m * 1e6) as usize;
+        let (g, loss, upd) = wide_deep(vocab, 512, &pl);
+        let plan = compile(&g, &[loss], &upd, &Framework::OneFlow.compile_options());
+        let mem = plan.peak_device_memory();
+        let report = Engine::new(plan, Arc::new(SimBackend)).run(4);
+        let lat = report.makespan / 4.0;
+        // HugeCTR profile: same plan structure, unfused + dispatcher overhead
+        let (g2, loss2, upd2) = wide_deep(vocab, 512, &pl);
+        let plan2 = compile(&g2, &[loss2], &upd2, &Framework::HugeCtr.compile_options());
+        let report2 = Engine::new(plan2, Arc::new(SimBackend)).run(4);
+        let hugectr_lat = report2.makespan / 4.0;
+
+        // HugeCTR: sharded table but replicated fp32 optimizer copies for the
+        // dense part plus per-device all-gather buffers for the full batch's
+        // embeddings (its "localized slot" design), ~2x working buffers.
+        let hugectr_mem = table_bytes(vocab, 2.0) / ndev as f64 // table + states
+            + 512.0 * 26.0 * 16.0 * 4.0 * ndev as f64 // gather buffers
+            + 0.4e9; // dense replica + workspace
+        let cap = DeviceModel::v100().mem_bytes as f64;
+        let oom = hugectr_mem > cap;
+        tab.row(&[
+            format!("{vocab_m}"),
+            fmt::secs(lat),
+            fmt::bytes(mem),
+            if oom { "OOM".into() } else { fmt::secs(hugectr_lat) },
+            if oom { format!("OOM ({})", fmt::bytes(hugectr_mem)) } else { fmt::bytes(hugectr_mem) },
+        ]);
+        // compile-time check mirrors the paper: OneFlow survives 102.4M
+        assert!(mem < cap, "OneFlow OOM at {vocab_m}M ids");
+    }
+    tab.print();
+    println!("\npaper shape: OneFlow lower latency + memory; HugeCTR OOM beyond 51.2M ids");
+}

@@ -1,0 +1,124 @@
+//! Actor addressing (paper §5, Fig 8): a hierarchically-encoded 64-bit actor
+//! ID. The node, hardware queue and per-queue OS thread an actor is bound to
+//! are parseable from bit fields of its ID, so attaching the receiver's ID to
+//! a message suffices to route it.
+
+use crate::exec::QueueKind;
+
+/// 64-bit actor address: `node(16) | queue_kind(8) | device(8) | local(32)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ActorAddr(pub u64);
+
+/// The OS-thread key an actor is statically bound to: one dedicated thread
+/// per (node, device, hardware queue), mirroring the paper's "dedicated OS
+/// thread for each hardware queue".
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ThreadKey {
+    pub node: u16,
+    pub queue: QueueKind,
+    pub device: u8,
+}
+
+fn queue_code(q: QueueKind) -> u8 {
+    match q {
+        QueueKind::Compute => 0,
+        QueueKind::H2D => 1,
+        QueueKind::D2H => 2,
+        QueueKind::HostCpu => 3,
+        QueueKind::Disk => 4,
+        QueueKind::Net => 5,
+    }
+}
+
+fn queue_from_code(c: u8) -> QueueKind {
+    match c {
+        0 => QueueKind::Compute,
+        1 => QueueKind::H2D,
+        2 => QueueKind::D2H,
+        3 => QueueKind::HostCpu,
+        4 => QueueKind::Disk,
+        5 => QueueKind::Net,
+        _ => panic!("bad queue code {c}"),
+    }
+}
+
+impl ActorAddr {
+    /// Encode an address from its hierarchical parts.
+    pub fn new(node: u16, queue: QueueKind, device: u8, local: u32) -> Self {
+        let v = ((node as u64) << 48)
+            | ((queue_code(queue) as u64) << 40)
+            | ((device as u64) << 32)
+            | local as u64;
+        ActorAddr(v)
+    }
+
+    pub fn node(self) -> u16 {
+        (self.0 >> 48) as u16
+    }
+
+    pub fn queue(self) -> QueueKind {
+        queue_from_code(((self.0 >> 40) & 0xFF) as u8)
+    }
+
+    pub fn device(self) -> u8 {
+        ((self.0 >> 32) & 0xFF) as u8
+    }
+
+    pub fn local(self) -> u32 {
+        (self.0 & 0xFFFF_FFFF) as u32
+    }
+
+    /// The OS thread this actor is bound to — pure bit-field parsing, the
+    /// "ID translation mechanism" of §5.
+    pub fn thread(self) -> ThreadKey {
+        ThreadKey { node: self.node(), queue: self.queue(), device: self.device() }
+    }
+}
+
+impl std::fmt::Display for ActorAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "n{}:{:?}:d{}:a{}", self.node(), self.queue(), self.device(), self.local())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn fig8_roundtrip_fields() {
+        let a = ActorAddr::new(3, QueueKind::Net, 7, 12345);
+        assert_eq!(a.node(), 3);
+        assert_eq!(a.queue(), QueueKind::Net);
+        assert_eq!(a.device(), 7);
+        assert_eq!(a.local(), 12345);
+        assert_eq!(a.thread(), ThreadKey { node: 3, queue: QueueKind::Net, device: 7 });
+    }
+
+    #[test]
+    fn encoding_is_injective_property() {
+        prop::check(
+            "actor addr encode/decode roundtrip",
+            200,
+            |r| {
+                let node = r.below(1 << 16) as u16;
+                let dev = r.below(1 << 8) as u8;
+                let local = r.next_u64() as u32;
+                let q = *r.choose(&[
+                    QueueKind::Compute,
+                    QueueKind::H2D,
+                    QueueKind::D2H,
+                    QueueKind::HostCpu,
+                    QueueKind::Disk,
+                    QueueKind::Net,
+                ]);
+                (node, q, dev, local)
+            },
+            |&(node, q, dev, local)| {
+                let a = ActorAddr::new(node, q, dev, local);
+                a.node() == node && a.queue() == q && a.device() == dev && a.local() == local
+            },
+        );
+    }
+}

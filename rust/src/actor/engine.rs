@@ -1,0 +1,433 @@
+//! The runtime engine: spawns one OS thread per hardware queue (paper §5),
+//! binds actors to threads by their address bit-fields, routes messages
+//! through local queues (same thread) or the message bus (cross-thread /
+//! cross-node), and aggregates metrics.
+
+use super::addr::{ActorAddr, ThreadKey};
+use super::msg::{Envelope, Msg};
+use super::{set_slots, Actor, Ctx};
+use crate::compiler::{InputBinding, PhysPlan, RegId};
+use crate::exec::QueueKind;
+use crate::graph::{NodeId, TensorId};
+use crate::runtime::Backend;
+use crate::sbp::gather;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Per-piece logical input provider (real-execution mode).
+pub trait DataSource: Send + Sync {
+    fn logical(&self, input: &InputBinding, piece: usize) -> Tensor;
+}
+
+/// A [`DataSource`] from a closure.
+pub struct FnSource<F: Fn(&InputBinding, usize) -> Tensor + Send + Sync>(pub F);
+
+impl<F: Fn(&InputBinding, usize) -> Tensor + Send + Sync> DataSource for FnSource<F> {
+    fn logical(&self, input: &InputBinding, piece: usize) -> Tensor {
+        (self.0)(input, piece)
+    }
+}
+
+/// Run options.
+#[derive(Clone, Debug)]
+pub struct RunOptions {
+    pub pieces: usize,
+    /// Wall-clock budget; exceeded ⇒ `Err` (deadlock detection in tests).
+    pub timeout: Option<Duration>,
+}
+
+/// Aggregated run results.
+#[derive(Debug, Default)]
+pub struct RunReport {
+    pub pieces: usize,
+    /// Virtual makespan on the modeled cluster (seconds).
+    pub makespan: f64,
+    /// Host wall-clock the run took.
+    pub wall: Duration,
+    pub actions: u64,
+    /// Messages delivered via the thread-local queue (paper Fig 7 case ①).
+    pub local_msgs: u64,
+    /// Messages via the bus within a node (cases ②–④).
+    pub remote_msgs: u64,
+    /// Messages that crossed nodes (cases ⑤–⑦ — the CommNet path).
+    pub cross_node_msgs: u64,
+    /// Bytes moved by boxing collectives (Table 2 accounting).
+    pub comm_bytes: f64,
+    /// Virtual busy-seconds per hardware-queue thread.
+    pub queue_busy: HashMap<ThreadKey, f64>,
+    /// Gathered logical value per fetched tensor, indexed by piece
+    /// (real-execution mode only).
+    pub fetched: HashMap<TensorId, Vec<Tensor>>,
+}
+
+impl RunReport {
+    /// Pieces per virtual second — the simulated-cluster throughput.
+    pub fn throughput(&self) -> f64 {
+        self.pieces as f64 / self.makespan.max(1e-30)
+    }
+
+    /// Max virtual busy-seconds over threads of one queue kind.
+    pub fn busy(&self, queue: QueueKind) -> f64 {
+        self.queue_busy
+            .iter()
+            .filter(|(k, _)| k.queue == queue)
+            .map(|(_, v)| *v)
+            .fold(0.0, f64::max)
+    }
+}
+
+enum Control {
+    Done,
+    Fetched(TensorId, usize, super::Piece),
+    Stats {
+        busy: HashMap<ThreadKey, f64>,
+        actions: u64,
+        local: u64,
+        remote: u64,
+        cross: u64,
+        bytes: f64,
+        last_ts: f64,
+    },
+}
+
+/// The runtime engine (see module docs).
+pub struct Engine {
+    plan: Arc<PhysPlan>,
+    backend: Arc<dyn Backend>,
+    source: Option<Arc<dyn DataSource>>,
+}
+
+impl Engine {
+    pub fn new(plan: PhysPlan, backend: Arc<dyn Backend>) -> Self {
+        Engine { plan: Arc::new(plan), backend, source: None }
+    }
+
+    /// Attach a data source (real-execution mode).
+    pub fn with_source(mut self, s: Arc<dyn DataSource>) -> Self {
+        self.source = Some(s);
+        self
+    }
+
+    pub fn plan(&self) -> &PhysPlan {
+        &self.plan
+    }
+
+    /// Run `pieces` mini-batches to completion.
+    pub fn run(&self, pieces: usize) -> RunReport {
+        self.run_with(RunOptions { pieces, timeout: Some(Duration::from_secs(120)) })
+            .expect("runtime deadlock or timeout")
+    }
+
+    /// Run with explicit options; `Err` on timeout.
+    pub fn run_with(&self, opts: RunOptions) -> Result<RunReport, String> {
+        let pieces = opts.pieces;
+        if pieces == 0 {
+            return Ok(RunReport::default());
+        }
+        let plan = self.plan.clone();
+
+        // ---- address assignment (Fig 8) ----
+        let addr_of = |n: &crate::compiler::PhysNode| -> ActorAddr {
+            let dev = match n.queue {
+                QueueKind::Compute | QueueKind::H2D | QueueKind::D2H => n.device.dev as u8,
+                _ => 0, // per-node queues (Net / HostCpu / Disk)
+            };
+            ActorAddr::new(n.device.node as u16, n.queue, dev, n.id.0 as u32)
+        };
+        let addrs: Vec<ActorAddr> = plan.nodes.iter().map(addr_of).collect();
+
+        // ---- producer / consumer maps ----
+        let mut producer_of: HashMap<RegId, ActorAddr> = HashMap::new();
+        for r in &plan.regs {
+            producer_of.insert(r.id, addrs[r.producer.0]);
+        }
+        let mut consumers_of: HashMap<RegId, Vec<ActorAddr>> = HashMap::new();
+        for n in &plan.nodes {
+            let mut seen: Vec<RegId> = vec![];
+            for reg in n.inputs.iter().map(|&(r, _)| r).chain(n.controls.iter().copied()) {
+                if !seen.contains(&reg) {
+                    seen.push(reg);
+                    consumers_of.entry(reg).or_default().push(addrs[n.id.0]);
+                }
+            }
+            if let Some((ureg, _)) = n.update_from {
+                if !seen.contains(&ureg) {
+                    consumers_of.entry(ureg).or_default().push(addrs[n.id.0]);
+                }
+            }
+        }
+
+        // ---- build actors, grouped by thread ----
+        let mut thread_keys: Vec<ThreadKey> = addrs.iter().map(|a| a.thread()).collect();
+        thread_keys.sort();
+        thread_keys.dedup();
+        let tindex: Arc<HashMap<ThreadKey, usize>> =
+            Arc::new(thread_keys.iter().enumerate().map(|(i, k)| (*k, i)).collect());
+        let mut per_thread: Vec<Vec<Actor>> = (0..thread_keys.len()).map(|_| vec![]).collect();
+
+        let has_data = self.backend.has_data();
+        let mut init_values: HashMap<usize, super::Piece> = HashMap::new();
+        if has_data {
+            for vb in &plan.vars {
+                let mut rng = Rng::new(plan.options.seed ^ (vb.node.0 as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let logical = Tensor::randn(vb.shape.clone(), vb.dtype, vb.init_std, &mut rng);
+                let shards = crate::sbp::scatter(&logical, &vb.nd_sbp, &vb.placement.hierarchy);
+                for (i, &pid) in vb.phys.iter().enumerate() {
+                    init_values.insert(pid.0, Arc::new(vec![shards[i].clone()]));
+                }
+            }
+        }
+        for node in plan.nodes.iter() {
+            let addr = addrs[node.id.0];
+            let consumers = consumers_of.get(&node.out_reg).cloned().unwrap_or_default();
+            let mut actor = Actor::new(node.clone(), addr, &producer_of, consumers, pieces);
+            set_slots(&mut actor, plan.regs[node.out_reg.0].slots);
+            if let Some(v) = init_values.remove(&node.id.0) {
+                actor.set_var_value(v);
+            }
+            per_thread[tindex[&addr.thread()]].push(actor);
+        }
+
+        // ---- channels (the message bus) ----
+        let mut senders: Vec<mpsc::Sender<Envelope>> = vec![];
+        let mut receivers: VecDeque<mpsc::Receiver<Envelope>> = VecDeque::new();
+        for _ in &thread_keys {
+            let (tx, rx) = mpsc::channel();
+            senders.push(tx);
+            receivers.push_back(rx);
+        }
+        let senders = Arc::new(senders);
+        let (ctl_tx, ctl_rx) = mpsc::channel::<Control>();
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        // ---- shared input scatter cache ----
+        let input_bindings: Arc<HashMap<NodeId, InputBinding>> =
+            Arc::new(plan.inputs.iter().map(|b| (b.node, b.clone())).collect());
+        let scatter_cache: Arc<Mutex<HashMap<(usize, usize), Vec<Tensor>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+
+        let started = Instant::now();
+        let n_actors = plan.nodes.len();
+        let mut handles = vec![];
+        for (ti, key) in thread_keys.iter().enumerate() {
+            let actors = std::mem::take(&mut per_thread[ti]);
+            let rx = receivers.pop_front().unwrap();
+            let senders = senders.clone();
+            let tindex = tindex.clone();
+            let ctl = ctl_tx.clone();
+            let stop = shutdown.clone();
+            let backend = self.backend.clone();
+            let plan = plan.clone();
+            let key = *key;
+            let cache = scatter_cache.clone();
+            let src = self.source.clone();
+            let bindings = input_bindings.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("of-{:?}-n{}d{}", key.queue, key.node, key.device))
+                    .spawn(move || {
+                        thread_main(
+                            actors, rx, senders, tindex, ctl, stop, backend, plan, key, cache,
+                            src, bindings,
+                        )
+                    })
+                    .expect("spawn queue thread"),
+            );
+        }
+        drop(ctl_tx);
+
+        // ---- main loop: collect control traffic ----
+        let deadline = opts.timeout.map(|t| started + t);
+        let mut done = 0usize;
+        let mut report = RunReport { pieces, ..Default::default() };
+        let mut fetched_raw: HashMap<TensorId, Vec<(usize, super::Piece)>> = HashMap::new();
+        let mut stats_seen = 0usize;
+        let total_threads = handles.len();
+        loop {
+            let msg = match deadline {
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        shutdown.store(true, Ordering::SeqCst);
+                        for h in handles {
+                            let _ = h.join();
+                        }
+                        return Err(format!(
+                            "timeout: {done}/{n_actors} actors finished after {:?}",
+                            started.elapsed()
+                        ));
+                    }
+                    match ctl_rx.recv_timeout(d - now) {
+                        Ok(m) => m,
+                        Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                None => match ctl_rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                },
+            };
+            match msg {
+                Control::Done => {
+                    done += 1;
+                    if done == n_actors {
+                        shutdown.store(true, Ordering::SeqCst);
+                    }
+                }
+                Control::Fetched(t, piece, data) => {
+                    fetched_raw.entry(t).or_default().push((piece, data));
+                }
+                Control::Stats { busy, actions, local, remote, cross, bytes, last_ts } => {
+                    for (k, v) in busy {
+                        *report.queue_busy.entry(k).or_default() += v;
+                    }
+                    report.actions += actions;
+                    report.local_msgs += local;
+                    report.remote_msgs += remote;
+                    report.cross_node_msgs += cross;
+                    report.comm_bytes += bytes;
+                    report.makespan = report.makespan.max(last_ts);
+                    stats_seen += 1;
+                    if stats_seen == total_threads {
+                        break;
+                    }
+                }
+            }
+        }
+        report.wall = started.elapsed();
+
+        // gather fetched shards back to logical values
+        if has_data {
+            for f in &plan.fetches {
+                if let Some(mut raw) = fetched_raw.remove(&f.tensor) {
+                    raw.sort_by_key(|(p, _)| *p);
+                    let vals = raw
+                        .into_iter()
+                        .map(|(_, piece)| {
+                            gather(piece.as_ref(), &f.nd_sbp, &f.placement.hierarchy)
+                        })
+                        .collect();
+                    report.fetched.insert(f.tensor, vals);
+                }
+            }
+        }
+        Ok(report)
+    }
+}
+
+/// One hardware-queue OS thread: poll the bus, prefer the local queue, run
+/// actor state machines inline (the thread *is* the FIFO hardware queue).
+#[allow(clippy::too_many_arguments)]
+fn thread_main(
+    mut actors: Vec<Actor>,
+    rx: mpsc::Receiver<Envelope>,
+    senders: Arc<Vec<mpsc::Sender<Envelope>>>,
+    tindex: Arc<HashMap<ThreadKey, usize>>,
+    ctl: mpsc::Sender<Control>,
+    stop: Arc<AtomicBool>,
+    backend: Arc<dyn Backend>,
+    plan: Arc<PhysPlan>,
+    key: ThreadKey,
+    cache: Arc<Mutex<HashMap<(usize, usize), Vec<Tensor>>>>,
+    src: Option<Arc<dyn DataSource>>,
+    bindings: Arc<HashMap<NodeId, InputBinding>>,
+) {
+    let feeder = move |nid: NodeId, shard: usize, piece: usize| -> Vec<Tensor> {
+        let Some(src) = &src else { return vec![] };
+        let binding = &bindings[&nid];
+        let mut cache = cache.lock().unwrap();
+        let shards = cache.entry((nid.0, piece)).or_insert_with(|| {
+            let logical = src.logical(binding, piece);
+            assert_eq!(
+                logical.shape, binding.shape,
+                "data source fed input `{}` a wrong-shaped batch",
+                binding.name
+            );
+            crate::sbp::scatter(&logical, &binding.nd_sbp, &binding.placement.hierarchy)
+        });
+        vec![shards[shard].clone()]
+    };
+    let mut ctx = Ctx {
+        backend: backend.as_ref(),
+        plan: &plan,
+        queue_free: 0.0,
+        feeder: &feeder,
+        data: backend.has_data(),
+    };
+    let local_index: HashMap<ActorAddr, usize> =
+        actors.iter().enumerate().map(|(i, a)| (a.addr, i)).collect();
+    let mut local: VecDeque<Envelope> = VecDeque::new();
+    for a in actors.iter() {
+        local.push_back(Envelope { to: a.addr, msg: Msg::Kick });
+    }
+    let (mut n_local, mut n_remote, mut n_cross) = (0u64, 0u64, 0u64);
+    let mut bytes = 0.0f64;
+    let mut actions = 0u64;
+    let mut last_ts = 0.0f64;
+    let mut busy_secs = 0.0f64;
+    loop {
+        let env = if let Some(e) = local.pop_front() {
+            e
+        } else {
+            match rx.recv_timeout(Duration::from_micros(200)) {
+                Ok(e) => e,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    continue;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        };
+        let Some(&ai) = local_index.get(&env.to) else {
+            panic!("thread {key:?} got message for foreign actor {}", env.to)
+        };
+        let fx = actors[ai].handle(env.msg, &mut ctx);
+        for (dur, moved) in fx.executed {
+            actions += 1;
+            bytes += moved;
+            busy_secs += dur;
+        }
+        last_ts = last_ts.max(actors[ai].last_ts);
+        if let crate::compiler::PhysKernel::Fetch { tensor } = actors[ai].node.kernel {
+            for (piece, data) in fx.fetched {
+                let _ = ctl.send(Control::Fetched(tensor, piece, data));
+            }
+        }
+        if fx.done {
+            let _ = ctl.send(Control::Done);
+        }
+        for out in fx.outgoing {
+            let tkey = out.to.thread();
+            if tkey == key {
+                n_local += 1;
+                local.push_back(out);
+            } else {
+                if tkey.node != key.node {
+                    n_cross += 1;
+                } else {
+                    n_remote += 1;
+                }
+                // the message bus (paper Fig 7): id-addressed routing
+                let _ = senders[tindex[&tkey]].send(out);
+            }
+        }
+    }
+    let mut busy = HashMap::new();
+    busy.insert(key, busy_secs);
+    let _ = ctl.send(Control::Stats {
+        busy,
+        actions,
+        local: n_local,
+        remote: n_remote,
+        cross: n_cross,
+        bytes,
+        last_ts,
+    });
+}

@@ -1,0 +1,353 @@
+//! The **actor runtime** (paper §4–5).
+//!
+//! One actor wraps each physical op. An actor owns:
+//! * *registers* — its `out` register has a fixed slot quota decided at
+//!   compile time (the memory plan); its `in` registers are views of
+//!   producers' out registers;
+//! * *counters* — the `in counter` (ready pieces per in register), the
+//!   `out counter` (free slots) and a `reference counter` per in-flight
+//!   piece (outstanding consumer acks);
+//! * *messages* — `Req` producer→consumer (a new piece is readable) and
+//!   `Ack` consumer→producer (the piece is no longer needed);
+//! * a *state machine* — an action fires iff every in counter has the next
+//!   piece **and** the out counter is non-zero. This makes resource
+//!   availability an explicit scheduling dependency (paper §4.2) and yields
+//!   credit-based back-pressure and pipelining for free (§4.3, Fig 6).
+//!
+//! Virtual time rides on the protocol: every `Req`/`Ack` carries a
+//! timestamp; an action starts at `max(input ts, queue-free ts, slot-free
+//! ts)` and ends after the hardware-model duration. Because the algebra is
+//! (max, +), the resulting makespan is independent of OS-thread
+//! interleaving — the runtime is simultaneously a real executor and a
+//! deterministic discrete-event simulator of the paper's cluster.
+
+pub mod addr;
+pub mod msg;
+pub mod engine;
+
+pub use addr::{ActorAddr, ThreadKey};
+pub use engine::{DataSource, Engine, FnSource, RunOptions, RunReport};
+pub use msg::{Envelope, Msg};
+
+use crate::compiler::{PhysKernel, PhysNode, PhysPlan, RegId};
+use crate::runtime::{action_secs, boxing_bytes, Backend};
+use crate::tensor::Tensor;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+/// Slot contents: all outputs of one action (Arc-shared with consumers —
+/// the zero-copy mechanism §4.2's mutual exclusion makes safe).
+pub type Piece = Arc<Vec<Tensor>>;
+
+/// One in-register view: pieces received from a producer's out register.
+struct InReg {
+    reg: RegId,
+    /// Pieces arrive tagged; consumed strictly in piece order.
+    ready: HashMap<usize, (Option<Piece>, f64)>,
+    /// Piece offset: a value tagged `k` satisfies demand for piece
+    /// `k + offset` (1 for the variable-update back edge).
+    offset: usize,
+    /// Producer actor (ack destination).
+    producer: ActorAddr,
+}
+
+/// Runtime state of one actor.
+pub struct Actor {
+    pub addr: ActorAddr,
+    pub node: PhysNode,
+    in_regs: Vec<InReg>,
+    /// Consumers of our out register.
+    consumers: Vec<ActorAddr>,
+    /// Free-slot pool: virtual times at which each free slot became free.
+    free_slots: VecDeque<f64>,
+    /// Outstanding acks per in-flight piece, with the max ack ts seen.
+    pending_acks: HashMap<usize, (usize, f64)>,
+    /// Next piece index to produce.
+    next_piece: usize,
+    /// Total pieces to process.
+    total_pieces: usize,
+    /// Virtual completion time of our last action.
+    pub last_ts: f64,
+    /// Current parameter value (Var actors only).
+    var_value: Option<Piece>,
+    /// Actions executed (metrics).
+    pub actions: u64,
+}
+
+/// What an actor wants the engine to do after handling a message.
+pub struct Effects {
+    pub outgoing: Vec<Envelope>,
+    /// Action executed: (duration, boxing bytes) — engine updates queue time.
+    pub executed: Vec<(f64, f64)>,
+    /// Fetched values to hand to the driver: (piece, tensors).
+    pub fetched: Vec<(usize, Piece)>,
+    /// This actor just finished its final piece.
+    pub done: bool,
+}
+
+impl Actor {
+    pub fn new(
+        node: PhysNode,
+        addr: ActorAddr,
+        producers: &HashMap<RegId, ActorAddr>,
+        consumers: Vec<ActorAddr>,
+        total_pieces: usize,
+    ) -> Self {
+        let mut in_regs: Vec<InReg> = Vec::new();
+        let mut seen: Vec<RegId> = Vec::new();
+        for reg in node
+            .inputs
+            .iter()
+            .map(|&(r, _)| r)
+            .chain(node.controls.iter().copied())
+        {
+            if !seen.contains(&reg) {
+                seen.push(reg);
+                in_regs.push(InReg {
+                    reg,
+                    ready: HashMap::new(),
+                    offset: 0,
+                    producer: producers[&reg],
+                });
+            }
+        }
+        if let Some((ureg, _)) = node.update_from {
+            // the training back edge: piece k+1 consumes update k
+            in_regs.push(InReg {
+                reg: ureg,
+                ready: HashMap::new(),
+                offset: 1,
+                producer: producers[&ureg],
+            });
+        }
+        let slots = node_slots(&node);
+        Actor {
+            addr,
+            node,
+            in_regs,
+            consumers,
+            free_slots: (0..slots).map(|_| 0.0).collect(),
+            pending_acks: HashMap::new(),
+            next_piece: 0,
+            total_pieces,
+            last_ts: 0.0,
+            var_value: None,
+            actions: 0,
+        }
+    }
+
+    /// Handle one message; then fire as many actions as have become ready.
+    pub fn handle(&mut self, msg: Msg, ctx: &mut Ctx) -> Effects {
+        let mut fx = Effects { outgoing: vec![], executed: vec![], fetched: vec![], done: false };
+        match msg {
+            Msg::Req { reg, piece, data, ts } => {
+                let ir = self
+                    .in_regs
+                    .iter_mut()
+                    .find(|r| r.reg == reg)
+                    .expect("req for unknown in register");
+                // in counter increment (§4.2 protocol step 2)
+                ir.ready.insert(piece, (data, ts));
+            }
+            Msg::Ack { piece, ts, .. } => {
+                // reference counter decrement (§4.2 protocol step 4)
+                let e = self.pending_acks.get_mut(&piece).expect("stray ack");
+                e.0 -= 1;
+                e.1 = e.1.max(ts);
+                if e.0 == 0 {
+                    let (_, t) = self.pending_acks.remove(&piece).unwrap();
+                    // out counter increment: the slot is recyclable from `t`
+                    self.free_slots.push_back(t);
+                }
+            }
+            Msg::Kick => {}
+        }
+        while self.try_action(ctx, &mut fx) {}
+        fx
+    }
+
+    /// Fire one action if the state machine allows (in counters satisfied,
+    /// out counter non-zero). Returns true if an action ran.
+    fn try_action(&mut self, ctx: &mut Ctx, fx: &mut Effects) -> bool {
+        if self.next_piece >= self.total_pieces {
+            return false;
+        }
+        let piece = self.next_piece;
+        // out counter must be non-zero
+        if self.free_slots.is_empty() {
+            return false;
+        }
+        // every in register must hold the needed piece
+        for ir in &self.in_regs {
+            if piece < ir.offset {
+                continue; // back edge: piece 0 needs no update
+            }
+            if !ir.ready.contains_key(&(piece - ir.offset)) {
+                return false;
+            }
+        }
+
+        // Collect inputs and their max timestamp.
+        let mut in_ts: f64 = 0.0;
+        let mut taken: HashMap<RegId, (Option<Piece>, f64)> = HashMap::new();
+        for ir in &mut self.in_regs {
+            if piece < ir.offset {
+                continue;
+            }
+            let (data, ts) = ir.ready.remove(&(piece - ir.offset)).unwrap();
+            in_ts = in_ts.max(ts);
+            taken.insert(ir.reg, (data, ts));
+        }
+        let slot_free = self.free_slots.pop_front().unwrap();
+
+        // Execute.
+        let (outputs, dur, moved): (Piece, f64, f64) = match &self.node.kernel {
+            PhysKernel::Var { .. } => {
+                let value = if piece == 0 {
+                    self.var_value.clone().unwrap_or_else(|| Arc::new(vec![]))
+                } else if let Some((ureg, elem)) = self.node.update_from {
+                    let (data, _) = &taken[&ureg];
+                    match data {
+                        Some(d) => Arc::new(vec![d[elem].clone()]),
+                        None => Arc::new(vec![]),
+                    }
+                } else {
+                    self.var_value.clone().unwrap_or_else(|| Arc::new(vec![]))
+                };
+                self.var_value = Some(value.clone());
+                (value, 0.0, 0.0)
+            }
+            PhysKernel::Input { input, shard_idx } => {
+                let data = ctx.feed(*input, *shard_idx, piece);
+                let dur = action_secs(&self.node, ctx.cluster());
+                (Arc::new(data), dur, 0.0)
+            }
+            _ => {
+                // resolve element refs in declared order
+                let resolved: Vec<&Tensor> = if ctx.has_data() {
+                    self.node
+                        .inputs
+                        .iter()
+                        .map(|(reg, elem)| {
+                            let (data, _) = &taken[reg];
+                            &data.as_ref().expect("missing data in real mode")[*elem]
+                        })
+                        .collect()
+                } else {
+                    vec![]
+                };
+                let out = ctx.execute(&self.node, &resolved);
+                let dur = action_secs(&self.node, ctx.cluster());
+                let moved = boxing_bytes(&self.node);
+                (Arc::new(out), dur, moved)
+            }
+        };
+
+        // Virtual-time bookkeeping: (max, +) algebra over the dependencies.
+        let start = in_ts.max(slot_free).max(ctx.queue_free());
+        let end = start + dur;
+        ctx.set_queue_free(end);
+        self.last_ts = end;
+        self.actions += 1;
+        fx.executed.push((dur, moved));
+
+        // Send acks upstream (the consumer side of the protocol).
+        for ir in &self.in_regs {
+            if piece < ir.offset {
+                continue;
+            }
+            fx.outgoing.push(Envelope {
+                to: ir.producer,
+                msg: Msg::Ack { reg: ir.reg, piece: piece - ir.offset, ts: end },
+            });
+        }
+
+        // Publish downstream or recycle immediately.
+        if matches!(self.node.kernel, PhysKernel::Fetch { .. }) {
+            fx.fetched.push((piece, outputs.clone()));
+        }
+        if self.consumers.is_empty() {
+            self.free_slots.push_back(end);
+        } else {
+            self.pending_acks.insert(piece, (self.consumers.len(), 0.0));
+            let data = if ctx.has_data() { Some(outputs) } else { None };
+            for &c in &self.consumers {
+                fx.outgoing.push(Envelope {
+                    to: c,
+                    msg: Msg::Req { reg: self.node.out_reg, piece, data: data.clone(), ts: end },
+                });
+            }
+        }
+        self.next_piece += 1;
+        if self.next_piece == self.total_pieces {
+            fx.done = true;
+        }
+        true
+    }
+
+    /// Install the initial parameter shard (Var actors, real mode).
+    pub fn set_var_value(&mut self, v: Piece) {
+        self.var_value = Some(v);
+    }
+}
+
+/// Placeholder slot count; the engine replaces it with the compile-time
+/// register quota from the plan's `RegDesc`.
+fn node_slots(_node: &PhysNode) -> usize {
+    1
+}
+
+/// Engine-side services an actor needs during an action.
+pub trait CtxOps {
+    fn execute(&mut self, node: &PhysNode, inputs: &[&Tensor]) -> Vec<Tensor>;
+    fn feed(&mut self, input: crate::graph::NodeId, shard: usize, piece: usize) -> Vec<Tensor>;
+    fn queue_free(&self) -> f64;
+    fn set_queue_free(&mut self, t: f64);
+    fn cluster(&self) -> &crate::exec::ClusterModel;
+    fn has_data(&self) -> bool;
+}
+
+/// Concrete context handed to actors by the engine thread.
+pub struct Ctx<'a> {
+    pub backend: &'a dyn Backend,
+    pub plan: &'a PhysPlan,
+    pub queue_free: f64,
+    pub feeder: &'a dyn Fn(crate::graph::NodeId, usize, usize) -> Vec<Tensor>,
+    pub data: bool,
+}
+
+/// `OF_TRACE=1` prints every action with its input shapes (debug aid).
+fn trace_enabled() -> bool {
+    static ON: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *ON.get_or_init(|| std::env::var("OF_TRACE").is_ok())
+}
+
+impl<'a> Ctx<'a> {
+    fn execute(&mut self, node: &PhysNode, inputs: &[&Tensor]) -> Vec<Tensor> {
+        if trace_enabled() {
+            let shapes: Vec<String> = inputs.iter().map(|t| t.shape.to_string()).collect();
+            eprintln!("exec {} ({})", node.name, shapes.join(", "));
+        }
+        self.backend.execute(node, inputs)
+    }
+    fn feed(&mut self, input: crate::graph::NodeId, shard: usize, piece: usize) -> Vec<Tensor> {
+        (self.feeder)(input, shard, piece)
+    }
+    fn queue_free(&self) -> f64 {
+        self.queue_free
+    }
+    fn set_queue_free(&mut self, t: f64) {
+        self.queue_free = t;
+    }
+    fn cluster(&self) -> &crate::exec::ClusterModel {
+        &self.plan.options.cluster
+    }
+    fn has_data(&self) -> bool {
+        self.data
+    }
+}
+
+/// Replace the placeholder slot count with the compile-time register quota.
+pub(crate) fn set_slots(actor: &mut Actor, slots: usize) {
+    actor.free_slots = (0..slots).map(|_| 0.0).collect();
+}

@@ -1,0 +1,41 @@
+//! The two-message protocol of paper §4.2 plus the engine's kick.
+
+use super::addr::ActorAddr;
+use super::Piece;
+use crate::compiler::RegId;
+
+/// Actor-to-actor message.
+#[derive(Clone)]
+pub enum Msg {
+    /// Producer → consumer: register `reg` holds `piece`, readable from
+    /// virtual time `ts`. `data` is `None` in data-free (simulation) mode;
+    /// otherwise an `Arc` share of the producer's slot (zero-copy).
+    Req { reg: RegId, piece: usize, data: Option<Piece>, ts: f64 },
+    /// Consumer → producer: `piece` of `reg` is no longer referenced;
+    /// the consumer finished reading at `ts`.
+    Ack { reg: RegId, piece: usize, ts: f64 },
+    /// Engine → source actors at start-up.
+    Kick,
+}
+
+impl std::fmt::Debug for Msg {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Msg::Req { reg, piece, ts, data } => write!(
+                f,
+                "Req(r{} p{piece} ts={ts:.3e} data={})",
+                reg.0,
+                data.is_some()
+            ),
+            Msg::Ack { reg, piece, ts } => write!(f, "Ack(r{} p{piece} ts={ts:.3e})", reg.0),
+            Msg::Kick => write!(f, "Kick"),
+        }
+    }
+}
+
+/// A routed message.
+#[derive(Clone, Debug)]
+pub struct Envelope {
+    pub to: ActorAddr,
+    pub msg: Msg,
+}

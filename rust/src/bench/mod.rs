@@ -1,0 +1,124 @@
+//! Benchmark harness substrate (the vendored registry has no `criterion`):
+//! aligned-table reporting for the figure/table reproductions plus a
+//! statistical wall-clock timer for the runtime microbenches.
+
+use std::time::Instant;
+
+/// A report table printed in aligned markdown (one per paper table/figure).
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with per-column alignment.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = format!("\n## {}\n\n", self.title);
+        out.push_str(&line(&self.headers));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&line(&sep));
+        for r in &self.rows {
+            out.push_str(&line(r));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Wall-clock statistics from [`time_n`].
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+    pub stddev_secs: f64,
+}
+
+impl Timing {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean_secs
+    }
+}
+
+/// Run `f` for `warmup + iters` iterations, timing the last `iters`.
+pub fn time_n(warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / iters as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / iters as f64;
+    Timing {
+        iters,
+        mean_secs: mean,
+        min_secs: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_secs: samples.iter().cloned().fold(0.0, f64::max),
+        stddev_secs: var.sqrt(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["config", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-config-name".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        assert!(s.contains("| long-config-name | 2     |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_checks_arity() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn timing_measures() {
+        let t = time_n(1, 5, || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(t.mean_secs >= 0.002);
+        assert!(t.min_secs <= t.mean_secs && t.mean_secs <= t.max_secs);
+    }
+}

@@ -1,0 +1,465 @@
+//! Executable boxing: transform the physical shards of a logical tensor from
+//! one (NdSbp, Placement) to another, with correct numerics and per-transfer
+//! byte accounting. Tests and the Table-2 bench assert the accounted bytes
+//! equal the paper's formulas.
+//!
+//! Same-device-set transitions run the ring-collective data paths
+//! (all-gather / reduce-scatter / all-reduce / all2all / local view changes);
+//! cross-placement transitions run the consumer-side *pull* path the paper
+//! describes in §5 (a networking actor per consumer pulls what it needs).
+
+use crate::placement::Placement;
+use crate::sbp::{gather, scatter, NdSbp, ReduceKind, Sbp};
+use crate::tensor::ops::{add_n, max_n, slice_axis};
+use crate::tensor::shape::{split_offsets, split_sizes};
+use crate::tensor::Tensor;
+
+/// Output shards plus the bytes that crossed device boundaries.
+#[derive(Debug)]
+pub struct BoxingResult {
+    pub shards: Vec<Tensor>,
+    pub bytes_moved: f64,
+}
+
+/// Apply a boxing transition. `in_shards` are row-major over `in_place`'s
+/// hierarchy; the result is row-major over `out_place`'s hierarchy.
+pub fn apply_boxing(
+    in_shards: &[Tensor],
+    in_nd: &NdSbp,
+    in_place: &Placement,
+    out_nd: &NdSbp,
+    out_place: &Placement,
+) -> BoxingResult {
+    assert_eq!(in_shards.len(), in_place.len());
+    if in_place.same_devices(out_place) && in_place.hierarchy == out_place.hierarchy {
+        same_placement(in_shards, in_nd, in_place, out_nd)
+    } else {
+        cross_placement(in_shards, in_nd, in_place, out_nd, out_place)
+    }
+}
+
+/// Same device set: per-hierarchy-dim sequential transitions, each realized
+/// with the 1-D collective within every group along that dim.
+fn same_placement(
+    in_shards: &[Tensor],
+    in_nd: &NdSbp,
+    place: &Placement,
+    out_nd: &NdSbp,
+) -> BoxingResult {
+    assert_eq!(in_nd.rank(), out_nd.rank(), "NdSbp rank mismatch on same placement");
+    // Per-dim transitions are only valid when the transitioning dims don't
+    // share a tensor axis with another hierarchy dim's Split (e.g.
+    // (S(1), S(1)) -> (P, S(1)) re-orders columns if done dim-by-dim).
+    // Interacting cases fall back to a global gather+scatter with bytes
+    // accounted by the Table 2 per-dim formulas.
+    if nd_dims_interact(in_nd, out_nd) {
+        let logical = gather(in_shards, in_nd, &place.hierarchy);
+        let shards = scatter(&logical, out_nd, &place.hierarchy);
+        let mut bytes = 0.0;
+        for d in 0..in_nd.rank() {
+            if in_nd.0[d] == out_nd.0[d] {
+                continue;
+            }
+            let mut group_bytes = logical.bytes() as f64;
+            for (d2, s2) in in_nd.0.iter().enumerate() {
+                if d2 != d && s2.is_split() {
+                    group_bytes /= place.hierarchy[d2] as f64;
+                }
+            }
+            let groups: usize = place
+                .hierarchy
+                .iter()
+                .enumerate()
+                .filter(|&(d2, _)| d2 != d)
+                .map(|(_, &h)| h)
+                .product();
+            bytes += groups as f64
+                * crate::boxing::cost::bytes_same(
+                    in_nd.0[d],
+                    out_nd.0[d],
+                    place.hierarchy[d],
+                    group_bytes,
+                );
+        }
+        return BoxingResult { shards, bytes_moved: bytes };
+    }
+    let hierarchy = place.hierarchy.clone();
+    let mut shards: Vec<Tensor> = in_shards.to_vec();
+    let mut cur = in_nd.clone();
+    let mut bytes = 0.0;
+    // Innermost dim first (devices within a node before across nodes) — the
+    // cheaper links do the bulk reduction first, like hierarchical NCCL.
+    for d in (0..cur.rank()).rev() {
+        if cur.0[d] == out_nd.0[d] {
+            continue;
+        }
+        let (next, moved) = transition_dim(&shards, &cur, &hierarchy, d, out_nd.0[d]);
+        shards = next;
+        bytes += moved;
+        cur.0[d] = out_nd.0[d];
+    }
+    BoxingResult { shards, bytes_moved: bytes }
+}
+
+/// True when a per-dim sequential transition would be unsound: two hierarchy
+/// dims split the same tensor axis (before or after), or a transitioning dim
+/// both leaves and enters a Split axis also used elsewhere.
+fn nd_dims_interact(in_nd: &NdSbp, out_nd: &NdSbp) -> bool {
+    let rank = in_nd.rank();
+    if rank < 2 {
+        return false;
+    }
+    let axis_of = |s: Sbp| match s {
+        Sbp::Split(a) => Some(a),
+        _ => None,
+    };
+    for d in 0..rank {
+        if in_nd.0[d] == out_nd.0[d] {
+            continue;
+        }
+        for d2 in 0..rank {
+            if d2 == d {
+                continue;
+            }
+            let others = [axis_of(in_nd.0[d2]), axis_of(out_nd.0[d2])];
+            for t in [axis_of(in_nd.0[d]), axis_of(out_nd.0[d])].into_iter().flatten() {
+                if others.contains(&Some(t)) {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+/// Run the 1-D transition `cur.0[dim] -> target` within each group of
+/// devices that share all other hierarchy coordinates.
+fn transition_dim(
+    shards: &[Tensor],
+    cur: &NdSbp,
+    hierarchy: &[usize],
+    dim: usize,
+    target: Sbp,
+) -> (Vec<Tensor>, f64) {
+    let p = hierarchy[dim];
+    let inner: usize = hierarchy[dim + 1..].iter().product();
+    let outer: usize = hierarchy[..dim].iter().product();
+    let mut out: Vec<Option<Tensor>> = vec![None; shards.len()];
+    let mut bytes = 0.0;
+    for o in 0..outer {
+        for i in 0..inner {
+            // group member g sits at flat index o*p*inner + g*inner + i
+            let idx = |g: usize| o * p * inner + g * inner + i;
+            let group: Vec<&Tensor> = (0..p).map(|g| &shards[idx(g)]).collect();
+            let (res, moved) = transition_1d(&group, cur.0[dim], target, p);
+            bytes += moved;
+            for (g, t) in res.into_iter().enumerate() {
+                out[idx(g)] = Some(t);
+            }
+        }
+    }
+    (out.into_iter().map(Option::unwrap).collect(), bytes)
+}
+
+/// The 1-D collectives. Returns per-device results and bytes moved across
+/// device boundaries (which tests check against Table 2's "same" column).
+fn transition_1d(group: &[&Tensor], from: Sbp, to: Sbp, p: usize) -> (Vec<Tensor>, f64) {
+    use Sbp::*;
+    assert_eq!(group.len(), p);
+    match (from, to) {
+        (a, b) if a == b => (group.iter().map(|t| (*t).clone()).collect(), 0.0),
+        // all2all: device g sends to device h the block (row-slice h of its
+        // own shard along the new axis); only the g==h block stays local.
+        (Split(i), Split(j)) => {
+            let logical = gather_1d(group, Split(i), p);
+            let mut bytes = 0.0;
+            // per-device byte accounting: everything except the diagonal block
+            let total: f64 = logical.bytes() as f64;
+            bytes += total * (p as f64 - 1.0) / p as f64;
+            (scatter_1d(&logical, Split(j), p), bytes)
+        }
+        // ring all-gather: every shard traverses p-1 links
+        (Split(i), Broadcast) => {
+            let logical = gather_1d(group, Split(i), p);
+            let bytes = logical.bytes() as f64 * (p as f64 - 1.0);
+            ((0..p).map(|_| logical.clone()).collect(), bytes)
+        }
+        // zero-pad local view: shard becomes a full-shape partial, no traffic
+        (Split(i), Partial(k)) => {
+            let logical_dim: usize = group.iter().map(|t| t.shape.dim(i)).sum();
+            let offs = split_offsets(logical_dim, p);
+            let fill = match k {
+                ReduceKind::Sum => 0.0,
+                ReduceKind::Max => f32::NEG_INFINITY,
+            };
+            let res = group
+                .iter()
+                .enumerate()
+                .map(|(g, t)| {
+                    let mut full = Tensor::full(t.shape.with_dim(i, logical_dim), t.dtype, fill);
+                    embed_slice(&mut full, t, i, offs[g]);
+                    full
+                })
+                .collect();
+            (res, 0.0)
+        }
+        // local slice, no traffic
+        (Broadcast, Split(j)) => {
+            let sizes = split_sizes(group[0].shape.dim(j), p);
+            let offs = split_offsets(group[0].shape.dim(j), p);
+            let res = group
+                .iter()
+                .enumerate()
+                .map(|(g, t)| slice_axis(t, j, offs[g], sizes[g]))
+                .collect();
+            (res, 0.0)
+        }
+        // device 0 keeps the value, the rest hold the identity — no traffic
+        (Broadcast, Partial(k)) => {
+            let fill = match k {
+                ReduceKind::Sum => 0.0,
+                ReduceKind::Max => f32::NEG_INFINITY,
+            };
+            let res = group
+                .iter()
+                .enumerate()
+                .map(|(g, t)| if g == 0 { (*t).clone() } else { Tensor::full(t.shape.clone(), t.dtype, fill) })
+                .collect();
+            (res, 0.0)
+        }
+        // ring reduce-scatter: p-1 steps, each device forwards |T|/p chunks
+        (Partial(k), Split(j)) => {
+            let logical = reduce_group(group, k);
+            let bytes = logical.bytes() as f64 * (p as f64 - 1.0);
+            (scatter_1d(&logical, Split(j), p), bytes)
+        }
+        // ring all-reduce = reduce-scatter + all-gather
+        (Partial(k), Broadcast) => {
+            let logical = reduce_group(group, k);
+            let bytes = 2.0 * logical.bytes() as f64 * (p as f64 - 1.0);
+            ((0..p).map(|_| logical.clone()).collect(), bytes)
+        }
+        (Partial(_), Partial(_)) => {
+            panic!("P(sum) <-> P(max) transition is not meaningful")
+        }
+        // the `a == b` guard above already caught this; guards don't count
+        // toward exhaustiveness
+        (Broadcast, Broadcast) => unreachable!(),
+    }
+}
+
+/// Cross-placement: consumer-side pull (paper §5). If the source carries a
+/// partial value it is first reduced onto producer device 0 — the
+/// `(p1-1)·|T|` term in Table 2's `P→B` disjoint row.
+fn cross_placement(
+    in_shards: &[Tensor],
+    in_nd: &NdSbp,
+    in_place: &Placement,
+    out_nd: &NdSbp,
+    out_place: &Placement,
+) -> BoxingResult {
+    let p1 = in_place.len() as f64;
+    let p2 = out_place.len() as f64;
+    let logical = gather(in_shards, in_nd, &in_place.hierarchy);
+    let t_bytes = logical.bytes() as f64;
+    let has_partial = in_nd.0.iter().any(Sbp::is_partial);
+    let out_shards = scatter(&logical, out_nd, &out_place.hierarchy);
+    let out_is_b = out_nd.all_broadcast();
+    let out_has_partial = out_nd.0.iter().any(Sbp::is_partial);
+
+    // Byte accounting per Table 2's disjoint column (1-D collapse: the table
+    // is stated for 1-D signatures; multi-dim uses the dominant component).
+    let bytes = if has_partial {
+        if out_is_b {
+            (p1 + p2 - 1.0) * t_bytes // reduce to one + p2 pulls
+        } else if out_has_partial {
+            p1 * t_bytes // forward each partial once
+        } else {
+            p1 * t_bytes // each consumer pulls its slice of every partial
+        }
+    } else if out_has_partial {
+        // only one real copy moves; the other shards hold identity elements
+        t_bytes
+    } else {
+        // consumers pull exactly what they materialize
+        out_shards.iter().map(|s| s.bytes() as f64).sum()
+    };
+    BoxingResult { shards: out_shards, bytes_moved: bytes }
+}
+
+fn gather_1d(group: &[&Tensor], sbp: Sbp, p: usize) -> Tensor {
+    let owned: Vec<Tensor> = group.iter().map(|t| (*t).clone()).collect();
+    gather(&owned, &NdSbp::d1(sbp), &[p])
+}
+
+fn scatter_1d(logical: &Tensor, sbp: Sbp, p: usize) -> Vec<Tensor> {
+    scatter(logical, &NdSbp::d1(sbp), &[p])
+}
+
+fn reduce_group(group: &[&Tensor], k: ReduceKind) -> Tensor {
+    match k {
+        ReduceKind::Sum => add_n(group),
+        ReduceKind::Max => max_n(group),
+    }
+}
+
+/// Write `part` into `dst` at offset `off` along `axis`.
+fn embed_slice(dst: &mut Tensor, part: &Tensor, axis: usize, off: usize) {
+    let outer: usize = dst.shape.0[..axis].iter().product();
+    let inner: usize = dst.shape.0[axis + 1..].iter().product();
+    let ddim = dst.shape.dim(axis);
+    let pdim = part.shape.dim(axis);
+    for o in 0..outer {
+        for a in 0..pdim {
+            let src = (o * pdim + a) * inner;
+            let tgt = (o * ddim + off + a) * inner;
+            dst.data[tgt..tgt + inner].copy_from_slice(&part.data[src..src + inner]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::boxing::cost::transfer_bytes;
+    use crate::sbp::{s, B, P};
+    use crate::tensor::DType;
+    use crate::util::{prop, Rng};
+
+    fn roundtrip_ok(
+        t: &Tensor,
+        in_nd: &NdSbp,
+        in_pl: &Placement,
+        out_nd: &NdSbp,
+        out_pl: &Placement,
+    ) -> Result<(), String> {
+        let in_shards = scatter(t, in_nd, &in_pl.hierarchy);
+        let res = apply_boxing(&in_shards, in_nd, in_pl, out_nd, out_pl);
+        let back = gather(&res.shards, out_nd, &out_pl.hierarchy);
+        if !back.allclose(t, 1e-4) {
+            return Err(format!("boxing {in_nd} -> {out_nd} corrupted the tensor"));
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn fig5_allgather_s0_to_b() {
+        // Fig 5: MatMul0 produces Y0 as S(0); MatMul1 wants B. Boxing is an
+        // all-gather; on 2 devices the bytes are (p-1)|T| = |T|.
+        let mut r = Rng::new(1);
+        let y0 = Tensor::randn([4, 6], DType::F32, 1.0, &mut r);
+        let pl = Placement::node(0, 2);
+        let shards = scatter(&y0, &NdSbp::d1(s(0)), &[2]);
+        let res = apply_boxing(&shards, &NdSbp::d1(s(0)), &pl, &NdSbp::d1(B), &pl);
+        assert_eq!(res.shards.len(), 2);
+        assert!(res.shards[0].allclose(&y0, 1e-6));
+        assert!(res.shards[1].allclose(&y0, 1e-6));
+        assert_eq!(res.bytes_moved, y0.bytes() as f64);
+    }
+
+    #[test]
+    fn all_same_placement_transitions_preserve_value_and_bytes() {
+        let sigs = [s(0), s(1), B, P];
+        let mut r = Rng::new(7);
+        let pl = Placement::node(0, 4);
+        for &a in &sigs {
+            for &b in &sigs {
+                let t = Tensor::randn([8, 12], DType::F32, 1.0, &mut r);
+                let in_nd = NdSbp::d1(a);
+                let out_nd = NdSbp::d1(b);
+                let shards = scatter(&t, &in_nd, &[4]);
+                let res = apply_boxing(&shards, &in_nd, &pl, &out_nd, &pl);
+                let back = gather(&res.shards, &out_nd, &[4]);
+                assert!(back.allclose(&t, 1e-4), "{a} -> {b} numerics");
+                let expect = transfer_bytes(a, b, 4, 4, true, t.bytes() as f64);
+                assert_eq!(res.bytes_moved, expect, "{a} -> {b} bytes");
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_transitions_preserve_value_and_bytes() {
+        let sigs = [s(0), s(1), B, P];
+        let mut r = Rng::new(9);
+        let p_in = Placement::node(0, 4);
+        let p_out = Placement::node(1, 2);
+        for &a in &sigs {
+            for &b in &sigs {
+                let t = Tensor::randn([8, 8], DType::F32, 1.0, &mut r);
+                let (in_nd, out_nd) = (NdSbp::d1(a), NdSbp::d1(b));
+                let shards = scatter(&t, &in_nd, &[4]);
+                let res = apply_boxing(&shards, &in_nd, &p_in, &out_nd, &p_out);
+                let back = gather(&res.shards, &out_nd, &[2]);
+                assert!(back.allclose(&t, 1e-4), "{a} -> {b} numerics");
+                let expect = transfer_bytes(a, b, 4, 2, false, t.bytes() as f64);
+                assert_eq!(res.bytes_moved, expect, "{a} -> {b} bytes");
+            }
+        }
+    }
+
+    #[test]
+    fn nd_sbp_grad_allreduce_within_nodes() {
+        // Hybrid parallelism: (S(0), P) -> (S(0), B) on a 2x2 grid is an
+        // all-reduce among the devices of each node; bytes = 2 groups x
+        // ring-all-reduce of the half-tensor = 2 * 2(p-1)/p... accounted via
+        // per-group logical size.
+        let mut r = Rng::new(3);
+        let t = Tensor::randn([8, 4], DType::F32, 1.0, &mut r);
+        let pl = Placement::grid(2, 2);
+        let in_nd = NdSbp::d2(s(0), P);
+        let out_nd = NdSbp::d2(s(0), B);
+        let shards = scatter(&t, &in_nd, &[2, 2]);
+        let res = apply_boxing(&shards, &in_nd, &pl, &out_nd, &pl);
+        let back = gather(&res.shards, &out_nd, &[2, 2]);
+        assert!(back.allclose(&t, 1e-4));
+        // each node all-reduces a (4,4) half: 2 * 2*(2-1)*64B = 256B
+        assert_eq!(res.bytes_moved, 2.0 * 2.0 * (t.bytes() as f64 / 2.0));
+    }
+
+    #[test]
+    fn random_boxing_roundtrips_property() {
+        prop::check_res(
+            "boxing preserves logical value (random transitions)",
+            80,
+            |r| {
+                let m = r.range(2, 10);
+                let n = r.range(2, 10);
+                let sigs = [s(0), s(1), B, P];
+                let a = *r.choose(&sigs);
+                let b = *r.choose(&sigs);
+                let p1 = r.range(1, 4);
+                let same = r.chance(0.5);
+                let p2 = if same { p1 } else { r.range(1, 4) };
+                let t = Tensor::randn([m, n], DType::F32, 1.0, r);
+                (t, a, b, p1, p2, same)
+            },
+            |(t, a, b, p1, p2, same)| {
+                let in_pl = Placement::node(0, *p1);
+                let out_pl = if *same { in_pl.clone() } else { Placement::node(1, *p2) };
+                roundtrip_ok(t, &NdSbp::d1(*a), &in_pl, &NdSbp::d1(*b), &out_pl)
+            },
+        );
+    }
+
+    #[test]
+    fn random_2d_boxing_roundtrips_property() {
+        prop::check_res(
+            "2-D boxing preserves logical value",
+            60,
+            |r| {
+                let m = r.range(4, 12);
+                let n = r.range(4, 12);
+                let sigs = [s(0), s(1), B, P];
+                let nd_in = NdSbp::d2(*r.choose(&sigs), *r.choose(&sigs));
+                let nd_out = NdSbp::d2(*r.choose(&sigs), *r.choose(&sigs));
+                let t = Tensor::randn([m, n], DType::F32, 1.0, r);
+                (t, nd_in, nd_out)
+            },
+            |(t, nd_in, nd_out)| {
+                // exclude meaningless P(sum)<->P(max) direct transitions
+                let pl = Placement::grid(2, 2);
+                roundtrip_ok(t, nd_in, &pl, nd_out, &pl)
+            },
+        );
+    }
+}

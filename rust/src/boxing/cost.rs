@@ -1,0 +1,200 @@
+//! Table 2 of the paper: data size transferred between successive SBP
+//! signatures, and the collective ("boxing method") that realizes each
+//! transition, plus a ring-algorithm time model on the cluster network.
+
+use crate::exec::NetworkModel;
+use crate::sbp::{ReduceKind, Sbp};
+
+/// The collective primitive a boxing op lowers to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BoxingMethod {
+    /// No data movement (local view change / slice).
+    Identity,
+    /// all2all re-split along a different axis.
+    All2All,
+    AllGather,
+    ReduceScatter,
+    AllReduce,
+    /// Cross-placement copy: each consumer pulls what it needs (§5's
+    /// consumer-side networking actor).
+    P2pPull,
+}
+
+/// Classify the boxing method for `sbp1 -> sbp2` on the same device set.
+pub fn method_same(sbp1: Sbp, sbp2: Sbp) -> BoxingMethod {
+    use BoxingMethod::*;
+    use Sbp::*;
+    match (sbp1, sbp2) {
+        (Split(i), Split(j)) if i == j => Identity,
+        (Split(_), Split(_)) => All2All,
+        (Split(_), Broadcast) => AllGather,
+        (Split(_), Partial(_)) => Identity, // zero-pad view; no movement (Table 2: 0)
+        (Broadcast, Split(_)) => Identity,  // local slice
+        (Broadcast, Broadcast) => Identity,
+        (Broadcast, Partial(_)) => Identity,
+        (Partial(_), Split(_)) => ReduceScatter,
+        (Partial(_), Broadcast) => AllReduce,
+        (Partial(_), Partial(_)) => Identity,
+    }
+}
+
+/// Table 2, "Cost (same)" column: total bytes crossing links when the
+/// producer and consumer share the same `p1` devices. `t_bytes` = |T|, the
+/// size of the *logical* tensor.
+pub fn bytes_same(sbp1: Sbp, sbp2: Sbp, p1: usize, t_bytes: f64) -> f64 {
+    use Sbp::*;
+    let p1f = p1 as f64;
+    match (sbp1, sbp2) {
+        (Split(i), Split(j)) if i == j => 0.0,
+        (Split(_), Split(_)) => (p1f - 1.0) / p1f * t_bytes, // all2all
+        (Split(_), Broadcast) => (p1f - 1.0) * t_bytes,      // all-gather
+        (Split(_), Partial(_)) => 0.0,
+        (Broadcast, Split(_)) => 0.0,
+        (Broadcast, Broadcast) => 0.0,
+        (Broadcast, Partial(_)) => 0.0,
+        (Partial(_), Split(_)) => (p1f - 1.0) * t_bytes, // reduce-scatter
+        (Partial(_), Broadcast) => 2.0 * (p1f - 1.0) * t_bytes, // all-reduce
+        (Partial(_), Partial(_)) => 0.0,
+    }
+}
+
+/// Table 2, "Cost (disjoint)" column: producer on `p1` devices, consumer on
+/// `p2` *disjoint* devices.
+pub fn bytes_disjoint(sbp1: Sbp, sbp2: Sbp, p1: usize, p2: usize, t_bytes: f64) -> f64 {
+    use Sbp::*;
+    let (p1f, p2f) = (p1 as f64, p2 as f64);
+    match (sbp1, sbp2) {
+        (Split(i), Split(j)) if i == j => t_bytes,
+        (Split(_), Split(_)) => t_bytes,
+        (Split(_), Broadcast) => p2f * t_bytes,
+        (Split(_), Partial(_)) => t_bytes,
+        (Broadcast, Split(_)) => t_bytes,
+        (Broadcast, Broadcast) => p2f * t_bytes,
+        (Broadcast, Partial(_)) => t_bytes,
+        (Partial(_), Split(_)) => p1f * t_bytes,
+        (Partial(_), Broadcast) => (p1f + p2f - 1.0) * t_bytes,
+        (Partial(_), Partial(_)) => p1f * t_bytes,
+    }
+}
+
+/// Unified entry: Table 2 with the same/disjoint distinction.
+pub fn transfer_bytes(sbp1: Sbp, sbp2: Sbp, p1: usize, p2: usize, same: bool, t_bytes: f64) -> f64 {
+    if same {
+        assert_eq!(p1, p2, "same-device transition with p1 != p2");
+        bytes_same(sbp1, sbp2, p1, t_bytes)
+    } else {
+        bytes_disjoint(sbp1, sbp2, p1, p2, t_bytes)
+    }
+}
+
+/// Wall-clock estimate of a boxing op on the simulated interconnect using
+/// bandwidth-optimal ring algorithms: the busiest link carries
+/// `bytes_total / p` per ring step and the ring runs `O(p)` steps, giving
+/// the familiar `(p-1)/p · |T| / bw` per phase.
+pub fn transfer_secs(
+    sbp1: Sbp,
+    sbp2: Sbp,
+    p1: usize,
+    p2: usize,
+    same: bool,
+    inter_node: bool,
+    t_bytes: f64,
+    net: &NetworkModel,
+) -> f64 {
+    let bw = if inter_node { net.inter_bps } else { net.intra_bps };
+    let total = transfer_bytes(sbp1, sbp2, p1, p2, same, t_bytes);
+    if total == 0.0 {
+        return 0.0;
+    }
+    if same {
+        // Ring collective: p1 devices move `total` bytes in aggregate, and the
+        // ring spreads it so each link carries total/p1; steps add latency.
+        let per_link = total / p1 as f64;
+        let steps = match method_same(sbp1, sbp2) {
+            BoxingMethod::AllReduce => 2 * (p1 - 1),
+            _ => p1 - 1,
+        };
+        per_link / bw + steps.max(1) as f64 * net.latency
+    } else {
+        // Cross-placement pulls happen in parallel per consumer device; the
+        // producer side serializes on its egress bandwidth in the worst case.
+        total / (bw * p2.min(p1) as f64) + net.latency
+    }
+}
+
+/// Reduce kind required to consume a partial tensor (sum/max), if any.
+pub fn partial_kind(sbp: Sbp) -> Option<ReduceKind> {
+    match sbp {
+        Sbp::Partial(k) => Some(k),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sbp::{s, B, P};
+
+    /// Every cell of Table 2, "same devices" column, p1 = 4, |T| = 1.0.
+    #[test]
+    fn table2_same_column() {
+        let t = 1.0;
+        let p = 4;
+        assert_eq!(bytes_same(s(0), s(0), p, t), 0.0);
+        assert_eq!(bytes_same(s(0), s(1), p, t), 3.0 / 4.0); // all2all
+        assert_eq!(bytes_same(s(1), B, p, t), 3.0); // all-gather
+        assert_eq!(bytes_same(s(0), P, p, t), 0.0);
+        assert_eq!(bytes_same(B, s(0), p, t), 0.0);
+        assert_eq!(bytes_same(B, B, p, t), 0.0);
+        assert_eq!(bytes_same(B, P, p, t), 0.0);
+        assert_eq!(bytes_same(P, s(0), p, t), 3.0); // reduce-scatter
+        assert_eq!(bytes_same(P, B, p, t), 6.0); // all-reduce
+        assert_eq!(bytes_same(P, P, p, t), 0.0);
+    }
+
+    /// Every cell of Table 2, "disjoint" column, p1 = 4, p2 = 2, |T| = 1.0.
+    #[test]
+    fn table2_disjoint_column() {
+        let t = 1.0;
+        let (p1, p2) = (4, 2);
+        assert_eq!(bytes_disjoint(s(0), s(0), p1, p2, t), 1.0);
+        assert_eq!(bytes_disjoint(s(0), s(1), p1, p2, t), 1.0);
+        assert_eq!(bytes_disjoint(s(0), B, p1, p2, t), 2.0);
+        assert_eq!(bytes_disjoint(s(0), P, p1, p2, t), 1.0);
+        assert_eq!(bytes_disjoint(B, s(0), p1, p2, t), 1.0);
+        assert_eq!(bytes_disjoint(B, B, p1, p2, t), 2.0);
+        assert_eq!(bytes_disjoint(B, P, p1, p2, t), 1.0);
+        assert_eq!(bytes_disjoint(P, s(0), p1, p2, t), 4.0);
+        assert_eq!(bytes_disjoint(P, B, p1, p2, t), 5.0);
+        assert_eq!(bytes_disjoint(P, P, p1, p2, t), 4.0);
+    }
+
+    #[test]
+    fn methods_match_table2_annotations() {
+        assert_eq!(method_same(s(0), s(1)), BoxingMethod::All2All);
+        assert_eq!(method_same(s(0), B), BoxingMethod::AllGather);
+        assert_eq!(method_same(P, s(0)), BoxingMethod::ReduceScatter);
+        assert_eq!(method_same(P, B), BoxingMethod::AllReduce);
+        assert_eq!(method_same(B, s(0)), BoxingMethod::Identity);
+        assert_eq!(method_same(s(0), s(0)), BoxingMethod::Identity);
+    }
+
+    #[test]
+    fn allreduce_time_matches_ring_formula() {
+        let net = NetworkModel::paper_testbed();
+        let p = 8;
+        let bytes = 100e6;
+        let t = transfer_secs(P, B, p, p, true, false, bytes, &net);
+        let expect = 2.0 * (p as f64 - 1.0) * bytes / p as f64 / net.intra_bps
+            + 2.0 * (p - 1) as f64 * net.latency;
+        assert!((t - expect).abs() / expect < 1e-9, "{t} vs {expect}");
+    }
+
+    #[test]
+    fn inter_node_boxing_slower() {
+        let net = NetworkModel::paper_testbed();
+        let a = transfer_secs(P, B, 8, 8, true, false, 1e8, &net);
+        let b = transfer_secs(P, B, 8, 8, true, true, 1e8, &net);
+        assert!(b > a * 5.0);
+    }
+}

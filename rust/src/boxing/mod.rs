@@ -1,0 +1,14 @@
+//! **Boxing** (paper §3.2): the data-routing ops the compiler inserts when a
+//! producer's SBP signature differs from a consumer's expectation.
+//!
+//! [`cost`] implements Table 2 (bytes transferred per transition, same vs
+//! disjoint device sets) and the time model for each collective on the
+//! simulated interconnect. [`collective`] implements the collectives over
+//! real shards so the runtime can execute boxing with correct numerics, and
+//! reports the bytes it actually moved — tests assert those equal Table 2.
+
+pub mod cost;
+pub mod collective;
+
+pub use cost::{transfer_bytes, transfer_secs, BoxingMethod};
+pub use collective::apply_boxing;

@@ -1,0 +1,60 @@
+//! The OneFlow **compiler** (paper §3): logical graph + placements + SBP
+//! hints → physical per-device execution plan.
+//!
+//! Passes, in order:
+//! 1. [`fusion`] (optional) — fuse matmul+bias+activation chains; the
+//!    mechanism behind the paper's "OneFlow performs more kernel fusions
+//!    than Megatron-LM" single-device edge (§6.5).
+//! 2. [`select`] — choose an SBP signature for every op from its per-op
+//!    candidate set (Table 1 and friends), minimizing modeled boxing +
+//!    compute time (the Table 2 cost model).
+//! 3. [`physical`] — expand each logical op into per-device physical ops,
+//!    inserting *boxing* ops where the producer's signature differs from the
+//!    consumer's expectation (Fig 5), a consumer-side `Pull` for cross-node
+//!    edges (§5), register descriptors with slot counts (pipelining, Fig 6)
+//!    and the compile-time memory plan (§2.3's resource planning).
+
+pub mod select;
+pub mod physical;
+pub mod fusion;
+
+pub use physical::{
+    compile, FetchBinding, InputBinding, PhysKernel, PhysNode, PhysOpId, PhysPlan, RegDesc,
+    RegId, ShardInfo, VarBinding,
+};
+pub use select::{boxing_secs, plan_cost, select_sbp, SelectStrategy, Signature};
+
+use crate::exec::ClusterModel;
+
+/// Compiler options.
+#[derive(Clone, Debug)]
+pub struct CompileOptions {
+    /// Out-register slots for activation registers: 1 = no pipelining,
+    /// 2 = the paper's double-buffering generalization (Fig 6 / §6.1).
+    pub pipeline_depth: usize,
+    /// Run the kernel-fusion pass.
+    pub fuse: bool,
+    /// SBP selection strategy.
+    pub strategy: SelectStrategy,
+    /// Cost basis for signature selection and simulated timing.
+    pub cluster: ClusterModel,
+    /// Deterministic seed for variable init.
+    pub seed: u64,
+    /// Baseline emulation: collectives wait for the *entire* backward pass
+    /// (unbucketed allreduce, TF1/parameter-server style) instead of
+    /// overlapping per-tensor as the actor runtime naturally does.
+    pub serialize_comm: bool,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions {
+            pipeline_depth: 2,
+            fuse: true,
+            strategy: SelectStrategy::Greedy,
+            cluster: ClusterModel::paper_testbed(),
+            seed: 0x0F10,
+            serialize_comm: false,
+        }
+    }
+}

@@ -1,0 +1,772 @@
+//! Logical → physical expansion (paper Fig 1, Fig 5): every logical op
+//! becomes one physical op per device of its placement; *boxing* ops are
+//! inserted wherever a consumer expects a different SBP signature or a
+//! different placement than the producer provides; registers (with slot
+//! counts = pipelining depth) and the compile-time memory plan are emitted.
+
+use super::select::{select_sbp, Signature};
+use super::{fusion, CompileOptions};
+use crate::exec::{CostSpec, QueueKind};
+use crate::graph::{LogicalGraph, NodeId, OpKind, TensorId};
+use crate::placement::{DeviceId, Placement};
+use crate::sbp::{shard_shape_nd, NdSbp, Sbp};
+use crate::tensor::shape::split_offsets;
+use crate::tensor::{DType, Shape};
+use std::collections::HashMap;
+
+/// Physical op id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PhysOpId(pub usize);
+
+/// Register id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RegId(pub usize);
+
+/// Per-shard context a physical kernel may need (paper Fig 11a: each shard
+/// of a vocabulary-split embedding/fc owns a contiguous id range).
+#[derive(Clone, Debug, Default)]
+pub struct ShardInfo {
+    /// Flat index within the placement.
+    pub idx: usize,
+    /// Hierarchy coordinate.
+    pub coord: Vec<usize>,
+    /// Offset of this shard's vocab range (Embedding/EmbeddingGrad only).
+    pub vocab_offset: usize,
+}
+
+/// What a physical node executes.
+#[derive(Clone, Debug)]
+pub enum PhysKernel {
+    /// A sharded instance of a logical compute op.
+    Compute { op: OpKind, shard: ShardInfo },
+    /// A boxing (collective) op transforming all shards of one logical
+    /// tensor between signatures/placements. Consumer shard `i` reads output
+    /// element `i`.
+    Boxing {
+        in_nd: NdSbp,
+        in_place: Placement,
+        out_nd: NdSbp,
+        out_place: Placement,
+        /// Logical tensor size in (dtype-weighted) bytes.
+        t_bytes: f64,
+    },
+    /// Parameter shard source; re-emits (or applies the fed-back update to)
+    /// its slot each piece.
+    Var { var: NodeId, shard_idx: usize },
+    /// Mini-batch shard source.
+    Input { input: NodeId, shard_idx: usize },
+    /// Sink collecting all shards of a fetched logical tensor.
+    Fetch { tensor: TensorId },
+}
+
+/// One physical op (one actor at runtime).
+#[derive(Clone, Debug)]
+pub struct PhysNode {
+    pub id: PhysOpId,
+    pub name: String,
+    pub kernel: PhysKernel,
+    pub device: DeviceId,
+    pub queue: QueueKind,
+    /// `(register, element-index)` pairs read each piece.
+    pub inputs: Vec<(RegId, usize)>,
+    /// Pure ordering dependencies: registers whose piece must exist before
+    /// an action fires, but whose data is not a kernel input. Used to emulate
+    /// baseline schedulers that serialize communication after the full
+    /// backward pass (DESIGN.md §3 baselines).
+    pub controls: Vec<RegId>,
+    pub out_reg: RegId,
+    /// Roofline cost of one action (Compute/Fetch; Boxing uses its own model).
+    pub cost: CostSpec,
+    pub dtype: DType,
+    pub out_shapes: Vec<Shape>,
+    /// Var nodes: where next piece's parameter value comes from (the
+    /// train-loop back edge: forward of piece k+1 waits on update of k).
+    pub update_from: Option<(RegId, usize)>,
+}
+
+/// A register: fixed slot quota, each slot holding one piece's outputs.
+#[derive(Clone, Debug)]
+pub struct RegDesc {
+    pub id: RegId,
+    pub producer: PhysOpId,
+    pub slots: usize,
+    pub bytes_per_slot: f64,
+    pub device: DeviceId,
+    /// Devices this register's buffers are spread over. Compute registers
+    /// live on one device; a boxing op's working set is distributed over the
+    /// consumer placement (ring collectives buffer per participant).
+    pub span: Vec<DeviceId>,
+}
+
+/// Variable metadata for the runtime (lazy shard materialization).
+#[derive(Clone, Debug)]
+pub struct VarBinding {
+    pub node: NodeId,
+    pub name: String,
+    pub shape: Shape,
+    pub dtype: DType,
+    pub init_std: f32,
+    pub nd_sbp: NdSbp,
+    pub placement: Placement,
+    pub phys: Vec<PhysOpId>,
+}
+
+/// Input metadata: how the driver's logical batches are scattered.
+#[derive(Clone, Debug)]
+pub struct InputBinding {
+    pub node: NodeId,
+    pub name: String,
+    pub shape: Shape,
+    pub dtype: DType,
+    pub nd_sbp: NdSbp,
+    pub placement: Placement,
+    pub phys: Vec<PhysOpId>,
+}
+
+/// Fetch metadata: how shards re-gather into the logical fetched value.
+#[derive(Clone, Debug)]
+pub struct FetchBinding {
+    pub tensor: TensorId,
+    pub name: String,
+    pub nd_sbp: NdSbp,
+    pub placement: Placement,
+    pub phys: PhysOpId,
+}
+
+/// The physical execution plan — the compiler's product, the runtime's input.
+#[derive(Clone, Debug)]
+pub struct PhysPlan {
+    pub nodes: Vec<PhysNode>,
+    pub regs: Vec<RegDesc>,
+    pub vars: Vec<VarBinding>,
+    pub inputs: Vec<InputBinding>,
+    pub fetches: Vec<FetchBinding>,
+    pub signatures: HashMap<NodeId, Signature>,
+    pub options: CompileOptions,
+    /// The (possibly fusion-rewritten) logical graph this plan realizes.
+    pub graph: LogicalGraph,
+}
+
+impl PhysPlan {
+    /// Number of boxing ops inserted (plan-structure tests use this).
+    pub fn boxing_count(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n.kernel, PhysKernel::Boxing { .. })).count()
+    }
+
+    /// Boxing nodes (method inspection in tests/benches).
+    pub fn boxing_nodes(&self) -> Vec<&PhysNode> {
+        self.nodes.iter().filter(|n| matches!(n.kernel, PhysKernel::Boxing { .. })).collect()
+    }
+
+    /// Per-device planned memory footprint in bytes (registers × slots) —
+    /// the compile-time resource planning of §2.3/§4.2.
+    pub fn memory_by_device(&self) -> HashMap<DeviceId, f64> {
+        let mut m: HashMap<DeviceId, f64> = HashMap::new();
+        for r in &self.regs {
+            let share = r.bytes_per_slot * r.slots as f64 / r.span.len() as f64;
+            for d in &r.span {
+                *m.entry(*d).or_default() += share;
+            }
+        }
+        m
+    }
+
+    /// Largest per-device footprint.
+    pub fn peak_device_memory(&self) -> f64 {
+        self.memory_by_device().values().cloned().fold(0.0, f64::max)
+    }
+
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        for n in &self.nodes {
+            let ins: Vec<String> =
+                n.inputs.iter().map(|(r, i)| format!("r{}[{}]", r.0, i)).collect();
+            s.push_str(&format!(
+                "p{} {} @{} {:?} ({}) -> r{}\n",
+                n.id.0,
+                n.name,
+                n.device,
+                n.queue,
+                ins.join(","),
+                n.out_reg.0
+            ));
+        }
+        s
+    }
+}
+
+/// Placement of each producer's physical outputs for routing.
+struct Produced {
+    /// Physical out registers in placement order (+ which element index the
+    /// logical tensor occupies in each slot).
+    regs: Vec<(RegId, usize)>,
+    nd_sbp: NdSbp,
+    placement: Placement,
+}
+
+struct Builder {
+    nodes: Vec<PhysNode>,
+    regs: Vec<RegDesc>,
+}
+
+impl Builder {
+    fn add_node(
+        &mut self,
+        name: String,
+        kernel: PhysKernel,
+        device: DeviceId,
+        queue: QueueKind,
+        inputs: Vec<(RegId, usize)>,
+        cost: CostSpec,
+        dtype: DType,
+        out_shapes: Vec<Shape>,
+        slots: usize,
+    ) -> (PhysOpId, RegId) {
+        let id = PhysOpId(self.nodes.len());
+        let rid = RegId(self.regs.len());
+        let bytes_per_slot: f64 =
+            out_shapes.iter().map(|s| s.elems() as f64 * dtype.bytes() as f64).sum();
+        let span = match &kernel {
+            PhysKernel::Boxing { out_place, .. } => out_place.devices.clone(),
+            _ => vec![device],
+        };
+        self.regs.push(RegDesc { id: rid, producer: id, slots, bytes_per_slot, device, span });
+        self.nodes.push(PhysNode {
+            id,
+            name,
+            kernel,
+            device,
+            queue,
+            inputs,
+            controls: vec![],
+            out_reg: rid,
+            cost,
+            dtype,
+            out_shapes,
+            update_from: None,
+        });
+        (id, rid)
+    }
+}
+
+/// Compile a logical graph into a physical plan.
+///
+/// * `fetches` — logical tensors whose values the driver collects per piece.
+/// * `var_updates` — optimizer-produced next-piece value per Variable node
+///   (the training back edge); pass `&HashMap::new()` for inference.
+pub fn compile(
+    g: &LogicalGraph,
+    fetches: &[TensorId],
+    var_updates: &HashMap<NodeId, TensorId>,
+    opts: &CompileOptions,
+) -> PhysPlan {
+    // Pass 1: fusion (physical-level optimization done on the logical IR
+    // before expansion, like XLA fusion happening pre-partitioning).
+    let (g, remap, nremap) = if opts.fuse {
+        fusion::fuse(g)
+    } else {
+        (g.clone(), Default::default(), Default::default())
+    };
+    let remap_t = |t: TensorId| *remap.get(&t).unwrap_or(&t);
+    let remap_n = |n: NodeId| *nremap.get(&n).unwrap_or(&n);
+    // keep the caller's ids: fetch results are reported under the original id
+    let fetches: Vec<(TensorId, TensorId)> =
+        fetches.iter().map(|&t| (t, remap_t(t))).collect();
+    let var_updates: HashMap<NodeId, TensorId> =
+        var_updates.iter().map(|(&n, &t)| (remap_n(n), remap_t(t))).collect();
+
+    // Pass 2: SBP selection.
+    let signatures = select_sbp(&g, opts.strategy, &opts.cluster);
+
+    // Pass 3: expansion.
+    let mut b = Builder { nodes: vec![], regs: vec![] };
+    let mut produced: HashMap<TensorId, Produced> = HashMap::new();
+    // boxing cache: one boxing op per (tensor, target sbp, target placement)
+    let mut boxing_cache: HashMap<(TensorId, NdSbp, Vec<DeviceId>), Vec<(RegId, usize)>> =
+        HashMap::new();
+    let mut vars: Vec<VarBinding> = vec![];
+    let mut inputs: Vec<InputBinding> = vec![];
+    let mut var_phys: HashMap<NodeId, Vec<PhysOpId>> = HashMap::new();
+
+    for nid in g.topo_order() {
+        let node = g.node(nid).clone();
+        let sig = signatures[&nid].clone();
+        let pl = node.placement.clone();
+        match &node.op {
+            OpKind::Variable { shape, dtype, init_std } => {
+                let mut phys = vec![];
+                for i in 0..pl.len() {
+                    let coord = pl.coord(i);
+                    let sh = shard_shape_nd(shape, &sig.outs[0], &pl.hierarchy, &coord);
+                    let (pid, _) = b.add_node(
+                        format!("{}#{}", node.name, i),
+                        PhysKernel::Var { var: nid, shard_idx: i },
+                        pl.devices[i],
+                        QueueKind::Compute,
+                        vec![],
+                        CostSpec::ZERO,
+                        *dtype,
+                        vec![sh],
+                        1, // parameters live in a single mutable slot
+                    );
+                    phys.push(pid);
+                }
+                let regs = phys.iter().map(|&p| (b.nodes[p.0].out_reg, 0usize)).collect();
+                produced.insert(
+                    node.outputs[0],
+                    Produced { regs, nd_sbp: sig.outs[0].clone(), placement: pl.clone() },
+                );
+                var_phys.insert(nid, phys.clone());
+                vars.push(VarBinding {
+                    node: nid,
+                    name: node.name.clone(),
+                    shape: shape.clone(),
+                    dtype: *dtype,
+                    init_std: *init_std,
+                    nd_sbp: sig.outs[0].clone(),
+                    placement: pl.clone(),
+                    phys,
+                });
+            }
+            OpKind::Input { shape, dtype } => {
+                let mut phys = vec![];
+                for i in 0..pl.len() {
+                    let coord = pl.coord(i);
+                    let sh = shard_shape_nd(shape, &sig.outs[0], &pl.hierarchy, &coord);
+                    let (pid, _) = b.add_node(
+                        format!("{}#{}", node.name, i),
+                        PhysKernel::Input { input: nid, shard_idx: i },
+                        pl.devices[i],
+                        QueueKind::H2D, // batches arrive over the copy engine
+                        vec![],
+                        CostSpec {
+                            flops: 0.0,
+                            read_bytes: 0.0,
+                            write_bytes: sh.elems() as f64 * dtype.bytes() as f64,
+                            queue: QueueKind::H2D,
+                        },
+                        *dtype,
+                        vec![sh],
+                        opts.pipeline_depth,
+                    );
+                    phys.push(pid);
+                }
+                let regs = phys.iter().map(|&p| (b.nodes[p.0].out_reg, 0usize)).collect();
+                produced.insert(
+                    node.outputs[0],
+                    Produced { regs, nd_sbp: sig.outs[0].clone(), placement: pl.clone() },
+                );
+                inputs.push(InputBinding {
+                    node: nid,
+                    name: node.name.clone(),
+                    shape: shape.clone(),
+                    dtype: *dtype,
+                    nd_sbp: sig.outs[0].clone(),
+                    placement: pl.clone(),
+                    phys,
+                });
+            }
+            op => {
+                // Route each input to this node's required signature.
+                let mut per_shard_inputs: Vec<Vec<(RegId, usize)>> =
+                    vec![vec![]; pl.len()];
+                for (i, &t) in node.inputs.iter().enumerate() {
+                    let routed = route(
+                        &g,
+                        &mut b,
+                        &mut boxing_cache,
+                        &produced,
+                        t,
+                        &sig.ins[i],
+                        &pl,
+                        opts,
+                    );
+                    for (shard, r) in routed.into_iter().enumerate() {
+                        per_shard_inputs[shard].push(r);
+                    }
+                }
+                let out_dtypes = node
+                    .outputs
+                    .iter()
+                    .map(|&t| g.tensor(t).dtype)
+                    .collect::<Vec<_>>();
+                let dtype = out_dtypes[0];
+                let mut shard_regs: Vec<(RegId, usize)> = vec![];
+                for sidx in 0..pl.len() {
+                    let coord = pl.coord(sidx);
+                    let in_shards: Vec<Shape> = node
+                        .inputs
+                        .iter()
+                        .zip(&sig.ins)
+                        .map(|(&t, nd)| {
+                            shard_shape_nd(&g.tensor(t).shape, nd, &pl.hierarchy, &coord)
+                        })
+                        .collect();
+                    let out_shards: Vec<Shape> = node
+                        .outputs
+                        .iter()
+                        .zip(&sig.outs)
+                        .map(|(&t, nd)| {
+                            shard_shape_nd(&g.tensor(t).shape, nd, &pl.hierarchy, &coord)
+                        })
+                        .collect();
+                    let in_refs: Vec<&Shape> = in_shards.iter().collect();
+                    let out_refs: Vec<&Shape> = out_shards.iter().collect();
+                    let cost = op.cost(&in_refs, &out_refs, dtype);
+                    let shard = ShardInfo {
+                        idx: sidx,
+                        coord: coord.clone(),
+                        vocab_offset: vocab_offset_for(&g, &node.op, &node, &sig, &pl, sidx),
+                    };
+                    let (pid, rid) = b.add_node(
+                        format!("{}#{}", node.name, sidx),
+                        PhysKernel::Compute { op: op.clone(), shard },
+                        pl.devices[sidx],
+                        op.queue(),
+                        per_shard_inputs[sidx].clone(),
+                        cost,
+                        dtype,
+                        out_shards,
+                        opts.pipeline_depth,
+                    );
+                    let _ = pid;
+                    shard_regs.push((rid, 0));
+                }
+                for (oi, &t) in node.outputs.iter().enumerate() {
+                    let regs =
+                        shard_regs.iter().map(|&(r, _)| (r, oi)).collect::<Vec<_>>();
+                    produced.insert(
+                        t,
+                        Produced {
+                            regs,
+                            nd_sbp: sig.outs[oi].clone(),
+                            placement: pl.clone(),
+                        },
+                    );
+                }
+            }
+        }
+    }
+
+    // Training back edges: wire each Variable's update source.
+    for (&vnode, &ut) in &var_updates {
+        let vb = vars.iter().find(|v| v.node == vnode).expect("update for unknown var");
+        let routed = route(
+            &g,
+            &mut b,
+            &mut boxing_cache,
+            &produced,
+            ut,
+            &vb.nd_sbp.clone(),
+            &vb.placement.clone(),
+            opts,
+        );
+        for (i, &pid) in var_phys[&vnode].iter().enumerate() {
+            b.nodes[pid.0].update_from = Some(routed[i]);
+        }
+    }
+
+    // Baseline emulation: serialize collectives after the whole backward
+    // pass (unbucketed-allreduce schedulers). Every partial-consuming boxing
+    // op gets ordering deps on every gradient producer.
+    if opts.serialize_comm {
+        let grad_tensors: Vec<TensorId> = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, OpKind::SgdUpdate { .. } | OpKind::AdamUpdate { .. }))
+            .map(|n| n.inputs[1])
+            .collect();
+        let grad_regs: Vec<RegId> = grad_tensors
+            .iter()
+            .filter_map(|t| produced.get(t))
+            .flat_map(|p| p.regs.iter().map(|&(r, _)| r))
+            .collect();
+        let boxing_ids: Vec<usize> = b
+            .nodes
+            .iter()
+            .filter(|n| {
+                matches!(&n.kernel, PhysKernel::Boxing { in_nd, .. }
+                    if in_nd.0.iter().any(|s| s.is_partial()))
+            })
+            .map(|n| n.id.0)
+            .collect();
+        for id in boxing_ids {
+            for &r in &grad_regs {
+                if r != b.nodes[id].out_reg
+                    && !b.nodes[id].inputs.iter().any(|&(ir, _)| ir == r)
+                    && !b.nodes[id].controls.contains(&r)
+                {
+                    b.nodes[id].controls.push(r);
+                }
+            }
+        }
+    }
+
+    // Fetch sinks.
+    let mut fetch_bindings = vec![];
+    for &(orig, t) in &fetches {
+        let prod = &produced[&t];
+        let dtype = g.tensor(t).dtype;
+        let bytes = g.tensor(t).shape.elems() as f64 * dtype.bytes() as f64;
+        let (pid, _) = b.add_node(
+            format!("fetch_t{}", orig.0),
+            PhysKernel::Fetch { tensor: orig },
+            prod.placement.devices[0],
+            QueueKind::D2H,
+            prod.regs.clone(),
+            CostSpec { flops: 0.0, read_bytes: bytes, write_bytes: 0.0, queue: QueueKind::D2H },
+            dtype,
+            vec![g.tensor(t).shape.clone()],
+            opts.pipeline_depth,
+        );
+        fetch_bindings.push(FetchBinding {
+            tensor: orig,
+            name: format!("fetch_t{}", orig.0),
+            nd_sbp: prod.nd_sbp.clone(),
+            placement: prod.placement.clone(),
+            phys: pid,
+        });
+    }
+
+    PhysPlan {
+        nodes: b.nodes,
+        regs: b.regs,
+        vars,
+        inputs,
+        fetches: fetch_bindings,
+        signatures,
+        options: opts.clone(),
+        graph: g,
+    }
+}
+
+/// Resolve how each consumer shard of `t` (expected under `(want, want_pl)`)
+/// reads its data: direct per-index edges when signatures and placements
+/// match, otherwise through a (cached) boxing op — paper Fig 5.
+#[allow(clippy::too_many_arguments)]
+fn route(
+    g: &LogicalGraph,
+    b: &mut Builder,
+    cache: &mut HashMap<(TensorId, NdSbp, Vec<DeviceId>), Vec<(RegId, usize)>>,
+    produced: &HashMap<TensorId, Produced>,
+    t: TensorId,
+    want: &NdSbp,
+    want_pl: &Placement,
+    opts: &CompileOptions,
+) -> Vec<(RegId, usize)> {
+    let prod = produced.get(&t).unwrap_or_else(|| panic!("tensor t{} not produced", t.0));
+    let same_pl =
+        prod.placement.same_devices(want_pl) && prod.placement.hierarchy == want_pl.hierarchy;
+    // On one device every signature is the same physical tensor — no boxing.
+    if same_pl && (&prod.nd_sbp == want || want_pl.len() == 1) {
+        return prod.regs.clone(); // zero-copy same-device edges
+    }
+    let key = (t, want.clone(), want_pl.devices.clone());
+    if let Some(r) = cache.get(&key) {
+        return r.clone();
+    }
+    let dtype = g.tensor(t).dtype;
+    let t_bytes = g.tensor(t).shape.elems() as f64 * dtype.bytes() as f64;
+    // Consumer-side placement for cross-placement pulls (§5: the compiler
+    // "only inserts a networking actor at the consumer's side").
+    let home = if same_pl { prod.placement.devices[0] } else { want_pl.devices[0] };
+    let kernel = PhysKernel::Boxing {
+        in_nd: prod.nd_sbp.clone(),
+        in_place: prod.placement.clone(),
+        out_nd: want.clone(),
+        out_place: want_pl.clone(),
+        t_bytes,
+    };
+    let out_shapes: Vec<Shape> = (0..want_pl.len())
+        .map(|i| shard_shape_nd(&g.tensor(t).shape, want, &want_pl.hierarchy, &want_pl.coord(i)))
+        .collect();
+    let (_, rid) = b.add_node(
+        format!("boxing_t{}_{}to{}", t.0, prod.nd_sbp, want),
+        kernel,
+        home,
+        QueueKind::Net,
+        prod.regs.clone(),
+        CostSpec { flops: 0.0, read_bytes: t_bytes, write_bytes: t_bytes, queue: QueueKind::Net },
+        dtype,
+        out_shapes,
+        opts.pipeline_depth,
+    );
+    let routed: Vec<(RegId, usize)> = (0..want_pl.len()).map(|i| (rid, i)).collect();
+    cache.insert(key, routed.clone());
+    routed
+}
+
+/// Vocabulary offset for sharded embedding ops (paper §6.3.2): derived from
+/// the chosen SBP of the table (Embedding input 0 split(0)) or of the output
+/// (EmbeddingGrad producing split(0)).
+fn vocab_offset_for(
+    g: &LogicalGraph,
+    op: &OpKind,
+    node: &crate::graph::Node,
+    sig: &Signature,
+    pl: &Placement,
+    sidx: usize,
+) -> usize {
+    let coord = pl.coord(sidx);
+    let offset_from = |nd: &NdSbp, vocab: usize| -> usize {
+        let mut off = 0;
+        let mut extent = vocab;
+        for (d, s) in nd.0.iter().enumerate() {
+            if *s == Sbp::Split(0) {
+                let offs = split_offsets(extent, pl.hierarchy[d]);
+                off += offs[coord[d]];
+                extent = crate::tensor::shape::split_sizes(extent, pl.hierarchy[d])[coord[d]];
+            }
+        }
+        off
+    };
+    match op {
+        OpKind::Embedding => {
+            let vocab = g.tensor(node.inputs[0]).shape.dim(0);
+            offset_from(&sig.ins[0], vocab)
+        }
+        OpKind::EmbeddingGrad { vocab } => offset_from(&sig.outs[0], *vocab),
+        _ => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sbp::{s, B};
+
+    /// Fig 5: two matmuls, producer S(0) but consumer needs B — the compiler
+    /// must insert exactly one boxing op, an all-gather on the same devices.
+    #[test]
+    fn fig5_boxing_inserted() {
+        let p = Placement::node(0, 2);
+        let mut g = LogicalGraph::new();
+        let a0 = g.add1("a0", OpKind::Input { shape: [4, 5].into(), dtype: DType::F32 }, &[], p.clone());
+        g.hint_tensor(a0, NdSbp::d1(s(0)));
+        let b0 = g.add1("b0", OpKind::Variable { shape: [5, 8].into(), dtype: DType::F32, init_std: 0.1 }, &[], p.clone());
+        g.hint_tensor(b0, NdSbp::d1(B));
+        let y0 = g.add1("y0", OpKind::MatMul { ta: false, tb: false }, &[a0, b0], p.clone());
+        let b1 = g.add1("b1", OpKind::Variable { shape: [8, 6].into(), dtype: DType::F32, init_std: 0.1 }, &[], p.clone());
+        g.hint_tensor(b1, NdSbp::d1(s(1)));
+        // Model parallelism on matmul1 requires y0 as B (Table 1 row 2).
+        let y2 = g.add1("y2", OpKind::MatMul { ta: false, tb: false }, &[y0, b1], p.clone());
+        let plan = compile(&g, &[y2], &HashMap::new(), &CompileOptions { fuse: false, ..Default::default() });
+
+        assert_eq!(plan.boxing_count(), 1, "exactly one boxing op:\n{}", plan.dump());
+        let boxing = plan.boxing_nodes()[0];
+        if let PhysKernel::Boxing { in_nd, out_nd, .. } = &boxing.kernel {
+            assert_eq!(in_nd, &NdSbp::d1(s(0)));
+            assert_eq!(out_nd, &NdSbp::d1(B));
+        } else {
+            unreachable!()
+        }
+    }
+
+    #[test]
+    fn matching_signatures_need_no_boxing() {
+        let p = Placement::node(0, 4);
+        let mut g = LogicalGraph::new();
+        let x = g.add1("x", OpKind::Input { shape: [16, 8].into(), dtype: DType::F32 }, &[], p.clone());
+        g.hint_tensor(x, NdSbp::d1(s(0)));
+        let r1 = g.add1("r1", OpKind::Relu, &[x], p.clone());
+        let r2 = g.add1("r2", OpKind::Gelu, &[r1], p.clone());
+        let plan = compile(&g, &[r2], &HashMap::new(), &CompileOptions::default());
+        assert_eq!(plan.boxing_count(), 0, "{}", plan.dump());
+        // 4 input + 4 relu + 4 gelu + 1 fetch
+        assert_eq!(plan.nodes.len(), 13);
+    }
+
+    #[test]
+    fn boxing_shared_between_consumers() {
+        let p = Placement::node(0, 2);
+        let mut g = LogicalGraph::new();
+        let x = g.add1("x", OpKind::Input { shape: [8, 8].into(), dtype: DType::F32 }, &[], p.clone());
+        g.hint_tensor(x, NdSbp::d1(s(0)));
+        // weights large enough that boxing x (small) is the cheap choice
+        let w1 = g.add1("w1", OpKind::Variable { shape: [8, 2048].into(), dtype: DType::F32, init_std: 0.1 }, &[], p.clone());
+        g.hint_tensor(w1, NdSbp::d1(s(1)));
+        let w2 = g.add1("w2", OpKind::Variable { shape: [8, 2048].into(), dtype: DType::F32, init_std: 0.1 }, &[], p.clone());
+        g.hint_tensor(w2, NdSbp::d1(s(1)));
+        // both consumers need x as B
+        let y1 = g.add1("y1", OpKind::MatMul { ta: false, tb: false }, &[x, w1], p.clone());
+        let y2 = g.add1("y2", OpKind::MatMul { ta: false, tb: false }, &[x, w2], p.clone());
+        let plan = compile(&g, &[y1, y2], &HashMap::new(), &CompileOptions { fuse: false, ..Default::default() });
+        assert_eq!(plan.boxing_count(), 1, "boxing reused:\n{}", plan.dump());
+    }
+
+    #[test]
+    fn pipeline_placement_change_inserts_pull() {
+        // Producer on node 0, consumer on node 1 — same SBP, different
+        // placement: a cross-placement boxing (pull) on the consumer side.
+        let p0 = Placement::node(0, 1);
+        let p1 = Placement::node(1, 1);
+        let mut g = LogicalGraph::new();
+        let x = g.add1("x", OpKind::Input { shape: [4, 4].into(), dtype: DType::F32 }, &[], p0.clone());
+        g.hint_tensor(x, NdSbp::d1(B));
+        let h = g.add1("h", OpKind::Relu, &[x], p0);
+        let y = g.add1("y", OpKind::Gelu, &[h], p1.clone());
+        let plan = compile(&g, &[y], &HashMap::new(), &CompileOptions::default());
+        assert_eq!(plan.boxing_count(), 1);
+        let pull = plan.boxing_nodes()[0];
+        // consumer-side networking actor (§5)
+        assert_eq!(pull.device.node, 1, "pull lives on the consumer node");
+        assert_eq!(pull.queue, QueueKind::Net);
+    }
+
+    #[test]
+    fn variable_update_back_edge_wired() {
+        use crate::graph::autograd;
+        let p = Placement::node(0, 2);
+        let mut g = LogicalGraph::new();
+        let x = g.add1("x", OpKind::Input { shape: [8, 4].into(), dtype: DType::F32 }, &[], p.clone());
+        g.hint_tensor(x, NdSbp::d1(s(0)));
+        let w = g.add1("w", OpKind::Variable { shape: [4, 3].into(), dtype: DType::F32, init_std: 0.1 }, &[], p.clone());
+        g.hint_tensor(w, NdSbp::d1(B));
+        let labels = g.add1("labels", OpKind::Input { shape: [8].into(), dtype: DType::I32 }, &[], p.clone());
+        g.hint_tensor(labels, NdSbp::d1(s(0)));
+        let h = g.add1("h", OpKind::MatMul { ta: false, tb: false }, &[x, w], p.clone());
+        let outs = g.add("loss", OpKind::SparseXent, &[h, labels], p.clone());
+        let bw = autograd::build_backward(&mut g, outs[0]);
+        let updates = autograd::append_sgd(&mut g, &bw, 0.1);
+        let plan = compile(&g, &[outs[0]], &updates, &CompileOptions::default());
+        for v in &plan.vars {
+            for &pid in &v.phys {
+                assert!(plan.nodes[pid.0].update_from.is_some(), "var {} lacks back edge", v.name);
+            }
+        }
+        // The data-parallel P(sum) gradient must be combined: either a P->B
+        // all-reduce, or — what the cost model actually discovers, since it
+        // moves the same bytes — a ZeRO-style P->S reduce-scatter for the
+        // update plus an S->B all-gather of the updated parameter.
+        let has = |f: &dyn Fn(&NdSbp, &NdSbp) -> bool| {
+            plan.boxing_nodes().iter().any(|n| {
+                matches!(&n.kernel, PhysKernel::Boxing { in_nd, out_nd, .. } if f(in_nd, out_nd))
+            })
+        };
+        let allreduce = has(&|i, o| i.0[0].is_partial() && o.0[0] == B);
+        let reduce_scatter = has(&|i, o| i.0[0].is_partial() && o.0[0].is_split());
+        let all_gather = has(&|i, o| i.0[0].is_split() && o.0[0] == B);
+        assert!(
+            allreduce || (reduce_scatter && all_gather),
+            "expected gradient combine boxing:\n{}",
+            plan.dump()
+        );
+    }
+
+    #[test]
+    fn memory_plan_accounts_registers() {
+        let p = Placement::node(0, 2);
+        let mut g = LogicalGraph::new();
+        let x = g.add1("x", OpKind::Input { shape: [8, 8].into(), dtype: DType::F32 }, &[], p.clone());
+        g.hint_tensor(x, NdSbp::d1(s(0)));
+        let y = g.add1("y", OpKind::Relu, &[x], p.clone());
+        let opts = CompileOptions { pipeline_depth: 2, ..Default::default() };
+        let plan = compile(&g, &[y], &HashMap::new(), &opts);
+        let mem = plan.memory_by_device();
+        // per device: input reg (4x8 f32 = 128B) * 2 + relu reg 128 * 2 ... fetch on dev0
+        let d0 = mem[&DeviceId::new(0, 0)];
+        let d1 = mem[&DeviceId::new(0, 1)];
+        assert!(d0 >= 512.0 && d1 >= 512.0, "d0={d0} d1={d1}");
+        assert!(d0 > d1, "fetch sink register lives on device 0");
+    }
+}

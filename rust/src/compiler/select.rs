@@ -1,0 +1,403 @@
+//! SBP signature selection (paper §3.1–3.2): pick, for every logical op, one
+//! of its valid per-dim signature candidates so that hints are honored and
+//! the modeled cost — boxing time from the Table 2 cost model plus shard
+//! compute time — is minimized.
+
+use crate::boxing::cost::transfer_secs;
+use crate::exec::{ClusterModel, NetworkModel};
+use crate::graph::{LogicalGraph, Node, NodeId, SigCand};
+use crate::placement::Placement;
+use crate::sbp::{shard_shape_nd, NdSbp, Sbp};
+use crate::tensor::Shape;
+use std::collections::HashMap;
+
+/// A node's chosen multi-dim signature.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Signature {
+    pub ins: Vec<NdSbp>,
+    pub outs: Vec<NdSbp>,
+}
+
+/// Selection strategy. Greedy is the paper's "deduction rule + cost model";
+/// Exhaustive is a beam search used for the ablation bench.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectStrategy {
+    Greedy,
+    Beam { width: usize },
+}
+
+/// Estimated wall-clock of converting a logical tensor of `t_bytes` from the
+/// producer's `(in_nd, in_place)` to the consumer's `(out_nd, out_place)`.
+/// Same-placement transitions decompose per hierarchy dim (hierarchical
+/// collectives); cross-placement uses the pull path on the narrower link.
+pub fn boxing_secs(
+    in_nd: &NdSbp,
+    in_place: &Placement,
+    out_nd: &NdSbp,
+    out_place: &Placement,
+    t_bytes: f64,
+    net: &NetworkModel,
+) -> f64 {
+    if in_place.same_devices(out_place) && in_place.hierarchy == out_place.hierarchy {
+        if in_nd == out_nd {
+            return 0.0;
+        }
+        let hier = &in_place.hierarchy;
+        let mut total = 0.0;
+        for d in 0..in_nd.rank() {
+            if in_nd.0[d] == out_nd.0[d] {
+                continue;
+            }
+            // Per-group sub-tensor size: other Split dims shrink the group's
+            // logical tensor; B/P dims replicate it.
+            let mut group_bytes = t_bytes;
+            for (d2, s2) in in_nd.0.iter().enumerate() {
+                if d2 != d && s2.is_split() {
+                    group_bytes /= hier[d2] as f64;
+                }
+            }
+            // grid placements: dim 0 spans nodes, inner dims stay in-node
+            let inter = if in_place.single_node() {
+                false
+            } else {
+                d == 0 || in_place.hierarchy.len() == 1
+            };
+            total += transfer_secs(
+                in_nd.0[d],
+                out_nd.0[d],
+                hier[d],
+                hier[d],
+                true,
+                inter,
+                group_bytes,
+                net,
+            );
+        }
+        total
+    } else {
+        // Cross-placement pull: the dominant (first differing or first) dim
+        // decides the Table 2 disjoint formula; collapse multi-dim counts.
+        let a = effective_1d(in_nd);
+        let b = effective_1d(out_nd);
+        let inter = !(in_place.single_node()
+            && out_place.single_node()
+            && in_place.nodes() == out_place.nodes());
+        transfer_secs(a, b, in_place.len(), out_place.len(), false, inter, t_bytes, net)
+    }
+}
+
+/// Collapse an NdSbp to the 1-D signature that dominates its transfer cost.
+fn effective_1d(nd: &NdSbp) -> Sbp {
+    if let Some(p) = nd.0.iter().find(|s| s.is_partial()) {
+        return *p;
+    }
+    if let Some(s) = nd.0.iter().find(|s| s.is_split()) {
+        return *s;
+    }
+    Sbp::Broadcast
+}
+
+/// All multi-dim candidate signatures of a node: the cartesian product of
+/// its per-dim 1-D candidates over the placement hierarchy (§3.3).
+pub fn nd_candidates(node: &Node) -> Vec<Signature> {
+    let rank = node.placement.hierarchy.len();
+    let cands_1d = node.op.sbp_candidates(node.inputs.len());
+    let mut combos: Vec<Vec<&SigCand>> = vec![vec![]];
+    for _ in 0..rank {
+        let mut next = Vec::with_capacity(combos.len() * cands_1d.len());
+        for prefix in &combos {
+            for c in &cands_1d {
+                let mut v = prefix.clone();
+                v.push(c);
+                next.push(v);
+            }
+        }
+        combos = next;
+    }
+    combos
+        .into_iter()
+        .map(|per_dim| {
+            let ins = (0..node.inputs.len())
+                .map(|i| NdSbp(per_dim.iter().map(|c| c.ins[i]).collect()))
+                .collect();
+            let outs = (0..node.outputs.len())
+                .map(|o| NdSbp(per_dim.iter().map(|c| c.outs[o]).collect()))
+                .collect();
+            Signature { ins, outs }
+        })
+        .collect()
+}
+
+/// A Split(axis) is only usable if the tensor axis exists and is at least as
+/// large as the number of parts along that hierarchy dim.
+fn sig_shape_ok(nd: &NdSbp, shape: &Shape, hierarchy: &[usize]) -> bool {
+    for (d, s) in nd.0.iter().enumerate() {
+        if let Sbp::Split(axis) = s {
+            if *axis >= shape.rank() {
+                return false;
+            }
+            // allow uneven splits but not empty shards
+            if shape.dim(*axis) < hierarchy[d] {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Rough shard compute time for a node under a candidate output signature.
+fn compute_secs(node: &Node, g: &LogicalGraph, sig: &Signature, cluster: &ClusterModel) -> f64 {
+    let hier = &node.placement.hierarchy;
+    let coord0 = vec![0; hier.len()];
+    let in_shards: Vec<Shape> = node
+        .inputs
+        .iter()
+        .zip(&sig.ins)
+        .map(|(t, nd)| shard_shape_nd(&g.tensor(*t).shape, nd, hier, &coord0))
+        .collect();
+    let out_shards: Vec<Shape> = node
+        .outputs
+        .iter()
+        .zip(&sig.outs)
+        .map(|(t, nd)| shard_shape_nd(&g.tensor(*t).shape, nd, hier, &coord0))
+        .collect();
+    let in_refs: Vec<&Shape> = in_shards.iter().collect();
+    let out_refs: Vec<&Shape> = out_shards.iter().collect();
+    let dtype = g.tensor(node.outputs[0]).dtype;
+    let cost = node.op.cost(&in_refs, &out_refs, dtype);
+    cluster.device.kernel_secs(&cost, dtype)
+}
+
+/// Select signatures for every node.
+pub fn select_sbp(
+    g: &LogicalGraph,
+    strategy: SelectStrategy,
+    cluster: &ClusterModel,
+) -> HashMap<NodeId, Signature> {
+    match strategy {
+        SelectStrategy::Greedy => select_beam(g, 1, cluster),
+        SelectStrategy::Beam { width } => select_beam(g, width.max(1), cluster),
+    }
+}
+
+#[derive(Clone)]
+struct BeamState {
+    chosen: HashMap<NodeId, Signature>,
+    cost: f64,
+}
+
+fn select_beam(
+    g: &LogicalGraph,
+    width: usize,
+    cluster: &ClusterModel,
+) -> HashMap<NodeId, Signature> {
+    let order = g.topo_order();
+    let mut beam = vec![BeamState { chosen: HashMap::new(), cost: 0.0 }];
+    for nid in order {
+        let node = g.node(nid);
+        let cands = admissible_candidates(g, node);
+        assert!(
+            !cands.is_empty(),
+            "no admissible SBP signature for node {} ({}) hint={:?}",
+            node.name,
+            node.op.name(),
+            node.sbp_hint
+        );
+        let mut next: Vec<BeamState> = Vec::new();
+        for state in &beam {
+            for sig in &cands {
+                let mut cost = state.cost + compute_secs(node, g, sig, cluster);
+                for (i, &t) in node.inputs.iter().enumerate() {
+                    let prod = g.tensor(t).producer;
+                    let prod_node = g.node(prod);
+                    let prod_sig = &state.chosen[&prod];
+                    let out_idx = g.tensor(t).out_idx;
+                    let t_bytes = g.tensor(t).shape.elems() as f64
+                        * g.tensor(t).dtype.bytes() as f64;
+                    cost += boxing_secs(
+                        &prod_sig.outs[out_idx],
+                        &prod_node.placement,
+                        &sig.ins[i],
+                        &node.placement,
+                        t_bytes,
+                        &cluster.network,
+                    );
+                }
+                let mut chosen = state.chosen.clone();
+                chosen.insert(nid, sig.clone());
+                next.push(BeamState { chosen, cost });
+            }
+        }
+        next.sort_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap());
+        next.truncate(width);
+        beam = next;
+    }
+    beam.into_iter().next().unwrap().chosen
+}
+
+/// Total modeled cost (seconds) of a full signature assignment — used by the
+/// selection-strategy ablation bench.
+pub fn plan_cost(
+    g: &LogicalGraph,
+    sel: &HashMap<NodeId, Signature>,
+    cluster: &ClusterModel,
+) -> f64 {
+    let mut cost = 0.0;
+    for node in &g.nodes {
+        let sig = &sel[&node.id];
+        cost += compute_secs(node, g, sig, cluster);
+        for (i, &t) in node.inputs.iter().enumerate() {
+            let prod = g.tensor(t).producer;
+            let prod_sig = &sel[&prod];
+            let t_bytes = g.tensor(t).shape.elems() as f64 * g.tensor(t).dtype.bytes() as f64;
+            cost += boxing_secs(
+                &prod_sig.outs[g.tensor(t).out_idx],
+                &g.node(prod).placement,
+                &sig.ins[i],
+                &node.placement,
+                t_bytes,
+                &cluster.network,
+            );
+        }
+    }
+    cost
+}
+
+/// Candidates filtered by shape-compatibility and the node's hint.
+fn admissible_candidates(g: &LogicalGraph, node: &Node) -> Vec<Signature> {
+    let hier = &node.placement.hierarchy;
+    nd_candidates(node)
+        .into_iter()
+        .filter(|sig| {
+            for (i, &t) in node.inputs.iter().enumerate() {
+                if !sig_shape_ok(&sig.ins[i], &g.tensor(t).shape, hier) {
+                    return false;
+                }
+            }
+            for (o, &t) in node.outputs.iter().enumerate() {
+                if !sig_shape_ok(&sig.outs[o], &g.tensor(t).shape, hier) {
+                    return false;
+                }
+            }
+            if let Some(hint) = &node.sbp_hint {
+                // hint rank must match the placement hierarchy
+                for (o, h) in hint.iter().enumerate() {
+                    assert_eq!(
+                        h.rank(),
+                        hier.len(),
+                        "hint rank vs placement hierarchy on {}",
+                        node.name
+                    );
+                    if &sig.outs[o] != h {
+                        return false;
+                    }
+                }
+            }
+            true
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+    use crate::sbp::{s, B, P};
+    use crate::tensor::DType;
+
+    fn lin_graph(hint_w: Option<NdSbp>, ndev: usize) -> (LogicalGraph, NodeId, NodeId) {
+        let p = Placement::node(0, ndev);
+        let mut g = LogicalGraph::new();
+        // weight much larger than activations — the model-parallel regime
+        let x = g.add1("x", OpKind::Input { shape: [64, 512].into(), dtype: DType::F32 }, &[], p.clone());
+        g.hint_tensor(x, NdSbp::d1(s(0)));
+        let w = g.add1("w", OpKind::Variable { shape: [512, 4096].into(), dtype: DType::F32, init_std: 0.1 }, &[], p.clone());
+        if let Some(h) = hint_w {
+            g.hint_tensor(w, h);
+        }
+        let y = g.add1("y", OpKind::MatMul { ta: false, tb: false }, &[x, w], p.clone());
+        let yn = g.tensor(y).producer;
+        let wn = g.tensor(w).producer;
+        (g, wn, yn)
+    }
+
+    #[test]
+    fn data_parallel_matmul_selects_s0_b() {
+        // x hinted S(0), w hinted B: the only zero-boxing choice is Table 1
+        // row 1 — data parallelism with output S(0).
+        let (g, _, yn) = lin_graph(Some(NdSbp::d1(B)), 4);
+        let sel = select_sbp(&g, SelectStrategy::Greedy, &ClusterModel::paper_testbed());
+        let sig = &sel[&yn];
+        assert_eq!(sig.ins[0], NdSbp::d1(s(0)));
+        assert_eq!(sig.ins[1], NdSbp::d1(B));
+        assert_eq!(sig.outs[0], NdSbp::d1(s(0)));
+    }
+
+    #[test]
+    fn model_parallel_weight_hint_selects_s1() {
+        // w hinted S(1): consuming it without boxing requires Table 1 row 2
+        // (B, S(1)) -> S(1); x S(0) must be boxed to B. The selector should
+        // still prefer row 2 because re-boxing the (big) weight costs more.
+        let (g, _, yn) = lin_graph(Some(NdSbp::d1(s(1))), 4);
+        let sel = select_sbp(&g, SelectStrategy::Greedy, &ClusterModel::paper_testbed());
+        let sig = &sel[&yn];
+        assert_eq!(sig.ins[1], NdSbp::d1(s(1)));
+        assert_eq!(sig.outs[0], NdSbp::d1(s(1)));
+    }
+
+    #[test]
+    fn beam_never_worse_than_greedy() {
+        let (g, _, _) = lin_graph(Some(NdSbp::d1(B)), 4);
+        let cluster = ClusterModel::paper_testbed();
+        let greedy = plan_cost(&g, &select_sbp(&g, SelectStrategy::Greedy, &cluster), &cluster);
+        let beam = plan_cost(&g, &select_sbp(&g, SelectStrategy::Beam { width: 8 }, &cluster), &cluster);
+        assert!(beam <= greedy + 1e-12, "beam {beam} vs greedy {greedy}");
+    }
+
+    #[test]
+    fn partial_value_deferral_beats_eager_reduce() {
+        // §3.3's U × V × W example: with U S(1), V S(0), W B the product
+        // U@V is P(sum) and can flow into the second matmul un-reduced.
+        // The selector must choose P for the first matmul output and P for
+        // the second, not insert an eager all-reduce.
+        let p = Placement::node(0, 4);
+        let mut g = LogicalGraph::new();
+        let u = g.add1("u", OpKind::Variable { shape: [64, 64].into(), dtype: DType::F32, init_std: 0.1 }, &[], p.clone());
+        g.hint_tensor(u, NdSbp::d1(s(1)));
+        let v = g.add1("v", OpKind::Variable { shape: [64, 64].into(), dtype: DType::F32, init_std: 0.1 }, &[], p.clone());
+        g.hint_tensor(v, NdSbp::d1(s(0)));
+        let w = g.add1("w", OpKind::Variable { shape: [64, 64].into(), dtype: DType::F32, init_std: 0.1 }, &[], p.clone());
+        g.hint_tensor(w, NdSbp::d1(B));
+        let uv = g.add1("uv", OpKind::MatMul { ta: false, tb: false }, &[u, v], p.clone());
+        let uvw = g.add1("uvw", OpKind::MatMul { ta: false, tb: false }, &[uv, w], p.clone());
+        let sel = select_sbp(&g, SelectStrategy::Greedy, &ClusterModel::paper_testbed());
+        assert_eq!(sel[&g.tensor(uv).producer].outs[0], NdSbp::d1(P));
+        let sig2 = &sel[&g.tensor(uvw).producer];
+        assert_eq!(sig2.ins[0], NdSbp::d1(P), "second matmul consumes the partial directly");
+        assert_eq!(sig2.outs[0], NdSbp::d1(P));
+    }
+
+    #[test]
+    fn nd_candidates_cover_table3() {
+        // 2-D hierarchy MatMul: Table 3's (S(0),B) x (B,S(1)) -> (S(0),S(1))
+        // must be among the candidates.
+        let p = Placement::grid(2, 2);
+        let mut g = LogicalGraph::new();
+        let x = g.add1("x", OpKind::Input { shape: [8, 8].into(), dtype: DType::F32 }, &[], p.clone());
+        let w = g.add1("w", OpKind::Variable { shape: [8, 8].into(), dtype: DType::F32, init_std: 0.1 }, &[], p.clone());
+        let y = g.add1("y", OpKind::MatMul { ta: false, tb: false }, &[x, w], p.clone());
+        let node = g.node(g.tensor(y).producer);
+        let cands = nd_candidates(node);
+        let want = Signature {
+            ins: vec![NdSbp::d2(s(0), B), NdSbp::d2(B, s(1))],
+            outs: vec![NdSbp::d2(s(0), s(1))],
+        };
+        assert!(cands.contains(&want), "Table 3 row 1 missing");
+        let want2 = Signature {
+            ins: vec![NdSbp::d2(s(0), s(1)), NdSbp::d2(B, s(0))],
+            outs: vec![NdSbp::d2(s(0), P)],
+        };
+        assert!(cands.contains(&want2), "Table 3 row 2 missing");
+        let _ = x;
+    }
+}

@@ -1,0 +1,77 @@
+//! Tiny CLI argument helper (`--key value` / `--flag`) for the launcher and
+//! examples (no `clap` offline).
+
+use std::collections::HashMap;
+
+/// Parsed command line: positional args + `--key value` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse(it: impl Iterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let items: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < items.len() {
+            let a = &items[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < items.len() && !items[i + 1].starts_with("--") {
+                    out.options.insert(key.to_string(), items[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.flags.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).map(|v| v.parse().expect("bad integer option")).unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).map(|v| v.parse().expect("bad float option")).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(
+            ["run", "--steps", "100", "--fuse", "--lr", "0.1", "extra"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.usize("steps", 0), 100);
+        assert_eq!(a.f64("lr", 0.0), 0.1);
+        assert!(a.flag("fuse"));
+        assert!(!a.flag("missing"));
+        assert_eq!(a.usize("absent", 7), 7);
+    }
+}

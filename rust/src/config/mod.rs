@@ -1,0 +1,9 @@
+//! Configuration substrate: a minimal JSON parser (the vendored registry has
+//! no `serde`) plus a tiny CLI-argument helper. Used by the launcher to read
+//! `artifacts/gpt_meta.json` and experiment configs.
+
+pub mod json;
+pub mod cli;
+
+pub use cli::Args;
+pub use json::Value;

@@ -1,0 +1,193 @@
+//! Simulated-hardware models (DESIGN.md §3 substitution table).
+//!
+//! The actor runtime is real; when running in simulated mode, kernel and
+//! wire *durations* come from these models. An action's duration is the
+//! roofline `max(flops/peak, bytes/bandwidth)` plus a launch overhead — the
+//! same first-order model the paper's Table 2 cost analysis assumes.
+
+use crate::tensor::DType;
+
+/// Which hardware FIFO queue an op occupies (paper §5: "we also abstract
+/// other hardware resources (e.g., network and CPUs) as FIFO queues";
+/// separate CUDA streams for copy vs compute engines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum QueueKind {
+    /// Device compute engine (CUDA compute stream analogue).
+    Compute,
+    /// Host→device copy engine.
+    H2D,
+    /// Device→host copy engine.
+    D2H,
+    /// Host CPU worker pool (data decode/augment).
+    HostCpu,
+    /// Disk/storage channel.
+    Disk,
+    /// Inter-device network engine (NIC / NVLink DMA).
+    Net,
+}
+
+/// Static cost description of one physical kernel.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostSpec {
+    /// Floating-point operations.
+    pub flops: f64,
+    /// Bytes read from device memory.
+    pub read_bytes: f64,
+    /// Bytes written to device memory.
+    pub write_bytes: f64,
+    /// Queue the kernel occupies.
+    pub queue: QueueKind,
+}
+
+impl CostSpec {
+    pub const ZERO: CostSpec =
+        CostSpec { flops: 0.0, read_bytes: 0.0, write_bytes: 0.0, queue: QueueKind::Compute };
+
+    pub fn compute(flops: f64, read_bytes: f64, write_bytes: f64) -> Self {
+        CostSpec { flops, read_bytes, write_bytes, queue: QueueKind::Compute }
+    }
+
+    pub fn on_queue(mut self, q: QueueKind) -> Self {
+        self.queue = q;
+        self
+    }
+
+    pub fn scaled(mut self, f: f64) -> Self {
+        self.flops *= f;
+        self.read_bytes *= f;
+        self.write_bytes *= f;
+        self
+    }
+}
+
+/// A device compute/memory model.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceModel {
+    /// Peak dense-matmul throughput, FLOP/s, by dtype.
+    pub peak_f32: f64,
+    pub peak_f16: f64,
+    /// Attainable fraction of peak for large GEMMs (cuBLAS-style efficiency).
+    pub gemm_eff: f64,
+    /// Device-memory bandwidth, bytes/s.
+    pub hbm_bps: f64,
+    /// Device memory capacity, bytes.
+    pub mem_bytes: u64,
+    /// Per-kernel launch/dispatch overhead, seconds. This is the quantity
+    /// kernel *fusion* saves — the mechanism behind OneFlow's single-device
+    /// edge in Figs 10/16.
+    pub launch_overhead: f64,
+    /// Host-CPU throughput for preprocessing, bytes/s (decode/augment).
+    pub host_cpu_bps: f64,
+    /// Host↔device copy bandwidth (PCIe), bytes/s.
+    pub pcie_bps: f64,
+    /// Disk read bandwidth, bytes/s.
+    pub disk_bps: f64,
+}
+
+impl DeviceModel {
+    /// Nvidia Tesla V100-SXM2-16GB — the paper's testbed device.
+    pub fn v100() -> Self {
+        DeviceModel {
+            peak_f32: 15.7e12,
+            peak_f16: 125.0e12, // tensor cores
+            gemm_eff: 0.75,
+            hbm_bps: 900.0e9,
+            mem_bytes: 16 * (1 << 30),
+            launch_overhead: 4.5e-6,
+            host_cpu_bps: 6.0e9, // jpeg decode+augment, multi-worker pool (DGX-class host)
+            pcie_bps: 12.0e9,
+            disk_bps: 3.0e9,
+        }
+    }
+
+    /// Roofline duration of a kernel on this device.
+    pub fn kernel_secs(&self, cost: &CostSpec, dtype: DType) -> f64 {
+        let peak = match dtype {
+            DType::F16 => self.peak_f16,
+            _ => self.peak_f32,
+        } * self.gemm_eff;
+        let bw = match cost.queue {
+            QueueKind::Compute => self.hbm_bps,
+            QueueKind::H2D | QueueKind::D2H => self.pcie_bps,
+            QueueKind::HostCpu => self.host_cpu_bps,
+            QueueKind::Disk => self.disk_bps,
+            QueueKind::Net => unreachable!("network costs come from NetworkModel"),
+        };
+        let compute = cost.flops / peak;
+        let memory = (cost.read_bytes + cost.write_bytes) / bw;
+        self.launch_overhead + compute.max(memory)
+    }
+}
+
+/// Cluster interconnect model.
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkModel {
+    /// Intra-node device-to-device bandwidth (NVLink), bytes/s per link.
+    pub intra_bps: f64,
+    /// Inter-node bandwidth (RoCE NIC), bytes/s per node.
+    pub inter_bps: f64,
+    /// Per-message latency, seconds.
+    pub latency: f64,
+}
+
+impl NetworkModel {
+    /// The paper's testbed: NVLink within a node, 100 Gbps RoCE across nodes.
+    pub fn paper_testbed() -> Self {
+        NetworkModel {
+            intra_bps: 130.0e9, // effective NVLink-V2 per-GPU
+            inter_bps: 12.5e9,  // 100 Gbps
+            latency: 5.0e-6,
+        }
+    }
+
+    /// Time to move `bytes` across the given scope once.
+    pub fn xfer_secs(&self, bytes: f64, inter_node: bool) -> f64 {
+        let bw = if inter_node { self.inter_bps } else { self.intra_bps };
+        self.latency + bytes / bw
+    }
+}
+
+/// A whole simulated cluster: homogeneous devices + interconnect.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterModel {
+    pub device: DeviceModel,
+    pub network: NetworkModel,
+}
+
+impl ClusterModel {
+    /// The paper's 4-node × 8×V100 testbed model.
+    pub fn paper_testbed() -> Self {
+        ClusterModel { device: DeviceModel::v100(), network: NetworkModel::paper_testbed() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v100_gemm_roofline_sane() {
+        let d = DeviceModel::v100();
+        // 4096^3 GEMM, fp16: 2*4096^3 flops ≈ 137 GFLOP at ~94 TFLOP/s ≈ 1.5 ms
+        let flops = 2.0 * 4096f64.powi(3);
+        let cost = CostSpec::compute(flops, 3.0 * 4096.0 * 4096.0 * 2.0, 4096.0 * 4096.0 * 2.0);
+        let t = d.kernel_secs(&cost, DType::F16);
+        assert!(t > 1.0e-3 && t < 3.0e-3, "got {t}");
+    }
+
+    #[test]
+    fn elementwise_is_memory_bound() {
+        let d = DeviceModel::v100();
+        // 1M-element add: 12 MB traffic at 900 GB/s ≈ 13 µs >> flops time
+        let cost = CostSpec::compute(1e6, 8e6, 4e6);
+        let t = d.kernel_secs(&cost, DType::F32);
+        let mem = 12e6 / 900e9 + d.launch_overhead;
+        assert!((t - mem).abs() / mem < 1e-6);
+    }
+
+    #[test]
+    fn inter_node_slower_than_intra() {
+        let n = NetworkModel::paper_testbed();
+        assert!(n.xfer_secs(1e9, true) > n.xfer_secs(1e9, false));
+    }
+}

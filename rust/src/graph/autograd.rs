@@ -1,0 +1,398 @@
+//! Autograd: extend a forward logical graph with its backward pass and
+//! per-variable gradient tensors (paper Fig 1's `b_*` ops; the compiler and
+//! runtime treat them as ordinary ops — there is no special backward engine).
+
+use super::{LogicalGraph, Node, NodeId, OpKind, TensorId};
+use crate::tensor::DType;
+use std::collections::HashMap;
+
+/// Result of [`build_backward`].
+pub struct Backward {
+    /// Gradient tensor for each Variable node.
+    pub var_grads: HashMap<NodeId, TensorId>,
+    /// The loss tensor the backward pass was seeded from.
+    pub loss: TensorId,
+}
+
+/// Append backward ops for `loss` (a rank-1 per-example loss tensor); seeds
+/// with d(mean loss)/dloss = 1/N. Returns gradients for every `Variable`
+/// reachable from `loss`.
+///
+/// Supported op set covers everything the model zoo and examples emit;
+/// extending it is a matter of adding one match arm with the usual calculus.
+pub fn build_backward(g: &mut LogicalGraph, loss: TensorId) -> Backward {
+    let order = g.topo_order();
+    // grad accumulation per tensor
+    let mut grads: HashMap<TensorId, TensorId> = HashMap::new();
+
+    // Seed: dL/dloss = 1/N for mean reduction over the per-example loss.
+    let n = g.tensor(loss).shape.elems();
+    let lp = g.node(g.tensor(loss).producer).placement.clone();
+    let shape = g.tensor(loss).shape.clone();
+    let ones = g.add1(
+        "dloss",
+        OpKind::Input { shape, dtype: g.tensor(loss).dtype },
+        &[],
+        lp.clone(),
+    );
+    // The driver feeds this tensor with 1/N; scale here keeps it explicit.
+    let seed = g.add1("dloss_scale", OpKind::Scale(1.0 / n as f32), &[ones], lp);
+    grads.insert(loss, seed);
+
+    for &nid in order.iter().rev() {
+        let node: Node = g.node(nid).clone();
+        // Gather output grads; skip nodes not on the loss path.
+        let out_grads: Vec<Option<TensorId>> =
+            node.outputs.iter().map(|t| grads.get(t).copied()).collect();
+        if out_grads.iter().all(Option::is_none) {
+            continue;
+        }
+        let pl = node.placement.clone();
+        let mut add_grad = |g: &mut LogicalGraph, t: TensorId, val: TensorId| {
+            if let Some(&prev) = grads.get(&t) {
+                let summed = g.add1(
+                    format!("accum_d_t{}", t.0),
+                    OpKind::Add,
+                    &[prev, val],
+                    g.node(g.tensor(t).producer).placement.clone(),
+                );
+                grads.insert(t, summed);
+            } else {
+                grads.insert(t, val);
+            }
+        };
+        let dy = |i: usize| out_grads[i].expect("missing output grad");
+        match &node.op {
+            OpKind::MatMul { ta, tb } => {
+                let (a, b) = (node.inputs[0], node.inputs[1]);
+                let dyt = dy(0);
+                // Standard four transpose cases.
+                let (da, db) = match (ta, tb) {
+                    (false, false) => (
+                        g.add1(format!("{}_da", node.name), OpKind::MatMul { ta: false, tb: true }, &[dyt, b], pl.clone()),
+                        g.add1(format!("{}_db", node.name), OpKind::MatMul { ta: true, tb: false }, &[a, dyt], pl.clone()),
+                    ),
+                    (false, true) => (
+                        g.add1(format!("{}_da", node.name), OpKind::MatMul { ta: false, tb: false }, &[dyt, b], pl.clone()),
+                        g.add1(format!("{}_db", node.name), OpKind::MatMul { ta: true, tb: false }, &[dyt, a], pl.clone()),
+                    ),
+                    (true, false) => (
+                        g.add1(format!("{}_da", node.name), OpKind::MatMul { ta: false, tb: true }, &[b, dyt], pl.clone()),
+                        g.add1(format!("{}_db", node.name), OpKind::MatMul { ta: false, tb: false }, &[a, dyt], pl.clone()),
+                    ),
+                    (true, true) => (
+                        g.add1(format!("{}_da", node.name), OpKind::MatMul { ta: true, tb: true }, &[b, dyt], pl.clone()),
+                        g.add1(format!("{}_db", node.name), OpKind::MatMul { ta: true, tb: true }, &[dyt, a], pl.clone()),
+                    ),
+                };
+                add_grad(g, a, da);
+                add_grad(g, b, db);
+            }
+            OpKind::FusedMatMulBias { .. } => {
+                panic!("run autograd before the fusion pass: fusion is a physical-plan optimization")
+            }
+            OpKind::BiasAdd => {
+                let dyt = dy(0);
+                add_grad(g, node.inputs[0], dyt);
+                let db = g.add1(
+                    format!("{}_db", node.name),
+                    OpKind::ReduceSum { axis: 0, keepdim: false },
+                    &[dyt],
+                    pl.clone(),
+                );
+                add_grad(g, node.inputs[1], db);
+            }
+            OpKind::Add => {
+                add_grad(g, node.inputs[0], dy(0));
+                add_grad(g, node.inputs[1], dy(0));
+            }
+            OpKind::Sub => {
+                add_grad(g, node.inputs[0], dy(0));
+                let neg = g.add1(format!("{}_neg", node.name), OpKind::Scale(-1.0), &[dy(0)], pl.clone());
+                add_grad(g, node.inputs[1], neg);
+            }
+            OpKind::Scale(s) => {
+                let dx = g.add1(format!("{}_dx", node.name), OpKind::Scale(*s), &[dy(0)], pl.clone());
+                add_grad(g, node.inputs[0], dx);
+            }
+            OpKind::Cast { .. } => {
+                let from = g.tensor(node.inputs[0]).dtype;
+                let dx = g.add1(format!("{}_dx", node.name), OpKind::Cast { to: from }, &[dy(0)], pl.clone());
+                add_grad(g, node.inputs[0], dx);
+            }
+            OpKind::Identity => add_grad(g, node.inputs[0], dy(0)),
+            OpKind::StopGrad => { /* data boundary: no gradient upstream */ }
+            OpKind::Relu => {
+                let dx = g.add1(
+                    format!("{}_dx", node.name),
+                    OpKind::ReluGrad,
+                    &[dy(0), node.inputs[0]],
+                    pl.clone(),
+                );
+                add_grad(g, node.inputs[0], dx);
+            }
+            OpKind::Gelu => {
+                let dx = g.add1(
+                    format!("{}_dx", node.name),
+                    OpKind::GeluGrad,
+                    &[dy(0), node.inputs[0]],
+                    pl.clone(),
+                );
+                add_grad(g, node.inputs[0], dx);
+            }
+            OpKind::Embedding => {
+                let vocab = g.tensor(node.inputs[0]).shape.dim(0);
+                let dtable = g.add1(
+                    format!("{}_dtable", node.name),
+                    OpKind::EmbeddingGrad { vocab },
+                    &[dy(0), node.inputs[1]],
+                    pl.clone(),
+                );
+                add_grad(g, node.inputs[0], dtable);
+                // no gradient for integer ids
+            }
+            OpKind::SparseXent => {
+                // outputs: (loss, probs); grad flows only through loss.
+                let dlogits = g.add1(
+                    format!("{}_dlogits", node.name),
+                    OpKind::SparseXentGrad,
+                    &[node.outputs[1], node.inputs[1], dy(0)],
+                    pl.clone(),
+                );
+                add_grad(g, node.inputs[0], dlogits);
+            }
+            OpKind::Flops { name, out: _, dtype, cost, split_axes, param_bytes } => {
+                // Cost-only op: backward is a cost-only op with ~2x flops
+                // (dgrad+wgrad), one per *tensor* input, producing that input's shape.
+                for (i, &inp) in node.inputs.iter().enumerate() {
+                    let in_shape = g.tensor(inp).shape.clone();
+                    let bwd = g.add1(
+                        format!("{name}_bwd{i}"),
+                        OpKind::Flops {
+                            name: format!("{name}_bwd{i}"),
+                            out: in_shape,
+                            dtype: *dtype,
+                            cost: cost.scaled(2.0),
+                            split_axes: split_axes.clone(),
+                            param_bytes: *param_bytes,
+                        },
+                        &[dy(0)],
+                        pl.clone(),
+                    );
+                    add_grad(g, inp, bwd);
+                }
+            }
+            OpKind::Exp => {
+                // dx = dy * exp(x) = dy * y
+                let dx = g.add1(
+                    format!("{}_dx", node.name),
+                    OpKind::Mul,
+                    &[dy(0), node.outputs[0]],
+                    pl.clone(),
+                );
+                add_grad(g, node.inputs[0], dx);
+            }
+            OpKind::ColSub => {
+                // y = x - c (column broadcast): dx = dy, dc = -rowsum(dy)
+                add_grad(g, node.inputs[0], dy(0));
+                let rs = g.add1(
+                    format!("{}_rs", node.name),
+                    OpKind::ReduceSum { axis: 1, keepdim: true },
+                    &[dy(0)],
+                    pl.clone(),
+                );
+                let dc = g.add1(format!("{}_dc", node.name), OpKind::Scale(-1.0), &[rs], pl.clone());
+                add_grad(g, node.inputs[1], dc);
+            }
+            OpKind::ColDiv => {
+                // y = x / c: dx = dy / c; dc = -rowsum(dy * y) / c
+                let dx = g.add1(
+                    format!("{}_dx", node.name),
+                    OpKind::ColDiv,
+                    &[dy(0), node.inputs[1]],
+                    pl.clone(),
+                );
+                add_grad(g, node.inputs[0], dx);
+                let prod = g.add1(
+                    format!("{}_dyy", node.name),
+                    OpKind::Mul,
+                    &[dy(0), node.outputs[0]],
+                    pl.clone(),
+                );
+                let rs = g.add1(
+                    format!("{}_rs", node.name),
+                    OpKind::ReduceSum { axis: 1, keepdim: true },
+                    &[prod],
+                    pl.clone(),
+                );
+                let over_c = g.add1(
+                    format!("{}_overc", node.name),
+                    OpKind::ColDiv,
+                    &[rs, node.inputs[1]],
+                    pl.clone(),
+                );
+                let dc = g.add1(format!("{}_dc", node.name), OpKind::Scale(-1.0), &[over_c], pl.clone());
+                add_grad(g, node.inputs[1], dc);
+            }
+            OpKind::ReduceSum { axis: 1, keepdim: true } => {
+                let n = g.tensor(node.inputs[0]).shape.dim(1);
+                let dx = g.add1(
+                    format!("{}_dx", node.name),
+                    OpKind::ColBcast { n },
+                    &[dy(0)],
+                    pl.clone(),
+                );
+                add_grad(g, node.inputs[0], dx);
+            }
+            OpKind::ColBcast { .. } => {
+                let dx = g.add1(
+                    format!("{}_dx", node.name),
+                    OpKind::ReduceSum { axis: 1, keepdim: true },
+                    &[dy(0)],
+                    pl.clone(),
+                );
+                add_grad(g, node.inputs[0], dx);
+            }
+            OpKind::ReduceMax { .. } => {
+                // stop-gradient: the only use in the zoo is the softmax
+                // stability shift, whose gradient contribution cancels
+                // exactly (softmax is shift-invariant).
+            }
+            OpKind::Input { .. } | OpKind::Variable { .. } => { /* leaves */ }
+            other => panic!("no autograd rule for {other:?}"),
+        }
+    }
+
+    let mut var_grads = HashMap::new();
+    for node in &g.nodes.clone() {
+        if matches!(node.op, OpKind::Variable { .. }) {
+            if let Some(&gt) = grads.get(&node.outputs[0]) {
+                var_grads.insert(node.id, gt);
+            }
+        }
+    }
+    Backward { var_grads, loss }
+}
+
+/// Append an SGD update op per variable gradient. Returns the updated-param
+/// tensors (which the runtime feeds back into the variable actors).
+pub fn append_sgd(g: &mut LogicalGraph, bw: &Backward, lr: f32) -> HashMap<NodeId, TensorId> {
+    let mut updated = HashMap::new();
+    for (&var, &grad) in &bw.var_grads {
+        let pl = g.node(var).placement.clone();
+        let param = g.node(var).outputs[0];
+        let new_param = g.add1(
+            format!("{}_sgd", g.node(var).name),
+            OpKind::SgdUpdate { lr },
+            &[param, grad],
+            pl,
+        );
+        updated.insert(var, new_param);
+    }
+    updated
+}
+
+/// Append Adam update ops; creates m/v state variables. Returns updated params.
+pub fn append_adam(
+    g: &mut LogicalGraph,
+    bw: &Backward,
+    lr: f32,
+) -> HashMap<NodeId, TensorId> {
+    let mut updated = HashMap::new();
+    for (&var, &grad) in &bw.var_grads {
+        let pl = g.node(var).placement.clone();
+        let param = g.node(var).outputs[0];
+        let shape = g.tensor(param).shape.clone();
+        let m = g.add1(
+            format!("{}_m", g.node(var).name),
+            OpKind::Variable { shape: shape.clone(), dtype: DType::F32, init_std: 0.0 },
+            &[],
+            pl.clone(),
+        );
+        let v = g.add1(
+            format!("{}_v", g.node(var).name),
+            OpKind::Variable { shape, dtype: DType::F32, init_std: 0.0 },
+            &[],
+            pl.clone(),
+        );
+        let outs = g.add(
+            format!("{}_adam", g.node(var).name),
+            OpKind::AdamUpdate { lr, b1: 0.9, b2: 0.999, eps: 1e-8 },
+            &[param, grad, m, v],
+            pl,
+        );
+        updated.insert(var, outs[0]);
+    }
+    updated
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::Placement;
+    use crate::tensor::DType;
+
+    /// Graph: loss = xent(relu(x@w + b), labels). Check the backward graph
+    /// contains the expected grad ops and produces grads for w and b.
+    #[test]
+    fn backward_of_mlp_has_expected_ops() {
+        let p = Placement::node(0, 1);
+        let mut g = LogicalGraph::new();
+        let x = g.add1("x", OpKind::Input { shape: [8, 4].into(), dtype: DType::F32 }, &[], p.clone());
+        let w = g.add1("w", OpKind::Variable { shape: [4, 3].into(), dtype: DType::F32, init_std: 0.1 }, &[], p.clone());
+        let b = g.add1("b", OpKind::Variable { shape: [3].into(), dtype: DType::F32, init_std: 0.0 }, &[], p.clone());
+        let labels = g.add1("labels", OpKind::Input { shape: [8].into(), dtype: DType::I32 }, &[], p.clone());
+        let h = g.add1("h", OpKind::MatMul { ta: false, tb: false }, &[x, w], p.clone());
+        let hb = g.add1("hb", OpKind::BiasAdd, &[h, b], p.clone());
+        let a = g.add1("a", OpKind::Relu, &[hb], p.clone());
+        let outs = g.add("loss", OpKind::SparseXent, &[a, labels], p.clone());
+        let bw = build_backward(&mut g, outs[0]);
+
+        let wvar = g.tensor(w).producer;
+        let bvar = g.tensor(b).producer;
+        assert!(bw.var_grads.contains_key(&wvar), "w grad missing");
+        assert!(bw.var_grads.contains_key(&bvar), "b grad missing");
+        let names: Vec<String> = g.nodes.iter().map(|n| n.op.name()).collect();
+        assert!(names.iter().any(|n| n == "sparse_xent_grad"));
+        assert!(names.iter().any(|n| n == "relu_grad"));
+        assert!(names.iter().any(|n| n == "matmul_ta"), "weight grad A^T@dY");
+        assert!(names.iter().any(|n| n == "reduce_sum0"), "bias grad");
+        // grads have the right shapes
+        assert_eq!(g.tensor(bw.var_grads[&wvar]).shape.0, vec![4, 3]);
+        assert_eq!(g.tensor(bw.var_grads[&bvar]).shape.0, vec![3]);
+    }
+
+    #[test]
+    fn sgd_append_creates_update_per_var() {
+        let p = Placement::node(0, 1);
+        let mut g = LogicalGraph::new();
+        let x = g.add1("x", OpKind::Input { shape: [4, 4].into(), dtype: DType::F32 }, &[], p.clone());
+        let w = g.add1("w", OpKind::Variable { shape: [4, 2].into(), dtype: DType::F32, init_std: 0.1 }, &[], p.clone());
+        let labels = g.add1("labels", OpKind::Input { shape: [4].into(), dtype: DType::I32 }, &[], p.clone());
+        let h = g.add1("h", OpKind::MatMul { ta: false, tb: false }, &[x, w], p.clone());
+        let outs = g.add("loss", OpKind::SparseXent, &[h, labels], p.clone());
+        let bw = build_backward(&mut g, outs[0]);
+        let updated = append_sgd(&mut g, &bw, 0.1);
+        assert_eq!(updated.len(), 1);
+        let names: Vec<String> = g.nodes.iter().map(|n| n.op.name()).collect();
+        assert_eq!(names.iter().filter(|n| *n == "sgd_update").count(), 1);
+    }
+
+    #[test]
+    fn shared_tensor_grads_accumulate() {
+        // y = (x@w) + (x@w2) where both consume x: dx must be accumulated.
+        let p = Placement::node(0, 1);
+        let mut g = LogicalGraph::new();
+        let x = g.add1("x", OpKind::Input { shape: [2, 3].into(), dtype: DType::F32 }, &[], p.clone());
+        let w1 = g.add1("w1", OpKind::Variable { shape: [3, 3].into(), dtype: DType::F32, init_std: 0.1 }, &[], p.clone());
+        let w2 = g.add1("w2", OpKind::Variable { shape: [3, 3].into(), dtype: DType::F32, init_std: 0.1 }, &[], p.clone());
+        let labels = g.add1("labels", OpKind::Input { shape: [2].into(), dtype: DType::I32 }, &[], p.clone());
+        let a = g.add1("a", OpKind::MatMul { ta: false, tb: false }, &[x, w1], p.clone());
+        let b = g.add1("b", OpKind::MatMul { ta: false, tb: false }, &[x, w2], p.clone());
+        let y = g.add1("y", OpKind::Add, &[a, b], p.clone());
+        let outs = g.add("loss", OpKind::SparseXent, &[y, labels], p.clone());
+        build_backward(&mut g, outs[0]);
+        let accums = g.nodes.iter().filter(|n| n.name.starts_with("accum_d_")).count();
+        assert!(accums >= 1, "x grad accumulation missing");
+    }
+}

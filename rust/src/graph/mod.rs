@@ -1,0 +1,272 @@
+//! The *logical* computation graph (paper §2, Fig 1): a DAG of operators over
+//! logical tensors, each op carrying a [`Placement`] and optional SBP hints.
+//! The compiler (crate::compiler) turns this into a physical per-device plan.
+
+pub mod op;
+pub mod autograd;
+
+pub use op::{Activation, OpKind, SigCand};
+
+use crate::placement::Placement;
+use crate::sbp::NdSbp;
+use crate::tensor::{DType, Shape};
+use std::collections::HashMap;
+
+/// Logical tensor id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TensorId(pub usize);
+
+/// Logical node (op) id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+/// A logical tensor: the output of exactly one node.
+#[derive(Clone, Debug)]
+pub struct TensorDef {
+    pub id: TensorId,
+    pub shape: Shape,
+    pub dtype: DType,
+    pub producer: NodeId,
+    /// Index among the producer's outputs.
+    pub out_idx: usize,
+}
+
+/// A logical op instance.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub op: OpKind,
+    pub inputs: Vec<TensorId>,
+    pub outputs: Vec<TensorId>,
+    pub placement: Placement,
+    /// User/compiler-pinned output signatures (None = compiler's choice).
+    pub sbp_hint: Option<Vec<NdSbp>>,
+}
+
+/// The logical graph.
+#[derive(Clone, Debug, Default)]
+pub struct LogicalGraph {
+    pub nodes: Vec<Node>,
+    pub tensors: Vec<TensorDef>,
+}
+
+impl LogicalGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add an op; infers output shapes/dtypes and returns the output ids.
+    pub fn add(
+        &mut self,
+        name: impl Into<String>,
+        op: OpKind,
+        inputs: &[TensorId],
+        placement: Placement,
+    ) -> Vec<TensorId> {
+        let in_shapes: Vec<&Shape> = inputs.iter().map(|t| &self.tensors[t.0].shape).collect();
+        let in_dtypes: Vec<DType> = inputs.iter().map(|t| self.tensors[t.0].dtype).collect();
+        let out_shapes = op.infer_shapes(&in_shapes);
+        let out_dtypes = op.infer_dtypes(&in_dtypes);
+        assert_eq!(out_shapes.len(), op.num_outputs());
+        let nid = NodeId(self.nodes.len());
+        let mut outs = Vec::with_capacity(out_shapes.len());
+        for (i, (shape, dtype)) in out_shapes.into_iter().zip(out_dtypes).enumerate() {
+            let tid = TensorId(self.tensors.len());
+            self.tensors.push(TensorDef { id: tid, shape, dtype, producer: nid, out_idx: i });
+            outs.push(tid);
+        }
+        self.nodes.push(Node {
+            id: nid,
+            name: name.into(),
+            op,
+            inputs: inputs.to_vec(),
+            outputs: outs.clone(),
+            placement,
+            sbp_hint: None,
+        });
+        outs
+    }
+
+    /// Add with a single output (panics otherwise) — the common case.
+    pub fn add1(
+        &mut self,
+        name: impl Into<String>,
+        op: OpKind,
+        inputs: &[TensorId],
+        placement: Placement,
+    ) -> TensorId {
+        let outs = self.add(name, op, inputs, placement);
+        assert_eq!(outs.len(), 1);
+        outs[0]
+    }
+
+    /// Pin the SBP signature of a node's outputs (the `sbp=` argument of the
+    /// paper's Table 4 program).
+    pub fn hint(&mut self, node: NodeId, sbps: Vec<NdSbp>) {
+        assert_eq!(sbps.len(), self.nodes[node.0].outputs.len());
+        self.nodes[node.0].sbp_hint = Some(sbps);
+    }
+
+    /// Pin the SBP of the (single-output) producer of `t`.
+    pub fn hint_tensor(&mut self, t: TensorId, sbp: NdSbp) {
+        let prod = self.tensors[t.0].producer;
+        let n_outs = self.nodes[prod.0].outputs.len();
+        assert_eq!(n_outs, 1, "hint_tensor on multi-output node; use hint()");
+        self.hint(prod, vec![sbp]);
+    }
+
+    pub fn tensor(&self, t: TensorId) -> &TensorDef {
+        &self.tensors[t.0]
+    }
+
+    pub fn node(&self, n: NodeId) -> &Node {
+        &self.nodes[n.0]
+    }
+
+    /// Consumers of each tensor.
+    pub fn consumers(&self) -> HashMap<TensorId, Vec<NodeId>> {
+        let mut m: HashMap<TensorId, Vec<NodeId>> = HashMap::new();
+        for n in &self.nodes {
+            for &t in &n.inputs {
+                m.entry(t).or_default().push(n.id);
+            }
+        }
+        m
+    }
+
+    /// Topological order (nodes are appended in dependency order by
+    /// construction, but autograd may interleave; do a real toposort).
+    pub fn topo_order(&self) -> Vec<NodeId> {
+        let mut indeg: Vec<usize> = self.nodes.iter().map(|n| n.inputs.len()).collect();
+        let consumers = self.consumers();
+        let mut ready: Vec<NodeId> =
+            self.nodes.iter().filter(|n| n.inputs.is_empty()).map(|n| n.id).collect();
+        let mut order = Vec::with_capacity(self.nodes.len());
+        let mut produced_count: HashMap<NodeId, usize> = HashMap::new();
+        while let Some(nid) = ready.pop() {
+            order.push(nid);
+            for &out in &self.nodes[nid.0].outputs {
+                if let Some(cons) = consumers.get(&out) {
+                    for &c in cons {
+                        // a consumer may use the same tensor several times
+                        let uses =
+                            self.nodes[c.0].inputs.iter().filter(|&&i| i == out).count();
+                        let e = produced_count.entry(c).or_insert(0);
+                        *e += uses;
+                        indeg[c.0] -= uses;
+                        if indeg[c.0] == 0 {
+                            ready.push(c);
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!(order.len(), self.nodes.len(), "graph has a cycle");
+        order
+    }
+
+    /// Total parameter element count (Variable outputs).
+    pub fn param_elems(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.op, OpKind::Variable { .. }))
+            .map(|n| self.tensors[n.outputs[0].0].shape.elems())
+            .sum()
+    }
+
+    /// Pretty-print for debugging and plan-structure tests.
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        for n in &self.nodes {
+            let ins: Vec<String> = n.inputs.iter().map(|t| format!("t{}", t.0)).collect();
+            let outs: Vec<String> = n
+                .outputs
+                .iter()
+                .map(|t| format!("t{}{}", t.0, self.tensors[t.0].shape))
+                .collect();
+            let hint = n
+                .sbp_hint
+                .as_ref()
+                .map(|h| {
+                    let hs: Vec<String> = h.iter().map(|x| x.to_string()).collect();
+                    format!(" sbp={}", hs.join("/"))
+                })
+                .unwrap_or_default();
+            s.push_str(&format!(
+                "n{} {} [{}] ({}) -> ({}){}\n",
+                n.id.0,
+                n.name,
+                n.op.name(),
+                ins.join(", "),
+                outs.join(", "),
+                hint
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sbp::{s, B};
+
+    fn mlp_graph() -> (LogicalGraph, TensorId) {
+        let p = Placement::node(0, 2);
+        let mut g = LogicalGraph::new();
+        let x = g.add1(
+            "x",
+            OpKind::Input { shape: [8, 4].into(), dtype: DType::F32 },
+            &[],
+            p.clone(),
+        );
+        let w = g.add1(
+            "w",
+            OpKind::Variable { shape: [4, 3].into(), dtype: DType::F32, init_std: 0.1 },
+            &[],
+            p.clone(),
+        );
+        let y = g.add1("y", OpKind::MatMul { ta: false, tb: false }, &[x, w], p.clone());
+        let r = g.add1("r", OpKind::Relu, &[y], p);
+        (g, r)
+    }
+
+    #[test]
+    fn build_and_infer_shapes() {
+        let (g, r) = mlp_graph();
+        assert_eq!(g.tensor(r).shape.0, vec![8, 3]);
+        assert_eq!(g.nodes.len(), 4);
+        assert_eq!(g.param_elems(), 12);
+    }
+
+    #[test]
+    fn topo_order_respects_deps() {
+        let (g, _) = mlp_graph();
+        let order = g.topo_order();
+        let pos: HashMap<usize, usize> =
+            order.iter().enumerate().map(|(i, n)| (n.0, i)).collect();
+        for n in &g.nodes {
+            for &t in &n.inputs {
+                assert!(pos[&g.tensor(t).producer.0] < pos[&n.id.0]);
+            }
+        }
+    }
+
+    #[test]
+    fn hints_attach() {
+        let (mut g, r) = mlp_graph();
+        g.hint_tensor(r, NdSbp::d1(s(0)));
+        let prod = g.tensor(r).producer;
+        assert_eq!(g.node(prod).sbp_hint.as_ref().unwrap()[0], NdSbp::d1(s(0)));
+        g.hint_tensor(r, NdSbp::d1(B));
+    }
+
+    #[test]
+    fn consumers_map() {
+        let (g, _) = mlp_graph();
+        let cons = g.consumers();
+        // x is consumed by matmul only
+        assert_eq!(cons[&TensorId(0)].len(), 1);
+    }
+}

@@ -1,0 +1,515 @@
+//! Operator vocabulary: shape inference, SBP signature deduction (the
+//! per-op rules of paper §3.1 — Table 1 for MatMul and analogues for every
+//! other op), and roofline cost specs.
+
+use crate::exec::{CostSpec, QueueKind};
+use crate::sbp::{s, ReduceKind, Sbp, B, P};
+use crate::tensor::{DType, Shape};
+
+/// Activation fused into a [`OpKind::FusedMatMulBias`] kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Activation {
+    None,
+    Relu,
+    Gelu,
+}
+
+/// One valid (inputs → outputs) SBP assignment for a single hierarchy dim.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SigCand {
+    pub ins: Vec<Sbp>,
+    pub outs: Vec<Sbp>,
+}
+
+impl SigCand {
+    pub fn new(ins: Vec<Sbp>, outs: Vec<Sbp>) -> Self {
+        SigCand { ins, outs }
+    }
+}
+
+fn sig(ins: &[Sbp], outs: &[Sbp]) -> SigCand {
+    SigCand::new(ins.to_vec(), outs.to_vec())
+}
+
+/// The logical-graph operator set.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpKind {
+    /// External per-piece input (mini-batch data or labels).
+    Input { shape: Shape, dtype: DType },
+    /// Trainable parameter, persistent across pieces.
+    Variable { shape: Shape, dtype: DType, init_std: f32 },
+    /// `Y = op(A) @ op(B)` with optional transposes.
+    MatMul { ta: bool, tb: bool },
+    /// `(M,N) + (N,)`.
+    BiasAdd,
+    /// Element-wise on same shapes.
+    Add,
+    Sub,
+    Mul,
+    /// `x * const`.
+    Scale(f32),
+    Relu,
+    Gelu,
+    Exp,
+    /// Backward of Relu/Gelu: `(dy, x) -> dx`.
+    ReluGrad,
+    GeluGrad,
+    /// Row-wise softmax over last axis of a 2-D tensor.
+    Softmax,
+    /// Row-wise layer norm (no affine).
+    LayerNorm { eps: f32 },
+    /// Reduce over one axis of a 2-D tensor.
+    ReduceSum { axis: usize, keepdim: bool },
+    ReduceMax { axis: usize, keepdim: bool },
+    /// `(M,N) op (M,1)` column broadcasts (decomposed softmax, Fig 11b).
+    ColSub,
+    ColDiv,
+    /// Broadcast an `(M,1)` column to `(M,n)` (backward of a row reduce).
+    ColBcast { n: usize },
+    /// 2-D transpose.
+    Transpose,
+    /// Dtype cast (mixed precision; Fig 14's `fp16 cast`).
+    Cast { to: DType },
+    /// `(table (V,E), ids (B,)) -> (B,E)`; vocabulary- or column-sharded.
+    Embedding,
+    /// `(dy (B,E), ids (B,)) -> d_table (V,E)`.
+    EmbeddingGrad { vocab: usize },
+    /// `(logits (B,C), labels (B,)) -> (loss (B,), probs (B,C))`.
+    SparseXent,
+    /// `(probs, labels, dloss) -> dlogits`.
+    SparseXentGrad,
+    /// `(param, grad) -> param'`.
+    SgdUpdate { lr: f32 },
+    /// `(param, grad, m, v) -> (param', m', v')`.
+    AdamUpdate { lr: f32, b1: f32, b2: f32, eps: f32 },
+    /// Fusion-pass product: matmul + bias + activation in one kernel.
+    FusedMatMulBias { act: Activation },
+    /// No-op passthrough (used for graph plumbing and pull actors).
+    Identity,
+    /// Identity forward, blocks gradient flow (data-pipeline boundary).
+    StopGrad,
+    /// An AOT-compiled executable (PJRT artifact from the L2/L1 python
+    /// compile path). The whole JAX train-step (fwd+bwd via the Pallas
+    /// kernels) appears to the coordinator as one op with a declared SBP
+    /// contract (`sigs`), e.g. params `B`, batch `S(0)` → loss `S(0)`,
+    /// grads `P(sum)` for data parallelism.
+    External {
+        name: String,
+        outs: Vec<Shape>,
+        dtypes: Vec<DType>,
+        flops: f64,
+        sigs: Vec<SigCand>,
+    },
+    /// Cost-only op for simulation-mode workloads (conv blocks, attention
+    /// blocks, data-pipeline stages). `split_axes` lists tensor axes along
+    /// which all inputs/outputs may be uniformly `Split` (batch or head
+    /// semantics); empty = broadcast-only.
+    Flops {
+        name: String,
+        out: Shape,
+        dtype: DType,
+        cost: CostSpec,
+        /// Axes along which inputs/outputs may be split (applied uniformly).
+        split_axes: Vec<usize>,
+        /// Parameter bytes resident for this op (for memory accounting).
+        param_bytes: f64,
+    },
+}
+
+impl OpKind {
+    /// Number of outputs.
+    pub fn num_outputs(&self) -> usize {
+        match self {
+            OpKind::SparseXent => 2,
+            OpKind::AdamUpdate { .. } => 3,
+            OpKind::External { outs, .. } => outs.len(),
+            _ => 1,
+        }
+    }
+
+    /// Infer output shapes from input shapes. Panics on rank/shape errors —
+    /// graph construction is a compile-time activity.
+    pub fn infer_shapes(&self, ins: &[&Shape]) -> Vec<Shape> {
+        use OpKind::*;
+        match self {
+            Input { shape, .. } | Variable { shape, .. } => vec![shape.clone()],
+            MatMul { ta, tb } => {
+                let (am, ak) = (ins[0].dim(0), ins[0].dim(1));
+                let (bk, bn) = (ins[1].dim(0), ins[1].dim(1));
+                let (m, k) = if *ta { (ak, am) } else { (am, ak) };
+                let (k2, n) = if *tb { (bn, bk) } else { (bk, bn) };
+                assert_eq!(k, k2, "matmul inner dim {k} vs {k2}");
+                vec![[m, n].into()]
+            }
+            FusedMatMulBias { .. } => {
+                assert_eq!(ins[1].dim(0), ins[0].dim(1));
+                assert_eq!(ins[2].dim(0), ins[1].dim(1));
+                vec![[ins[0].dim(0), ins[1].dim(1)].into()]
+            }
+            BiasAdd => {
+                assert_eq!(ins[1].0, vec![ins[0].dim(1)]);
+                vec![ins[0].clone()]
+            }
+            Add | Sub | Mul => {
+                assert_eq!(ins[0], ins[1], "elementwise shape mismatch");
+                vec![ins[0].clone()]
+            }
+            ReluGrad | GeluGrad => {
+                assert_eq!(ins[0], ins[1]);
+                vec![ins[0].clone()]
+            }
+            Scale(_) | Relu | Gelu | Exp | Softmax | LayerNorm { .. } | Identity | StopGrad
+            | Cast { .. } => {
+                vec![ins[0].clone()]
+            }
+            ReduceSum { axis, keepdim } | ReduceMax { axis, keepdim } => {
+                assert_eq!(ins[0].rank(), 2);
+                let (m, n) = (ins[0].dim(0), ins[0].dim(1));
+                vec![match (axis, keepdim) {
+                    (0, true) => [1, n].into(),
+                    (0, false) => [n].into(),
+                    (1, true) => [m, 1].into(),
+                    (1, false) => [m].into(),
+                    _ => panic!("reduce axis {axis}"),
+                }]
+            }
+            ColSub | ColDiv => {
+                assert_eq!(ins[1].0, vec![ins[0].dim(0), 1]);
+                vec![ins[0].clone()]
+            }
+            ColBcast { n } => {
+                assert_eq!(ins[0].dim(1), 1);
+                vec![[ins[0].dim(0), *n].into()]
+            }
+            Transpose => vec![[ins[0].dim(1), ins[0].dim(0)].into()],
+            Embedding => vec![[ins[1].dim(0), ins[0].dim(1)].into()],
+            EmbeddingGrad { vocab } => vec![[*vocab, ins[0].dim(1)].into()],
+            SparseXent => {
+                assert_eq!(ins[1].0, vec![ins[0].dim(0)]);
+                vec![[ins[0].dim(0)].into(), ins[0].clone()]
+            }
+            SparseXentGrad => vec![ins[0].clone()],
+            External { outs, .. } => outs.clone(),
+            SgdUpdate { .. } => vec![ins[0].clone()],
+            AdamUpdate { .. } => vec![ins[0].clone(), ins[2].clone(), ins[3].clone()],
+            Flops { out, .. } => vec![out.clone()],
+        }
+    }
+
+    /// Output dtypes (defaults to first input's dtype, overridden per op).
+    pub fn infer_dtypes(&self, ins: &[DType]) -> Vec<DType> {
+        use OpKind::*;
+        match self {
+            Input { dtype, .. } | Variable { dtype, .. } => vec![*dtype],
+            Cast { to } => vec![*to],
+            Flops { dtype, .. } => vec![*dtype],
+            External { dtypes, .. } => dtypes.clone(),
+            SparseXent => vec![ins[0], ins[0]],
+            AdamUpdate { .. } => vec![ins[0], ins[2], ins[3]],
+            _ => vec![ins.first().copied().unwrap_or(DType::F32)],
+        }
+    }
+
+    /// Valid SBP signatures for one hierarchy dimension. The MatMul rows are
+    /// exactly Table 1 of the paper (translated through transpose flags).
+    pub fn sbp_candidates(&self, num_ins: usize) -> Vec<SigCand> {
+        use OpKind::*;
+        // Axis translation helper for transposed matmul operands: split of the
+        // *viewed* axis k corresponds to stored axis (k ^ transposed).
+        let tr = |t: bool, k: usize| if t { 1 - k } else { k };
+        match self {
+            Input { .. } | Variable { .. } => {
+                // Source ops can produce any signature; the compiler constrains
+                // them by hints. Offer S(0), S(1), B.
+                vec![sig(&[], &[s(0)]), sig(&[], &[s(1)]), sig(&[], &[B])]
+            }
+            MatMul { ta, tb } => vec![
+                // Table 1, row by row:
+                sig(&[s(tr(*ta, 0)), B], &[s(0)]),          // S(0), B    -> S(0)
+                sig(&[B, s(tr(*tb, 1))], &[s(1)]),          // B, S(1)    -> S(1)
+                sig(&[s(tr(*ta, 1)), s(tr(*tb, 0))], &[P]), // S(1), S(0) -> P(sum)
+                sig(&[P, B], &[P]),                         // P, B       -> P
+                sig(&[B, P], &[P]),                         // B, P       -> P
+                sig(&[B, B], &[B]),                         // B, B       -> B
+            ],
+            FusedMatMulBias { .. } => vec![
+                sig(&[s(0), B, B], &[s(0)]),
+                sig(&[B, s(1), s(0)], &[s(1)]),
+                sig(&[B, B, B], &[B]),
+            ],
+            BiasAdd => vec![
+                sig(&[s(0), B], &[s(0)]),
+                sig(&[s(1), s(0)], &[s(1)]),
+                sig(&[B, B], &[B]),
+            ],
+            Add | Sub => vec![
+                sig(&[s(0), s(0)], &[s(0)]),
+                sig(&[s(1), s(1)], &[s(1)]),
+                sig(&[P, P], &[P]), // linear: partial sums add
+                sig(&[B, B], &[B]),
+            ],
+            Mul => vec![
+                sig(&[s(0), s(0)], &[s(0)]),
+                sig(&[s(1), s(1)], &[s(1)]),
+                sig(&[B, B], &[B]),
+            ],
+            Scale(_) | Cast { .. } | Identity | StopGrad => vec![
+                sig(&[s(0)], &[s(0)]),
+                sig(&[s(1)], &[s(1)]),
+                sig(&[P], &[P]), // linear
+                sig(&[B], &[B]),
+            ],
+            Relu | Gelu | Exp => vec![
+                sig(&[s(0)], &[s(0)]),
+                sig(&[s(1)], &[s(1)]),
+                sig(&[B], &[B]), // non-linear: P is NOT propagatable
+            ],
+            ReluGrad | GeluGrad => vec![
+                sig(&[s(0), s(0)], &[s(0)]),
+                sig(&[s(1), s(1)], &[s(1)]),
+                sig(&[B, B], &[B]),
+            ],
+            Softmax | LayerNorm { .. } => vec![
+                sig(&[s(0)], &[s(0)]), // row-wise: batch split fine
+                sig(&[B], &[B]),       // S(1) requires the decomposed plan (Fig 11b)
+            ],
+            ReduceSum { axis, .. } => vec![
+                sig(&[s(1 - axis)], &[s(1 - axis)]), // reduce other axis: stays split
+                sig(&[s(*axis)], &[P]),              // reduce the split axis: local partials
+                sig(&[P], &[P]),                     // linear
+                sig(&[B], &[B]),
+            ],
+            ReduceMax { axis, .. } => vec![
+                sig(&[s(1 - axis)], &[s(1 - axis)]),
+                sig(&[s(*axis)], &[Sbp::Partial(ReduceKind::Max)]),
+                sig(&[B], &[B]),
+            ],
+            ColSub | ColDiv => vec![
+                sig(&[s(0), s(0)], &[s(0)]),
+                sig(&[s(1), B], &[s(1)]), // column-split rows share the (M,1) stat
+                sig(&[B, B], &[B]),
+            ],
+            ColBcast { .. } => vec![
+                sig(&[s(0)], &[s(0)]),
+                sig(&[B], &[s(1)]), // every shard materializes its columns
+                sig(&[P], &[P]),    // linear
+                sig(&[B], &[B]),
+            ],
+            Transpose => vec![
+                sig(&[s(0)], &[s(1)]),
+                sig(&[s(1)], &[s(0)]),
+                sig(&[P], &[P]),
+                sig(&[B], &[B]),
+            ],
+            Embedding => vec![
+                sig(&[s(1), B], &[s(1)]), // hidden-split table
+                sig(&[s(0), B], &[P]),    // vocab-split table -> partial rows
+                sig(&[B, s(0)], &[s(0)]), // data parallel over ids
+                sig(&[B, B], &[B]),
+            ],
+            EmbeddingGrad { .. } => vec![
+                sig(&[B, B], &[s(0)]),       // every shard scatter-adds its vocab range
+                sig(&[s(0), s(0)], &[P]),    // data-parallel batch shards -> partial table grad
+                sig(&[s(1), B], &[s(1)]),    // dy col-split -> table col-split
+            ],
+            SparseXent => vec![
+                sig(&[s(0), s(0)], &[s(0), s(0)]),
+                sig(&[B, B], &[B, B]),
+            ],
+            SparseXentGrad => vec![
+                sig(&[s(0), s(0), s(0)], &[s(0)]),
+                sig(&[B, B, B], &[B]),
+            ],
+            SgdUpdate { .. } => vec![
+                sig(&[s(0), s(0)], &[s(0)]),
+                sig(&[s(1), s(1)], &[s(1)]),
+                sig(&[B, B], &[B]),
+            ],
+            AdamUpdate { .. } => vec![
+                sig(&[s(0), s(0), s(0), s(0)], &[s(0), s(0), s(0)]),
+                sig(&[s(1), s(1), s(1), s(1)], &[s(1), s(1), s(1)]),
+                sig(&[B, B, B, B], &[B, B, B]),
+            ],
+            External { sigs, .. } => sigs.clone(),
+            Flops { split_axes, .. } => {
+                let mut cands: Vec<SigCand> = split_axes
+                    .iter()
+                    .map(|&a| SigCand::new(vec![s(a); num_ins], vec![s(a)]))
+                    .collect();
+                cands.push(SigCand::new(vec![B; num_ins], vec![B]));
+                cands
+            }
+        }
+    }
+
+    /// Roofline cost of this op at the given (physical shard) shapes.
+    pub fn cost(&self, ins: &[&Shape], outs: &[&Shape], dtype: DType) -> CostSpec {
+        use OpKind::*;
+        let eb = dtype.bytes() as f64;
+        let rd: f64 = ins.iter().map(|s| s.elems() as f64 * eb).sum();
+        let wr: f64 = outs.iter().map(|s| s.elems() as f64 * eb).sum();
+        match self {
+            MatMul { ta, .. } => {
+                let m = outs[0].dim(0) as f64;
+                let n = outs[0].dim(1) as f64;
+                let k = (if *ta { ins[0].dim(0) } else { ins[0].dim(1) }) as f64;
+                CostSpec::compute(2.0 * m * n * k, rd, wr)
+            }
+            FusedMatMulBias { .. } => {
+                let m = outs[0].dim(0) as f64;
+                let n = outs[0].dim(1) as f64;
+                let k = ins[0].dim(1) as f64;
+                CostSpec::compute(2.0 * m * n * k + 2.0 * m * n, rd, wr)
+            }
+            Embedding | EmbeddingGrad { .. } => {
+                // Gather/scatter: traffic is rows touched, not the whole table.
+                let touched = outs[0].elems().min(ins[0].elems()) as f64 * eb;
+                CostSpec::compute(0.0, touched + ins[1].elems() as f64 * 4.0, wr)
+            }
+            Input { .. } | Variable { .. } | Identity | StopGrad => CostSpec::ZERO,
+            Flops { cost, out, .. } => {
+                // the declared cost covers the *logical* op; a physical shard
+                // does its fraction of the work
+                let frac = outs[0].elems() as f64 / out.elems().max(1) as f64;
+                cost.scaled(frac)
+            }
+            External { flops, .. } => CostSpec::compute(*flops, rd, wr),
+            SparseXent | Softmax | LayerNorm { .. } => {
+                CostSpec::compute(8.0 * ins[0].elems() as f64, rd, wr)
+            }
+            AdamUpdate { .. } => CostSpec::compute(12.0 * ins[0].elems() as f64, rd, wr),
+            _ => CostSpec::compute(ins.iter().map(|s| s.elems() as f64).sum::<f64>(), rd, wr),
+        }
+    }
+
+    /// Which hardware queue physical instances occupy.
+    pub fn queue(&self) -> QueueKind {
+        match self {
+            OpKind::Flops { cost, .. } => cost.queue,
+            _ => QueueKind::Compute,
+        }
+    }
+
+    /// Short display name.
+    pub fn name(&self) -> String {
+        use OpKind::*;
+        match self {
+            Input { .. } => "input".into(),
+            Variable { .. } => "var".into(),
+            MatMul { ta, tb } => format!("matmul{}{}", if *ta { "_ta" } else { "" }, if *tb { "_tb" } else { "" }),
+            FusedMatMulBias { act } => format!("fused_matmul_bias_{act:?}").to_lowercase(),
+            BiasAdd => "bias_add".into(),
+            Add => "add".into(),
+            Sub => "sub".into(),
+            Mul => "mul".into(),
+            Scale(_) => "scale".into(),
+            Relu => "relu".into(),
+            Gelu => "gelu".into(),
+            Exp => "exp".into(),
+            ReluGrad => "relu_grad".into(),
+            GeluGrad => "gelu_grad".into(),
+            Softmax => "softmax".into(),
+            LayerNorm { .. } => "layernorm".into(),
+            ReduceSum { axis, .. } => format!("reduce_sum{axis}"),
+            ReduceMax { axis, .. } => format!("reduce_max{axis}"),
+            ColSub => "col_sub".into(),
+            ColDiv => "col_div".into(),
+            ColBcast { .. } => "col_bcast".into(),
+            Transpose => "transpose".into(),
+            Cast { to } => format!("cast_{to}"),
+            Embedding => "embedding".into(),
+            EmbeddingGrad { .. } => "embedding_grad".into(),
+            SparseXent => "sparse_xent".into(),
+            SparseXentGrad => "sparse_xent_grad".into(),
+            SgdUpdate { .. } => "sgd_update".into(),
+            AdamUpdate { .. } => "adam_update".into(),
+            Identity => "identity".into(),
+            StopGrad => "stop_grad".into(),
+            External { name, .. } => name.clone(),
+            Flops { name, .. } => name.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 1 of the paper, checked row by row.
+    #[test]
+    fn table1_matmul_signatures() {
+        let mm = OpKind::MatMul { ta: false, tb: false };
+        let cands = mm.sbp_candidates(2);
+        let expect = [
+            (s(0), B, s(0)),
+            (B, s(1), s(1)),
+            (s(1), s(0), P),
+            (P, B, P),
+            (B, P, P),
+            (B, B, B),
+        ];
+        assert_eq!(cands.len(), expect.len());
+        for (x, w, y) in expect {
+            assert!(
+                cands.iter().any(|c| c.ins == vec![x, w] && c.outs == vec![y]),
+                "missing Table-1 row {x},{w} -> {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn transposed_matmul_signature_translation() {
+        // dW = A^T @ dY: the "S(0) row-split of the A view" is stored S(...)
+        // axis 1? No: view row axis 0 of A^T is stored axis 1 of A.
+        let mm = OpKind::MatMul { ta: true, tb: false };
+        let cands = mm.sbp_candidates(2);
+        // data-parallel grad: A stored S(0) (batch rows) viewed as S(1) of A^T
+        // combined with dY S(0) gives P(sum) — the classic weight-grad allreduce.
+        assert!(cands.iter().any(|c| c.ins == vec![s(0), s(0)] && c.outs == vec![P]));
+    }
+
+    #[test]
+    fn matmul_shapes_with_transposes() {
+        let a: Shape = [4, 3].into();
+        let b: Shape = [5, 3].into();
+        let y = OpKind::MatMul { ta: false, tb: true }.infer_shapes(&[&a, &b]);
+        assert_eq!(y[0].0, vec![4, 5]);
+        let a2: Shape = [3, 4].into();
+        let y2 = OpKind::MatMul { ta: true, tb: true }.infer_shapes(&[&a2, &b]);
+        assert_eq!(y2[0].0, vec![4, 5]);
+    }
+
+    #[test]
+    fn relu_does_not_propagate_partial() {
+        let cands = OpKind::Relu.sbp_candidates(1);
+        assert!(!cands.iter().any(|c| c.ins.contains(&P)), "relu is non-linear");
+        let cands = OpKind::Scale(2.0).sbp_candidates(1);
+        assert!(cands.iter().any(|c| c.ins.contains(&P)), "scale is linear");
+    }
+
+    #[test]
+    fn reduce_over_split_axis_yields_partial() {
+        // Fig 11b: reducing the column-split axis produces a device-local
+        // partial (P(max)/P(sum)) — the "local reduction" the paper highlights.
+        let c = OpKind::ReduceMax { axis: 1, keepdim: true }.sbp_candidates(1);
+        assert!(c.iter().any(|x| x.ins == vec![s(1)] && x.outs == vec![Sbp::Partial(ReduceKind::Max)]));
+        let c = OpKind::ReduceSum { axis: 1, keepdim: true }.sbp_candidates(1);
+        assert!(c.iter().any(|x| x.ins == vec![s(1)] && x.outs == vec![P]));
+    }
+
+    #[test]
+    fn matmul_flops() {
+        let a: Shape = [2, 3].into();
+        let b: Shape = [3, 4].into();
+        let y: Shape = [2, 4].into();
+        let c = OpKind::MatMul { ta: false, tb: false }.cost(&[&a, &b], &[&y], DType::F32);
+        assert_eq!(c.flops, 2.0 * 2.0 * 4.0 * 3.0);
+    }
+
+    #[test]
+    fn reduce_shapes() {
+        let x: Shape = [4, 7].into();
+        assert_eq!(OpKind::ReduceMax { axis: 1, keepdim: true }.infer_shapes(&[&x])[0].0, vec![4, 1]);
+        assert_eq!(OpKind::ReduceSum { axis: 0, keepdim: false }.infer_shapes(&[&x])[0].0, vec![7]);
+    }
+}

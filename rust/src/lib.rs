@@ -1,0 +1,51 @@
+//! # oneflow-rs
+//!
+//! A Rust + JAX + Pallas reproduction of *OneFlow: Redesign the Distributed
+//! Deep Learning Framework from Scratch* (Yuan et al., 2021).
+//!
+//! The crate implements the paper's two contributions as first-class systems:
+//!
+//! * **The compiler** ([`compiler`]): consumes a *logical* computation graph
+//!   ([`graph`]) annotated with placements ([`placement`]) and SBP signatures
+//!   ([`sbp`]) and produces a *physical* per-device execution plan, inserting
+//!   *boxing* (collective-communication) ops ([`boxing`]) wherever the
+//!   producer's SBP signature differs from the consumer's expectation
+//!   (paper §3, Tables 1–3, Fig 5).
+//! * **The actor runtime** ([`actor`]): one actor per physical op; registers
+//!   with in/out/reference counters, a req/ack message protocol, credit-based
+//!   back-pressure and natural pipelining via multi-slot registers
+//!   (paper §4–5, Figs 6–8).
+//!
+//! Real numerics execute through [`runtime`] backends: hand-written native
+//! CPU kernels, or AOT-lowered JAX/Pallas HLO artifacts loaded through the
+//! PJRT C API (`xla` crate). Paper-scale experiments run on a *simulated*
+//! cluster ([`exec`]) — V100-like device models and an NVLink/RoCE network
+//! model — driven by the same actor runtime using virtual timestamps, so the
+//! scheduling/overlap behaviour the paper evaluates is produced by the real
+//! protocol, and only kernel/wire durations come from the hardware model.
+//!
+//! See `DESIGN.md` for the per-experiment index and `examples/quickstart.rs`
+//! for a five-minute tour.
+
+pub mod util;
+pub mod tensor;
+pub mod sbp;
+pub mod placement;
+pub mod graph;
+pub mod boxing;
+pub mod exec;
+pub mod compiler;
+pub mod actor;
+pub mod runtime;
+pub mod memory;
+pub mod optimizer;
+pub mod pipeline;
+pub mod models;
+pub mod data;
+pub mod baselines;
+pub mod metrics;
+pub mod config;
+pub mod bench;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

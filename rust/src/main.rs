@@ -1,0 +1,135 @@
+//! `oneflow` launcher: the L3 leader binary.
+//!
+//! Subcommands:
+//! * `train`    — end-to-end GPT training from the AOT artifacts (PJRT).
+//! * `simulate` — run a paper workload on the simulated cluster.
+//! * `plan`     — compile a workload and dump the physical plan + memory.
+
+use oneflow::actor::Engine;
+use oneflow::bench::Table;
+use oneflow::compiler::{compile, CompileOptions};
+use oneflow::config::Args;
+use oneflow::exec::QueueKind;
+use oneflow::memory;
+use oneflow::models::{gpt_sim, resnet50, GptSimConfig, ResnetConfig};
+use oneflow::placement::Placement;
+use oneflow::runtime::SimBackend;
+use oneflow::util::fmt;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => train(&args),
+        Some("simulate") => simulate(&args),
+        Some("plan") => plan(&args),
+        _ => {
+            eprintln!(
+                "usage: oneflow <train|simulate|plan> [--flags]\n\
+                 train:    --steps N --artifacts DIR --lr F\n\
+                 simulate: --model gpt|resnet --dp N --mp N --pp N --batch N --hidden N --layers N --pieces N [--zero] [--checkpoint]\n\
+                 plan:     same flags as simulate; prints the physical plan"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+/// End-to-end data-parallel GPT training on the PJRT CPU client using the
+/// AOT artifacts (`make artifacts`). Python is NOT involved here.
+fn train(args: &Args) {
+    let dir = args.get("artifacts").unwrap_or("artifacts").to_string();
+    let steps = args.usize("steps", 200);
+    let lr = args.f64("lr", 0.3) as f32;
+    let report = oneflow::models::gpt::train_e2e(&dir, steps, lr, |step, loss| {
+        if step % 10 == 0 || step + 1 == steps {
+            println!("step {step:4}  loss {loss:.4}");
+        }
+    })
+    .expect("e2e training failed");
+    println!(
+        "trained {steps} steps of a {:.2}M-param GPT in {:.1}s wall ({:.2} steps/s), final loss {:.4}",
+        report.params as f64 / 1e6,
+        report.wall_secs,
+        steps as f64 / report.wall_secs,
+        report.losses.last().unwrap()
+    );
+}
+
+type Built = (
+    oneflow::graph::LogicalGraph,
+    oneflow::graph::TensorId,
+    HashMap<oneflow::graph::NodeId, oneflow::graph::TensorId>,
+    usize,
+);
+
+fn build_model(args: &Args) -> Built {
+    let model = args.get("model").unwrap_or("gpt");
+    match model {
+        "resnet" => {
+            let ndev = args.usize("dp", 8);
+            let cfg = ResnetConfig { batch_per_dev: args.usize("batch", 192), ..Default::default() };
+            let pl = Placement::flat(ndev.div_ceil(8), ndev.min(8));
+            let batch = cfg.batch_per_dev * ndev;
+            let (g, loss, upd) = resnet50(&cfg, &pl);
+            (g, loss, upd, batch)
+        }
+        _ => {
+            let mut cfg = GptSimConfig::new(
+                args.usize("dp", 2),
+                args.usize("mp", 2),
+                args.usize("pp", 1),
+                args.usize("batch", 16),
+                args.usize("hidden", 1536),
+                args.usize("layers", 8),
+            );
+            cfg.seq = args.usize("seq", 1024);
+            cfg.checkpoint = args.flag("checkpoint");
+            cfg.zero = args.flag("zero");
+            let gb = cfg.global_batch;
+            let (g, loss, upd) = gpt_sim(&cfg);
+            (g, loss, upd, gb)
+        }
+    }
+}
+
+fn simulate(args: &Args) {
+    let (g, loss, upd, batch) = build_model(args);
+    let opts = CompileOptions::default();
+    let plan = compile(&g, &[loss], &upd, &opts);
+    let mem = memory::check_plan(&plan, &opts.cluster.device);
+    let pieces = args.usize("pieces", 8);
+    let engine = Engine::new(plan, Arc::new(SimBackend));
+    let report = engine.run(pieces);
+    let mut t = Table::new("simulation", &["metric", "value"]);
+    t.row(&["pieces".into(), pieces.to_string()]);
+    t.row(&["virtual makespan".into(), fmt::secs(report.makespan)]);
+    t.row(&["iteration time".into(), fmt::secs(report.makespan / pieces as f64)]);
+    t.row(&["throughput".into(), format!("{:.1} samples/s", report.throughput() * batch as f64)]);
+    t.row(&["comm volume".into(), fmt::bytes(report.comm_bytes)]);
+    t.row(&["actions".into(), report.actions.to_string()]);
+    t.row(&[
+        "messages (local/remote/xnode)".into(),
+        format!("{}/{}/{}", report.local_msgs, report.remote_msgs, report.cross_node_msgs),
+    ]);
+    t.row(&["compute busy (max dev)".into(), fmt::secs(report.busy(QueueKind::Compute))]);
+    match mem {
+        Ok(m) => t.row(&["peak device memory".into(), fmt::bytes(m.peak())]),
+        Err(e) => t.row(&["memory".into(), format!("OOM: {e}")]),
+    }
+    t.print();
+}
+
+fn plan(args: &Args) {
+    let (g, loss, upd, _) = build_model(args);
+    let opts = CompileOptions::default();
+    let plan = compile(&g, &[loss], &upd, &opts);
+    println!("{}", plan.dump());
+    println!("nodes: {}  boxing ops: {}", plan.nodes.len(), plan.boxing_count());
+    let mut devs: Vec<_> = plan.memory_by_device().into_iter().collect();
+    devs.sort_by_key(|(d, _)| *d);
+    for (dev, bytes) in devs {
+        println!("  {dev}: {}", fmt::bytes(bytes));
+    }
+}

@@ -1,0 +1,193 @@
+//! Memory planning and model-state accounting (paper §2.3 "resource
+//! planning at compile-time", §6.3.2 / §6.4 memory results).
+//!
+//! Two layers:
+//! * [`check_plan`] — validate a physical plan's register footprint against
+//!   device capacity (the compile-time OOM check that replaces the runtime
+//!   OOM of Fig 2's eager schedulers).
+//! * [`ModelStates`] — the analytic params/grads/optimizer-state/activation
+//!   accounting behind the Fig 13 and Fig 15 memory curves (the quantities
+//!   ZeRO's §2 tabulates), under replicated vs sharded layouts and fp32 vs
+//!   mixed precision.
+
+use crate::compiler::PhysPlan;
+use crate::exec::DeviceModel;
+use crate::placement::DeviceId;
+use std::collections::HashMap;
+
+/// Per-device planned footprint vs capacity.
+#[derive(Debug)]
+pub struct MemReport {
+    pub per_device: HashMap<DeviceId, f64>,
+    pub capacity: f64,
+}
+
+impl MemReport {
+    pub fn peak(&self) -> f64 {
+        self.per_device.values().cloned().fold(0.0, f64::max)
+    }
+
+    pub fn fits(&self) -> bool {
+        self.peak() <= self.capacity
+    }
+}
+
+/// Compile-time memory check: every device's registers (slots × bytes) must
+/// fit. Returns `Err` with the offending devices — this is how the compiler
+/// rejects plans an eager runtime would discover as OOM mid-training.
+pub fn check_plan(plan: &PhysPlan, device: &DeviceModel) -> Result<MemReport, String> {
+    let per_device = plan.memory_by_device();
+    let capacity = device.mem_bytes as f64;
+    let over: Vec<String> = per_device
+        .iter()
+        .filter(|(_, &b)| b > capacity)
+        .map(|(d, b)| format!("{d}: {:.2} GiB > {:.2} GiB", b / (1 << 30) as f64, capacity / (1 << 30) as f64))
+        .collect();
+    if over.is_empty() {
+        Ok(MemReport { per_device, capacity })
+    } else {
+        Err(format!("compile-time OOM: {}", over.join(", ")))
+    }
+}
+
+/// Which optimizer states exist per parameter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimKind {
+    /// SGD with momentum: 1 state copy.
+    SgdMomentum,
+    /// Adam: momentum + variance (+ fp32 master weights under mixed
+    /// precision) — the ZeRO paper's K=12 regime.
+    Adam,
+}
+
+/// Layout of model states across `n` data-parallel devices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StateLayout {
+    /// Every device holds everything (classic data parallelism).
+    Replicated,
+    /// Optimizer states + master weights sharded S(0) across devices
+    /// (ZeRO-DP stage "P_os+P_g"; the paper's §6.4 SBP formulation, Fig 14).
+    ZeroSharded,
+}
+
+/// Analytic per-device model-state accounting.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelStates {
+    pub params: f64,
+    pub n_devices: usize,
+    pub mixed_precision: bool,
+    pub optim: OptimKind,
+    pub layout: StateLayout,
+}
+
+impl ModelStates {
+    /// Per-device bytes of params + grads + optimizer states.
+    pub fn state_bytes_per_device(&self) -> f64 {
+        let p = self.params;
+        let n = self.n_devices as f64;
+        let (live_param, grad) = if self.mixed_precision { (2.0, 2.0) } else { (4.0, 4.0) };
+        // optimizer states are fp32; mixed precision adds fp32 master weights
+        let opt_per_param = match self.optim {
+            OptimKind::SgdMomentum => 4.0,
+            OptimKind::Adam => 8.0,
+        } + if self.mixed_precision { 4.0 } else { 0.0 };
+        match self.layout {
+            StateLayout::Replicated => p * (live_param + grad + opt_per_param),
+            // fwd/bwd params+grads stay replicated (they are re-gathered per
+            // step), but optimizer states and master weights shard:
+            StateLayout::ZeroSharded => p * (live_param + grad) + p * opt_per_param / n,
+        }
+    }
+
+    /// Activation bytes per device for a transformer (per microbatch), with
+    /// optional activation checkpointing (Chen et al. 2016): checkpointing
+    /// stores only per-layer boundaries and recomputes the interior.
+    pub fn transformer_activation_bytes(
+        &self,
+        batch: usize,
+        seq: usize,
+        hidden: usize,
+        layers: usize,
+        checkpoint: bool,
+    ) -> f64 {
+        let elem = if self.mixed_precision { 2.0 } else { 4.0 };
+        let per_layer_full = 16.0 * batch as f64 * seq as f64 * hidden as f64 * elem;
+        let boundary = batch as f64 * seq as f64 * hidden as f64 * elem;
+        if checkpoint {
+            // boundaries for all layers + one layer's working set
+            layers as f64 * boundary + per_layer_full
+        } else {
+            layers as f64 * per_layer_full
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::graph::{LogicalGraph, OpKind};
+    use crate::placement::Placement;
+    use crate::tensor::DType;
+    use std::collections::HashMap;
+
+    #[test]
+    fn plan_within_capacity_passes() {
+        let p = Placement::node(0, 1);
+        let mut g = LogicalGraph::new();
+        let x = g.add1("x", OpKind::Input { shape: [128, 128].into(), dtype: DType::F32 }, &[], p.clone());
+        let y = g.add1("y", OpKind::Relu, &[x], p);
+        let plan = compile(&g, &[y], &HashMap::new(), &CompileOptions::default());
+        let rep = check_plan(&plan, &DeviceModel::v100()).unwrap();
+        assert!(rep.fits());
+    }
+
+    #[test]
+    fn oversized_plan_rejected_at_compile_time() {
+        let p = Placement::node(0, 1);
+        let mut g = LogicalGraph::new();
+        // 8 GiB tensor with pipeline depth 2 -> 16+ GiB on a 16 GiB device
+        let x = g.add1(
+            "x",
+            OpKind::Input { shape: [1 << 16, 1 << 15].into(), dtype: DType::F32 },
+            &[],
+            p.clone(),
+        );
+        let y = g.add1("y", OpKind::Relu, &[x], p);
+        let plan = compile(&g, &[y], &HashMap::new(), &CompileOptions::default());
+        assert!(check_plan(&plan, &DeviceModel::v100()).is_err());
+    }
+
+    #[test]
+    fn zero_sharding_divides_optimizer_states() {
+        let base = ModelStates {
+            params: 1.5e9,
+            n_devices: 8,
+            mixed_precision: true,
+            optim: OptimKind::Adam,
+            layout: StateLayout::Replicated,
+        };
+        let sharded = ModelStates { layout: StateLayout::ZeroSharded, ..base };
+        let r = base.state_bytes_per_device();
+        let z = sharded.state_bytes_per_device();
+        // ZeRO paper: 1.5B params, K=12, fp16: 4P + KP = 24 GB replicated vs
+        // 4P + KP/N ≈ 8.25 GB at N=8
+        assert!((r - 16.0 * 1.5e9).abs() < 1e6, "replicated {r}");
+        assert!((z - (4.0 * 1.5e9 + 12.0 * 1.5e9 / 8.0)).abs() < 1e6, "sharded {z}");
+        assert!(z < r / 2.5);
+    }
+
+    #[test]
+    fn checkpointing_shrinks_activations() {
+        let ms = ModelStates {
+            params: 0.0,
+            n_devices: 1,
+            mixed_precision: true,
+            optim: OptimKind::Adam,
+            layout: StateLayout::Replicated,
+        };
+        let full = ms.transformer_activation_bytes(8, 1024, 1536, 24, false);
+        let ckpt = ms.transformer_activation_bytes(8, 1024, 1536, 24, true);
+        assert!(ckpt < full / 5.0, "ckpt {ckpt} vs full {full}");
+    }
+}

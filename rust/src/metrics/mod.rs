@@ -1,0 +1,37 @@
+//! Derived experiment metrics on top of [`crate::actor::RunReport`]:
+//! throughput conversions and efficiency ratios used by the benches.
+
+use crate::actor::RunReport;
+
+/// Samples/second given samples per piece (mini-batch size).
+pub fn samples_per_sec(report: &RunReport, samples_per_piece: usize) -> f64 {
+    report.throughput() * samples_per_piece as f64
+}
+
+/// Scaling efficiency of `multi` vs `single` given the device ratio.
+pub fn scaling_efficiency(single_tput: f64, multi_tput: f64, n_devices: usize) -> f64 {
+    multi_tput / (single_tput * n_devices as f64)
+}
+
+/// Achieved fraction of the modeled compute roofline for one queue: virtual
+/// busy time / makespan.
+pub fn compute_utilization(report: &RunReport, queue: crate::exec::QueueKind) -> f64 {
+    report.busy(queue) / report.makespan.max(1e-30)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        let mut r = RunReport { pieces: 10, makespan: 2.0, ..Default::default() };
+        assert_eq!(samples_per_sec(&r, 32), 160.0);
+        assert!((scaling_efficiency(10.0, 72.0, 8) - 0.9).abs() < 1e-9);
+        r.queue_busy.insert(
+            crate::actor::ThreadKey { node: 0, queue: crate::exec::QueueKind::Compute, device: 0 },
+            1.5,
+        );
+        assert!((compute_utilization(&r, crate::exec::QueueKind::Compute) - 0.75).abs() < 1e-9);
+    }
+}

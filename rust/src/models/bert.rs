@@ -1,0 +1,44 @@
+//! BERT-base (Fig 10's second workload): the GPT block stack at BERT-base
+//! dimensions, data-parallel only (the paper trains it with DP).
+
+use super::gpt::{gpt_sim, GptSimConfig};
+use crate::graph::{LogicalGraph, NodeId, TensorId};
+use crate::tensor::DType;
+use std::collections::HashMap;
+
+/// BERT-base: 12 layers, hidden 768, seq 128, ~110M params.
+pub fn bert_base(
+    n_devices: usize,
+    batch_per_dev: usize,
+    dtype: DType,
+) -> (LogicalGraph, TensorId, HashMap<NodeId, TensorId>) {
+    let mut cfg = GptSimConfig::new(n_devices, 1, 1, batch_per_dev * n_devices, 768, 12);
+    cfg.seq = 128;
+    cfg.vocab = 30522;
+    cfg.dtype = dtype;
+    gpt_sim(&cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_base_param_count() {
+        let cfg = {
+            let mut c = GptSimConfig::new(1, 1, 1, 8, 768, 12);
+            c.seq = 128;
+            c.vocab = 30522;
+            c
+        };
+        // 12*768^2*12 + 30650*768 ≈ 108.4M — BERT-base ballpark
+        assert!((cfg.params() - 108.4e6).abs() / 108.4e6 < 0.02, "{}", cfg.params());
+    }
+
+    #[test]
+    fn builds_for_multiple_devices() {
+        let (g, _, upd) = bert_base(2, 8, DType::F16);
+        assert!(!upd.is_empty());
+        assert!(g.nodes.len() > 50);
+    }
+}

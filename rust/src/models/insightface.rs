@@ -1,0 +1,177 @@
+//! InsightFace-style large-class face recognition (Figs 11–12): backbone +
+//! model-parallel fc (weight `S(1)`) + the **decomposed softmax of Fig 11b**
+//! built from real ops, so the compiler's plan literally contains the
+//! local-reduce → `P(max)/P(sum)` boxing → broadcast structure the paper
+//! draws.
+
+use super::nn::{flops_op, loss_head};
+use crate::exec::QueueKind;
+use crate::graph::{autograd, LogicalGraph, NodeId, OpKind, TensorId};
+use crate::optimizer::{attach_sgd, Sharding};
+use crate::placement::Placement;
+use crate::sbp::{s, NdSbp, Sbp};
+use crate::tensor::DType;
+use std::collections::HashMap;
+
+/// Backbone kind (Fig 12 compares two).
+#[derive(Clone, Copy, Debug)]
+pub enum Backbone {
+    /// iResNet100: ~12.1 GFLOP fwd / image, 65M params.
+    Resnet100,
+    /// MobileFaceNet: ~0.45 GFLOP fwd / image, 2M params.
+    MobileFaceNet,
+}
+
+impl Backbone {
+    pub fn fwd_flops(&self) -> f64 {
+        match self {
+            Backbone::Resnet100 => 12.1e9,
+            Backbone::MobileFaceNet => 0.45e9,
+        }
+    }
+    pub fn params(&self) -> f64 {
+        match self {
+            Backbone::Resnet100 => 65.0e6,
+            Backbone::MobileFaceNet => 2.0e6,
+        }
+    }
+}
+
+/// Build the training graph: backbone (data-parallel) → embedding (512) →
+/// fc over `classes` with weight `S(1)` → decomposed softmax → loss.
+pub fn insightface(
+    backbone: Backbone,
+    classes: usize,
+    batch_per_dev: usize,
+    pl: &Placement,
+    dtype: DType,
+) -> (LogicalGraph, TensorId, HashMap<NodeId, TensorId>) {
+    let n = pl.len();
+    let batch = batch_per_dev * n;
+    let emb = 512usize;
+    let rank = pl.hierarchy.len();
+    let dp = {
+        let mut v = vec![Sbp::Broadcast; rank];
+        *v.last_mut().unwrap() = s(0);
+        NdSbp(v)
+    };
+    let col = {
+        let mut v = vec![Sbp::Broadcast; rank];
+        *v.last_mut().unwrap() = s(1);
+        NdSbp(v)
+    };
+    let bsbp = NdSbp(vec![Sbp::Broadcast; rank]);
+
+    let mut g = LogicalGraph::new();
+    let x = g.add1("images", OpKind::Input { shape: [batch, emb].into(), dtype }, &[], pl.clone());
+    g.hint_tensor(x, dp.clone());
+    // backbone as matmul groups (same construction as resnet.rs)
+    let groups = 8;
+    let gp = backbone.params() / groups as f64;
+    let dim = gp.sqrt() as usize;
+    let rows = (backbone.fwd_flops() / (2.0 * backbone.params()) * batch as f64) as usize;
+    let stem = flops_op(
+        &mut g, "stem", &[x], [rows, dim].into(), dtype,
+        0.0, (batch * emb) as f64 * 4.0, QueueKind::Compute, vec![0], pl,
+    );
+    let mut h = g.add1("data_boundary", OpKind::StopGrad, &[stem], pl.clone());
+    for i in 0..groups {
+        h = super::nn::linear(
+            &mut g, &format!("bb{i}"), h, dim, pl, dtype, Some(bsbp.clone()), Some(OpKind::Relu),
+        );
+    }
+    // project to the (batch, 512) embedding
+    let feat = flops_op(
+        &mut g, "gap_embed", &[h], [batch, emb].into(), dtype,
+        2.0 * (batch * emb * dim) as f64, (batch * dim) as f64 * 4.0,
+        QueueKind::Compute, vec![0], pl,
+    );
+    // feature must be replicated for the column-split fc (Table 1 row 2)
+    let fc_w = g.add1(
+        "fc7_w",
+        OpKind::Variable { shape: [emb, classes].into(), dtype, init_std: 0.01 },
+        &[],
+        pl.clone(),
+    );
+    g.hint_tensor(fc_w, col.clone());
+    let logits = g.add1("fc7", OpKind::MatMul { ta: false, tb: false }, &[feat, fc_w], pl.clone());
+    g.hint_tensor(logits, col.clone()); // (B, S(1)) logits
+
+    // ---- Fig 11b: softmax decomposed with device-local reductions ----
+    let mx = g.add1("smax_max", OpKind::ReduceMax { axis: 1, keepdim: true }, &[logits], pl.clone());
+    // local max is P(max); consuming it in ColSub with the S(1) logits needs
+    // B → the compiler inserts the max all-reduce of Fig 11b.
+    let shifted = g.add1("smax_sub", OpKind::ColSub, &[logits, mx], pl.clone());
+    let e = g.add1("smax_exp", OpKind::Exp, &[shifted], pl.clone());
+    let sum = g.add1("smax_sum", OpKind::ReduceSum { axis: 1, keepdim: true }, &[e], pl.clone());
+    let probs = g.add1("smax_div", OpKind::ColDiv, &[e, sum], pl.clone());
+    let loss = loss_head(&mut g, "margin_xent", probs, pl);
+
+    let bw = autograd::build_backward(&mut g, loss);
+    let updates = attach_sgd(&mut g, &bw, 0.1, Sharding::Replicated);
+    (g, loss, updates)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions, PhysKernel};
+    use crate::sbp::ReduceKind;
+
+    /// Fig 11 plan structure: the compiled graph must contain a P(max)→B
+    /// boxing (the global max combine) and a P(sum)→B boxing (the global sum
+    /// combine) across the model-parallel devices.
+    #[test]
+    fn fig11_local_then_global_reductions() {
+        let pl = Placement::node(0, 4);
+        let (g, loss, upd) =
+            insightface(Backbone::MobileFaceNet, 4096, 8, &pl, DType::F32);
+        let plan = compile(&g, &[loss], &upd, &CompileOptions { fuse: false, ..Default::default() });
+        let has_partial = |kind: ReduceKind| {
+            plan.boxing_nodes().iter().any(|n| {
+                matches!(&n.kernel, PhysKernel::Boxing { in_nd, out_nd, .. }
+                    if in_nd.0.last() == Some(&Sbp::Partial(kind))
+                        && *out_nd.0.last().unwrap() == Sbp::Broadcast)
+            })
+        };
+        assert!(has_partial(ReduceKind::Max), "missing P(max) combine\n{}", plan.dump());
+        assert!(has_partial(ReduceKind::Sum), "missing P(sum) combine\n{}", plan.dump());
+    }
+
+    /// The decomposed model-parallel softmax is numerically a softmax.
+    #[test]
+    fn decomposed_softmax_matches_reference() {
+        use crate::actor::{Engine, FnSource};
+        use crate::runtime::NativeBackend;
+        use crate::tensor::{ops, Tensor};
+        use std::sync::Arc;
+        let pl = Placement::node(0, 2);
+        // smaller graph: embedding input straight into fc + softmax
+        let mut g = LogicalGraph::new();
+        let feat = g.add1("feat", OpKind::Input { shape: [4, 8].into(), dtype: DType::F32 }, &[], pl.clone());
+        g.hint_tensor(feat, NdSbp::d1(Sbp::Broadcast));
+        let w = g.add1("w", OpKind::Variable { shape: [8, 6].into(), dtype: DType::F32, init_std: 0.5 }, &[], pl.clone());
+        g.hint_tensor(w, NdSbp::d1(s(1)));
+        let logits_t = g.add1("logits", OpKind::MatMul { ta: false, tb: false }, &[feat, w], pl.clone());
+        g.hint_tensor(logits_t, NdSbp::d1(s(1)));
+        let mx = g.add1("mx", OpKind::ReduceMax { axis: 1, keepdim: true }, &[logits_t], pl.clone());
+        let sh = g.add1("sh", OpKind::ColSub, &[logits_t, mx], pl.clone());
+        let e = g.add1("e", OpKind::Exp, &[sh], pl.clone());
+        let sm = g.add1("sm", OpKind::ReduceSum { axis: 1, keepdim: true }, &[e], pl.clone());
+        let probs = g.add1("probs", OpKind::ColDiv, &[e, sm], pl.clone());
+        let plan = compile(&g, &[probs, logits_t], &HashMap::new(), &CompileOptions { fuse: false, ..Default::default() });
+        let engine = Engine::new(plan, Arc::new(NativeBackend)).with_source(Arc::new(FnSource(
+            |_b: &crate::compiler::InputBinding, piece: usize| {
+                let mut r = crate::util::Rng::new(31 + piece as u64);
+                Tensor::randn([4, 8], DType::F32, 1.0, &mut r)
+            },
+        )));
+        let rep = engine.run(2);
+        for piece in 0..2 {
+            let got = &rep.fetched[&probs][piece];
+            let logits_v = &rep.fetched[&logits_t][piece];
+            let want = ops::softmax(logits_v);
+            assert!(got.allclose(&want, 1e-5), "decomposed softmax wrong");
+        }
+    }
+}

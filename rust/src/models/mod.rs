@@ -1,0 +1,20 @@
+//! Model zoo for the paper's evaluation workloads (§6), built on the logical
+//! graph IR so *all* parallelism falls out of SBP hints + the compiler.
+//!
+//! Simulation-scale models represent conv/attention stacks as
+//! matmul-equivalent groups (same FLOPs, same parameter bytes, same kernel
+//! counts to first order) so that compute cost, communication volume and
+//! fusion opportunities are all mechanistic — see DESIGN.md §3.
+
+pub mod nn;
+pub mod resnet;
+pub mod bert;
+pub mod gpt;
+pub mod insightface;
+pub mod wide_deep;
+
+pub use gpt::{gpt_sim, GptSimConfig};
+pub use resnet::{resnet50, ResnetConfig};
+pub use bert::bert_base;
+pub use insightface::insightface;
+pub use wide_deep::wide_deep;

@@ -1,0 +1,99 @@
+//! Small layer-building helpers shared by the model zoo.
+
+use crate::exec::{CostSpec, QueueKind};
+use crate::graph::{LogicalGraph, OpKind, TensorId};
+use crate::placement::Placement;
+use crate::sbp::NdSbp;
+use crate::tensor::{DType, Shape};
+
+/// `act(x @ w + b)` with fresh Variables; returns the activation tensor.
+/// `w_sbp` pins the weight's signature (`B` = data parallel, `S(1)`/`S(0)` =
+/// model parallel, Table 1).
+#[allow(clippy::too_many_arguments)]
+pub fn linear(
+    g: &mut LogicalGraph,
+    name: &str,
+    x: TensorId,
+    out_dim: usize,
+    pl: &Placement,
+    dtype: DType,
+    w_sbp: Option<NdSbp>,
+    act: Option<OpKind>,
+) -> TensorId {
+    let in_dim = g.tensor(x).shape.dim(1);
+    let w = g.add1(
+        format!("{name}_w"),
+        OpKind::Variable { shape: [in_dim, out_dim].into(), dtype, init_std: 0.02 },
+        &[],
+        pl.clone(),
+    );
+    if let Some(sbp) = &w_sbp {
+        g.hint_tensor(w, sbp.clone());
+    }
+    let b = g.add1(
+        format!("{name}_b"),
+        OpKind::Variable { shape: [out_dim].into(), dtype, init_std: 0.0 },
+        &[],
+        pl.clone(),
+    );
+    let h = g.add1(format!("{name}_mm"), OpKind::MatMul { ta: false, tb: false }, &[x, w], pl.clone());
+    let hb = g.add1(format!("{name}_bias"), OpKind::BiasAdd, &[h, b], pl.clone());
+    match act {
+        Some(a) => g.add1(format!("{name}_act"), a, &[hb], pl.clone()),
+        None => hb,
+    }
+}
+
+/// A cost-only op (conv block, attention, layer norm, loss head…) with
+/// explicit flops/bytes and splittable axes.
+#[allow(clippy::too_many_arguments)]
+pub fn flops_op(
+    g: &mut LogicalGraph,
+    name: &str,
+    inputs: &[TensorId],
+    out: Shape,
+    dtype: DType,
+    flops: f64,
+    bytes: f64,
+    queue: QueueKind,
+    split_axes: Vec<usize>,
+    pl: &Placement,
+) -> TensorId {
+    g.add1(
+        name,
+        OpKind::Flops {
+            name: name.into(),
+            out,
+            dtype,
+            cost: CostSpec { flops, read_bytes: bytes, write_bytes: bytes * 0.5, queue },
+            split_axes,
+            param_bytes: 0.0,
+        },
+        inputs,
+        pl.clone(),
+    )
+}
+
+/// Per-example-loss head used by sim models: a cost-only op shaped `(rows,)`.
+pub fn loss_head(
+    g: &mut LogicalGraph,
+    name: &str,
+    logits: TensorId,
+    pl: &Placement,
+) -> TensorId {
+    let rows = g.tensor(logits).shape.dim(0);
+    let classes = g.tensor(logits).shape.dim(1);
+    let dtype = g.tensor(logits).dtype;
+    flops_op(
+        g,
+        name,
+        &[logits],
+        [rows].into(),
+        dtype,
+        8.0 * (rows * classes) as f64,
+        (rows * classes) as f64 * dtype.bytes() as f64,
+        QueueKind::Compute,
+        vec![0],
+        pl,
+    )
+}

@@ -1,0 +1,200 @@
+//! Optimizer attachment policies (paper §6.4, Fig 14): how gradients are
+//! combined and where optimizer state lives, expressed *purely as SBP
+//! hints* — the paper's 300-LoC-vs-2K-LoC point about ZeRO-DP.
+
+use crate::graph::{autograd::Backward, LogicalGraph, NodeId, OpKind, TensorId};
+use crate::sbp::{s, NdSbp, Sbp};
+use crate::tensor::DType;
+use std::collections::HashMap;
+
+/// Where optimizer math happens and its states live.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sharding {
+    /// Classic data parallelism: grads all-reduced (`P→B`), every device
+    /// updates the full parameter.
+    Replicated,
+    /// ZeRO-style: grads reduce-scattered (`P→S(0)`), each device updates
+    /// its shard, updated params all-gathered (`S(0)→B`) — exactly Fig 14,
+    /// obtained by *hinting the update op's output SBP*.
+    Zero,
+}
+
+/// Append SGD update ops under the chosen sharding. Returns the updated
+/// param tensor per variable (feed to `compile`'s `var_updates`).
+pub fn attach_sgd(
+    g: &mut LogicalGraph,
+    bw: &Backward,
+    lr: f32,
+    sharding: Sharding,
+) -> HashMap<NodeId, TensorId> {
+    let updated = crate::graph::autograd::append_sgd(g, bw, lr);
+    apply_sharding_hints(g, &updated, sharding);
+    updated
+}
+
+/// Append Adam update ops (with m/v state variables) under the sharding.
+pub fn attach_adam(
+    g: &mut LogicalGraph,
+    bw: &Backward,
+    lr: f32,
+    sharding: Sharding,
+) -> HashMap<NodeId, TensorId> {
+    let updated = crate::graph::autograd::append_adam(g, bw, lr);
+    apply_sharding_hints(g, &updated, sharding);
+    // Adam state variables shard with the update: hint their producers too.
+    if sharding == Sharding::Zero {
+        let update_nodes: Vec<NodeId> =
+            updated.values().map(|&t| g.tensor(t).producer).collect();
+        for un in update_nodes {
+            let node = g.node(un).clone();
+            // inputs: (param, grad, m, v) — m and v are Variables
+            for &state in &node.inputs[2..] {
+                let prod = g.tensor(state).producer;
+                if matches!(g.node(prod).op, OpKind::Variable { .. }) {
+                    let rank = g.node(prod).placement.hierarchy.len();
+                    let shape = &g.tensor(state).shape;
+                    g.hint(prod, vec![shard_hint(rank, shape.rank())]);
+                }
+            }
+        }
+    }
+    updated
+}
+
+fn shard_hint(hier_rank: usize, _tensor_rank: usize) -> NdSbp {
+    // shard along axis 0 on the innermost hierarchy dim; outer dims B
+    let mut v = vec![Sbp::Broadcast; hier_rank];
+    *v.last_mut().unwrap() = s(0);
+    NdSbp(v)
+}
+
+fn apply_sharding_hints(
+    g: &mut LogicalGraph,
+    updated: &HashMap<NodeId, TensorId>,
+    sharding: Sharding,
+) {
+    for (&_var, &ut) in updated {
+        let un = g.tensor(ut).producer;
+        let rank = g.node(un).placement.hierarchy.len();
+        let n_outs = g.node(un).outputs.len();
+        let hint = match sharding {
+            Sharding::Replicated => NdSbp(vec![Sbp::Broadcast; rank]),
+            Sharding::Zero => {
+                // only shard tensors with enough rows; tiny biases stay B
+                let shape = &g.tensor(ut).shape;
+                let parts: usize = g.node(un).placement.hierarchy.iter().product();
+                if shape.dim(0) >= parts {
+                    shard_hint(rank, shape.rank())
+                } else {
+                    NdSbp(vec![Sbp::Broadcast; rank])
+                }
+            }
+        };
+        g.hint(un, vec![hint; n_outs]);
+    }
+}
+
+/// Mixed precision (Fig 14's `fp16 cast`): insert a Cast op after a
+/// variable, hinting the cast output `B` while the fp32 master stays under
+/// `master_sbp`. Returns the fp16 tensor consumers should use.
+pub fn fp16_cast(g: &mut LogicalGraph, param: TensorId, master_sbp: NdSbp) -> TensorId {
+    let prod = g.tensor(param).producer;
+    let pl = g.node(prod).placement.clone();
+    g.hint(prod, vec![master_sbp.clone()]);
+    let cast = g.add1(
+        format!("{}_fp16", g.node(prod).name),
+        OpKind::Cast { to: DType::F16 },
+        &[param],
+        pl,
+    );
+    let rank = master_sbp.rank();
+    g.hint_tensor(cast, NdSbp(vec![Sbp::Broadcast; rank]));
+    cast
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions, PhysKernel};
+    use crate::graph::autograd::build_backward;
+    use crate::placement::Placement;
+    use crate::sbp::B;
+
+    fn train_graph(sharding: Sharding) -> (LogicalGraph, HashMap<NodeId, TensorId>, TensorId) {
+        let p = Placement::node(0, 4);
+        let mut g = LogicalGraph::new();
+        let x = g.add1("x", OpKind::Input { shape: [16, 8].into(), dtype: DType::F32 }, &[], p.clone());
+        g.hint_tensor(x, NdSbp::d1(s(0)));
+        let labels = g.add1("labels", OpKind::Input { shape: [16].into(), dtype: DType::I32 }, &[], p.clone());
+        g.hint_tensor(labels, NdSbp::d1(s(0)));
+        let w = g.add1("w", OpKind::Variable { shape: [8, 4].into(), dtype: DType::F32, init_std: 0.1 }, &[], p.clone());
+        g.hint_tensor(w, NdSbp::d1(B));
+        let h = g.add1("h", OpKind::MatMul { ta: false, tb: false }, &[x, w], p.clone());
+        let outs = g.add("xent", OpKind::SparseXent, &[h, labels], p.clone());
+        let bw = build_backward(&mut g, outs[0]);
+        let updated = attach_sgd(&mut g, &bw, 0.1, sharding);
+        (g, updated, outs[0])
+    }
+
+    /// Fig 14 plan structure: ZeRO sharding yields a reduce-scatter before
+    /// the update and an all-gather after it; Replicated yields all-reduce.
+    #[test]
+    fn fig14_zero_plan_structure() {
+        let (g, updated, loss) = train_graph(Sharding::Zero);
+        let plan = compile(&g, &[loss], &updated, &CompileOptions::default());
+        let has = |f: &dyn Fn(&NdSbp, &NdSbp) -> bool| {
+            plan.boxing_nodes().iter().any(|n| {
+                matches!(&n.kernel, PhysKernel::Boxing { in_nd, out_nd, .. } if f(in_nd, out_nd))
+            })
+        };
+        assert!(has(&|i, o| i.0[0].is_partial() && o.0[0].is_split()), "reduce-scatter\n{}", plan.dump());
+        assert!(has(&|i, o| i.0[0].is_split() && o.0[0] == B), "all-gather\n{}", plan.dump());
+        assert!(!has(&|i, o| i.0[0].is_partial() && o.0[0] == B), "no all-reduce under ZeRO");
+    }
+
+    #[test]
+    fn replicated_plan_uses_allreduce() {
+        let (g, updated, loss) = train_graph(Sharding::Replicated);
+        let plan = compile(&g, &[loss], &updated, &CompileOptions::default());
+        let has_allreduce = plan.boxing_nodes().iter().any(|n| {
+            matches!(&n.kernel, PhysKernel::Boxing { in_nd, out_nd, .. }
+                if in_nd.0[0].is_partial() && out_nd.0[0] == B)
+        });
+        assert!(has_allreduce, "{}", plan.dump());
+    }
+
+    /// Both shardings move the same bytes (the ZeRO observation) but ZeRO
+    /// stores 1/n of the updated master copy per device.
+    #[test]
+    fn zero_and_replicated_same_numerics() {
+        use crate::actor::{Engine, FnSource};
+        use crate::runtime::NativeBackend;
+        use crate::tensor::Tensor;
+        use std::sync::Arc;
+        let run = |sharding: Sharding| -> Vec<f32> {
+            let (g, updated, loss) = train_graph(sharding);
+            let plan = compile(&g, &[loss], &updated, &CompileOptions::default());
+            let engine = Engine::new(plan, Arc::new(NativeBackend)).with_source(Arc::new(
+                FnSource(|b: &crate::compiler::InputBinding, piece: usize| {
+                    let mut r = crate::util::Rng::new(50 + piece as u64);
+                    if b.name == "labels" {
+                        Tensor::new([16], DType::I32, (0..16).map(|_| r.below(4) as f32).collect())
+                    } else if b.name.starts_with("dloss") {
+                        Tensor::full(b.shape.clone(), DType::F32, 1.0)
+                    } else {
+                        Tensor::randn([16, 8], DType::F32, 1.0, &mut r)
+                    }
+                }),
+            ));
+            engine.run(4).fetched[&loss]
+                .iter()
+                .map(|t| t.data.iter().sum::<f32>())
+                .collect()
+        };
+        let a = run(Sharding::Replicated);
+        let b = run(Sharding::Zero);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-2, "zero {y} vs replicated {x}");
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! Pipeline parallelism helpers (paper §6.5).
+//!
+//! The actor runtime needs no special pipeline engine: placing consecutive
+//! stages on different device groups inserts consumer-side pulls, and
+//! giving stage registers `slots = in-flight microbatches` yields the 1F1B
+//! steady state through ordinary back-pressure (paper §4.3) — the register
+//! quota *is* the "limit activations to #stages microbatches" rule of
+//! 1F1B. This module provides the stage-placement arithmetic and the
+//! schedule-quality metrics (bubble fraction).
+
+use crate::placement::{DeviceId, Placement};
+
+/// Assign `n_stages` consecutive stages over `nodes × devs_per_node`
+/// devices, filling whole nodes first (Megatron's canonical layout: tensor
+/// parallel within a node, pipeline across nodes).
+pub fn stage_placements(n_stages: usize, nodes: usize, devs_per_node: usize) -> Vec<Placement> {
+    let total = nodes * devs_per_node;
+    assert!(total % n_stages == 0, "{total} devices not divisible by {n_stages} stages");
+    let per_stage = total / n_stages;
+    (0..n_stages)
+        .map(|s| {
+            let devices: Vec<DeviceId> = (0..per_stage)
+                .map(|i| {
+                    let flat = s * per_stage + i;
+                    DeviceId::new(flat / devs_per_node, flat % devs_per_node)
+                })
+                .collect();
+            // 2-D hierarchy when a stage spans multiple devices: lets tensor
+            // (model) parallelism nest inside the stage.
+            if per_stage > 1 {
+                Placement::new(vec![1, per_stage], devices)
+            } else {
+                Placement::new(vec![1], devices)
+            }
+        })
+        .collect()
+}
+
+/// Ideal 1F1B bubble fraction: `(p-1) / (m + p - 1)` for `p` stages and `m`
+/// microbatches (GPipe/1F1B analysis). The virtual-time benches are checked
+/// against this.
+pub fn bubble_fraction(stages: usize, microbatches: usize) -> f64 {
+    (stages as f64 - 1.0) / (microbatches as f64 + stages as f64 - 1.0)
+}
+
+/// Out-register slots a stage needs for the 1F1B steady state: one per
+/// in-flight microbatch, bounded by the stage count.
+pub fn stage_register_slots(stages: usize, microbatches: usize) -> usize {
+    stages.min(microbatches).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placements_partition_all_devices() {
+        let ps = stage_placements(4, 2, 4);
+        assert_eq!(ps.len(), 4);
+        let mut all: Vec<DeviceId> = ps.iter().flat_map(|p| p.devices.clone()).collect();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), 8);
+        // stage 0 and 1 on node 0, stages 2 and 3 on node 1
+        assert!(ps[0].devices.iter().all(|d| d.node == 0));
+        assert!(ps[3].devices.iter().all(|d| d.node == 1));
+        for (a, b) in ps.iter().zip(ps.iter().skip(1)) {
+            assert!(a.disjoint(b));
+        }
+    }
+
+    #[test]
+    fn bubble_shrinks_with_microbatches() {
+        assert!(bubble_fraction(4, 4) > bubble_fraction(4, 16));
+        assert!((bubble_fraction(4, 13) - 3.0 / 16.0).abs() < 1e-12);
+        assert_eq!(bubble_fraction(1, 8), 0.0);
+    }
+
+    #[test]
+    fn slots_bounded_by_stages() {
+        assert_eq!(stage_register_slots(4, 16), 4);
+        assert_eq!(stage_register_slots(8, 2), 2);
+        assert_eq!(stage_register_slots(1, 1), 1);
+    }
+}

@@ -1,0 +1,167 @@
+//! Placements: which nodes/devices a logical op runs on (paper §3, Table 4's
+//! `flow.placement("cuda", {0:[0,1]})`).
+//!
+//! A placement is a *hierarchical* device set: `hierarchy = [nodes, devs]`
+//! (or 1-D for a flat group) plus the concrete device list in row-major
+//! hierarchy order. NdSbp signatures are interpreted against this hierarchy.
+
+/// A physical device: `(node, device-on-node)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DeviceId {
+    pub node: usize,
+    pub dev: usize,
+}
+
+impl DeviceId {
+    pub fn new(node: usize, dev: usize) -> Self {
+        DeviceId { node, dev }
+    }
+}
+
+impl std::fmt::Display for DeviceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "n{}d{}", self.node, self.dev)
+    }
+}
+
+/// A device group with a hierarchy, e.g. 2 nodes × 4 devices.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Placement {
+    /// Hierarchy extents; `prod(hierarchy) == devices.len()`.
+    pub hierarchy: Vec<usize>,
+    /// Devices in row-major hierarchy order.
+    pub devices: Vec<DeviceId>,
+}
+
+impl Placement {
+    /// New placement; validates the hierarchy product.
+    pub fn new(hierarchy: Vec<usize>, devices: Vec<DeviceId>) -> Self {
+        assert_eq!(
+            hierarchy.iter().product::<usize>(),
+            devices.len(),
+            "hierarchy {hierarchy:?} vs {} devices",
+            devices.len()
+        );
+        Placement { hierarchy, devices }
+    }
+
+    /// Flat placement over `ndev` devices of a single node.
+    pub fn node(node: usize, ndev: usize) -> Self {
+        Placement::new((0..1).map(|_| ndev).collect(), (0..ndev).map(|d| DeviceId::new(node, d)).collect())
+    }
+
+    /// Flat 1-D placement over the first `ndev` devices of each of `nnodes`
+    /// nodes (hierarchy `[nnodes * ndev]`).
+    pub fn flat(nnodes: usize, ndev: usize) -> Self {
+        let devices = (0..nnodes)
+            .flat_map(|n| (0..ndev).map(move |d| DeviceId::new(n, d)))
+            .collect();
+        Placement::new(vec![nnodes * ndev], devices)
+    }
+
+    /// 2-D placement `nodes × devices-per-node` (hierarchy `[nnodes, ndev]`).
+    pub fn grid(nnodes: usize, ndev: usize) -> Self {
+        let devices = (0..nnodes)
+            .flat_map(|n| (0..ndev).map(move |d| DeviceId::new(n, d)))
+            .collect();
+        Placement::new(vec![nnodes, ndev], devices)
+    }
+
+    /// Total number of devices.
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Hierarchy coordinate of flat index `i` (row-major).
+    pub fn coord(&self, i: usize) -> Vec<usize> {
+        let mut rem = i;
+        let mut coord = vec![0; self.hierarchy.len()];
+        for d in (0..self.hierarchy.len()).rev() {
+            coord[d] = rem % self.hierarchy[d];
+            rem /= self.hierarchy[d];
+        }
+        coord
+    }
+
+    /// True if the two placements share no devices.
+    pub fn disjoint(&self, other: &Placement) -> bool {
+        !self.devices.iter().any(|d| other.devices.contains(d))
+    }
+
+    /// True if both cover exactly the same device set (order-insensitive).
+    pub fn same_devices(&self, other: &Placement) -> bool {
+        let mut a = self.devices.clone();
+        let mut b = other.devices.clone();
+        a.sort();
+        b.sort();
+        a == b
+    }
+
+    /// Set of nodes covered.
+    pub fn nodes(&self) -> Vec<usize> {
+        let mut ns: Vec<usize> = self.devices.iter().map(|d| d.node).collect();
+        ns.sort();
+        ns.dedup();
+        ns
+    }
+
+    /// True if all devices are on one node.
+    pub fn single_node(&self) -> bool {
+        self.nodes().len() == 1
+    }
+}
+
+impl std::fmt::Display for Placement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?}@[", self.hierarchy)?;
+        for (i, d) in self.devices.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_coords_roundtrip() {
+        let p = Placement::grid(2, 4);
+        assert_eq!(p.len(), 8);
+        assert_eq!(p.coord(0), vec![0, 0]);
+        assert_eq!(p.coord(5), vec![1, 1]);
+        assert_eq!(p.devices[5], DeviceId::new(1, 1));
+        assert_eq!(p.hierarchy, vec![2, 4]);
+    }
+
+    #[test]
+    fn disjoint_and_same() {
+        let a = Placement::node(0, 2);
+        let b = Placement::node(1, 2);
+        assert!(a.disjoint(&b));
+        assert!(!a.disjoint(&a));
+        assert!(a.same_devices(&Placement::node(0, 2)));
+        assert!(!a.same_devices(&b));
+    }
+
+    #[test]
+    fn nodes_and_single_node() {
+        assert_eq!(Placement::grid(3, 2).nodes(), vec![0, 1, 2]);
+        assert!(Placement::node(1, 4).single_node());
+        assert!(!Placement::grid(2, 2).single_node());
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_hierarchy_panics() {
+        Placement::new(vec![2, 2], vec![DeviceId::new(0, 0)]);
+    }
+}

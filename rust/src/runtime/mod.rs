@@ -1,0 +1,112 @@
+//! Execution backends for physical kernels.
+//!
+//! * [`NativeBackend`] — hand-written rust CPU kernels ([`crate::tensor::ops`]);
+//!   real numerics for tests, examples and small end-to-end training.
+//! * [`SimBackend`] — no data; kernels only advance virtual time via the
+//!   cluster cost model (paper-scale experiments).
+//! * [`PjrtBackend`] — loads `artifacts/*.hlo.txt` (AOT-lowered JAX/Pallas,
+//!   L2/L1 of the stack) through the PJRT C API and executes them for the
+//!   end-to-end example. Python never runs at this point.
+//!
+//! Every backend returns the action's *virtual duration* from the same
+//! hardware model, so scheduling behaviour is identical across backends and
+//! real-vs-simulated runs differ only in whether tensors exist.
+
+pub mod native;
+pub mod sim;
+pub mod pjrt;
+
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;
+pub use sim::SimBackend;
+
+use crate::compiler::{PhysKernel, PhysNode};
+use crate::exec::ClusterModel;
+use crate::tensor::Tensor;
+
+/// A kernel execution backend.
+pub trait Backend: Send + Sync {
+    /// Execute one action of `node` over the resolved input element tensors
+    /// (empty slices in data-free modes). Returns the slot contents (one
+    /// tensor per output; boxing returns one tensor per consumer shard).
+    fn execute(&self, node: &PhysNode, inputs: &[&Tensor]) -> Vec<Tensor>;
+
+    /// Whether this backend materializes tensors (false for [`SimBackend`]).
+    fn has_data(&self) -> bool {
+        true
+    }
+}
+
+/// Virtual duration of one action of `node` under the cluster model — used
+/// uniformly by all backends (see module docs).
+pub fn action_secs(node: &PhysNode, cluster: &ClusterModel) -> f64 {
+    match &node.kernel {
+        PhysKernel::Boxing { in_nd, in_place, out_nd, out_place, t_bytes } => {
+            crate::compiler::boxing_secs(
+                in_nd,
+                in_place,
+                out_nd,
+                out_place,
+                *t_bytes,
+                &cluster.network,
+            )
+        }
+        PhysKernel::Var { .. } => 0.0,
+        _ => cluster.device.kernel_secs(&node.cost, node.dtype),
+    }
+}
+
+/// Bytes a boxing action moves (metrics; matches Table 2 — tested).
+pub fn boxing_bytes(node: &PhysNode) -> f64 {
+    match &node.kernel {
+        PhysKernel::Boxing { in_nd, in_place, out_nd, out_place, t_bytes } => {
+            let same =
+                in_place.same_devices(out_place) && in_place.hierarchy == out_place.hierarchy;
+            if same {
+                let mut total = 0.0;
+                for d in 0..in_nd.rank() {
+                    if in_nd.0[d] == out_nd.0[d] {
+                        continue;
+                    }
+                    let mut group_bytes = *t_bytes;
+                    for (d2, s2) in in_nd.0.iter().enumerate() {
+                        if d2 != d && s2.is_split() {
+                            group_bytes /= in_place.hierarchy[d2] as f64;
+                        }
+                    }
+                    let groups: usize = in_place
+                        .hierarchy
+                        .iter()
+                        .enumerate()
+                        .filter(|&(d2, _)| d2 != d)
+                        .map(|(_, &h)| h)
+                        .product();
+                    total += groups as f64
+                        * crate::boxing::cost::bytes_same(
+                            in_nd.0[d],
+                            out_nd.0[d],
+                            in_place.hierarchy[d],
+                            group_bytes,
+                        );
+                }
+                total
+            } else {
+                let eff = |nd: &crate::sbp::NdSbp| {
+                    nd.0.iter()
+                        .find(|s| s.is_partial())
+                        .or_else(|| nd.0.iter().find(|s| s.is_split()))
+                        .copied()
+                        .unwrap_or(crate::sbp::Sbp::Broadcast)
+                };
+                crate::boxing::cost::bytes_disjoint(
+                    eff(in_nd),
+                    eff(out_nd),
+                    in_place.len(),
+                    out_place.len(),
+                    *t_bytes,
+                )
+            }
+        }
+        _ => 0.0,
+    }
+}

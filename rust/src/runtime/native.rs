@@ -1,0 +1,182 @@
+//! Native CPU backend: dispatches each physical kernel to the hand-written
+//! kernels in [`crate::tensor::ops`]. This is the reference executor the
+//! plan-parity tests use to prove distributed == single-device numerics.
+
+use super::Backend;
+use crate::boxing::apply_boxing;
+use crate::compiler::{PhysKernel, PhysNode};
+use crate::graph::{Activation, OpKind};
+use crate::tensor::ops as k;
+use crate::tensor::Tensor;
+
+/// See module docs.
+#[derive(Default)]
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn execute(&self, node: &PhysNode, inputs: &[&Tensor]) -> Vec<Tensor> {
+        match &node.kernel {
+            PhysKernel::Boxing { in_nd, in_place, out_nd, out_place, .. } => {
+                let owned: Vec<Tensor> = inputs.iter().map(|t| (*t).clone()).collect();
+                apply_boxing(&owned, in_nd, in_place, out_nd, out_place).shards
+            }
+            PhysKernel::Compute { op, shard } => {
+                let i = |n: usize| inputs[n];
+                match op {
+                    OpKind::MatMul { ta, tb } => vec![k::matmul(i(0), i(1), *ta, *tb)],
+                    OpKind::FusedMatMulBias { act } => {
+                        let y = k::bias_add(&k::matmul(i(0), i(1), false, false), i(2));
+                        vec![match act {
+                            Activation::None => y,
+                            Activation::Relu => k::relu(&y),
+                            Activation::Gelu => k::gelu(&y),
+                        }]
+                    }
+                    OpKind::BiasAdd => vec![k::bias_add(i(0), i(1))],
+                    OpKind::Add => vec![k::add(i(0), i(1))],
+                    OpKind::Sub => vec![k::sub(i(0), i(1))],
+                    OpKind::Mul => vec![k::mul(i(0), i(1))],
+                    OpKind::Scale(s) => vec![k::scale(i(0), *s)],
+                    OpKind::Relu => vec![k::relu(i(0))],
+                    OpKind::Gelu => vec![k::gelu(i(0))],
+                    OpKind::Exp => vec![k::map(i(0), f32::exp)],
+                    OpKind::ReluGrad => vec![k::relu_grad(i(0), i(1))],
+                    OpKind::GeluGrad => vec![k::gelu_grad(i(0), i(1))],
+                    OpKind::Softmax => vec![k::softmax(i(0))],
+                    OpKind::LayerNorm { eps } => vec![k::layernorm(i(0), *eps)],
+                    OpKind::ReduceSum { axis, keepdim } => {
+                        vec![k::reduce_sum(i(0), *axis, *keepdim)]
+                    }
+                    OpKind::ReduceMax { axis, keepdim } => {
+                        vec![k::reduce_max(i(0), *axis, *keepdim)]
+                    }
+                    OpKind::ColSub => vec![k::broadcast_col(i(0), i(1), |a, b| a - b)],
+                    OpKind::ColBcast { .. } => {
+                        let n = node.out_shapes[0].dim(1);
+                        let col = i(0);
+                        let m = col.shape.dim(0);
+                        let mut out = vec![0.0f32; m * n];
+                        for r in 0..m {
+                            for c in 0..n {
+                                out[r * n + c] = col.data[r];
+                            }
+                        }
+                        vec![Tensor::new([m, n], col.dtype, out)]
+                    }
+                    OpKind::ColDiv => vec![k::broadcast_col(i(0), i(1), |a, b| a / b)],
+                    OpKind::Transpose => vec![k::transpose2(i(0))],
+                    OpKind::Cast { to } => vec![i(0).cast(*to)],
+                    OpKind::Embedding => {
+                        vec![k::embedding_shard(i(0), i(1), shard.vocab_offset)]
+                    }
+                    OpKind::EmbeddingGrad { .. } => {
+                        let v = node.out_shapes[0].dim(0);
+                        vec![k::embedding_grad_shard(i(0), i(1), v, shard.vocab_offset)]
+                    }
+                    OpKind::SparseXent => {
+                        let (loss, probs) = k::sparse_softmax_xent(i(0), i(1));
+                        vec![loss, probs]
+                    }
+                    OpKind::SparseXentGrad => {
+                        vec![k::sparse_softmax_xent_grad(i(0), i(1), i(2))]
+                    }
+                    OpKind::SgdUpdate { lr } => {
+                        vec![k::zip(i(0), i(1), |p, g| p - lr * g)]
+                    }
+                    OpKind::AdamUpdate { lr, b1, b2, eps } => {
+                        let (p, g, m, v) = (i(0), i(1), i(2), i(3));
+                        let m2 = k::zip(m, g, |m, g| b1 * m + (1.0 - b1) * g);
+                        let v2 = k::zip(v, g, |v, g| b2 * v + (1.0 - b2) * g * g);
+                        let mut out = p.clone();
+                        for idx in 0..out.data.len() {
+                            out.data[idx] -=
+                                lr * m2.data[idx] / (v2.data[idx].sqrt() + eps);
+                        }
+                        vec![out, m2, v2]
+                    }
+                    OpKind::Identity | OpKind::StopGrad => vec![i(0).clone()],
+                    OpKind::Flops { dtype, .. } => {
+                        // cost-only op: produce zeros of this *shard's* output
+                        // shape so mixed sim/real graphs stay executable
+                        vec![Tensor::zeros(node.out_shapes[0].clone(), *dtype)]
+                    }
+                    OpKind::External { name, .. } => {
+                        panic!("op `{name}` is an AOT artifact: use PjrtBackend")
+                    }
+                    OpKind::Input { .. } | OpKind::Variable { .. } => {
+                        unreachable!("sources are handled by the actor itself")
+                    }
+                }
+            }
+            PhysKernel::Fetch { .. } => inputs.iter().map(|t| (*t).clone()).collect(),
+            PhysKernel::Var { .. } | PhysKernel::Input { .. } => {
+                unreachable!("sources are handled by the actor itself")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{CostSpec, QueueKind};
+    use crate::placement::DeviceId;
+    use crate::compiler::{PhysOpId, RegId, ShardInfo};
+    use crate::tensor::DType;
+
+    fn node(op: OpKind) -> PhysNode {
+        PhysNode {
+            id: PhysOpId(0),
+            name: "t".into(),
+            kernel: PhysKernel::Compute { op, shard: ShardInfo::default() },
+            device: DeviceId::new(0, 0),
+            queue: QueueKind::Compute,
+            inputs: vec![],
+            controls: vec![],
+            out_reg: RegId(0),
+            cost: CostSpec::ZERO,
+            dtype: DType::F32,
+            out_shapes: vec![],
+            update_from: None,
+        }
+    }
+
+    #[test]
+    fn dispatches_matmul() {
+        let b = NativeBackend;
+        let x = Tensor::f32([2, 2], vec![1., 2., 3., 4.]);
+        let w = Tensor::f32([2, 2], vec![1., 0., 0., 1.]);
+        let out = b.execute(&node(OpKind::MatMul { ta: false, tb: false }), &[&x, &w]);
+        assert_eq!(out[0].data, x.data);
+    }
+
+    #[test]
+    fn fused_matches_unfused() {
+        let b = NativeBackend;
+        let x = Tensor::f32([2, 3], vec![0.5, -1., 2., 0., 1., -2.]);
+        let w = Tensor::f32([3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let bias = Tensor::f32([2], vec![0.1, -0.2]);
+        let fused = b.execute(
+            &node(OpKind::FusedMatMulBias { act: Activation::Gelu }),
+            &[&x, &w, &bias],
+        );
+        let unfused = k::gelu(&k::bias_add(&k::matmul(&x, &w, false, false), &bias));
+        assert!(fused[0].allclose(&unfused, 1e-6));
+    }
+
+    #[test]
+    fn adam_moves_toward_negative_gradient() {
+        let b = NativeBackend;
+        let p = Tensor::f32([3], vec![1., 1., 1.]);
+        let g = Tensor::f32([3], vec![1., -1., 0.]);
+        let m = Tensor::zeros([3], DType::F32);
+        let v = Tensor::zeros([3], DType::F32);
+        let out = b.execute(
+            &node(OpKind::AdamUpdate { lr: 0.1, b1: 0.9, b2: 0.999, eps: 1e-8 }),
+            &[&p, &g, &m, &v],
+        );
+        assert!(out[0].data[0] < 1.0);
+        assert!(out[0].data[1] > 1.0);
+        assert_eq!(out[0].data[2], 1.0);
+    }
+}

@@ -1,0 +1,118 @@
+//! PJRT backend: the runtime bridge to the AOT-compiled L2/L1 artifacts.
+//!
+//! `make artifacts` (the python compile path) lowers the JAX model — whose
+//! hot spots are Pallas kernels — to **HLO text** (`artifacts/*.hlo.txt`;
+//! text rather than serialized proto because jax ≥ 0.5 emits 64-bit
+//! instruction ids the bundled xla_extension 0.5.1 rejects). This backend
+//! loads each artifact once, compiles it on the PJRT CPU client, and
+//! dispatches [`OpKind::External`] kernels to it by name. Everything else
+//! falls through to the native backend. Python never runs on this path.
+
+use super::{Backend, NativeBackend};
+use crate::compiler::{PhysKernel, PhysNode};
+use crate::graph::OpKind;
+use crate::tensor::{DType, Shape, Tensor};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// See module docs.
+///
+/// Thread-safety: the `xla` crate's client handles are `Rc`-based and not
+/// `Send`/`Sync`; all PJRT calls here are serialized behind the `exes`
+/// mutex (lookup and execution happen under one guard), and the client is
+/// never exposed, so sharing the backend across the engine's queue threads
+/// is sound — hence the `unsafe impl`s below.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    /// name -> compiled executable (interior mutability: `execute` takes
+    /// `&self` and PJRT execution needs `&` only, but bookkeeping a cache of
+    /// lazily-loaded modules needs a lock).
+    exes: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    native: NativeBackend,
+}
+
+// SAFETY: see the struct docs — every use of the Rc-based PJRT handles is
+// serialized behind `self.exes`'s mutex.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
+
+impl PjrtBackend {
+    /// Create a CPU PJRT client and pre-load `(name, path)` artifacts.
+    pub fn new(artifacts: &[(&str, &str)]) -> crate::Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        let mut exes = HashMap::new();
+        for (name, path) in artifacts {
+            let proto = xla::HloModuleProto::from_text_file(path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            exes.insert(name.to_string(), exe);
+        }
+        Ok(PjrtBackend { client, exes: Mutex::new(exes), native: NativeBackend })
+    }
+
+    /// Load one more artifact after construction.
+    pub fn load(&self, name: &str, path: &str) -> crate::Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.exes.lock().unwrap().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Run a named artifact on raw tensors (used by examples directly).
+    pub fn run(&self, name: &str, inputs: &[&Tensor], out_shapes: &[Shape]) -> Vec<Tensor> {
+        let exes = self.exes.lock().unwrap();
+        let exe = exes
+            .get(name)
+            .unwrap_or_else(|| panic!("artifact `{name}` not loaded"));
+        let lits: Vec<xla::Literal> = inputs.iter().map(|t| tensor_to_literal(t)).collect();
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .expect("pjrt execute")[0][0]
+            .to_literal_sync()
+            .expect("to_literal");
+        // artifacts are lowered with return_tuple=True
+        let parts = result.to_tuple().expect("tuple output");
+        assert_eq!(parts.len(), out_shapes.len(), "artifact `{name}` output arity");
+        parts
+            .into_iter()
+            .zip(out_shapes)
+            .map(|(l, s)| literal_to_tensor(&l, s.clone()))
+            .collect()
+    }
+}
+
+/// Convert a host tensor to an XLA literal (f32/i32 supported).
+pub fn tensor_to_literal(t: &Tensor) -> xla::Literal {
+    let dims: Vec<i64> = t.shape.0.iter().map(|&d| d as i64).collect();
+    match t.dtype {
+        DType::I32 => {
+            let ints: Vec<i32> = t.data.iter().map(|&x| x as i32).collect();
+            xla::Literal::vec1(&ints).reshape(&dims).expect("reshape literal")
+        }
+        _ => xla::Literal::vec1(&t.data).reshape(&dims).expect("reshape literal"),
+    }
+}
+
+/// Convert an XLA literal back to a host tensor.
+pub fn literal_to_tensor(l: &xla::Literal, shape: Shape) -> Tensor {
+    match l.ty().expect("literal dtype") {
+        xla::ElementType::S32 => {
+            let v: Vec<i32> = l.to_vec().expect("to_vec i32");
+            Tensor::new(shape, DType::I32, v.into_iter().map(|x| x as f32).collect())
+        }
+        _ => {
+            let v: Vec<f32> = l.to_vec().expect("to_vec f32");
+            Tensor::new(shape, DType::F32, v)
+        }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn execute(&self, node: &PhysNode, inputs: &[&Tensor]) -> Vec<Tensor> {
+        if let PhysKernel::Compute { op: OpKind::External { name, .. }, .. } = &node.kernel {
+            return self.run(name, inputs, &node.out_shapes);
+        }
+        self.native.execute(node, inputs)
+    }
+}

@@ -1,0 +1,22 @@
+//! Data-free backend for paper-scale simulated experiments: actions carry no
+//! tensors; only the virtual-time algebra (driven by the shared
+//! [`super::action_secs`] model) matters. This is what the Fig 9–16 benches
+//! run — a 4-node × 8-GPU cluster's schedule computed on a laptop CPU.
+
+use super::Backend;
+use crate::compiler::PhysNode;
+use crate::tensor::Tensor;
+
+/// See module docs.
+#[derive(Default)]
+pub struct SimBackend;
+
+impl Backend for SimBackend {
+    fn execute(&self, _node: &PhysNode, _inputs: &[&Tensor]) -> Vec<Tensor> {
+        Vec::new()
+    }
+
+    fn has_data(&self) -> bool {
+        false
+    }
+}

@@ -1,0 +1,135 @@
+//! The paper's **SBP** abstraction (§3.1): the mapping between one *logical*
+//! tensor and its *physical* shards on a set of devices.
+//!
+//! * `S(axis)` — shards are balanced slices of the logical tensor along `axis`;
+//! * `B` — every shard is a full copy;
+//! * `P(sum|max)` — shards have the logical shape and the logical value is an
+//!   element-wise reduction over shards.
+//!
+//! [`NdSbp`] generalizes all three to a multi-dimensional device hierarchy
+//! (§3.3, Table 3): dimension 0 maps the tensor over hierarchy level 0 (e.g.
+//! nodes), dimension 1 over level 1 (devices in a node), and so on.
+
+pub mod scatter;
+
+pub use scatter::{gather, scatter, shard_shape, shard_shape_nd};
+
+/// Reduction kind carried by a partial-value signature.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ReduceKind {
+    Sum,
+    Max,
+}
+
+/// One SBP signature component (one device-hierarchy dimension).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Sbp {
+    /// Balanced split along a tensor axis.
+    Split(usize),
+    /// Full replica on every device.
+    Broadcast,
+    /// Partial value; logical tensor = element-wise reduction over shards.
+    Partial(ReduceKind),
+}
+
+impl Sbp {
+    pub const P: Sbp = Sbp::Partial(ReduceKind::Sum);
+    pub const PMAX: Sbp = Sbp::Partial(ReduceKind::Max);
+
+    pub fn is_split(&self) -> bool {
+        matches!(self, Sbp::Split(_))
+    }
+    pub fn is_partial(&self) -> bool {
+        matches!(self, Sbp::Partial(_))
+    }
+}
+
+/// Shorthand constructor: `s(0)` etc.
+pub fn s(axis: usize) -> Sbp {
+    Sbp::Split(axis)
+}
+/// Shorthand: broadcast.
+pub const B: Sbp = Sbp::Broadcast;
+/// Shorthand: partial-sum.
+pub const P: Sbp = Sbp::P;
+
+impl std::fmt::Display for Sbp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Sbp::Split(a) => write!(f, "S({a})"),
+            Sbp::Broadcast => write!(f, "B"),
+            Sbp::Partial(ReduceKind::Sum) => write!(f, "P(sum)"),
+            Sbp::Partial(ReduceKind::Max) => write!(f, "P(max)"),
+        }
+    }
+}
+
+/// A multi-dimensional SBP signature: one [`Sbp`] per device-hierarchy dim.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct NdSbp(pub Vec<Sbp>);
+
+impl NdSbp {
+    /// 1-D signature.
+    pub fn d1(s: Sbp) -> Self {
+        NdSbp(vec![s])
+    }
+    /// 2-D signature.
+    pub fn d2(a: Sbp, b: Sbp) -> Self {
+        NdSbp(vec![a, b])
+    }
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+    /// True if no component is partial (tensor values are directly usable).
+    pub fn no_partial(&self) -> bool {
+        !self.0.iter().any(Sbp::is_partial)
+    }
+    /// True if every component is broadcast.
+    pub fn all_broadcast(&self) -> bool {
+        self.0.iter().all(|s| *s == Sbp::Broadcast)
+    }
+}
+
+impl From<Sbp> for NdSbp {
+    fn from(s: Sbp) -> Self {
+        NdSbp::d1(s)
+    }
+}
+
+impl std::fmt::Display for NdSbp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.0.len() == 1 {
+            return write!(f, "{}", self.0[0]);
+        }
+        write!(f, "(")?;
+        for (i, s) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{s}")?;
+        }
+        write!(f, ")")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(s(0).to_string(), "S(0)");
+        assert_eq!(B.to_string(), "B");
+        assert_eq!(P.to_string(), "P(sum)");
+        assert_eq!(NdSbp::d2(s(0), B).to_string(), "(S(0), B)");
+    }
+
+    #[test]
+    fn predicates() {
+        assert!(s(1).is_split());
+        assert!(P.is_partial());
+        assert!(NdSbp::d2(s(0), B).no_partial());
+        assert!(!NdSbp::d2(P, B).no_partial());
+        assert!(NdSbp::d2(B, B).all_broadcast());
+    }
+}

@@ -1,0 +1,210 @@
+//! Scatter/gather: the executable semantics of an SBP signature.
+//!
+//! `scatter` maps a logical tensor to its physical shards under an [`NdSbp`]
+//! and a device hierarchy; `gather` is the exact inverse. Together they are
+//! the specification every boxing collective is tested against (DESIGN.md
+//! invariant 1/2).
+
+use super::{NdSbp, ReduceKind, Sbp};
+use crate::tensor::ops::{add_n, concat_axis, max_n, slice_axis};
+use crate::tensor::shape::{split_offsets, split_sizes};
+use crate::tensor::{Shape, Tensor};
+
+/// Shard shape for component `idx` of `p` under a 1-D signature.
+pub fn shard_shape(logical: &Shape, sbp: Sbp, p: usize, idx: usize) -> Shape {
+    match sbp {
+        Sbp::Split(axis) => {
+            let sizes = split_sizes(logical.dim(axis), p);
+            logical.with_dim(axis, sizes[idx])
+        }
+        Sbp::Broadcast | Sbp::Partial(_) => logical.clone(),
+    }
+}
+
+/// Shard shape for the device at hierarchy coordinate `coord` under an
+/// [`NdSbp`] over `hierarchy`.
+pub fn shard_shape_nd(logical: &Shape, nd: &NdSbp, hierarchy: &[usize], coord: &[usize]) -> Shape {
+    assert_eq!(nd.rank(), hierarchy.len());
+    assert_eq!(coord.len(), hierarchy.len());
+    let mut shape = logical.clone();
+    for (d, &sbp) in nd.0.iter().enumerate() {
+        shape = shard_shape(&shape, sbp, hierarchy[d], coord[d]);
+    }
+    shape
+}
+
+/// Scatter a logical tensor into `prod(hierarchy)` physical shards
+/// (row-major over the hierarchy). For `P(sum)`, shard 0 carries the full
+/// value and the rest are zeros; for `P(max)`, the rest are `-inf`. Any
+/// decomposition reducing to the logical value is legal — this canonical one
+/// keeps tests deterministic.
+pub fn scatter(t: &Tensor, nd: &NdSbp, hierarchy: &[usize]) -> Vec<Tensor> {
+    assert_eq!(nd.rank(), hierarchy.len(), "NdSbp rank vs hierarchy");
+    scatter_rec(t, &nd.0, hierarchy)
+}
+
+fn scatter_rec(t: &Tensor, comps: &[Sbp], hierarchy: &[usize]) -> Vec<Tensor> {
+    if comps.is_empty() {
+        return vec![t.clone()];
+    }
+    let p = hierarchy[0];
+    let parts: Vec<Tensor> = match comps[0] {
+        Sbp::Split(axis) => {
+            let sizes = split_sizes(t.shape.dim(axis), p);
+            let offs = split_offsets(t.shape.dim(axis), p);
+            (0..p).map(|i| slice_axis(t, axis, offs[i], sizes[i])).collect()
+        }
+        Sbp::Broadcast => (0..p).map(|_| t.clone()).collect(),
+        Sbp::Partial(ReduceKind::Sum) => (0..p)
+            .map(|i| if i == 0 { t.clone() } else { Tensor::zeros(t.shape.clone(), t.dtype) })
+            .collect(),
+        Sbp::Partial(ReduceKind::Max) => (0..p)
+            .map(|i| {
+                if i == 0 {
+                    t.clone()
+                } else {
+                    Tensor::full(t.shape.clone(), t.dtype, f32::NEG_INFINITY)
+                }
+            })
+            .collect(),
+    };
+    parts
+        .iter()
+        .flat_map(|part| scatter_rec(part, &comps[1..], &hierarchy[1..]))
+        .collect()
+}
+
+/// Gather physical shards back into the logical tensor — exact inverse of
+/// [`scatter`] and the semantic ground truth for any shard set.
+pub fn gather(shards: &[Tensor], nd: &NdSbp, hierarchy: &[usize]) -> Tensor {
+    assert_eq!(nd.rank(), hierarchy.len());
+    assert_eq!(shards.len(), hierarchy.iter().product::<usize>());
+    gather_rec(shards, &nd.0, hierarchy)
+}
+
+fn gather_rec(shards: &[Tensor], comps: &[Sbp], hierarchy: &[usize]) -> Tensor {
+    if comps.is_empty() {
+        assert_eq!(shards.len(), 1);
+        return shards[0].clone();
+    }
+    let p = hierarchy[0];
+    let inner: usize = hierarchy[1..].iter().product();
+    let parts: Vec<Tensor> = (0..p)
+        .map(|i| gather_rec(&shards[i * inner..(i + 1) * inner], &comps[1..], &hierarchy[1..]))
+        .collect();
+    let refs: Vec<&Tensor> = parts.iter().collect();
+    match comps[0] {
+        Sbp::Split(axis) => concat_axis(&refs, axis),
+        Sbp::Broadcast => {
+            for r in &refs[1..] {
+                debug_assert!(r.allclose(refs[0], 1e-5), "broadcast shards diverged");
+            }
+            parts[0].clone()
+        }
+        Sbp::Partial(ReduceKind::Sum) => add_n(&refs),
+        Sbp::Partial(ReduceKind::Max) => max_n(&refs),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sbp::{s, B, P, Sbp};
+    use crate::tensor::DType;
+    use crate::util::{prop, Rng};
+
+    /// Figure 4 of the paper: the four signatures of a 2×2 logical tensor on
+    /// two devices.
+    #[test]
+    fn fig4_four_signatures_on_2x2() {
+        let t = Tensor::f32([2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        // split(0): rows
+        let sh = scatter(&t, &NdSbp::d1(s(0)), &[2]);
+        assert_eq!(sh[0].data, vec![1.0, 2.0]);
+        assert_eq!(sh[1].data, vec![3.0, 4.0]);
+        // split(1): columns
+        let sh = scatter(&t, &NdSbp::d1(s(1)), &[2]);
+        assert_eq!(sh[0].data, vec![1.0, 3.0]);
+        assert_eq!(sh[1].data, vec![2.0, 4.0]);
+        // broadcast: full copies
+        let sh = scatter(&t, &NdSbp::d1(B), &[2]);
+        assert_eq!(sh[0], t);
+        assert_eq!(sh[1], t);
+        // partial-sum: shards sum to the logical tensor
+        let sh = scatter(&t, &NdSbp::d1(P), &[2]);
+        let back = gather(&sh, &NdSbp::d1(P), &[2]);
+        assert!(back.allclose(&t, 1e-6));
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip_1d_property() {
+        prop::check(
+            "scatter∘gather = id (1-D)",
+            60,
+            |r| {
+                let m = r.range(1, 9);
+                let n = r.range(1, 9);
+                let p = r.range(1, 5);
+                let sbp = *r.choose(&[s(0), s(1), B, P, Sbp::PMAX]);
+                let t = Tensor::randn([m, n], DType::F32, 1.0, r);
+                (t, sbp, p)
+            },
+            |(t, sbp, p)| {
+                let nd = NdSbp::d1(*sbp);
+                let shards = scatter(t, &nd, &[*p]);
+                gather(&shards, &nd, &[*p]).allclose(t, 1e-5)
+            },
+        );
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip_2d_property() {
+        prop::check(
+            "scatter∘gather = id (2-D hierarchy)",
+            60,
+            |r| {
+                let m = r.range(2, 12);
+                let n = r.range(2, 12);
+                let h = (r.range(1, 3), r.range(1, 4));
+                let choices = [s(0), s(1), B, P];
+                let nd = NdSbp::d2(*r.choose(&choices), *r.choose(&choices));
+                let t = Tensor::randn([m, n], DType::F32, 1.0, r);
+                (t, nd, h)
+            },
+            |(t, nd, (h0, h1))| {
+                let shards = scatter(t, nd, &[*h0, *h1]);
+                gather(&shards, nd, &[*h0, *h1]).allclose(t, 1e-5)
+            },
+        );
+    }
+
+    #[test]
+    fn shard_shapes_match_scatter_output() {
+        let mut r = Rng::new(17);
+        let t = Tensor::randn([10, 7], DType::F32, 1.0, &mut r);
+        let nd = NdSbp::d2(s(0), s(1));
+        let hierarchy = [2usize, 3usize];
+        let shards = scatter(&t, &nd, &hierarchy);
+        let mut k = 0;
+        for i in 0..2 {
+            for j in 0..3 {
+                let expect = shard_shape_nd(&t.shape, &nd, &hierarchy, &[i, j]);
+                assert_eq!(shards[k].shape, expect, "coord ({i},{j})");
+                k += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn table3_2d_signatures_shapes() {
+        // (S(0), B) on a (4, 6) tensor over a 2x2 hierarchy: rows split across
+        // nodes, replicated within a node.
+        let shape: Shape = [4, 6].into();
+        let nd = NdSbp::d2(s(0), B);
+        assert_eq!(shard_shape_nd(&shape, &nd, &[2, 2], &[0, 0]).0, vec![2, 6]);
+        assert_eq!(shard_shape_nd(&shape, &nd, &[2, 2], &[1, 1]).0, vec![2, 6]);
+        // (S(0), S(1)): both axes split (SUMMA layout).
+        let nd = NdSbp::d2(s(0), s(1));
+        assert_eq!(shard_shape_nd(&shape, &nd, &[2, 2], &[0, 1]).0, vec![2, 3]);
+    }
+}

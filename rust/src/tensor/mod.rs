@@ -1,0 +1,191 @@
+//! Dense tensor substrate.
+//!
+//! All real numerics in the crate are computed in f32 on the host; the
+//! [`DType`] tag exists for *byte accounting* (mixed-precision memory and
+//! communication volumes are first-class quantities in the paper's cost
+//! model — Table 2, Figs 13/15) and for plan-level cast ops.
+
+pub mod shape;
+pub mod ops;
+
+pub use shape::Shape;
+
+use crate::util::Rng;
+
+/// Element type tag. Storage is always f32; `bytes()` is what memory and
+/// communication planning use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    I32,
+}
+
+impl DType {
+    /// Bytes per element for accounting purposes.
+    pub fn bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F16 => 2,
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DType::F32 => write!(f, "f32"),
+            DType::F16 => write!(f, "f16"),
+            DType::I32 => write!(f, "i32"),
+        }
+    }
+}
+
+/// A dense row-major tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Shape,
+    pub dtype: DType,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    /// New tensor from raw data; checks element count.
+    pub fn new(shape: impl Into<Shape>, dtype: DType, data: Vec<f32>) -> Self {
+        let shape = shape.into();
+        assert_eq!(shape.elems(), data.len(), "shape {shape} vs data len {}", data.len());
+        Tensor { shape, dtype, data }
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: impl Into<Shape>, dtype: DType) -> Self {
+        let shape = shape.into();
+        let n = shape.elems();
+        Tensor { shape, dtype, data: vec![0.0; n] }
+    }
+
+    /// Tensor filled with `v`.
+    pub fn full(shape: impl Into<Shape>, dtype: DType, v: f32) -> Self {
+        let shape = shape.into();
+        let n = shape.elems();
+        Tensor { shape, dtype, data: vec![v; n] }
+    }
+
+    /// Gaussian-initialized tensor (deterministic under `rng`).
+    pub fn randn(shape: impl Into<Shape>, dtype: DType, std: f32, rng: &mut Rng) -> Self {
+        let shape = shape.into();
+        let n = shape.elems();
+        Tensor { shape, dtype, data: rng.normal_vec(n, std) }
+    }
+
+    /// f32 convenience constructor.
+    pub fn f32(shape: impl Into<Shape>, data: Vec<f32>) -> Self {
+        Tensor::new(shape, DType::F32, data)
+    }
+
+    /// Number of elements.
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Accounting size in bytes (dtype-aware, not storage size).
+    pub fn bytes(&self) -> usize {
+        self.elems() * self.dtype.bytes()
+    }
+
+    /// Re-tag the dtype (numerics unchanged; f16 rounding is simulated by
+    /// truncating the mantissa so casts are observable and idempotent).
+    pub fn cast(&self, to: DType) -> Tensor {
+        let data = if to == DType::F16 {
+            self.data.iter().map(|&x| f16_round(x)).collect()
+        } else {
+            self.data.clone()
+        };
+        Tensor { shape: self.shape.clone(), dtype: to, data }
+    }
+
+    /// Maximum absolute difference against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// True if element-wise close within `tol`.
+    pub fn allclose(&self, other: &Tensor, tol: f32) -> bool {
+        self.shape == other.shape && self.max_abs_diff(other) <= tol
+    }
+}
+
+/// Round an f32 through IEEE f16 precision (round-to-nearest-even).
+pub fn f16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let sign = bits & 0x8000_0000;
+    let exp = ((bits >> 23) & 0xFF) as i32 - 127;
+    if x.is_nan() || x.is_infinite() {
+        return x;
+    }
+    if exp > 15 {
+        // overflow to ±inf in f16
+        return f32::from_bits(sign | 0x7F80_0000);
+    }
+    if exp < -24 {
+        return f32::from_bits(sign); // flush to signed zero
+    }
+    // keep 10 mantissa bits, round to nearest even
+    let shift = 13;
+    let lsb = 1u32 << shift;
+    let round_bias = (lsb >> 1) - 1 + ((bits >> shift) & 1);
+    let rounded = (bits & 0x7FFF_FFFF).wrapping_add(round_bias) & !(lsb - 1);
+    f32::from_bits(sign | rounded)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_bytes() {
+        let t = Tensor::zeros([2, 3], DType::F32);
+        assert_eq!(t.elems(), 6);
+        assert_eq!(t.bytes(), 24);
+        assert_eq!(t.cast(DType::F16).bytes(), 12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_data_mismatch_panics() {
+        Tensor::new([2, 2], DType::F32, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn f16_round_is_idempotent_and_close() {
+        let mut r = Rng::new(9);
+        for _ in 0..1000 {
+            let x = r.f32_range(-100.0, 100.0);
+            let y = f16_round(x);
+            assert_eq!(f16_round(y), y, "idempotent at {x}");
+            // f16 has ~3 decimal digits
+            assert!((x - y).abs() <= x.abs() * 1e-3 + 1e-4, "{x} -> {y}");
+        }
+    }
+
+    #[test]
+    fn f16_round_handles_specials() {
+        assert!(f16_round(f32::NAN).is_nan());
+        assert_eq!(f16_round(1e30), f32::INFINITY);
+        assert_eq!(f16_round(-1e30), f32::NEG_INFINITY);
+        assert_eq!(f16_round(1e-30), 0.0);
+    }
+
+    #[test]
+    fn allclose_tolerates_small_diffs() {
+        let a = Tensor::f32([2], vec![1.0, 2.0]);
+        let b = Tensor::f32([2], vec![1.0 + 1e-6, 2.0]);
+        assert!(a.allclose(&b, 1e-5));
+        assert!(!a.allclose(&b, 1e-8));
+    }
+}

@@ -1,0 +1,503 @@
+//! Native CPU kernels. These are the "device" compute used by the real
+//! execution mode of the actor runtime (and by tests as the ground truth for
+//! distributed-vs-single-device parity). Hot kernels (matmul) are written
+//! with blocked loops so the end-to-end examples are not pointlessly slow.
+
+use super::{Shape, Tensor};
+#[cfg(test)]
+use super::DType;
+
+/// `C = A @ B` for 2-D tensors, optionally transposing either input.
+pub fn matmul(a: &Tensor, b: &Tensor, trans_a: bool, trans_b: bool) -> Tensor {
+    let (am, ak) = dims2(a);
+    let (bk, bn) = dims2(b);
+    let (m, k) = if trans_a { (ak, am) } else { (am, ak) };
+    let (k2, n) = if trans_b { (bn, bk) } else { (bk, bn) };
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    // Normalize to row-major A (m,k) and B (k,n) views to keep the hot loop
+    // cache-friendly regardless of transposition flags.
+    let a_rm;
+    let a_view: &[f32] = if trans_a {
+        a_rm = transpose2(a).data;
+        &a_rm
+    } else {
+        &a.data
+    };
+    let b_rm;
+    let b_view: &[f32] = if trans_b {
+        b_rm = transpose2(b).data;
+        &b_rm
+    } else {
+        &b.data
+    };
+    let mut c = vec![0.0f32; m * n];
+    // i-k-j loop order: unit-stride access to B row and C row.
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let aik = a_view[i * k + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b_view[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    Tensor::new([m, n], a.dtype, c)
+}
+
+/// 2-D transpose.
+pub fn transpose2(t: &Tensor) -> Tensor {
+    let (m, n) = dims2(t);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j * m + i] = t.data[i * n + j];
+        }
+    }
+    Tensor::new([n, m], t.dtype, out)
+}
+
+fn dims2(t: &Tensor) -> (usize, usize) {
+    assert_eq!(t.shape.rank(), 2, "expected 2-D, got {}", t.shape);
+    (t.shape.dim(0), t.shape.dim(1))
+}
+
+/// Element-wise binary op on same-shape tensors.
+pub fn zip(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    assert_eq!(a.shape, b.shape, "zip shape {} vs {}", a.shape, b.shape);
+    let data = a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)).collect();
+    Tensor::new(a.shape.clone(), a.dtype, data)
+}
+
+/// Element-wise unary op.
+pub fn map(a: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+    Tensor::new(a.shape.clone(), a.dtype, a.data.iter().map(|&x| f(x)).collect())
+}
+
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    zip(a, b, |x, y| x + y)
+}
+pub fn sub(a: &Tensor, b: &Tensor) -> Tensor {
+    zip(a, b, |x, y| x - y)
+}
+pub fn mul(a: &Tensor, b: &Tensor) -> Tensor {
+    zip(a, b, |x, y| x * y)
+}
+pub fn scale(a: &Tensor, s: f32) -> Tensor {
+    map(a, |x| x * s)
+}
+
+/// Sum a list of same-shape tensors (the `P(sum)` reduction).
+pub fn add_n(ts: &[&Tensor]) -> Tensor {
+    assert!(!ts.is_empty());
+    let mut out = ts[0].clone();
+    for t in &ts[1..] {
+        assert_eq!(t.shape, out.shape);
+        for (o, x) in out.data.iter_mut().zip(&t.data) {
+            *o += x;
+        }
+    }
+    out
+}
+
+/// Element-wise max of a list of same-shape tensors (the `P(max)` reduction).
+pub fn max_n(ts: &[&Tensor]) -> Tensor {
+    assert!(!ts.is_empty());
+    let mut out = ts[0].clone();
+    for t in &ts[1..] {
+        assert_eq!(t.shape, out.shape);
+        for (o, x) in out.data.iter_mut().zip(&t.data) {
+            *o = o.max(*x);
+        }
+    }
+    out
+}
+
+/// `(M, N) + (N,)` broadcast bias add.
+pub fn bias_add(x: &Tensor, b: &Tensor) -> Tensor {
+    let (m, n) = dims2(x);
+    assert_eq!(b.shape.0, vec![n], "bias shape {}", b.shape);
+    let mut out = x.data.clone();
+    for i in 0..m {
+        for j in 0..n {
+            out[i * n + j] += b.data[j];
+        }
+    }
+    Tensor::new([m, n], x.dtype, out)
+}
+
+pub fn relu(x: &Tensor) -> Tensor {
+    map(x, |v| v.max(0.0))
+}
+
+/// d/dx relu, given upstream grad and the forward input.
+pub fn relu_grad(dy: &Tensor, x: &Tensor) -> Tensor {
+    zip(dy, x, |g, v| if v > 0.0 { g } else { 0.0 })
+}
+
+/// tanh-approximation GELU (matches the JAX/Pallas kernel in L1).
+pub fn gelu(x: &Tensor) -> Tensor {
+    map(x, gelu_scalar)
+}
+
+pub fn gelu_scalar(v: f32) -> f32 {
+    const C: f32 = 0.7978845608; // sqrt(2/pi)
+    0.5 * v * (1.0 + (C * (v + 0.044715 * v * v * v)).tanh())
+}
+
+/// d/dx gelu (tanh approximation), given upstream grad and forward input.
+pub fn gelu_grad(dy: &Tensor, x: &Tensor) -> Tensor {
+    const C: f32 = 0.7978845608;
+    zip(dy, x, |g, v| {
+        let u = C * (v + 0.044715 * v * v * v);
+        let t = u.tanh();
+        let du = C * (1.0 + 3.0 * 0.044715 * v * v);
+        g * (0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * du)
+    })
+}
+
+/// Row-wise softmax over the last axis of a 2-D tensor.
+pub fn softmax(x: &Tensor) -> Tensor {
+    let (m, n) = dims2(x);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let row = &x.data[i * n..(i + 1) * n];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut s = 0.0;
+        for j in 0..n {
+            let e = (row[j] - mx).exp();
+            out[i * n + j] = e;
+            s += e;
+        }
+        for j in 0..n {
+            out[i * n + j] /= s;
+        }
+    }
+    Tensor::new([m, n], x.dtype, out)
+}
+
+/// Reduce over `axis` of a 2-D tensor with `f`, starting from `init`.
+/// `keepdim` keeps a size-1 axis so SBP bookkeeping stays rank-stable.
+pub fn reduce2(x: &Tensor, axis: usize, keepdim: bool, init: f32, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    let (m, n) = dims2(x);
+    match axis {
+        0 => {
+            let mut out = vec![init; n];
+            for i in 0..m {
+                for j in 0..n {
+                    out[j] = f(out[j], x.data[i * n + j]);
+                }
+            }
+            let shape: Shape = if keepdim { [1, n].into() } else { [n].into() };
+            Tensor::new(shape, x.dtype, out)
+        }
+        1 => {
+            let mut out = vec![init; m];
+            for i in 0..m {
+                for j in 0..n {
+                    out[i] = f(out[i], x.data[i * n + j]);
+                }
+            }
+            let shape: Shape = if keepdim { [m, 1].into() } else { [m].into() };
+            Tensor::new(shape, x.dtype, out)
+        }
+        _ => panic!("reduce2 axis {axis}"),
+    }
+}
+
+pub fn reduce_sum(x: &Tensor, axis: usize, keepdim: bool) -> Tensor {
+    reduce2(x, axis, keepdim, 0.0, |a, b| a + b)
+}
+
+pub fn reduce_max(x: &Tensor, axis: usize, keepdim: bool) -> Tensor {
+    reduce2(x, axis, keepdim, f32::NEG_INFINITY, f32::max)
+}
+
+/// Broadcast a `(M,1)` column over `(M,N)` with `f`.
+pub fn broadcast_col(x: &Tensor, col: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    let (m, n) = dims2(x);
+    assert_eq!(col.shape.0, vec![m, 1], "col shape {}", col.shape);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            out[i * n + j] = f(x.data[i * n + j], col.data[i]);
+        }
+    }
+    Tensor::new([m, n], x.dtype, out)
+}
+
+/// Slice `count` indices starting at `start` along `axis`.
+pub fn slice_axis(t: &Tensor, axis: usize, start: usize, count: usize) -> Tensor {
+    let rank = t.shape.rank();
+    assert!(axis < rank);
+    assert!(start + count <= t.shape.dim(axis));
+    let outer: usize = t.shape.0[..axis].iter().product();
+    let inner: usize = t.shape.0[axis + 1..].iter().product();
+    let dim = t.shape.dim(axis);
+    let mut data = Vec::with_capacity(outer * count * inner);
+    for o in 0..outer {
+        let base = o * dim * inner + start * inner;
+        data.extend_from_slice(&t.data[base..base + count * inner]);
+    }
+    Tensor::new(t.shape.with_dim(axis, count), t.dtype, data)
+}
+
+/// Concatenate tensors along `axis`.
+pub fn concat_axis(ts: &[&Tensor], axis: usize) -> Tensor {
+    assert!(!ts.is_empty());
+    let rank = ts[0].shape.rank();
+    for t in ts {
+        assert_eq!(t.shape.rank(), rank);
+        for d in 0..rank {
+            if d != axis {
+                assert_eq!(t.shape.dim(d), ts[0].shape.dim(d), "concat mismatched dim {d}");
+            }
+        }
+    }
+    let total: usize = ts.iter().map(|t| t.shape.dim(axis)).sum();
+    let outer: usize = ts[0].shape.0[..axis].iter().product();
+    let inner: usize = ts[0].shape.0[axis + 1..].iter().product();
+    let mut data = Vec::with_capacity(outer * total * inner);
+    for o in 0..outer {
+        for t in ts {
+            let dim = t.shape.dim(axis);
+            let base = o * dim * inner;
+            data.extend_from_slice(&t.data[base..base + dim * inner]);
+        }
+    }
+    Tensor::new(ts[0].shape.with_dim(axis, total), ts[0].dtype, data)
+}
+
+/// Embedding lookup: `table (V, E)`, `ids (B,)` (values rounded to usize)
+/// → `(B, E)`. Out-of-range ids contribute zeros (the model-parallel
+/// vocabulary-shard semantics: a shard owns `[lo, hi)` and produces a
+/// partial-sum result — paper §6.3.2).
+pub fn embedding_shard(table: &Tensor, ids: &Tensor, vocab_offset: usize) -> Tensor {
+    let (v, e) = dims2(table);
+    let b = ids.elems();
+    let mut out = vec![0.0f32; b * e];
+    for (i, &idf) in ids.data.iter().enumerate() {
+        let id = idf as i64 - vocab_offset as i64;
+        if id >= 0 && (id as usize) < v {
+            let row = &table.data[id as usize * e..(id as usize + 1) * e];
+            out[i * e..(i + 1) * e].copy_from_slice(row);
+        }
+    }
+    Tensor::new([b, e], table.dtype, out)
+}
+
+/// Gradient of embedding lookup: scatter-add rows of `dy (B,E)` into a
+/// zero table `(V, E)` at `ids - vocab_offset`.
+pub fn embedding_grad_shard(dy: &Tensor, ids: &Tensor, v: usize, vocab_offset: usize) -> Tensor {
+    let (b, e) = dims2(dy);
+    assert_eq!(ids.elems(), b);
+    let mut out = vec![0.0f32; v * e];
+    for (i, &idf) in ids.data.iter().enumerate() {
+        let id = idf as i64 - vocab_offset as i64;
+        if id >= 0 && (id as usize) < v {
+            for j in 0..e {
+                out[id as usize * e + j] += dy.data[i * e + j];
+            }
+        }
+    }
+    Tensor::new([v, e], dy.dtype, out)
+}
+
+/// Sparse softmax cross-entropy forward: `logits (B, C)`, `labels (B,)` →
+/// (per-example loss `(B,)`, softmax probs `(B, C)` for backward).
+pub fn sparse_softmax_xent(logits: &Tensor, labels: &Tensor) -> (Tensor, Tensor) {
+    let (b, c) = dims2(logits);
+    assert_eq!(labels.elems(), b);
+    let probs = softmax(logits);
+    let mut loss = vec![0.0f32; b];
+    for i in 0..b {
+        let y = labels.data[i] as usize;
+        assert!(y < c, "label {y} out of range {c}");
+        loss[i] = -(probs.data[i * c + y].max(1e-30)).ln();
+    }
+    (Tensor::new([b], logits.dtype, loss), probs)
+}
+
+/// Backward of sparse softmax cross-entropy w.r.t. logits:
+/// `(probs - onehot(labels)) * dloss/B-broadcast`.
+pub fn sparse_softmax_xent_grad(probs: &Tensor, labels: &Tensor, dloss: &Tensor) -> Tensor {
+    let (b, c) = dims2(probs);
+    let mut out = probs.data.clone();
+    for i in 0..b {
+        let y = labels.data[i] as usize;
+        out[i * c + y] -= 1.0;
+        let g = dloss.data[i];
+        for j in 0..c {
+            out[i * c + j] *= g;
+        }
+    }
+    Tensor::new([b, c], probs.dtype, out)
+}
+
+/// Layer normalization over the last axis of a 2-D tensor (no affine).
+pub fn layernorm(x: &Tensor, eps: f32) -> Tensor {
+    let (m, n) = dims2(x);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let row = &x.data[i * n..(i + 1) * n];
+        let mean: f32 = row.iter().sum::<f32>() / n as f32;
+        let var: f32 = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / n as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for j in 0..n {
+            out[i * n + j] = (row[j] - mean) * inv;
+        }
+    }
+    Tensor::new([m, n], x.dtype, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Tensor::f32([2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::f32([2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(matmul(&a, &b, false, false).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_transpose_flags_agree_with_explicit_transpose() {
+        let mut r = Rng::new(1);
+        let a = Tensor::randn([3, 4], DType::F32, 1.0, &mut r);
+        let b = Tensor::randn([5, 4], DType::F32, 1.0, &mut r);
+        let expect = matmul(&a, &transpose2(&b), false, false);
+        let got = matmul(&a, &b, false, true);
+        assert!(got.allclose(&expect, 1e-5));
+
+        let a2 = Tensor::randn([4, 3], DType::F32, 1.0, &mut r);
+        let expect2 = matmul(&transpose2(&a2), &transpose2(&b), false, false);
+        let got2 = matmul(&a2, &b, true, true);
+        assert!(got2.allclose(&expect2, 1e-5));
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut r = Rng::new(2);
+        let x = Tensor::randn([7, 13], DType::F32, 3.0, &mut r);
+        let p = softmax(&x);
+        for i in 0..7 {
+            let s: f32 = p.data[i * 13..(i + 1) * 13].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn slice_concat_roundtrip_axis0_and_1() {
+        let mut r = Rng::new(3);
+        let x = Tensor::randn([6, 5], DType::F32, 1.0, &mut r);
+        for axis in 0..2 {
+            let n = x.shape.dim(axis);
+            let a = slice_axis(&x, axis, 0, n / 2);
+            let b = slice_axis(&x, axis, n / 2, n - n / 2);
+            let back = concat_axis(&[&a, &b], axis);
+            assert_eq!(back, x);
+        }
+    }
+
+    #[test]
+    fn reduce_matches_manual() {
+        let x = Tensor::f32([2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(reduce_sum(&x, 1, false).data, vec![6.0, 15.0]);
+        assert_eq!(reduce_sum(&x, 0, false).data, vec![5.0, 7.0, 9.0]);
+        assert_eq!(reduce_max(&x, 1, true).data, vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn embedding_shard_partial_sum_reconstructs_full_lookup() {
+        // Split a vocab of 10 across 2 shards; the shard outputs must sum to
+        // the full lookup (P(sum) semantics of vocabulary-split embedding).
+        let mut r = Rng::new(4);
+        let table = Tensor::randn([10, 4], DType::F32, 1.0, &mut r);
+        let ids = Tensor::f32([5], vec![0.0, 3.0, 9.0, 5.0, 4.0]);
+        let full = embedding_shard(&table, &ids, 0);
+        let t0 = slice_axis(&table, 0, 0, 5);
+        let t1 = slice_axis(&table, 0, 5, 5);
+        let p0 = embedding_shard(&t0, &ids, 0);
+        let p1 = embedding_shard(&t1, &ids, 5);
+        assert!(add(&p0, &p1).allclose(&full, 1e-6));
+    }
+
+    #[test]
+    fn xent_grad_matches_finite_difference() {
+        let mut r = Rng::new(5);
+        let logits = Tensor::randn([3, 4], DType::F32, 1.0, &mut r);
+        let labels = Tensor::f32([3], vec![1.0, 0.0, 3.0]);
+        let (_, probs) = sparse_softmax_xent(&logits, &labels);
+        let dloss = Tensor::full([3], DType::F32, 1.0);
+        let grad = sparse_softmax_xent_grad(&probs, &labels, &dloss);
+        let eps = 1e-3;
+        for idx in 0..12 {
+            let mut lp = logits.clone();
+            lp.data[idx] += eps;
+            let mut lm = logits.clone();
+            lm.data[idx] -= eps;
+            let (lossp, _) = sparse_softmax_xent(&lp, &labels);
+            let (lossm, _) = sparse_softmax_xent(&lm, &labels);
+            let fd: f32 = lossp.data.iter().sum::<f32>() - lossm.data.iter().sum::<f32>();
+            let fd = fd / (2.0 * eps);
+            assert!((fd - grad.data[idx]).abs() < 2e-2, "idx {idx}: fd {fd} vs {}", grad.data[idx]);
+        }
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        let x = Tensor::f32([5], vec![-2.0, -0.5, 0.0, 0.7, 2.5]);
+        let dy = Tensor::full([5], DType::F32, 1.0);
+        let g = gelu_grad(&dy, &x);
+        for i in 0..5 {
+            let eps = 1e-3;
+            let fd = (gelu_scalar(x.data[i] + eps) - gelu_scalar(x.data[i] - eps)) / (2.0 * eps);
+            assert!((fd - g.data[i]).abs() < 1e-3, "i={i} fd={fd} got={}", g.data[i]);
+        }
+    }
+
+    #[test]
+    fn matmul_distributive_property() {
+        // (A1 ++ A2 along rows) @ B == (A1 @ B) ++ (A2 @ B) — the algebraic
+        // fact underlying the S(0),B -> S(0) signature in Table 1.
+        prop::check(
+            "row-split matmul distributes",
+            30,
+            |r| {
+                let m = r.range(2, 8);
+                let k = r.range(1, 8);
+                let n = r.range(1, 8);
+                let a = Tensor::randn([m, k], DType::F32, 1.0, r);
+                let b = Tensor::randn([k, n], DType::F32, 1.0, r);
+                (a, b)
+            },
+            |(a, b)| {
+                let m = a.shape.dim(0);
+                let a1 = slice_axis(a, 0, 0, m / 2);
+                let a2 = slice_axis(a, 0, m / 2, m - m / 2);
+                let whole = matmul(a, b, false, false);
+                let parts = concat_axis(&[&matmul(&a1, b, false, false), &matmul(&a2, b, false, false)], 0);
+                whole.allclose(&parts, 1e-4)
+            },
+        );
+    }
+
+    #[test]
+    fn layernorm_rows_standardized() {
+        let mut r = Rng::new(8);
+        let x = Tensor::randn([4, 32], DType::F32, 2.0, &mut r);
+        let y = layernorm(&x, 1e-5);
+        for i in 0..4 {
+            let row = &y.data[i * 32..(i + 1) * 32];
+            let mean: f32 = row.iter().sum::<f32>() / 32.0;
+            let var: f32 = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / 32.0;
+            assert!(mean.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+}

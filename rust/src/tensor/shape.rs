@@ -1,0 +1,128 @@
+//! Shapes and the balanced-split arithmetic SBP relies on.
+
+/// A tensor shape (row-major).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    /// Number of elements.
+    pub fn elems(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    /// Rank.
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    /// Dimension `i`.
+    pub fn dim(&self, i: usize) -> usize {
+        self.0[i]
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.0.len()];
+        for i in (0..self.0.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.0[i + 1];
+        }
+        s
+    }
+
+    /// Shape with dimension `axis` replaced by `n`.
+    pub fn with_dim(&self, axis: usize, n: usize) -> Shape {
+        let mut d = self.0.clone();
+        d[axis] = n;
+        Shape(d)
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl From<Vec<usize>> for Shape {
+    fn from(v: Vec<usize>) -> Self {
+        Shape(v)
+    }
+}
+
+impl<const N: usize> From<[usize; N]> for Shape {
+    fn from(v: [usize; N]) -> Self {
+        Shape(v.to_vec())
+    }
+}
+
+impl From<&[usize]> for Shape {
+    fn from(v: &[usize]) -> Self {
+        Shape(v.to_vec())
+    }
+}
+
+/// Balanced partition of `n` items into `p` parts: the first `n % p` parts get
+/// `n/p + 1` items (the paper's "splitting the logical tensor … in a balanced
+/// manner", §3.1).
+pub fn split_sizes(n: usize, p: usize) -> Vec<usize> {
+    assert!(p > 0);
+    let q = n / p;
+    let r = n % p;
+    (0..p).map(|i| q + usize::from(i < r)).collect()
+}
+
+/// Start offsets corresponding to [`split_sizes`].
+pub fn split_offsets(n: usize, p: usize) -> Vec<usize> {
+    let sizes = split_sizes(n, p);
+    let mut off = Vec::with_capacity(p);
+    let mut acc = 0;
+    for s in sizes {
+        off.push(acc);
+        acc += s;
+    }
+    off
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn strides_row_major() {
+        let s = Shape(vec![2, 3, 4]);
+        assert_eq!(s.strides(), vec![12, 4, 1]);
+        assert_eq!(s.elems(), 24);
+    }
+
+    #[test]
+    fn split_balanced_examples() {
+        assert_eq!(split_sizes(10, 4), vec![3, 3, 2, 2]);
+        assert_eq!(split_sizes(8, 4), vec![2, 2, 2, 2]);
+        assert_eq!(split_sizes(3, 4), vec![1, 1, 1, 0]);
+        assert_eq!(split_offsets(10, 4), vec![0, 3, 6, 8]);
+    }
+
+    #[test]
+    fn split_sizes_always_sum_and_balance() {
+        prop::check(
+            "split_sizes sums to n, max-min <= 1",
+            200,
+            |r| (r.range(0, 500), r.range(1, 17)),
+            |&(n, p)| {
+                let s = split_sizes(n, p);
+                let sum: usize = s.iter().sum();
+                let mx = *s.iter().max().unwrap();
+                let mn = *s.iter().min().unwrap();
+                sum == n && mx - mn <= 1 && s.len() == p
+            },
+        );
+    }
+}

@@ -1,0 +1,58 @@
+//! Human-readable formatting for benchmark/report output.
+
+/// Format a byte count with binary units.
+pub fn bytes(b: f64) -> String {
+    const U: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = b;
+    let mut i = 0;
+    while v >= 1024.0 && i < U.len() - 1 {
+        v /= 1024.0;
+        i += 1;
+    }
+    if i == 0 { format!("{v:.0} {}", U[i]) } else { format!("{v:.2} {}", U[i]) }
+}
+
+/// Format a duration in seconds with an adaptive unit.
+pub fn secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+/// Format a rate (per second) with SI units.
+pub fn rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2} G/s", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2} M/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2} k/s", r / 1e3)
+    } else {
+        format!("{r:.1} /s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512.0), "512 B");
+        assert_eq!(bytes(2048.0), "2.00 KiB");
+        assert_eq!(bytes(3.5 * 1024.0 * 1024.0), "3.50 MiB");
+    }
+
+    #[test]
+    fn secs_units() {
+        assert_eq!(secs(2.5e-9), "2.5 ns");
+        assert_eq!(secs(1.5e-3), "1.50 ms");
+        assert_eq!(secs(2.0), "2.000 s");
+    }
+}

@@ -1,0 +1,10 @@
+//! Small self-contained substrates the offline environment forces us to own:
+//! a deterministic PRNG, a property-testing helper, and human-readable
+//! formatting utilities. (The vendored registry has no `rand`, `proptest`,
+//! `serde` or `criterion`; see DESIGN.md §3.)
+
+pub mod rng;
+pub mod prop;
+pub mod fmt;
+
+pub use rng::Rng;

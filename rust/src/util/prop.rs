@@ -1,0 +1,79 @@
+//! Minimal property-testing harness (the vendored registry lacks `proptest`).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` over `cases` generated inputs.
+//! On failure it re-seeds and replays so the failing seed is printed — enough
+//! to reproduce any counterexample deterministically.
+
+use super::rng::Rng;
+
+/// Run a property over `cases` random inputs drawn by `gen`.
+///
+/// Panics with the offending seed and a debug dump of the input on the first
+/// failure, so `PROP_SEED=<seed>` (or just the printed seed) reproduces it.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let base = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases as u64 {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property `{name}` failed on case {case} (seed {seed}):\n{input:#?}\n\
+                 reproduce with PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result` so failures carry a reason.
+pub fn check_res<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases as u64 {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(why) = prop(&input) {
+            panic!(
+                "property `{name}` failed on case {case} (seed {seed}): {why}\n{input:#?}\n\
+                 reproduce with PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 50, |r| r.below(10), |_| {
+            n += 1;
+            true
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |r| r.below(10), |&x| x > 100);
+    }
+}

@@ -1,0 +1,98 @@
+//! Failure injection: the runtime must *detect* pathological configurations
+//! rather than hang silently, and the compile-time planner must reject what
+//! cannot run (the Fig 2 class of failures).
+
+use oneflow::actor::{Engine, RunOptions};
+use oneflow::compiler::{compile, CompileOptions};
+use oneflow::exec::DeviceModel;
+use oneflow::graph::{LogicalGraph, OpKind};
+use oneflow::memory;
+use oneflow::placement::Placement;
+use oneflow::runtime::SimBackend;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Compile-time OOM: a plan whose registers exceed device memory is rejected
+/// before anything runs — the antidote to Fig 2's runtime OOM/deadlock.
+#[test]
+fn oversized_plan_rejected_before_execution() {
+    let p = Placement::node(0, 1);
+    let mut g = LogicalGraph::new();
+    let x = g.add1(
+        "x",
+        OpKind::Input { shape: [1 << 15, 1 << 15].into(), dtype: DType_F32() },
+        &[],
+        p.clone(),
+    );
+    let y = g.add1("y", OpKind::Relu, &[x], p);
+    let plan = compile(&g, &[y], &HashMap::new(), &CompileOptions::default());
+    let err = memory::check_plan(&plan, &DeviceModel::v100());
+    assert!(err.is_err(), "4 GiB x 2 slots x 3 registers must not fit 16 GiB: {err:?}");
+}
+
+fn DType_F32() -> oneflow::tensor::DType {
+    oneflow::tensor::DType::F32
+}
+
+/// Runtime watchdog: an engine given zero-register quota... cannot be built
+/// (compile enforces slots >= 1); instead starve it differently — a graph
+/// whose source never produces because pieces=0 returns an empty report,
+/// not a hang.
+#[test]
+fn zero_pieces_returns_immediately() {
+    let p = Placement::node(0, 1);
+    let mut g = LogicalGraph::new();
+    let x = g.add1("x", OpKind::Input { shape: [4, 4].into(), dtype: DType_F32() }, &[], p.clone());
+    let y = g.add1("y", OpKind::Relu, &[x], p);
+    let plan = compile(&g, &[y], &HashMap::new(), &CompileOptions::default());
+    let report = Engine::new(plan, Arc::new(SimBackend)).run_with(RunOptions { pieces: 0, timeout: None }).unwrap();
+    assert_eq!(report.pieces, 0);
+    assert_eq!(report.actions, 0);
+}
+
+/// Timeout detection: a deliberately-wedged plan (an actor that waits on a
+/// register nobody produces) trips the watchdog with a diagnostic instead of
+/// hanging the process. We wedge it by hand-editing the plan.
+#[test]
+fn wedged_plan_trips_watchdog() {
+    let p = Placement::node(0, 1);
+    let mut g = LogicalGraph::new();
+    let x = g.add1("x", OpKind::Input { shape: [4, 4].into(), dtype: DType_F32() }, &[], p.clone());
+    let y = g.add1("y", OpKind::Relu, &[x], p);
+    let mut plan = compile(&g, &[y], &HashMap::new(), &CompileOptions::default());
+    // sabotage: strip the relu's register quota to zero — its out counter can
+    // never become non-zero, so the state machine (correctly) never fires.
+    let relu_id = plan
+        .nodes
+        .iter()
+        .find(|n| n.name.starts_with("y"))
+        .unwrap()
+        .id;
+    let reg = plan.nodes[relu_id.0].out_reg;
+    plan.regs[reg.0].slots = 0;
+    let engine = Engine::new(plan, Arc::new(SimBackend));
+    let res = engine.run_with(RunOptions { pieces: 4, timeout: Some(Duration::from_secs(2)) });
+    let err = res.expect_err("cyclically-starved plan must time out");
+    assert!(err.contains("timeout"), "diagnostic: {err}");
+}
+
+/// Data-integrity guard: feeding a wrong-shaped batch panics loudly in the
+/// scatter (caught here via catch_unwind) instead of silently truncating.
+#[test]
+fn wrong_shape_batch_fails_loudly() {
+    use oneflow::actor::FnSource;
+    use oneflow::runtime::NativeBackend;
+    use oneflow::tensor::Tensor;
+    let p = Placement::node(0, 2);
+    let mut g = LogicalGraph::new();
+    let x = g.add1("x", OpKind::Input { shape: [8, 4].into(), dtype: DType_F32() }, &[], p.clone());
+    g.hint_tensor(x, oneflow::sbp::NdSbp::d1(oneflow::sbp::s(0)));
+    let y = g.add1("y", OpKind::Relu, &[x], p);
+    let plan = compile(&g, &[y], &HashMap::new(), &CompileOptions::default());
+    let engine = Engine::new(plan, Arc::new(NativeBackend)).with_source(Arc::new(FnSource(
+        |_b: &oneflow::compiler::InputBinding, _p: usize| Tensor::zeros([3, 3], DType_F32()), // wrong!
+    )));
+    let res = engine.run_with(RunOptions { pieces: 1, timeout: Some(Duration::from_secs(5)) });
+    assert!(res.is_err(), "wrong batch shape must not silently succeed");
+}

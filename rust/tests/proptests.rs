@@ -1,0 +1,183 @@
+//! Property-based suite (DESIGN.md invariants 1, 2, 4, 5): random graphs,
+//! random register quotas, random SBP transitions — the runtime must never
+//! deadlock, boxing must never corrupt values, and the credit protocol must
+//! bound producer lead.
+
+use oneflow::actor::{Engine, RunOptions};
+use oneflow::compiler::{compile, CompileOptions};
+use oneflow::exec::CostSpec;
+use oneflow::exec::QueueKind;
+use oneflow::graph::{LogicalGraph, OpKind, TensorId};
+use oneflow::placement::Placement;
+use oneflow::runtime::SimBackend;
+use oneflow::sbp::{gather, s, scatter, NdSbp, B, P};
+use oneflow::tensor::{DType, Tensor};
+use oneflow::util::{prop, Rng};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Build a random layered DAG of cost-only ops over random queues.
+fn random_dag(r: &mut Rng) -> (LogicalGraph, Vec<TensorId>, usize) {
+    let ndev = r.range(1, 3);
+    let pl = Placement::node(0, ndev);
+    let mut g = LogicalGraph::new();
+    let queues = [QueueKind::Compute, QueueKind::HostCpu, QueueKind::H2D, QueueKind::Disk];
+    let n_sources = r.range(1, 3);
+    let mut alive: Vec<TensorId> = (0..n_sources)
+        .map(|i| {
+            let t = g.add1(
+                format!("src{i}"),
+                OpKind::Flops {
+                    name: format!("src{i}"),
+                    out: [ndev * 2, 4].into(),
+                    dtype: DType::F32,
+                    cost: CostSpec { flops: 0.0, read_bytes: 1e6, write_bytes: 0.0, queue: *r.choose(&queues) },
+                    split_axes: vec![0],
+                    param_bytes: 0.0,
+                },
+                &[],
+                pl.clone(),
+            );
+            t
+        })
+        .collect();
+    let n_ops = r.range(3, 24);
+    for i in 0..n_ops {
+        let n_in = r.range(1, 2.min(alive.len()));
+        let mut ins = vec![];
+        for _ in 0..n_in {
+            ins.push(*r.choose(&alive));
+        }
+        ins.dedup();
+        let t = g.add1(
+            format!("op{i}"),
+            OpKind::Flops {
+                name: format!("op{i}"),
+                out: [ndev * 2, 4].into(),
+                dtype: DType::F32,
+                cost: CostSpec {
+                    flops: r.f64() * 1e9,
+                    read_bytes: r.f64() * 1e6,
+                    write_bytes: 0.0,
+                    queue: *r.choose(&queues),
+                },
+                split_axes: vec![0],
+                param_bytes: 0.0,
+            },
+            &ins,
+            pl.clone(),
+        );
+        alive.push(t);
+    }
+    // fetch all leaves
+    let consumed: Vec<TensorId> = g.nodes.iter().flat_map(|n| n.inputs.clone()).collect();
+    let leaves: Vec<TensorId> =
+        alive.iter().copied().filter(|t| !consumed.contains(t)).collect();
+    (g, leaves, r.range(1, 4))
+}
+
+#[test]
+fn random_dags_never_deadlock() {
+    prop::check_res(
+        "random DAG completes under any register quota",
+        40,
+        |r| {
+            let (g, leaves, depth) = random_dag(r);
+            (g.dump(), g, leaves, depth, r.range(1, 6))
+        },
+        |(_dump, g, leaves, depth, pieces)| {
+            let opts = CompileOptions { pipeline_depth: *depth, fuse: false, ..Default::default() };
+            let plan = compile(g, leaves, &HashMap::new(), &opts);
+            let engine = Engine::new(plan, Arc::new(SimBackend));
+            match engine.run_with(RunOptions { pieces: *pieces, timeout: Some(Duration::from_secs(30)) }) {
+                Ok(rep) if rep.pieces == *pieces => Ok(()),
+                Ok(_) => Err("wrong piece count".into()),
+                Err(e) => Err(format!("deadlock/timeout: {e}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn random_sbp_chains_preserve_value() {
+    // scatter -> boxing -> boxing -> gather == identity for random chains
+    prop::check_res(
+        "chained boxing preserves the logical tensor",
+        60,
+        |r| {
+            let m = r.range(2, 10);
+            let n = r.range(2, 10);
+            let sigs = [s(0), s(1), B, P];
+            let chain: Vec<_> = (0..r.range(2, 4)).map(|_| *r.choose(&sigs)).collect();
+            let p = r.range(2, 4);
+            let t = Tensor::randn([m, n], DType::F32, 1.0, r);
+            (t, chain, p)
+        },
+        |(t, chain, p)| {
+            use oneflow::boxing::apply_boxing;
+            let pl = Placement::node(0, *p);
+            let mut nd = NdSbp::d1(chain[0]);
+            let mut shards = scatter(t, &nd, &[*p]);
+            for &next in &chain[1..] {
+                let out_nd = NdSbp::d1(next);
+                let res = apply_boxing(&shards, &nd, &pl, &out_nd, &pl);
+                shards = res.shards;
+                nd = out_nd;
+            }
+            let back = gather(&shards, &nd, &[*p]);
+            if back.allclose(t, 1e-4) {
+                Ok(())
+            } else {
+                Err(format!("chain {chain:?} corrupted the tensor"))
+            }
+        },
+    );
+}
+
+#[test]
+fn virtual_makespan_at_least_critical_path() {
+    // makespan >= bottleneck-queue busy time, and >= any single action
+    prop::check_res(
+        "makespan lower bounds",
+        25,
+        |r| {
+            let (g, leaves, depth) = random_dag(r);
+            (g, leaves, depth)
+        },
+        |(g, leaves, depth)| {
+            let opts = CompileOptions { pipeline_depth: *depth, fuse: false, ..Default::default() };
+            let plan = compile(g, leaves, &HashMap::new(), &opts);
+            let engine = Engine::new(plan, Arc::new(SimBackend));
+            let rep = engine
+                .run_with(RunOptions { pieces: 3, timeout: Some(Duration::from_secs(30)) })
+                .map_err(|e| e.to_string())?;
+            let busy_max = rep.queue_busy.values().cloned().fold(0.0, f64::max);
+            if rep.makespan + 1e-12 >= busy_max {
+                Ok(())
+            } else {
+                Err(format!("makespan {} < busiest queue {}", rep.makespan, busy_max))
+            }
+        },
+    );
+}
+
+#[test]
+fn memory_plan_is_monotone_in_depth() {
+    // more register slots => more planned memory, never less
+    prop::check(
+        "register memory monotonicity",
+        25,
+        |r| {
+            let (g, leaves, _) = random_dag(r);
+            (g, leaves)
+        },
+        |(g, leaves)| {
+            let mem = |d: usize| {
+                let opts = CompileOptions { pipeline_depth: d, fuse: false, ..Default::default() };
+                compile(g, leaves, &HashMap::new(), &opts).peak_device_memory()
+            };
+            mem(1) <= mem(2) && mem(2) <= mem(4)
+        },
+    );
+}
