@@ -8,8 +8,9 @@
 //!       through a `P(sum)→B` boxing collective, SGD + the parameter
 //!       feedback edge run as ordinary actors. Python is not running.
 //!
-//! Run: `make artifacts && cargo run --release --example train_gpt_e2e -- --steps 300`
-//! The loss curve is recorded in EXPERIMENTS.md.
+//! Run: `make artifacts && cargo run --release --features pjrt --example train_gpt_e2e -- --steps 300`
+//! (needs the `pjrt` feature with the real `xla` crate — see DESIGN.md §6;
+//! the default build compiles this example but exits with a pointer there).
 
 use oneflow::config::Args;
 
@@ -24,7 +25,11 @@ fn main() {
             println!("step {step:4}  loss {loss:.4}");
         }
     })
-    .expect("end-to-end training failed — did you run `make artifacts`?");
+    .unwrap_or_else(|e| {
+        eprintln!("end-to-end training failed: {e}");
+        eprintln!("hint: build with `--features pjrt` (DESIGN.md §6) and run `make artifacts` first");
+        std::process::exit(1);
+    });
     let first = *report.losses.first().unwrap();
     let last = *report.losses.last().unwrap();
     println!(

@@ -16,16 +16,41 @@
 //!   back-pressure and natural pipelining via multi-slot registers
 //!   (paper §4–5, Figs 6–8).
 //!
-//! Real numerics execute through [`runtime`] backends: hand-written native
-//! CPU kernels, or AOT-lowered JAX/Pallas HLO artifacts loaded through the
-//! PJRT C API (`xla` crate). Paper-scale experiments run on a *simulated*
-//! cluster ([`exec`]) — V100-like device models and an NVLink/RoCE network
-//! model — driven by the same actor runtime using virtual timestamps, so the
-//! scheduling/overlap behaviour the paper evaluates is produced by the real
-//! protocol, and only kernel/wire durations come from the hardware model.
+//! Real numerics execute through [`runtime`] backends, which are object-safe
+//! and selected *at runtime* through [`runtime::registry`] (`--backend
+//! sim|native` via [`config::Args`]): hand-written native CPU kernels
+//! ([`runtime::NativeBackend`]), or — behind the optional `pjrt` cargo
+//! feature — AOT-lowered JAX/Pallas HLO artifacts loaded through the PJRT C
+//! API (`xla` crate). Paper-scale experiments run on a *simulated* cluster
+//! ([`exec`], [`runtime::SimBackend`]) — V100-like device models and an
+//! NVLink/RoCE network model — driven by the same actor runtime using
+//! virtual timestamps, so the scheduling/overlap behaviour the paper
+//! evaluates is produced by the real protocol, and only kernel/wire
+//! durations come from the hardware model.
 //!
-//! See `DESIGN.md` for the per-experiment index and `examples/quickstart.rs`
-//! for a five-minute tour.
+//! ## Building
+//!
+//! The default feature set is fully offline — `anyhow` is the only external
+//! dependency:
+//!
+//! ```text
+//! cargo build --release              # library + `oneflow` launcher
+//! cargo test -q                      # unit + integration + property suites
+//! cargo build --release --examples   # the five repo-root examples
+//! cargo bench --no-run               # compile the figure/table reproductions
+//! ```
+//!
+//! The PJRT bridge is **opt-in**: `cargo build --release --features pjrt`.
+//! By default that feature compiles against the offline `xla` stub in
+//! `third_party/xla` (construction fails fast at runtime); swap the path
+//! dependency for the real xla-rs crate to execute `artifacts/*.hlo.txt`
+//! produced by `make artifacts` on the python side. Nothing in the default
+//! build touches the network or `libxla_extension`.
+//!
+//! See `DESIGN.md` for the substitution table (§3), the numbered invariants
+//! the test suites check (§4), the per-experiment index (§5), and the
+//! feature/backend matrix (§6); `examples/quickstart.rs` is a five-minute
+//! tour.
 
 pub mod util;
 pub mod tensor;

@@ -9,11 +9,12 @@ use oneflow::actor::Engine;
 use oneflow::bench::Table;
 use oneflow::compiler::{compile, CompileOptions};
 use oneflow::config::Args;
+use oneflow::data::RandomSource;
 use oneflow::exec::QueueKind;
 use oneflow::memory;
 use oneflow::models::{gpt_sim, resnet50, GptSimConfig, ResnetConfig};
 use oneflow::placement::Placement;
-use oneflow::runtime::SimBackend;
+use oneflow::runtime::{backend_from_args, backend_names};
 use oneflow::util::fmt;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -27,9 +28,10 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: oneflow <train|simulate|plan> [--flags]\n\
-                 train:    --steps N --artifacts DIR --lr F\n\
-                 simulate: --model gpt|resnet --dp N --mp N --pp N --batch N --hidden N --layers N --pieces N [--zero] [--checkpoint]\n\
-                 plan:     same flags as simulate; prints the physical plan"
+                 train:    --steps N --artifacts DIR --lr F  (needs a build with --features pjrt)\n\
+                 simulate: --model gpt|resnet --dp N --mp N --pp N --batch N --hidden N --layers N --pieces N [--zero] [--checkpoint] [--backend {}]\n\
+                 plan:     same flags as simulate; prints the physical plan",
+                backend_names().join("|")
             );
             std::process::exit(2);
         }
@@ -47,7 +49,10 @@ fn train(args: &Args) {
             println!("step {step:4}  loss {loss:.4}");
         }
     })
-    .expect("e2e training failed");
+    .unwrap_or_else(|e| {
+        eprintln!("end-to-end training failed: {e}");
+        std::process::exit(1);
+    });
     println!(
         "trained {steps} steps of a {:.2}M-param GPT in {:.1}s wall ({:.2} steps/s), final loss {:.4}",
         report.params as f64 / 1e6,
@@ -100,8 +105,28 @@ fn simulate(args: &Args) {
     let plan = compile(&g, &[loss], &upd, &opts);
     let mem = memory::check_plan(&plan, &opts.cluster.device);
     let pieces = args.usize("pieces", 8);
-    let engine = Engine::new(plan, Arc::new(SimBackend));
-    let report = engine.run(pieces);
+    // the backend is a runtime choice through the registry; `sim` (data-free)
+    // is the right default for simulate
+    let backend = backend_from_args(&args, "sim").unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+    let needs_data = backend.has_data();
+    let mut engine = Engine::new(plan, backend);
+    if needs_data {
+        // real-numerics backends must be fed; synthetic batches keep every
+        // advertised `--backend` choice runnable (native is CPU-slow at
+        // paper scale — use small --hidden/--layers/--batch)
+        engine = engine.with_source(Arc::new(RandomSource { seed: 7 }));
+    }
+    // no watchdog for interactive runs: slow-but-progressing native math is
+    // not a deadlock (the 120 s default in Engine::run is for tests)
+    let report = engine
+        .run_with(oneflow::actor::RunOptions { pieces, timeout: None })
+        .unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        });
     let mut t = Table::new("simulation", &["metric", "value"]);
     t.row(&["pieces".into(), pieces.to_string()]);
     t.row(&["virtual makespan".into(), fmt::secs(report.makespan)]);

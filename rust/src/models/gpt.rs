@@ -221,6 +221,10 @@ pub struct E2eReport {
 /// Pallas kernels inside) runs as one [`OpKind::External`] actor per
 /// data-parallel shard; gradient combine (`P(sum)→B` boxing), SGD updates
 /// and the parameter feedback edge all run in the actor runtime.
+///
+/// Requires the `pjrt` feature; the default build exposes an
+/// API-compatible stub that returns an error at runtime.
+#[cfg(feature = "pjrt")]
 pub fn train_e2e(
     artifacts_dir: &str,
     steps: usize,
@@ -228,14 +232,17 @@ pub fn train_e2e(
     mut on_step: impl FnMut(usize, f32),
 ) -> crate::Result<E2eReport> {
     use crate::actor::Engine;
+    use crate::compiler::{compile, CompileOptions};
     use crate::config::json;
     use crate::data::{CorpusSource, SyntheticCorpus};
     use crate::graph::SigCand;
-    use crate::runtime::PjrtBackend;
     use crate::sbp::B;
     use crate::tensor::Shape;
     use std::sync::Arc;
 
+    // pieces == 0 short-circuits the engine to an empty report; the
+    // fetched-loss indexing below needs at least one piece
+    anyhow::ensure!(steps > 0, "train_e2e needs --steps >= 1");
     let meta = json::parse_file(&format!("{artifacts_dir}/gpt_meta.json"))
         .map_err(|e| anyhow::anyhow!(e))?;
     let dp = meta.req("dp").as_usize().unwrap();
@@ -330,9 +337,12 @@ pub fn train_e2e(
     }
 
     let plan = compile(&g, &[loss], &updates, &CompileOptions { fuse: false, ..Default::default() });
-    let backend = PjrtBackend::new(&[("gpt_train", artifact.as_str())])?;
+    // resolve through the registry and feed the artifact through the
+    // object-safe hook — the same path any custom launcher would use
+    let backend = crate::runtime::create_backend("pjrt")?;
+    backend.load_artifact("gpt_train", artifact.as_str())?;
     let corpus = SyntheticCorpus::new(256 * 1024, vocab.min(256), 42);
-    let engine = Engine::new(plan, Arc::new(backend)).with_source(Arc::new(CorpusSource {
+    let engine = Engine::new(plan, backend).with_source(Arc::new(CorpusSource {
         corpus,
         batch: global_b,
         seq,
@@ -355,12 +365,25 @@ pub fn train_e2e(
     })
 }
 
-use crate::compiler::{compile, CompileOptions};
+/// Default-feature stub of [`train_e2e`]: same signature, fails at runtime
+/// with a pointer to the `pjrt` feature instead of failing the build.
+#[cfg(not(feature = "pjrt"))]
+pub fn train_e2e(
+    _artifacts_dir: &str,
+    _steps: usize,
+    _lr: f32,
+    _on_step: impl FnMut(usize, f32),
+) -> crate::Result<E2eReport> {
+    anyhow::bail!(
+        "train_e2e executes AOT PJRT artifacts and was compiled out: \
+         rebuild with `cargo build --release --features pjrt` (see DESIGN.md §6)"
+    )
+}
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compiler::PhysKernel;
+    use crate::compiler::{compile, CompileOptions, PhysKernel};
 
     #[test]
     fn param_count_formula() {

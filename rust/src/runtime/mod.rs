@@ -4,20 +4,30 @@
 //!   real numerics for tests, examples and small end-to-end training.
 //! * [`SimBackend`] — no data; kernels only advance virtual time via the
 //!   cluster cost model (paper-scale experiments).
-//! * [`PjrtBackend`] — loads `artifacts/*.hlo.txt` (AOT-lowered JAX/Pallas,
-//!   L2/L1 of the stack) through the PJRT C API and executes them for the
-//!   end-to-end example. Python never runs at this point.
+//! * `PjrtBackend` (optional, `--features pjrt`) — loads `artifacts/*.hlo.txt`
+//!   (AOT-lowered JAX/Pallas, L2/L1 of the stack) through the PJRT C API and
+//!   executes them for the end-to-end example. Python never runs at this
+//!   point. The default feature set builds and runs without it (offline).
+//!
+//! Backends are object-safe ([`Backend`]) and registered by name in
+//! [`registry`], so which one a plan runs under is a runtime decision
+//! (`--backend sim|native` via [`crate::config::Args`]), not a compile-time
+//! one.
 //!
 //! Every backend returns the action's *virtual duration* from the same
 //! hardware model, so scheduling behaviour is identical across backends and
 //! real-vs-simulated runs differ only in whether tensors exist.
 
 pub mod native;
+pub mod registry;
 pub mod sim;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
+pub use registry::{backend_from_args, backend_names, create_backend, register_backend};
 pub use sim::SimBackend;
 
 use crate::compiler::{PhysKernel, PhysNode};
@@ -34,6 +44,13 @@ pub trait Backend: Send + Sync {
     /// Whether this backend materializes tensors (false for [`SimBackend`]).
     fn has_data(&self) -> bool {
         true
+    }
+
+    /// Load a named AOT artifact. The registry hands out type-erased
+    /// `Arc<dyn Backend>`, so this is the only route to `PjrtBackend::load`
+    /// after construction; backends without artifact support reject.
+    fn load_artifact(&self, name: &str, path: &str) -> crate::Result<()> {
+        anyhow::bail!("backend cannot load AOT artifact `{name}` from {path}: not a PJRT backend")
     }
 }
 

@@ -7,6 +7,12 @@
 //! loads each artifact once, compiles it on the PJRT CPU client, and
 //! dispatches [`OpKind::External`] kernels to it by name. Everything else
 //! falls through to the native backend. Python never runs on this path.
+//!
+//! Compiled only under `--features pjrt`. The `xla` dependency defaults to
+//! the offline stub in `third_party/xla` (so the feature still *builds*
+//! with no network or `libxla_extension`); against the stub,
+//! [`PjrtBackend::new`] fails fast at `PjRtClient::cpu()` with a message
+//! pointing at the real crate (DESIGN.md §6).
 
 use super::{Backend, NativeBackend};
 use crate::compiler::{PhysKernel, PhysNode};
@@ -40,22 +46,23 @@ impl PjrtBackend {
     /// Create a CPU PJRT client and pre-load `(name, path)` artifacts.
     pub fn new(artifacts: &[(&str, &str)]) -> crate::Result<Self> {
         let client = xla::PjRtClient::cpu()?;
-        let mut exes = HashMap::new();
+        let backend =
+            PjrtBackend { client, exes: Mutex::new(HashMap::new()), native: NativeBackend };
         for (name, path) in artifacts {
-            let proto = xla::HloModuleProto::from_text_file(path)?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
-            exes.insert(name.to_string(), exe);
+            backend.load(name, path)?;
         }
-        Ok(PjrtBackend { client, exes: Mutex::new(exes), native: NativeBackend })
+        Ok(backend)
     }
 
     /// Load one more artifact after construction.
     pub fn load(&self, name: &str, path: &str) -> crate::Result<()> {
         let proto = xla::HloModuleProto::from_text_file(path)?;
         let comp = xla::XlaComputation::from_proto(&proto);
+        // take the lock *before* touching the client: every client use must
+        // be serialized behind `exes` or the unsafe Send/Sync above is UB
+        let mut exes = self.exes.lock().unwrap();
         let exe = self.client.compile(&comp)?;
-        self.exes.lock().unwrap().insert(name.to_string(), exe);
+        exes.insert(name.to_string(), exe);
         Ok(())
     }
 
@@ -114,5 +121,9 @@ impl Backend for PjrtBackend {
             return self.run(name, inputs, &node.out_shapes);
         }
         self.native.execute(node, inputs)
+    }
+
+    fn load_artifact(&self, name: &str, path: &str) -> crate::Result<()> {
+        self.load(name, path)
     }
 }
