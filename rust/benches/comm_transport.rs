@@ -1,0 +1,122 @@
+//! Transport-plane microbenchmarks (§Dist): wire-codec throughput, and
+//! message round-trip latency / one-way bandwidth for the in-process bus
+//! hop (what `loopback` traffic costs) vs the TCP transport on localhost —
+//! the BENCH trajectory's first communication numbers.
+
+use oneflow::actor::{ActorAddr, Envelope, Msg};
+use oneflow::bench::Table;
+use oneflow::comm::{tcp_local_world, wire, Transport};
+use oneflow::compiler::RegId;
+use oneflow::exec::QueueKind;
+use oneflow::tensor::Tensor;
+use oneflow::util::fmt;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const PING: u8 = 0;
+const STOP: u8 = 1;
+const BULK: u8 = 2;
+const BULK_ACK: u8 = 3;
+
+fn tcp_pair() -> (Arc<dyn Transport>, Arc<dyn Transport>) {
+    let mut w = tcp_local_world(2).expect("rendezvous");
+    let t1 = w.pop().expect("rank 1");
+    let t0 = w.pop().expect("rank 0");
+    (t0, t1)
+}
+
+fn main() {
+    let mut tab = Table::new("Transport plane microbenchmarks", &["metric", "value"]);
+
+    // 1. wire codec: a Req envelope carrying a 16k-element f32 activation
+    let payload = Tensor::f32([64, 256], (0..64 * 256).map(|i| i as f32 * 0.5).collect());
+    let env = Envelope {
+        to: ActorAddr::new(1, QueueKind::Compute, 0, 7),
+        msg: Msg::Req { reg: RegId(3), piece: 0, data: Some(Arc::new(vec![payload])), ts: 0.5 },
+    };
+    let frame = wire::encode_envelope(&env);
+    let bytes_per = frame.len() as f64;
+    let iters = 200;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let f = wire::encode_envelope(&env);
+        let _ = wire::decode(&f).expect("decode");
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    tab.row(&["wire frame (64 KiB payload)".into(), fmt::bytes(bytes_per)]);
+    tab.row(&["wire encode+decode".into(), fmt::secs(per)]);
+    tab.row(&["wire codec throughput".into(), format!("{}/s", fmt::bytes(bytes_per / per))]);
+
+    // 2. the in-process bus hop (what loopback-world traffic costs): a
+    // cross-thread mpsc round trip of a small frame
+    let (ping_tx, ping_rx) = mpsc::channel::<Vec<u8>>();
+    let (pong_tx, pong_rx) = mpsc::channel::<Vec<u8>>();
+    let echo = std::thread::spawn(move || {
+        while let Ok(f) = ping_rx.recv() {
+            if f.first() == Some(&STOP) {
+                break;
+            }
+            let _ = pong_tx.send(f);
+        }
+    });
+    let small = vec![PING; 64];
+    let rounds = 5000;
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        ping_tx.send(small.clone()).expect("ping");
+        pong_rx.recv().expect("pong");
+    }
+    let bus_rt = t0.elapsed().as_secs_f64() / rounds as f64;
+    ping_tx.send(vec![STOP]).expect("stop");
+    echo.join().expect("echo thread");
+    tab.row(&["bus hop round trip (64 B)".into(), fmt::secs(bus_rt)]);
+
+    // 3. tcp on localhost: round-trip latency + one-way bulk bandwidth
+    let (a, b) = tcp_pair();
+    let bulk_n = 64usize;
+    let responder = std::thread::spawn(move || {
+        let mut bulk_seen = 0usize;
+        loop {
+            match b.recv_timeout(Duration::from_secs(10)) {
+                Ok(Some((_, f))) => match f.first() {
+                    Some(&PING) => b.send(0, f).expect("echo"),
+                    Some(&BULK) => {
+                        bulk_seen += 1;
+                        if bulk_seen == bulk_n {
+                            b.send(0, vec![BULK_ACK]).expect("bulk ack");
+                        }
+                    }
+                    Some(&STOP) | None => break,
+                    _ => {}
+                },
+                Ok(None) | Err(_) => break,
+            }
+        }
+    });
+    let rounds = 1000;
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        a.send(1, small.clone()).expect("ping");
+        let (_, f) = a.recv_timeout(Duration::from_secs(10)).expect("pong").expect("pong frame");
+        assert_eq!(f.first(), Some(&PING));
+    }
+    let tcp_rt = t0.elapsed().as_secs_f64() / rounds as f64;
+    tab.row(&["tcp round trip (64 B, localhost)".into(), fmt::secs(tcp_rt)]);
+    tab.row(&["tcp vs bus hop".into(), format!("{:.1}x", tcp_rt / bus_rt)]);
+
+    let bulk = vec![BULK; 256 * 1024];
+    let t0 = Instant::now();
+    for _ in 0..bulk_n {
+        a.send(1, bulk.clone()).expect("bulk send");
+    }
+    let (_, ack) = a.recv_timeout(Duration::from_secs(30)).expect("ack").expect("ack frame");
+    assert_eq!(ack.first(), Some(&BULK_ACK));
+    let secs = t0.elapsed().as_secs_f64();
+    let moved = (bulk.len() * bulk_n) as f64;
+    tab.row(&["tcp one-way bandwidth (256 KiB frames)".into(), format!("{}/s", fmt::bytes(moved / secs))]);
+    a.send(1, vec![STOP]).expect("stop");
+    responder.join().expect("responder");
+
+    tab.print();
+}

@@ -1,11 +1,19 @@
 //! The runtime engine: spawns one OS thread per hardware queue (paper §5),
 //! binds actors to threads by their address bit-fields, routes messages
-//! through local queues (same thread) or the message bus (cross-thread /
-//! cross-node), and aggregates metrics.
+//! through local queues (same thread), the message bus (cross-thread), or a
+//! [`crate::comm::Transport`] (cross-process), and aggregates metrics.
+//!
+//! With a transport attached ([`Engine::with_transport`]) the engine becomes
+//! one worker of a multi-process job: [`crate::comm::launch`] assigns each
+//! plan node an owning rank, only this rank's actors are instantiated, and
+//! envelopes addressed to foreign nodes cross the wire ([`crate::comm::wire`])
+//! instead of the in-process bus. At end of run, ranks exchange a finalize
+//! barrier so every worker reports the global virtual makespan.
 
 use super::addr::{ActorAddr, ThreadKey};
 use super::msg::{Envelope, Msg};
 use super::{set_slots, Actor, Ctx};
+use crate::comm::{self, wire, Transport};
 use crate::compiler::{InputBinding, PhysPlan, RegId};
 use crate::exec::QueueKind;
 use crate::graph::{NodeId, TensorId};
@@ -92,6 +100,10 @@ enum Control {
         bytes: f64,
         last_ts: f64,
     },
+    /// A peer rank finished all its actors with the given local makespan.
+    PeerDone { rank: usize, makespan: f64 },
+    /// The transport died (peer connections closed before the barrier).
+    CommLost(String),
 }
 
 /// The runtime engine (see module docs).
@@ -99,16 +111,27 @@ pub struct Engine {
     plan: Arc<PhysPlan>,
     backend: Arc<dyn Backend>,
     source: Option<Arc<dyn DataSource>>,
+    transport: Option<Arc<dyn Transport>>,
 }
 
 impl Engine {
     pub fn new(plan: PhysPlan, backend: Arc<dyn Backend>) -> Self {
-        Engine { plan: Arc::new(plan), backend, source: None }
+        Engine { plan: Arc::new(plan), backend, source: None, transport: None }
     }
 
     /// Attach a data source (real-execution mode).
     pub fn with_source(mut self, s: Arc<dyn DataSource>) -> Self {
         self.source = Some(s);
+        self
+    }
+
+    /// Attach a transport: this engine becomes rank `t.rank()` of a
+    /// `t.world_size()`-process job and instantiates only the actors whose
+    /// plan node [`comm::launch::node_rank_map`] assigns to it. The
+    /// in-process [`comm::Loopback`] (world size 1) leaves behavior
+    /// identical to no transport at all.
+    pub fn with_transport(mut self, t: Arc<dyn Transport>) -> Self {
+        self.transport = Some(t);
         self
     }
 
@@ -129,6 +152,14 @@ impl Engine {
             return Ok(RunReport::default());
         }
         let plan = self.plan.clone();
+
+        // ---- launch partition: which plan nodes does this rank own? ----
+        let world = self.transport.as_ref().map(|t| t.world_size()).unwrap_or(1);
+        let my_rank = self.transport.as_ref().map(|t| t.rank()).unwrap_or(0);
+        let node_rank: Arc<HashMap<u16, usize>> =
+            Arc::new(comm::launch::node_rank_map(&plan, world));
+        let is_local =
+            |a: &ActorAddr| node_rank.get(&a.node()).map(|&r| r == my_rank).unwrap_or(true);
 
         // ---- address assignment (Fig 8) ----
         let addr_of = |n: &crate::compiler::PhysNode| -> ActorAddr {
@@ -161,8 +192,9 @@ impl Engine {
             }
         }
 
-        // ---- build actors, grouped by thread ----
-        let mut thread_keys: Vec<ThreadKey> = addrs.iter().map(|a| a.thread()).collect();
+        // ---- build actors, grouped by thread (local ranks only) ----
+        let mut thread_keys: Vec<ThreadKey> =
+            addrs.iter().filter(|a| is_local(a)).map(|a| a.thread()).collect();
         thread_keys.sort();
         thread_keys.dedup();
         let tindex: Arc<HashMap<ThreadKey, usize>> =
@@ -173,16 +205,24 @@ impl Engine {
         let mut init_values: HashMap<usize, super::Piece> = HashMap::new();
         if has_data {
             for vb in &plan.vars {
+                if !vb.phys.iter().any(|&p| is_local(&addrs[p.0])) {
+                    continue; // every shard is another rank's problem
+                }
                 let mut rng = Rng::new(plan.options.seed ^ (vb.node.0 as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
                 let logical = Tensor::randn(vb.shape.clone(), vb.dtype, vb.init_std, &mut rng);
                 let shards = crate::sbp::scatter(&logical, &vb.nd_sbp, &vb.placement.hierarchy);
                 for (i, &pid) in vb.phys.iter().enumerate() {
-                    init_values.insert(pid.0, Arc::new(vec![shards[i].clone()]));
+                    if is_local(&addrs[pid.0]) {
+                        init_values.insert(pid.0, Arc::new(vec![shards[i].clone()]));
+                    }
                 }
             }
         }
         for node in plan.nodes.iter() {
             let addr = addrs[node.id.0];
+            if !is_local(&addr) {
+                continue;
+            }
             let consumers = consumers_of.get(&node.out_reg).cloned().unwrap_or_default();
             let mut actor = Actor::new(node.clone(), addr, &producer_of, consumers, pieces);
             set_slots(&mut actor, plan.regs[node.out_reg.0].slots);
@@ -211,7 +251,13 @@ impl Engine {
             Arc::new(Mutex::new(HashMap::new()));
 
         let started = Instant::now();
-        let n_actors = plan.nodes.len();
+        let n_actors: usize = per_thread.iter().map(Vec::len).sum();
+        let router: Option<Arc<comm::Router>> = match &self.transport {
+            Some(t) if world > 1 => {
+                Some(Arc::new(comm::Router::new(t.clone(), node_rank.clone())))
+            }
+            _ => None,
+        };
         let mut handles = vec![];
         for (ti, key) in thread_keys.iter().enumerate() {
             let actors = std::mem::take(&mut per_thread[ti]);
@@ -226,17 +272,77 @@ impl Engine {
             let cache = scatter_cache.clone();
             let src = self.source.clone();
             let bindings = input_bindings.clone();
+            let router = router.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("of-{:?}-n{}d{}", key.queue, key.node, key.device))
                     .spawn(move || {
                         thread_main(
                             actors, rx, senders, tindex, ctl, stop, backend, plan, key, cache,
-                            src, bindings,
+                            src, bindings, router,
                         )
                     })
                     .expect("spawn queue thread"),
             );
+        }
+
+        // ---- transport ingress: decode peer frames onto the local bus ----
+        let comm_stop = Arc::new(AtomicBool::new(false));
+        let mut ingress: Option<std::thread::JoinHandle<()>> = None;
+        if let Some(t) = &self.transport {
+            if world > 1 {
+                let t = t.clone();
+                let senders = senders.clone();
+                let tindex = tindex.clone();
+                let ctl = ctl_tx.clone();
+                let stop = comm_stop.clone();
+                ingress = Some(
+                    std::thread::Builder::new()
+                        .name("of-comm-ingress".into())
+                        .spawn(move || loop {
+                            if stop.load(Ordering::SeqCst) {
+                                break;
+                            }
+                            // recv returns as soon as a frame arrives; the
+                            // timeout only paces the stop-flag re-check
+                            match t.recv_timeout(Duration::from_millis(25)) {
+                                Ok(Some((src_rank, frame))) => match wire::decode(&frame) {
+                                    Ok(wire::Frame::Envelope(env)) => {
+                                        match tindex.get(&env.to.thread()) {
+                                            Some(&ti) => {
+                                                let _ = senders[ti].send(env);
+                                            }
+                                            None => eprintln!(
+                                                "comm: rank {src_rank} sent a message for non-local actor {}",
+                                                env.to
+                                            ),
+                                        }
+                                    }
+                                    Ok(wire::Frame::Finalize { rank, makespan }) => {
+                                        let _ = ctl.send(Control::PeerDone {
+                                            rank: rank as usize,
+                                            makespan,
+                                        });
+                                    }
+                                    Err(e) => eprintln!(
+                                        "comm: undecodable frame from rank {src_rank}: {e}"
+                                    ),
+                                },
+                                Ok(None) => {}
+                                Err(e) => {
+                                    // The main loop can tell a graceful
+                                    // end-of-job (peers done, sockets
+                                    // closed) from a mid-run loss — report
+                                    // there instead of alarming stderr on
+                                    // every successful run.
+                                    let _ = ctl.send(Control::CommLost(e.to_string()));
+                                    break;
+                                }
+                            }
+                        })
+                        .expect("spawn comm ingress"),
+                );
+            }
         }
         drop(ctl_tx);
 
@@ -247,13 +353,48 @@ impl Engine {
         let mut fetched_raw: HashMap<TensorId, Vec<(usize, super::Piece)>> = HashMap::new();
         let mut stats_seen = 0usize;
         let total_threads = handles.len();
+        let mut peer_done = vec![false; world];
+        let mut peers_done = 0usize;
+        let mut finalize_sent = false;
+        if n_actors == 0 {
+            // this rank hosts no plan node (world > node count): nothing to
+            // run, but it still joins the finalize barrier below
+            shutdown.store(true, Ordering::SeqCst);
+        }
         loop {
+            // Exit check: all local stats in, and (single-rank job, or every
+            // peer has reported its makespan through the finalize barrier).
+            if stats_seen == total_threads {
+                if world <= 1 {
+                    break;
+                }
+                if !finalize_sent {
+                    if let Some(t) = &self.transport {
+                        let frame = wire::encode_finalize(my_rank as u32, report.makespan);
+                        for dst in 0..world {
+                            if dst != my_rank {
+                                if let Err(e) = t.send(dst, frame.clone()) {
+                                    eprintln!("comm: finalize to rank {dst} failed: {e}");
+                                }
+                            }
+                        }
+                    }
+                    finalize_sent = true;
+                }
+                if peers_done == world - 1 {
+                    break;
+                }
+            }
             let msg = match deadline {
                 Some(d) => {
                     let now = Instant::now();
                     if now >= d {
                         shutdown.store(true, Ordering::SeqCst);
+                        comm_stop.store(true, Ordering::SeqCst);
                         for h in handles {
+                            let _ = h.join();
+                        }
+                        if let Some(h) = ingress.take() {
                             let _ = h.join();
                         }
                         return Err(format!(
@@ -293,11 +434,38 @@ impl Engine {
                     report.comm_bytes += bytes;
                     report.makespan = report.makespan.max(last_ts);
                     stats_seen += 1;
-                    if stats_seen == total_threads {
-                        break;
+                }
+                Control::PeerDone { rank, makespan } => {
+                    if rank < world && !peer_done[rank] {
+                        peer_done[rank] = true;
+                        peers_done += 1;
+                        // every rank reports the global virtual makespan
+                        report.makespan = report.makespan.max(makespan);
                     }
                 }
+                Control::CommLost(why) => {
+                    // Peer finalizes queued before the loss are already
+                    // processed (channel order); reaching this arm means the
+                    // barrier genuinely cannot complete.
+                    shutdown.store(true, Ordering::SeqCst);
+                    comm_stop.store(true, Ordering::SeqCst);
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    if let Some(h) = ingress.take() {
+                        let _ = h.join();
+                    }
+                    return Err(format!(
+                        "transport failed with {}/{} peers finalized: {why}",
+                        peers_done,
+                        world - 1
+                    ));
+                }
             }
+        }
+        comm_stop.store(true, Ordering::SeqCst);
+        if let Some(h) = ingress.take() {
+            let _ = h.join();
         }
         report.wall = started.elapsed();
 
@@ -322,7 +490,7 @@ impl Engine {
 
 /// One hardware-queue OS thread: poll the bus, prefer the local queue, run
 /// actor state machines inline (the thread *is* the FIFO hardware queue).
-#[allow(clippy::too_many_arguments)]
+#[allow(clippy::too_many_arguments, clippy::type_complexity)]
 fn thread_main(
     mut actors: Vec<Actor>,
     rx: mpsc::Receiver<Envelope>,
@@ -336,6 +504,7 @@ fn thread_main(
     cache: Arc<Mutex<HashMap<(usize, usize), Vec<Tensor>>>>,
     src: Option<Arc<dyn DataSource>>,
     bindings: Arc<HashMap<NodeId, InputBinding>>,
+    router: Option<Arc<comm::Router>>,
 ) {
     let feeder = move |nid: NodeId, shard: usize, piece: usize| -> Vec<Tensor> {
         let Some(src) = &src else { return vec![] };
@@ -408,14 +577,21 @@ fn thread_main(
             if tkey == key {
                 n_local += 1;
                 local.push_back(out);
-            } else {
+            } else if let Some(&ti) = tindex.get(&tkey) {
                 if tkey.node != key.node {
                     n_cross += 1;
                 } else {
                     n_remote += 1;
                 }
                 // the message bus (paper Fig 7): id-addressed routing
-                let _ = senders[tindex[&tkey]].send(out);
+                let _ = senders[ti].send(out);
+            } else if let Some(r) = &router {
+                // foreign rank: the CommNet path (Fig 7 cases ⑤–⑦) — same
+                // envelope, different fabric
+                n_cross += 1;
+                r.send(&out);
+            } else {
+                panic!("thread {key:?} produced a message for unknown thread {tkey:?}");
             }
         }
     }

@@ -322,7 +322,7 @@ fn trace_enabled() -> bool {
     *ON.get_or_init(|| std::env::var("OF_TRACE").is_ok())
 }
 
-impl<'a> Ctx<'a> {
+impl Ctx<'_> {
     fn execute(&mut self, node: &PhysNode, inputs: &[&Tensor]) -> Vec<Tensor> {
         if trace_enabled() {
             let shapes: Vec<String> = inputs.iter().map(|t| t.shape.to_string()).collect();

@@ -1,0 +1,141 @@
+//! Multi-process launch: partition a [`PhysPlan`] by node.
+//!
+//! The compiler already assigns every physical op a `(node, device)`; this
+//! module decides which *worker process* owns each plan node, so each
+//! worker instantiates only its own actors and everything else is reached
+//! through the transport. The mapping is a pure function of the plan and
+//! the world size — every rank computes it independently and they all
+//! agree, which is what lets workers compile the same plan locally instead
+//! of shipping it.
+
+use crate::compiler::{PhysOpId, PhysPlan};
+use std::collections::HashMap;
+
+/// Sorted distinct node ids used by the plan.
+pub fn plan_nodes(plan: &PhysPlan) -> Vec<u16> {
+    let mut ns: Vec<u16> = plan.nodes.iter().map(|n| n.device.node as u16).collect();
+    ns.sort_unstable();
+    ns.dedup();
+    ns
+}
+
+/// Deterministic node → owning-rank map: distinct plan nodes in ascending
+/// order, dealt round-robin over `world` ranks. `world == 1` (loopback)
+/// maps everything to rank 0.
+pub fn node_rank_map(plan: &PhysPlan, world: usize) -> HashMap<u16, usize> {
+    let world = world.max(1);
+    plan_nodes(plan).into_iter().enumerate().map(|(i, n)| (n, i % world)).collect()
+}
+
+/// One worker's slice of a plan.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub rank: usize,
+    /// Plan nodes this rank hosts, ascending.
+    pub nodes: Vec<u16>,
+    /// Physical ops (= actors) this rank instantiates.
+    pub actors: Vec<PhysOpId>,
+}
+
+/// Partition `plan` by node over `world` ranks — the per-worker actor sets
+/// the engine instantiates. Ranks beyond the node count come back empty
+/// (they idle through the run and join the finalize barrier).
+pub fn partition(plan: &PhysPlan, world: usize) -> Vec<Partition> {
+    let world = world.max(1);
+    let map = node_rank_map(plan, world);
+    let mut parts: Vec<Partition> =
+        (0..world).map(|rank| Partition { rank, nodes: vec![], actors: vec![] }).collect();
+    for n in plan_nodes(plan) {
+        parts[map[&n]].nodes.push(n);
+    }
+    for node in &plan.nodes {
+        parts[map[&(node.device.node as u16)]].actors.push(node.id);
+    }
+    parts
+}
+
+/// Count register reads whose producer lives on a different rank than the
+/// consumer — the `Req` edges (and matching `Ack` backflow) that must cross
+/// the transport each piece.
+pub fn cross_rank_edges(plan: &PhysPlan, world: usize) -> usize {
+    let map = node_rank_map(plan, world);
+    let rank_of = |pid: PhysOpId| map[&(plan.nodes[pid.0].device.node as u16)];
+    let mut n = 0;
+    for node in &plan.nodes {
+        let mine = rank_of(node.id);
+        for &(reg, _) in &node.inputs {
+            if rank_of(plan.regs[reg.0].producer) != mine {
+                n += 1;
+            }
+        }
+    }
+    n
+}
+
+/// Human-readable partition summary (the `plan --world N` view).
+pub fn dump(plan: &PhysPlan, world: usize) -> String {
+    let mut s = String::new();
+    for p in partition(plan, world) {
+        s.push_str(&format!(
+            "rank {}: nodes {:?}, {} actors\n",
+            p.rank,
+            p.nodes,
+            p.actors.len()
+        ));
+    }
+    s.push_str(&format!(
+        "cross-rank register edges per piece: {}\n",
+        cross_rank_edges(plan, world)
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::graph::{LogicalGraph, OpKind};
+    use crate::placement::Placement;
+    use crate::tensor::DType;
+    use std::collections::HashMap as Map;
+
+    fn two_node_plan() -> PhysPlan {
+        let p0 = Placement::node(0, 1);
+        let p1 = Placement::node(1, 1);
+        let mut g = LogicalGraph::new();
+        let x = g.add1("x", OpKind::Input { shape: [4, 4].into(), dtype: DType::F32 }, &[], p0.clone());
+        let h = g.add1("h", OpKind::Relu, &[x], p0);
+        let y = g.add1("y", OpKind::Gelu, &[h], p1);
+        compile(&g, &[y], &Map::new(), &CompileOptions::default())
+    }
+
+    #[test]
+    fn world_one_owns_everything() {
+        let plan = two_node_plan();
+        let map = node_rank_map(&plan, 1);
+        assert!(map.values().all(|&r| r == 0));
+        let parts = partition(&plan, 1);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].actors.len(), plan.nodes.len());
+    }
+
+    #[test]
+    fn two_ranks_split_by_node_and_cover_the_plan() {
+        let plan = two_node_plan();
+        let parts = partition(&plan, 2);
+        assert_eq!(parts[0].nodes, vec![0]);
+        assert_eq!(parts[1].nodes, vec![1]);
+        assert!(!parts[0].actors.is_empty() && !parts[1].actors.is_empty());
+        assert_eq!(parts[0].actors.len() + parts[1].actors.len(), plan.nodes.len());
+        assert!(cross_rank_edges(&plan, 2) > 0, "pipeline must cross ranks");
+        assert_eq!(cross_rank_edges(&plan, 1), 0);
+    }
+
+    #[test]
+    fn extra_ranks_idle() {
+        let plan = two_node_plan();
+        let parts = partition(&plan, 4);
+        assert_eq!(parts.len(), 4);
+        assert!(parts[2].actors.is_empty() && parts[3].actors.is_empty());
+    }
+}

@@ -1,0 +1,54 @@
+//! The in-process transport: world size 1, no peers.
+//!
+//! With one rank, [`super::launch::node_rank_map`] assigns every plan node
+//! to rank 0, so the engine instantiates every actor locally and all
+//! traffic stays on the in-process channels — byte-for-byte the behavior
+//! the determinism and parity suites pin down. `Loopback` exists so the
+//! transport choice is *uniform*: callers always hold an
+//! `Arc<dyn Transport>` and single-process is just the degenerate world.
+
+use super::Transport;
+use std::time::Duration;
+
+/// Single-process transport (see module docs).
+#[derive(Debug, Default)]
+pub struct Loopback;
+
+impl Transport for Loopback {
+    fn name(&self) -> &'static str {
+        "loopback"
+    }
+
+    fn rank(&self) -> usize {
+        0
+    }
+
+    fn world_size(&self) -> usize {
+        1
+    }
+
+    fn send(&self, dst: usize, _frame: Vec<u8>) -> crate::Result<()> {
+        anyhow::bail!("loopback transport has no peer rank {dst}")
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> crate::Result<Option<(usize, Vec<u8>)>> {
+        // Nothing ever arrives; honor the contract (None only after the
+        // timeout elapses) so generic `dyn Transport` consumers that poll
+        // anyway neither busy-spin nor misread an instant None as a wait.
+        std::thread::sleep(timeout);
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_is_a_world_of_one() {
+        let t = Loopback;
+        assert_eq!((t.rank(), t.world_size()), (0, 1));
+        assert!(t.send(1, vec![0]).is_err());
+        assert!(t.recv_timeout(Duration::from_millis(1)).unwrap().is_none());
+    }
+}

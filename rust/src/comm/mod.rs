@@ -1,0 +1,109 @@
+//! The **transport plane**: pluggable inter-worker communication that takes
+//! the actor runtime multi-process (the paper §5 claim that actors are
+//! oblivious to *where* their peers live, made literal).
+//!
+//! The actor protocol never names a wire: actors address peers by
+//! [`crate::actor::ActorAddr`] and the engine routes. Within one process the
+//! route is an `mpsc` channel per hardware-queue thread; this module supplies
+//! the routing fabric for addresses owned by *other processes*:
+//!
+//! * [`Transport`] — an object-safe byte-frame channel between ranks,
+//!   registered by name in [`registry`] exactly like execution backends
+//!   (`--transport loopback|tcp --rank R --peers h:p,h:p` via
+//!   [`crate::config::Args`]).
+//! * [`Loopback`] — the in-process fabric: world size 1, every plan node is
+//!   local, byte-for-byte today's single-process behavior.
+//! * [`TcpTransport`] — length-prefixed frames over `std::net` TCP with a
+//!   rank handshake rendezvous; no dependencies beyond `std`.
+//! * [`wire`] — envelope/tensor (de)serialization with exact f32/f64 bit
+//!   round-trips, so distributed numerics *and* virtual timestamps match the
+//!   single-process run bitwise.
+//! * [`launch`] — partitions a [`crate::compiler::PhysPlan`] by node so each
+//!   worker instantiates only its own actors; cross-rank `Req`/`Ack` traffic
+//!   (payload bytes and virtual timestamps included) crosses the transport.
+//!
+//! Because virtual time rides on the messages themselves (the `(max, +)`
+//! algebra of [`crate::actor`]), a multi-process run reports the same
+//! makespan as the single-process run — the determinism invariant
+//! (DESIGN.md §4.5–§4.6) holds under every transport.
+
+pub mod launch;
+pub mod loopback;
+pub mod registry;
+pub mod tcp;
+pub mod wire;
+
+pub use loopback::Loopback;
+pub use registry::{
+    create_transport, register_transport, transport_from_args, transport_names, TransportFactory,
+};
+pub use tcp::{free_local_ports, tcp_local_world, TcpTransport};
+
+use crate::actor::msg::Envelope;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Where a worker sits in the job: its rank plus every rank's rendezvous
+/// address. Built from `--rank` / `--peers` by [`transport_from_args`].
+#[derive(Clone, Debug, Default)]
+pub struct TransportConfig {
+    /// This worker's rank in `0..peers.len()`.
+    pub rank: usize,
+    /// Rank-indexed `host:port` rendezvous addresses. Empty for transports
+    /// that have no peers (loopback).
+    pub peers: Vec<String>,
+}
+
+/// An inter-worker byte-frame channel.
+///
+/// Object-safe so a transport choice is a value, not a type parameter — the
+/// engine only ever sees `Arc<dyn Transport>`, and implementations register
+/// by name in [`registry`]. Frames are opaque byte vectors (the engine
+/// speaks [`wire`]); delivery must be reliable and per-peer ordered, which
+/// is what the req/ack protocol assumes of the in-process channels too.
+pub trait Transport: Send + Sync {
+    /// Registry-style name (`"loopback"`, `"tcp"`, ...).
+    fn name(&self) -> &'static str;
+
+    /// This worker's rank.
+    fn rank(&self) -> usize;
+
+    /// Number of worker processes in the job.
+    fn world_size(&self) -> usize;
+
+    /// Ship one frame to peer `dst`. Errors are transport failures (broken
+    /// pipe, unknown peer), never flow control.
+    fn send(&self, dst: usize, frame: Vec<u8>) -> crate::Result<()>;
+
+    /// Next frame from any peer, or `None` if `timeout` elapses first.
+    fn recv_timeout(&self, timeout: Duration) -> crate::Result<Option<(usize, Vec<u8>)>>;
+}
+
+/// Engine-side egress: maps an envelope's destination node to the rank that
+/// owns it and ships the encoded frame — the remote half of the message bus
+/// (paper Fig 7 cases ⑤–⑦).
+pub struct Router {
+    transport: Arc<dyn Transport>,
+    node_rank: Arc<HashMap<u16, usize>>,
+}
+
+impl Router {
+    pub fn new(transport: Arc<dyn Transport>, node_rank: Arc<HashMap<u16, usize>>) -> Self {
+        Router { transport, node_rank }
+    }
+
+    /// Encode and ship `env` to the rank owning its destination node.
+    /// Transport failures are reported on stderr rather than unwinding a
+    /// queue thread: the run then trips the engine watchdog, which is the
+    /// diagnosable failure mode.
+    pub fn send(&self, env: &Envelope) {
+        let Some(&dst) = self.node_rank.get(&env.to.node()) else {
+            eprintln!("comm: no rank owns node {} (dropping message for {})", env.to.node(), env.to);
+            return;
+        };
+        if let Err(e) = self.transport.send(dst, wire::encode_envelope(env)) {
+            eprintln!("comm: send to rank {dst} failed: {e}");
+        }
+    }
+}

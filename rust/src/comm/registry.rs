@@ -1,0 +1,140 @@
+//! Name-keyed registry of transports, mirroring [`crate::runtime::registry`].
+//!
+//! A transport choice is a value, not a type parameter: callers resolve a
+//! name (`loopback`, `tcp`) plus a [`TransportConfig`] through
+//! [`create_transport`] at runtime, or `--transport NAME --rank R --peers
+//! LIST` through [`transport_from_args`]. Downstream code can
+//! [`register_transport`] its own fabrics (shared memory, RDMA, a test
+//! double) under new names.
+//!
+//! **Registration is first-come, single-owner**: registering a name twice is
+//! an error, never a silent override — two subsystems cannot shadow each
+//! other's transports. [`crate::runtime::registry::register_backend`]
+//! enforces the same policy for backends. (The two registries deliberately
+//! mirror each other line for line; folding them into one generic
+//! `Registry<F>` is a known follow-up once a policy change forces it.)
+
+use super::{Loopback, TcpTransport, Transport, TransportConfig};
+use crate::config::Args;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Factory producing a connected transport from a worker's config.
+pub type TransportFactory = fn(&TransportConfig) -> crate::Result<Arc<dyn Transport>>;
+
+fn loopback_factory(cfg: &TransportConfig) -> crate::Result<Arc<dyn Transport>> {
+    anyhow::ensure!(
+        cfg.rank == 0,
+        "loopback is single-process; --rank {} makes no sense without --transport tcp",
+        cfg.rank
+    );
+    Ok(Arc::new(Loopback))
+}
+
+fn tcp_factory(cfg: &TransportConfig) -> crate::Result<Arc<dyn Transport>> {
+    let t: Arc<dyn Transport> = TcpTransport::connect(cfg)?;
+    Ok(t)
+}
+
+fn table() -> &'static Mutex<BTreeMap<&'static str, TransportFactory>> {
+    static TABLE: OnceLock<Mutex<BTreeMap<&'static str, TransportFactory>>> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut m: BTreeMap<&'static str, TransportFactory> = BTreeMap::new();
+        m.insert("loopback", loopback_factory);
+        m.insert("tcp", tcp_factory);
+        Mutex::new(m)
+    })
+}
+
+/// Register a transport factory under a new name.
+///
+/// Errors if `name` is already registered (built-in or not): registration
+/// is first-come, single-owner — see the module docs.
+pub fn register_transport(name: &'static str, factory: TransportFactory) -> crate::Result<()> {
+    let mut t = table().lock().unwrap();
+    anyhow::ensure!(
+        !t.contains_key(name),
+        "transport `{name}` is already registered (names are single-owner; pick a new one)"
+    );
+    t.insert(name, factory);
+    Ok(())
+}
+
+/// Registered transport names, sorted.
+pub fn transport_names() -> Vec<String> {
+    table().lock().unwrap().keys().map(|k| k.to_string()).collect()
+}
+
+/// Connect the transport registered under `name`.
+pub fn create_transport(name: &str, cfg: &TransportConfig) -> crate::Result<Arc<dyn Transport>> {
+    let factory = table().lock().unwrap().get(name).copied();
+    match factory {
+        Some(f) => f(cfg),
+        None => anyhow::bail!(
+            "unknown transport `{name}` (available: {})",
+            transport_names().join(", ")
+        ),
+    }
+}
+
+/// Resolve `--transport NAME --rank R --peers h:p,h:p` from parsed CLI
+/// arguments; defaults to the in-process loopback.
+pub fn transport_from_args(args: &Args) -> crate::Result<Arc<dyn Transport>> {
+    let cfg = TransportConfig {
+        rank: args.usize("rank", 0),
+        peers: args
+            .get("peers")
+            .map(|p| p.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect())
+            .unwrap_or_default(),
+    };
+    create_transport(args.get("transport").unwrap_or("loopback"), &cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_transports_resolve() {
+        let names = transport_names();
+        assert!(names.contains(&"loopback".to_string()));
+        assert!(names.contains(&"tcp".to_string()));
+        let t = create_transport("loopback", &TransportConfig::default()).unwrap();
+        assert_eq!((t.rank(), t.world_size()), (0, 1));
+    }
+
+    #[test]
+    fn unknown_transport_lists_alternatives() {
+        let err =
+            create_transport("rdma", &TransportConfig::default()).unwrap_err().to_string();
+        assert!(err.contains("unknown transport"), "{err}");
+        assert!(err.contains("loopback"), "{err}");
+    }
+
+    #[test]
+    fn double_registration_is_an_error() {
+        fn null_factory(_: &TransportConfig) -> crate::Result<Arc<dyn Transport>> {
+            Ok(Arc::new(super::super::Loopback))
+        }
+        register_transport("null-test-transport", null_factory).unwrap();
+        let again = register_transport("null-test-transport", null_factory);
+        assert!(again.is_err(), "second registration must be rejected");
+        // built-ins are protected by the same policy
+        assert!(register_transport("tcp", null_factory).is_err());
+    }
+
+    #[test]
+    fn args_resolve_loopback_by_default() {
+        let args = crate::config::Args::parse(std::iter::empty());
+        let t = transport_from_args(&args).unwrap();
+        assert_eq!(t.name(), "loopback");
+    }
+
+    #[test]
+    fn loopback_rejects_nonzero_rank() {
+        let args = crate::config::Args::parse(
+            ["--rank", "1"].iter().map(|s| s.to_string()),
+        );
+        assert!(transport_from_args(&args).is_err());
+    }
+}

@@ -1,0 +1,343 @@
+//! TCP transport: length-prefixed frames over `std::net`, no new deps.
+//!
+//! **Rendezvous.** Every worker is launched with the same rank-indexed peer
+//! list (`--peers h0:p0,h1:p1,...`) and its own `--rank`. Rank `i` binds a
+//! listener on `peers[i]`, dials every lower rank, and accepts one
+//! connection from every higher rank; the dialer opens with a 12-byte
+//! handshake (`b"OFC1"`, dialer rank, world size) so both sides agree on the
+//! rank ↔ socket mapping and on the job shape before any actor traffic
+//! flows. Dials retry until the peer's listener is up (workers may start in
+//! any order), bounded by [`RENDEZVOUS_TIMEOUT`].
+//!
+//! **Framing.** `u32` little-endian length, then the [`super::wire`] frame.
+//! One reader thread per peer pushes `(peer, frame)` into a shared inbox;
+//! `send` serializes on a per-peer mutex, so writers never interleave a
+//! frame. TCP gives reliable per-peer ordering, which is exactly the
+//! guarantee the in-process channels give the req/ack protocol.
+
+use super::{Transport, TransportConfig};
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Handshake magic ("OneFlow Comm v1").
+const MAGIC: [u8; 4] = *b"OFC1";
+
+/// How long workers wait for their peers to show up.
+pub const RENDEZVOUS_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Upper bound on one frame (guards a corrupted length prefix, not a policy
+/// limit; a 256M-element f32 tensor still fits).
+const MAX_FRAME: usize = 1 << 30;
+
+/// TCP transport (see module docs).
+pub struct TcpTransport {
+    rank: usize,
+    world: usize,
+    /// Per-peer write half (`None` at our own rank).
+    writers: Vec<Option<Mutex<TcpStream>>>,
+    inbox: Mutex<mpsc::Receiver<(usize, Vec<u8>)>>,
+    /// Held only in a world with no peers (keeps the inbox connected).
+    /// With peers, the *reader threads* are the only senders, so every
+    /// peer connection dying disconnects the channel and `recv_timeout`
+    /// surfaces the loss instead of pretending the network went quiet.
+    _inbox_tx: Option<mpsc::Sender<(usize, Vec<u8>)>>,
+    readers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl TcpTransport {
+    /// Run the rendezvous and return the connected transport.
+    pub fn connect(cfg: &TransportConfig) -> crate::Result<std::sync::Arc<Self>> {
+        let world = cfg.peers.len();
+        anyhow::ensure!(world >= 1, "tcp transport needs --peers with every rank's host:port");
+        anyhow::ensure!(
+            cfg.rank < world,
+            "--rank {} out of range for {} peers",
+            cfg.rank,
+            world
+        );
+        let listener = TcpListener::bind(cfg.peers[cfg.rank].as_str()).map_err(|e| {
+            anyhow::anyhow!("rank {}: bind {}: {e}", cfg.rank, cfg.peers[cfg.rank])
+        })?;
+        listener.set_nonblocking(true)?;
+
+        let mut streams: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
+        for peer in 0..cfg.rank {
+            streams[peer] = Some(dial(&cfg.peers[peer], cfg.rank, world)?);
+        }
+        let deadline = Instant::now() + RENDEZVOUS_TIMEOUT;
+        let expected = world - 1 - cfg.rank;
+        let mut accepted = 0usize;
+        while accepted < expected {
+            match listener.accept() {
+                Ok((s, from)) => {
+                    // A stray connection (port scanner, health check, typo'd
+                    // client) must not kill the worker: drop it and keep
+                    // accepting. Only a rank claimed twice is fatal — that
+                    // means the job itself is misconfigured.
+                    match accept_handshake(&s, world) {
+                        Ok(peer) if peer > cfg.rank && peer < world => {
+                            anyhow::ensure!(
+                                streams[peer].is_none(),
+                                "rank {peer} connected twice (duplicate --rank in the job?)"
+                            );
+                            streams[peer] = Some(s);
+                            accepted += 1;
+                        }
+                        Ok(peer) => eprintln!(
+                            "comm: dropping handshake from unexpected rank {peer} \
+                             (dialers have lower rank)"
+                        ),
+                        Err(e) => {
+                            eprintln!("comm: dropping non-worker connection from {from}: {e}")
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    anyhow::ensure!(
+                        Instant::now() < deadline,
+                        "rank {}: rendezvous timed out with {}/{expected} higher ranks connected",
+                        cfg.rank,
+                        accepted
+                    );
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+
+        let (tx, rx) = mpsc::channel();
+        let mut writers = Vec::with_capacity(world);
+        let mut readers = Vec::new();
+        for (peer, slot) in streams.into_iter().enumerate() {
+            match slot {
+                Some(s) => {
+                    s.set_nodelay(true)?;
+                    let read_half = s.try_clone()?;
+                    let tx = tx.clone();
+                    readers.push(
+                        std::thread::Builder::new()
+                            .name(format!("of-comm-rx{peer}"))
+                            .spawn(move || reader_loop(peer, read_half, tx))?,
+                    );
+                    writers.push(Some(Mutex::new(s)));
+                }
+                None => writers.push(None),
+            }
+        }
+        Ok(std::sync::Arc::new(TcpTransport {
+            rank: cfg.rank,
+            world,
+            writers,
+            inbox: Mutex::new(rx),
+            _inbox_tx: if world == 1 { Some(tx) } else { None },
+            readers: Mutex::new(readers),
+        }))
+    }
+}
+
+/// Dial `addr`, retrying until its listener is up, then send the handshake.
+/// Only transient failures (peer not yet listening) are retried; a bad
+/// address or unresolvable host fails fast instead of eating the window.
+fn dial(addr: &str, my_rank: usize, world: usize) -> crate::Result<TcpStream> {
+    let deadline = Instant::now() + RENDEZVOUS_TIMEOUT;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(mut s) => {
+                let mut hs = Vec::with_capacity(12);
+                hs.extend_from_slice(&MAGIC);
+                hs.extend_from_slice(&(my_rank as u32).to_le_bytes());
+                hs.extend_from_slice(&(world as u32).to_le_bytes());
+                s.write_all(&hs)?;
+                return Ok(s);
+            }
+            Err(e) => {
+                let transient = matches!(
+                    e.kind(),
+                    std::io::ErrorKind::ConnectionRefused
+                        | std::io::ErrorKind::ConnectionReset
+                        | std::io::ErrorKind::ConnectionAborted
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::AddrNotAvailable
+                        | std::io::ErrorKind::Interrupted
+                );
+                anyhow::ensure!(
+                    transient,
+                    "rank {my_rank}: cannot dial peer `{addr}`: {e}"
+                );
+                anyhow::ensure!(
+                    Instant::now() < deadline,
+                    "rank {my_rank}: rendezvous with {addr} timed out: {e}"
+                );
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    }
+}
+
+/// Validate a dialer's handshake; returns the dialer's rank.
+fn accept_handshake(s: &TcpStream, world: usize) -> crate::Result<usize> {
+    // Accepted sockets must not inherit the listener's non-blocking mode.
+    s.set_nonblocking(false)?;
+    // Workers write the handshake in dial() before connect() returns, so it
+    // is normally already buffered when we accept. The short timeout bounds
+    // how long one silent stray connection can stall the (serial) accept
+    // loop; a genuine peer delayed past it is dropped here and the job
+    // fails loudly at this rank's rendezvous deadline rather than hanging.
+    s.set_read_timeout(Some(Duration::from_secs(2)))?;
+    let mut hs = [0u8; 12];
+    let mut r: &TcpStream = s; // std implements Read for &TcpStream
+    r.read_exact(&mut hs)?;
+    s.set_read_timeout(None)?;
+    anyhow::ensure!(hs[0..4] == MAGIC, "bad handshake magic (not a oneflow worker?)");
+    let peer = u32::from_le_bytes(hs[4..8].try_into().unwrap()) as usize;
+    let w = u32::from_le_bytes(hs[8..12].try_into().unwrap()) as usize;
+    anyhow::ensure!(w == world, "world size mismatch: peer says {w}, we say {world}");
+    Ok(peer)
+}
+
+/// Per-peer reader: length-prefixed frames into the shared inbox until the
+/// socket closes (peer done or our `Drop` shut it down).
+fn reader_loop(peer: usize, mut s: TcpStream, tx: mpsc::Sender<(usize, Vec<u8>)>) {
+    loop {
+        let mut len4 = [0u8; 4];
+        if s.read_exact(&mut len4).is_err() {
+            break;
+        }
+        let len = u32::from_le_bytes(len4) as usize;
+        if len > MAX_FRAME {
+            eprintln!("comm: rank {peer} sent an oversized frame ({len} bytes); closing");
+            break;
+        }
+        let mut buf = vec![0u8; len];
+        if s.read_exact(&mut buf).is_err() {
+            eprintln!("comm: connection to rank {peer} died mid-frame");
+            break;
+        }
+        if tx.send((peer, buf)).is_err() {
+            break;
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world_size(&self) -> usize {
+        self.world
+    }
+
+    fn send(&self, dst: usize, frame: Vec<u8>) -> crate::Result<()> {
+        anyhow::ensure!(frame.len() <= MAX_FRAME, "frame exceeds MAX_FRAME");
+        let Some(writer) = self.writers.get(dst).and_then(|w| w.as_ref()) else {
+            anyhow::bail!("rank {}: no connection to rank {dst}", self.rank)
+        };
+        let mut s = writer.lock().unwrap();
+        s.write_all(&(frame.len() as u32).to_le_bytes())?;
+        s.write_all(&frame)?;
+        Ok(())
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> crate::Result<Option<(usize, Vec<u8>)>> {
+        match self.inbox.lock().unwrap().recv_timeout(timeout) {
+            Ok(m) => Ok(Some(m)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                anyhow::bail!("all peer connections closed (a worker died or left the job)")
+            }
+        }
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        for w in self.writers.iter().flatten() {
+            if let Ok(s) = w.lock() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+        for h in self.readers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Rendezvous an `n`-rank TCP world on free localhost ports, returned in
+/// rank order — the single-machine helper tests, benches and examples use
+/// so the ports/threads dance lives in one place.
+pub fn tcp_local_world(n: usize) -> crate::Result<Vec<std::sync::Arc<TcpTransport>>> {
+    anyhow::ensure!(n >= 1, "world needs at least one rank");
+    let ports = free_local_ports(n)?;
+    let peers: Vec<String> = ports.iter().map(|p| format!("127.0.0.1:{p}")).collect();
+    let mut joins = Vec::new();
+    for rank in 1..n {
+        let cfg = TransportConfig { rank, peers: peers.clone() };
+        joins.push(std::thread::spawn(move || TcpTransport::connect(&cfg)));
+    }
+    let mut world = vec![TcpTransport::connect(&TransportConfig { rank: 0, peers })?];
+    for j in joins {
+        world.push(j.join().map_err(|_| anyhow::anyhow!("rendezvous thread panicked"))??);
+    }
+    Ok(world)
+}
+
+/// Grab `n` distinct free localhost ports (bind-to-zero discovery). The
+/// ports are released before the caller rebinds them, so a racing process
+/// could in principle steal one — acceptable for tests and examples.
+pub fn free_local_ports(n: usize) -> crate::Result<Vec<u16>> {
+    let mut holds = Vec::with_capacity(n);
+    let mut ports = Vec::with_capacity(n);
+    for _ in 0..n {
+        let l = TcpListener::bind("127.0.0.1:0")?;
+        ports.push(l.local_addr()?.port());
+        holds.push(l); // keep bound so later iterations pick distinct ports
+    }
+    Ok(ports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn pair() -> (Arc<TcpTransport>, Arc<TcpTransport>) {
+        let mut w = tcp_local_world(2).unwrap();
+        let t1 = w.pop().unwrap();
+        (w.pop().unwrap(), t1)
+    }
+
+    #[test]
+    fn two_rank_rendezvous_and_ordered_delivery() {
+        let (t0, t1) = pair();
+        assert_eq!((t0.rank(), t0.world_size()), (0, 2));
+        assert_eq!((t1.rank(), t1.world_size()), (1, 2));
+        for i in 0..100u8 {
+            t0.send(1, vec![i, i, i]).unwrap();
+        }
+        for i in 0..100u8 {
+            let (src, frame) = t1.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+            assert_eq!(src, 0);
+            assert_eq!(frame, vec![i, i, i], "frames reordered or corrupted");
+        }
+        t1.send(0, b"pong".to_vec()).unwrap();
+        let (src, frame) = t0.recv_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!((src, frame.as_slice()), (1, b"pong".as_slice()));
+    }
+
+    #[test]
+    fn bad_config_rejected() {
+        assert!(TcpTransport::connect(&TransportConfig { rank: 0, peers: vec![] }).is_err());
+        assert!(TcpTransport::connect(&TransportConfig {
+            rank: 2,
+            peers: vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()],
+        })
+        .is_err());
+    }
+}

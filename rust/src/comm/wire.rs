@@ -1,0 +1,275 @@
+//! Wire format for actor messages crossing a [`super::Transport`].
+//!
+//! One frame is one [`Frame`]: either a routed actor [`Envelope`] (the
+//! req/ack protocol with optional tensor payloads and virtual timestamps)
+//! or the end-of-run `Finalize` exchange that merges per-rank makespans.
+//!
+//! Everything is little-endian and fixed-width; f32/f64 travel as raw IEEE
+//! bits so values and timestamps round-trip **exactly** — the bitwise
+//! equality between a 2-process and a single-process run rests on this
+//! (property-tested in `tests/transport.rs`).
+
+use crate::actor::msg::{Envelope, Msg};
+use crate::actor::{ActorAddr, Piece};
+use crate::compiler::RegId;
+use crate::tensor::{DType, Tensor};
+use std::sync::Arc;
+
+/// Frame tags (first byte of every frame).
+const TAG_ENVELOPE: u8 = 0;
+const TAG_FINALIZE: u8 = 1;
+
+/// Message tags within an envelope frame.
+const MSG_REQ: u8 = 0;
+const MSG_ACK: u8 = 1;
+const MSG_KICK: u8 = 2;
+
+/// One decoded transport frame.
+#[derive(Debug)]
+pub enum Frame {
+    /// A routed actor message (cross-rank leg of the message bus).
+    Envelope(Envelope),
+    /// End-of-run barrier: `rank` finished all local actors with the given
+    /// local virtual makespan; every rank reports the max over all ranks.
+    Finalize { rank: u32, makespan: f64 },
+}
+
+/// Encode an envelope frame without cloning the envelope.
+pub fn encode_envelope(env: &Envelope) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    out.push(TAG_ENVELOPE);
+    put_u64(&mut out, env.to.0);
+    match &env.msg {
+        Msg::Req { reg, piece, data, ts } => {
+            out.push(MSG_REQ);
+            put_u64(&mut out, reg.0 as u64);
+            put_u64(&mut out, *piece as u64);
+            put_u64(&mut out, ts.to_bits());
+            match data {
+                Some(piece_data) => {
+                    out.push(1);
+                    put_u32(&mut out, piece_data.len() as u32);
+                    for t in piece_data.iter() {
+                        put_tensor(&mut out, t);
+                    }
+                }
+                None => out.push(0),
+            }
+        }
+        Msg::Ack { reg, piece, ts } => {
+            out.push(MSG_ACK);
+            put_u64(&mut out, reg.0 as u64);
+            put_u64(&mut out, *piece as u64);
+            put_u64(&mut out, ts.to_bits());
+        }
+        Msg::Kick => out.push(MSG_KICK),
+    }
+    out
+}
+
+/// Encode a finalize frame.
+pub fn encode_finalize(rank: u32, makespan: f64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(13);
+    out.push(TAG_FINALIZE);
+    put_u32(&mut out, rank);
+    put_u64(&mut out, makespan.to_bits());
+    out
+}
+
+/// Decode a frame; rejects truncated, oversized-field, or trailing bytes.
+pub fn decode(bytes: &[u8]) -> crate::Result<Frame> {
+    let mut c = Cursor { buf: bytes, pos: 0 };
+    let frame = match c.u8()? {
+        TAG_ENVELOPE => {
+            let to = ActorAddr(c.u64()?);
+            let msg = match c.u8()? {
+                MSG_REQ => {
+                    let reg = RegId(c.u64()? as usize);
+                    let piece = c.u64()? as usize;
+                    let ts = f64::from_bits(c.u64()?);
+                    let data = match c.u8()? {
+                        0 => None,
+                        1 => {
+                            let n = c.u32()? as usize;
+                            anyhow::ensure!(n <= 1 << 16, "absurd tensor count {n}");
+                            let mut tensors = Vec::with_capacity(n);
+                            for _ in 0..n {
+                                tensors.push(take_tensor(&mut c)?);
+                            }
+                            let payload: Piece = Arc::new(tensors);
+                            Some(payload)
+                        }
+                        other => anyhow::bail!("bad data-present flag {other}"),
+                    };
+                    Msg::Req { reg, piece, data, ts }
+                }
+                MSG_ACK => Msg::Ack {
+                    reg: RegId(c.u64()? as usize),
+                    piece: c.u64()? as usize,
+                    ts: f64::from_bits(c.u64()?),
+                },
+                MSG_KICK => Msg::Kick,
+                other => anyhow::bail!("bad message tag {other}"),
+            };
+            Frame::Envelope(Envelope { to, msg })
+        }
+        TAG_FINALIZE => Frame::Finalize { rank: c.u32()?, makespan: f64::from_bits(c.u64()?) },
+        other => anyhow::bail!("bad frame tag {other}"),
+    };
+    anyhow::ensure!(c.pos == bytes.len(), "{} trailing bytes after frame", bytes.len() - c.pos);
+    Ok(frame)
+}
+
+// ---- primitives ----
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn dtype_tag(d: DType) -> u8 {
+    match d {
+        DType::F32 => 0,
+        DType::F16 => 1,
+        DType::I32 => 2,
+    }
+}
+
+fn dtype_from_tag(t: u8) -> crate::Result<DType> {
+    Ok(match t {
+        0 => DType::F32,
+        1 => DType::F16,
+        2 => DType::I32,
+        other => anyhow::bail!("bad dtype tag {other}"),
+    })
+}
+
+fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
+    out.push(dtype_tag(t.dtype));
+    out.push(t.shape.rank() as u8);
+    for d in 0..t.shape.rank() {
+        put_u64(out, t.shape.dim(d) as u64);
+    }
+    out.reserve(t.data.len() * 4);
+    for &x in &t.data {
+        put_u32(out, x.to_bits());
+    }
+}
+
+fn take_tensor(c: &mut Cursor<'_>) -> crate::Result<Tensor> {
+    let dtype = dtype_from_tag(c.u8()?)?;
+    let rank = c.u8()? as usize;
+    let mut dims = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        let d = c.u64()? as usize;
+        anyhow::ensure!(d < 1 << 32, "absurd dimension {d}");
+        dims.push(d);
+    }
+    // checked: a corrupted frame must yield Err, never a wrapping multiply
+    // (inconsistent tensor) or an abort-sized allocation
+    let bytes = dims
+        .iter()
+        .try_fold(1usize, |a, &d| a.checked_mul(d))
+        .and_then(|e| e.checked_mul(4))
+        .ok_or_else(|| anyhow::anyhow!("tensor element count overflows"))?;
+    anyhow::ensure!(c.remaining() >= bytes, "tensor data truncated");
+    let elems = bytes / 4;
+    let mut data = Vec::with_capacity(elems);
+    for _ in 0..elems {
+        data.push(f32::from_bits(c.u32()?));
+    }
+    Ok(Tensor { shape: dims.into(), dtype, data })
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Cursor<'_> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> crate::Result<&[u8]> {
+        anyhow::ensure!(self.remaining() >= n, "frame truncated at byte {}", self.pos);
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> crate::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> crate::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> crate::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::QueueKind;
+
+    #[test]
+    fn ack_and_kick_roundtrip() {
+        let addr = ActorAddr::new(3, QueueKind::Net, 1, 42);
+        for msg in [Msg::Ack { reg: RegId(7), piece: 12, ts: 1.5e-3 }, Msg::Kick] {
+            let bytes = encode_envelope(&Envelope { to: addr, msg });
+            let again = match decode(&bytes).unwrap() {
+                Frame::Envelope(e) => encode_envelope(&e),
+                f => panic!("wrong frame {f:?}"),
+            };
+            assert_eq!(bytes, again);
+        }
+    }
+
+    #[test]
+    fn req_payload_bits_survive() {
+        let t = Tensor::f32([2, 3], vec![0.1, -0.0, f32::MIN_POSITIVE, 3.25e7, -1.0, 2.0]);
+        let env = Envelope {
+            to: ActorAddr::new(1, QueueKind::Compute, 0, 9),
+            msg: Msg::Req {
+                reg: RegId(3),
+                piece: 5,
+                data: Some(Arc::new(vec![t.clone()])),
+                ts: 0.125,
+            },
+        };
+        let Frame::Envelope(e) = decode(&encode_envelope(&env)).unwrap() else {
+            panic!("wrong frame kind")
+        };
+        let Msg::Req { data: Some(d), ts, .. } = e.msg else { panic!("wrong msg") };
+        assert_eq!(ts.to_bits(), 0.125f64.to_bits());
+        assert_eq!(d[0].shape, t.shape);
+        assert_eq!(d[0].dtype, t.dtype);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&d[0].data), bits(&t.data));
+    }
+
+    #[test]
+    fn finalize_roundtrip_and_bad_frames_reject() {
+        let b = encode_finalize(2, 0.75);
+        match decode(&b).unwrap() {
+            Frame::Finalize { rank, makespan } => {
+                assert_eq!(rank, 2);
+                assert_eq!(makespan.to_bits(), 0.75f64.to_bits());
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+        assert!(decode(&[]).is_err());
+        assert!(decode(&[99]).is_err());
+        assert!(decode(&b[..b.len() - 1]).is_err());
+        let mut trailing = b.clone();
+        trailing.push(0);
+        assert!(decode(&trailing).is_err());
+    }
+}

@@ -16,6 +16,14 @@
 //!   back-pressure and natural pipelining via multi-slot registers
 //!   (paper §4–5, Figs 6–8).
 //!
+//! The runtime is multi-process-capable through the **transport plane**
+//! ([`comm`]): an object-safe [`comm::Transport`] registered by name
+//! (`--transport loopback|tcp --rank R --peers LIST`), a bit-exact wire
+//! format for envelopes/tensors/virtual timestamps, and a launch partition
+//! that gives each worker process only its own plan nodes' actors — so a
+//! 2-process pipeline-parallel run matches the single-process run bitwise
+//! (`examples/pipeline_tcp_gpt.rs`, `tests/transport.rs`).
+//!
 //! Real numerics execute through [`runtime`] backends, which are object-safe
 //! and selected *at runtime* through [`runtime::registry`] (`--backend
 //! sim|native` via [`config::Args`]): hand-written native CPU kernels
@@ -61,6 +69,7 @@ pub mod boxing;
 pub mod exec;
 pub mod compiler;
 pub mod actor;
+pub mod comm;
 pub mod runtime;
 pub mod memory;
 pub mod optimizer;

@@ -7,6 +7,7 @@
 
 use oneflow::actor::Engine;
 use oneflow::bench::Table;
+use oneflow::comm;
 use oneflow::compiler::{compile, CompileOptions};
 use oneflow::config::Args;
 use oneflow::data::RandomSource;
@@ -30,8 +31,10 @@ fn main() {
                 "usage: oneflow <train|simulate|plan> [--flags]\n\
                  train:    --steps N --artifacts DIR --lr F  (needs a build with --features pjrt)\n\
                  simulate: --model gpt|resnet --dp N --mp N --pp N --batch N --hidden N --layers N --pieces N [--zero] [--checkpoint] [--backend {}]\n\
-                 plan:     same flags as simulate; prints the physical plan",
-                backend_names().join("|")
+                 \x20          [--transport {}] [--rank R --peers h:p,h:p,...]  (multi-process: one worker per rank)\n\
+                 plan:     same flags as simulate [--world N]; prints the physical plan (+ per-rank partition)",
+                backend_names().join("|"),
+                comm::transport_names().join("|")
             );
             std::process::exit(2);
         }
@@ -107,12 +110,32 @@ fn simulate(args: &Args) {
     let pieces = args.usize("pieces", 8);
     // the backend is a runtime choice through the registry; `sim` (data-free)
     // is the right default for simulate
-    let backend = backend_from_args(&args, "sim").unwrap_or_else(|e| {
+    let backend = backend_from_args(args, "sim").unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+    // so is the transport: loopback keeps everything in-process, `--transport
+    // tcp --rank R --peers ...` makes this invocation one worker of a job
+    let transport = comm::transport_from_args(args).unwrap_or_else(|e| {
         eprintln!("error: {e}");
         std::process::exit(2);
     });
     let needs_data = backend.has_data();
     let mut engine = Engine::new(plan, backend);
+    if transport.world_size() > 1 {
+        let parts = comm::launch::partition(engine.plan(), transport.world_size());
+        let mine = &parts[transport.rank()];
+        println!(
+            "rank {}/{} over {}: hosting nodes {:?} ({} of {} actors)",
+            transport.rank(),
+            transport.world_size(),
+            transport.name(),
+            mine.nodes,
+            mine.actors.len(),
+            engine.plan().nodes.len()
+        );
+    }
+    engine = engine.with_transport(transport);
     if needs_data {
         // real-numerics backends must be fed; synthetic batches keep every
         // advertised `--backend` choice runnable (native is CPU-slow at
@@ -152,6 +175,10 @@ fn plan(args: &Args) {
     let plan = compile(&g, &[loss], &upd, &opts);
     println!("{}", plan.dump());
     println!("nodes: {}  boxing ops: {}", plan.nodes.len(), plan.boxing_count());
+    let world = args.usize("world", 1);
+    if world > 1 {
+        println!("\npartition over {world} worker ranks:\n{}", comm::launch::dump(&plan, world));
+    }
     let mut devs: Vec<_> = plan.memory_by_device().into_iter().collect();
     devs.sort_by_key(|(d, _)| *d);
     for (dev, bytes) in devs {

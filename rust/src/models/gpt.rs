@@ -2,7 +2,7 @@
 //! tensor(model) × pipeline parallelism from SBP hints and stage placements
 //! alone — the Megatron comparison graph.
 
-use super::nn::{flops_op, loss_head};
+use super::nn::{flops_op, linear, loss_head};
 use crate::exec::QueueKind;
 use crate::graph::{autograd, LogicalGraph, NodeId, OpKind, TensorId};
 use crate::optimizer::{attach_sgd, Sharding};
@@ -380,6 +380,107 @@ pub fn train_e2e(
     )
 }
 
+/// A **real-numerics** pipeline-parallel GPT-style byte LM for the
+/// distributed-runtime experiments (`examples/pipeline_tcp_gpt.rs`,
+/// `tests/transport.rs`): token embedding on stage 0, per-stage MLP blocks
+/// (linear → gelu → linear → residual; attention is cost-only in this repo,
+/// DESIGN.md §3) and the LM head + softmax-xent on the last stage. Each
+/// stage lives on its **own node**, so a multi-process launch partitions it
+/// one stage per rank and every activation/gradient hop between stages
+/// crosses the transport.
+#[derive(Clone, Debug)]
+pub struct GptPipelineConfig {
+    pub stages: usize,
+    pub vocab: usize,
+    pub hidden: usize,
+    /// MLP expansion width.
+    pub ff: usize,
+    pub blocks_per_stage: usize,
+    /// Tokens per piece (batch × seq, flattened).
+    pub rows: usize,
+    pub lr: f32,
+}
+
+impl Default for GptPipelineConfig {
+    fn default() -> Self {
+        GptPipelineConfig { stages: 2, vocab: 64, hidden: 32, ff: 64, blocks_per_stage: 1, rows: 64, lr: 0.2 }
+    }
+}
+
+/// Build the training graph for [`GptPipelineConfig`]. Returns
+/// `(graph, loss, var-updates)` ready for [`crate::compiler::compile`];
+/// inputs are named `ids` / `labels` (plus autograd's `dloss` seed), so a
+/// data source keyed on those names feeds it — see the example.
+pub fn gpt_pipeline_real(
+    cfg: &GptPipelineConfig,
+) -> (LogicalGraph, TensorId, HashMap<NodeId, TensorId>) {
+    assert!(cfg.stages >= 1, "need at least one stage");
+    let stages: Vec<Placement> = (0..cfg.stages).map(|s| Placement::node(s, 1)).collect();
+    let mut g = LogicalGraph::new();
+
+    let p0 = stages[0].clone();
+    let ids = g.add1(
+        "ids",
+        OpKind::Input { shape: [cfg.rows].into(), dtype: crate::tensor::DType::I32 },
+        &[],
+        p0.clone(),
+    );
+    let table = g.add1(
+        "tok_embed",
+        OpKind::Variable {
+            shape: [cfg.vocab, cfg.hidden].into(),
+            dtype: crate::tensor::DType::F32,
+            init_std: 0.08,
+        },
+        &[],
+        p0.clone(),
+    );
+    let mut h = g.add1("embed", OpKind::Embedding, &[table, ids], p0);
+
+    for (stage, pl) in stages.iter().enumerate() {
+        for blk in 0..cfg.blocks_per_stage {
+            let name = format!("s{stage}b{blk}");
+            let up = linear(
+                &mut g,
+                &format!("{name}_up"),
+                h,
+                cfg.ff,
+                pl,
+                crate::tensor::DType::F32,
+                None,
+                Some(OpKind::Gelu),
+            );
+            let down = linear(
+                &mut g,
+                &format!("{name}_down"),
+                up,
+                cfg.hidden,
+                pl,
+                crate::tensor::DType::F32,
+                None,
+                None,
+            );
+            h = g.add1(format!("{name}_res"), OpKind::Add, &[h, down], pl.clone());
+        }
+    }
+
+    let last = stages[cfg.stages - 1].clone();
+    let logits =
+        linear(&mut g, "head", h, cfg.vocab, &last, crate::tensor::DType::F32, None, None);
+    let labels = g.add1(
+        "labels",
+        OpKind::Input { shape: [cfg.rows].into(), dtype: crate::tensor::DType::I32 },
+        &[],
+        last.clone(),
+    );
+    let outs = g.add("xent", OpKind::SparseXent, &[logits, labels], last);
+    let loss = outs[0];
+
+    let bw = autograd::build_backward(&mut g, loss);
+    let updates = autograd::append_sgd(&mut g, &bw, cfg.lr);
+    (g, loss, updates)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -431,6 +532,34 @@ mod tests {
             })
             .count();
         assert!(pulls > 0, "no cross-stage transfers\n{}", plan.dump());
+    }
+
+    #[test]
+    fn pipeline_real_spans_one_node_per_stage() {
+        let cfg = GptPipelineConfig { stages: 3, ..Default::default() };
+        let (g, loss, upd) = gpt_pipeline_real(&cfg);
+        let plan = compile(&g, &[loss], &upd, &CompileOptions::default());
+        let mut nodes: Vec<usize> = plan.nodes.iter().map(|n| n.device.node).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        assert_eq!(nodes, vec![0, 1, 2], "one plan node per stage");
+        // cross-stage pulls exist in both directions (activations fwd,
+        // gradients bwd)
+        let pulls = plan
+            .boxing_nodes()
+            .iter()
+            .filter(|n| {
+                matches!(&n.kernel, PhysKernel::Boxing { in_place, out_place, .. }
+                    if !in_place.same_devices(out_place))
+            })
+            .count();
+        assert!(pulls >= 2, "expected fwd+bwd stage crossings\n{}", plan.dump());
+        // every variable got its training back edge
+        for v in &plan.vars {
+            for &pid in &v.phys {
+                assert!(plan.nodes[pid.0].update_from.is_some(), "var {} lacks back edge", v.name);
+            }
+        }
     }
 
     #[test]

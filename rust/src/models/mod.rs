@@ -13,7 +13,7 @@ pub mod gpt;
 pub mod insightface;
 pub mod wide_deep;
 
-pub use gpt::{gpt_sim, GptSimConfig};
+pub use gpt::{gpt_pipeline_real, gpt_sim, GptPipelineConfig, GptSimConfig};
 pub use resnet::{resnet50, ResnetConfig};
 pub use bert::bert_base;
 pub use insightface::insightface;

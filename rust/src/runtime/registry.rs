@@ -45,9 +45,21 @@ fn table() -> &'static Mutex<BTreeMap<&'static str, BackendFactory>> {
     })
 }
 
-/// Register (or override) a backend factory under `name`.
-pub fn register_backend(name: &'static str, factory: BackendFactory) {
-    table().lock().unwrap().insert(name, factory);
+/// Register a backend factory under a new name.
+///
+/// Registration is **first-come, single-owner**: registering a name twice
+/// (including the built-ins `sim`, `native`, `pjrt`) is an error, never a
+/// silent override — two subsystems cannot shadow each other's backends.
+/// [`crate::comm::registry::register_transport`] enforces the same policy
+/// for transports.
+pub fn register_backend(name: &'static str, factory: BackendFactory) -> crate::Result<()> {
+    let mut t = table().lock().unwrap();
+    anyhow::ensure!(
+        !t.contains_key(name),
+        "backend `{name}` is already registered (names are single-owner; pick a new one)"
+    );
+    t.insert(name, factory);
+    Ok(())
 }
 
 /// Registered backend names, sorted.
@@ -104,8 +116,11 @@ mod tests {
         fn null_factory() -> crate::Result<std::sync::Arc<dyn crate::runtime::Backend>> {
             Ok(std::sync::Arc::new(Null))
         }
-        register_backend("null-test", null_factory);
+        register_backend("null-test", null_factory).unwrap();
         assert!(backend_names().contains(&"null-test".to_string()));
         assert!(!create_backend("null-test").unwrap().has_data());
+        // registration is single-owner: duplicates (and built-ins) reject
+        assert!(register_backend("null-test", null_factory).is_err());
+        assert!(register_backend("sim", null_factory).is_err());
     }
 }
