@@ -1,0 +1,101 @@
+//! Ring-vs-naive collective comparison (§Dist, Table 2's `(p-1)/p` claim
+//! made measurable): the rank-local ring all-reduce spreads the gradient
+//! combine so the busiest member carries `2(p-1)/p · |T|`, while the naive
+//! central path (every shard to one boxing actor, every result back out —
+//! what a multi-rank job did before the ring collectives landed) funnels
+//! `2(p-1) · |T|` through one member. Wall time here is host-copy dominated
+//! (one process), so the bytes columns are the load-bearing result.
+
+use oneflow::bench::Table;
+use oneflow::boxing::{apply_boxing_ranked, RankedBoxing};
+use oneflow::comm::CollectiveHub;
+use oneflow::sbp::{NdSbp, B, P};
+use oneflow::tensor::ops::add_n;
+use oneflow::tensor::{DType, Tensor};
+use oneflow::util::{fmt, Rng};
+use std::time::{Duration, Instant};
+
+/// Naive central all-reduce: every member ships its shard to member 0,
+/// member 0 reduces and ships the result back to every member.
+fn naive_allreduce(shards: &[Tensor]) -> (Vec<Tensor>, f64) {
+    let p = shards.len();
+    let refs: Vec<&Tensor> = shards.iter().collect();
+    let reduced = add_n(&refs);
+    let t_bytes = (reduced.elems() * 4) as f64;
+    // (p-1) inbound + (p-1) outbound, all through member 0
+    let busiest = 2.0 * (p as f64 - 1.0) * t_bytes;
+    ((0..p).map(|_| reduced.clone()).collect(), busiest)
+}
+
+fn ring_allreduce(shards: &[Tensor]) -> (Vec<Tensor>, f64) {
+    let p = shards.len();
+    let hub = CollectiveHub::new();
+    let ranks = vec![0usize; p];
+    let cx = RankedBoxing {
+        hub: &hub,
+        transport: None,
+        member_rank: &ranks,
+        my_rank: 0,
+        timeout: Duration::from_secs(10),
+    };
+    let local: Vec<(usize, Tensor)> = shards.iter().cloned().enumerate().collect();
+    let res = apply_boxing_ranked(
+        &cx,
+        1,
+        0,
+        local,
+        &NdSbp::d1(P),
+        &NdSbp::d1(B),
+        &[p],
+        &shards[0].shape,
+    )
+    .expect("ring all-reduce");
+    let busiest = res.bytes_sent / p as f64; // every member sends the same volume
+    (res.shards.into_iter().map(|(_, t)| t).collect(), busiest)
+}
+
+fn main() {
+    let mut tab = Table::new(
+        "Ring vs naive all-reduce (gradient combine, busiest-member bytes)",
+        &["p", "|T|", "ring busiest", "naive busiest", "ring ms", "naive ms"],
+    );
+    let mut r = Rng::new(17);
+    for &p in &[2usize, 4, 8] {
+        // a 1M-element f32 gradient, divisible by every p under test
+        let t = Tensor::randn([1024, 1024], DType::F32, 1.0, &mut r);
+        let shards: Vec<Tensor> = (0..p)
+            .map(|i| if i == 0 { t.clone() } else { Tensor::zeros(t.shape.clone(), t.dtype) })
+            .collect();
+
+        let t0 = Instant::now();
+        let (ring_out, ring_busiest) = ring_allreduce(&shards);
+        let ring_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let t1 = Instant::now();
+        let (naive_out, naive_busiest) = naive_allreduce(&shards);
+        let naive_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+        // sanity: identical results bitwise
+        for (a, b) in ring_out.iter().zip(&naive_out) {
+            assert_eq!(
+                a.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "ring and naive all-reduce disagree"
+            );
+        }
+        let t_bytes = (t.elems() * 4) as f64;
+        tab.row(&[
+            p.to_string(),
+            fmt::bytes(t_bytes),
+            fmt::bytes(ring_busiest),
+            fmt::bytes(naive_busiest),
+            format!("{ring_ms:.1}"),
+            format!("{naive_ms:.1}"),
+        ]);
+    }
+    tab.print();
+    println!(
+        "ring busiest member carries 2(p-1)/p·|T| vs the naive central actor's 2(p-1)·|T| — \
+         a p× reduction on the bottleneck link, exactly Table 2's ring model"
+    );
+}

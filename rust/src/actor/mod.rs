@@ -236,9 +236,21 @@ impl Actor {
                 } else {
                     vec![]
                 };
-                let out = ctx.execute(&self.node, &resolved);
+                // A replicated collective boxing op runs rank-locally: this
+                // replica transforms only the shards its rank owns, trading
+                // ring chunks with peer replicas instead of gathering every
+                // shard into one process (boxing::ranked).
+                let coll = ctx.coll.filter(|rt| rt.is_collective(self.node.id.0));
+                let (out, moved) = match coll {
+                    Some(rt) if ctx.has_data() => rt.execute(&self.node, &resolved, piece),
+                    Some(rt) => {
+                        // data-free mode: no chunks move; account this
+                        // rank's analytic share of the Table 2 bytes
+                        (Vec::new(), boxing_bytes(&self.node) * rt.share(self.node.id.0))
+                    }
+                    None => (ctx.execute(&self.node, &resolved), boxing_bytes(&self.node)),
+                };
                 let dur = action_secs(&self.node, ctx.cluster());
-                let moved = boxing_bytes(&self.node);
                 (Arc::new(out), dur, moved)
             }
         };
@@ -314,6 +326,9 @@ pub struct Ctx<'a> {
     pub queue_free: f64,
     pub feeder: &'a dyn Fn(crate::graph::NodeId, usize, usize) -> Vec<Tensor>,
     pub data: bool,
+    /// Rank-local collective runtime (multi-rank worlds with replicated
+    /// boxing ops only; `None` leaves behavior identical to the seed).
+    pub(crate) coll: Option<&'a engine::CollectiveRt>,
 }
 
 /// `OF_TRACE=1` prints every action with its input shapes (debug aid).

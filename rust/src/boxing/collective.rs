@@ -52,7 +52,7 @@ fn same_placement(
     // (S(1), S(1)) -> (P, S(1)) re-orders columns if done dim-by-dim).
     // Interacting cases fall back to a global gather+scatter with bytes
     // accounted by the Table 2 per-dim formulas.
-    if nd_dims_interact(in_nd, out_nd) {
+    if dims_interact(in_nd, out_nd) {
         let logical = gather(in_shards, in_nd, &place.hierarchy);
         let shards = scatter(&logical, out_nd, &place.hierarchy);
         let mut bytes = 0.0;
@@ -103,8 +103,11 @@ fn same_placement(
 
 /// True when a per-dim sequential transition would be unsound: two hierarchy
 /// dims split the same tensor axis (before or after), or a transitioning dim
-/// both leaves and enters a Split axis also used elsewhere.
-fn nd_dims_interact(in_nd: &NdSbp, out_nd: &NdSbp) -> bool {
+/// both leaves and enters a Split axis also used elsewhere. Public because
+/// the engine uses it to decide whether a multi-rank boxing op can run
+/// rank-locally ([`crate::boxing::ranked`]) or must fall back to the
+/// single-actor gather path.
+pub fn dims_interact(in_nd: &NdSbp, out_nd: &NdSbp) -> bool {
     let rank = in_nd.rank();
     if rank < 2 {
         return false;
@@ -304,7 +307,7 @@ fn reduce_group(group: &[&Tensor], k: ReduceKind) -> Tensor {
 }
 
 /// Write `part` into `dst` at offset `off` along `axis`.
-fn embed_slice(dst: &mut Tensor, part: &Tensor, axis: usize, off: usize) {
+pub(crate) fn embed_slice(dst: &mut Tensor, part: &Tensor, axis: usize, off: usize) {
     let outer: usize = dst.shape.0[..axis].iter().product();
     let inner: usize = dst.shape.0[axis + 1..].iter().product();
     let ddim = dst.shape.dim(axis);

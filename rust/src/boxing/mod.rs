@@ -9,6 +9,8 @@
 
 pub mod cost;
 pub mod collective;
+pub mod ranked;
 
 pub use cost::{transfer_bytes, transfer_secs, BoxingMethod};
-pub use collective::apply_boxing;
+pub use collective::{apply_boxing, dims_interact};
+pub use ranked::{apply_boxing_ranked, RankedBoxing, RankedResult};

@@ -1,0 +1,358 @@
+//! **Rank-local boxing**: execute a same-placement boxing transition with
+//! each worker rank transforming only the shards it owns, exchanging chunks
+//! with peer ranks through [`crate::comm::collective`] ring collectives.
+//!
+//! [`apply_boxing`](super::apply_boxing) assumes every shard of the logical
+//! tensor is present in one address space — fine for a single process, wrong
+//! for a multi-process job where the gradient all-reduce of a data-parallel
+//! run spans worker ranks. [`apply_boxing_ranked`] is the multi-process
+//! entry point the actor engine calls with its partition from
+//! [`crate::comm::launch`]: `local_in` holds only this rank's input shards,
+//! the ring steps move exactly the Table 2 byte volumes, and the result is
+//! **bitwise-equal** to the single-process path (reductions fold in
+//! ascending member order, the `add_n` association) — DESIGN.md invariant 7.
+//!
+//! Only non-interacting per-dim transitions are supported (the same
+//! precondition [`super::dims_interact`] guards in the sequential path);
+//! the engine falls back to the single-actor gather path otherwise.
+
+use super::collective::embed_slice;
+use crate::comm::collective::{
+    all_gather_axis, all_reduce_flat, all_to_all, reduce_scatter_axis, CollectiveHub, GroupComm,
+};
+use crate::comm::Transport;
+use crate::sbp::{shard_shape, NdSbp, ReduceKind, Sbp};
+use crate::tensor::ops::slice_axis;
+use crate::tensor::shape::{split_offsets, split_sizes};
+use crate::tensor::{Shape, Tensor};
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// Everything a rank needs to run its share of boxing collectives.
+pub struct RankedBoxing<'a> {
+    pub hub: &'a CollectiveHub,
+    /// `None` when every member is local (tests, degenerate worlds).
+    pub transport: Option<&'a dyn Transport>,
+    /// Flat placement index → owning worker rank (from the launch
+    /// partition's node→rank map).
+    pub member_rank: &'a [usize],
+    pub my_rank: usize,
+    /// Per-chunk receive deadline (a dead peer surfaces as an error here).
+    pub timeout: Duration,
+}
+
+/// This rank's output shards plus the payload bytes its members sent.
+#[derive(Debug)]
+pub struct RankedResult {
+    /// `(flat placement index, shard)` for every member this rank owns.
+    pub shards: Vec<(usize, Tensor)>,
+    /// f32-payload bytes sent across device boundaries by this rank's
+    /// members (per-rank share of the Table 2 volume).
+    pub bytes_sent: f64,
+}
+
+/// Per-collective sequence key: `node(16) | piece(24) | dim(4) | group(20)`.
+/// Concurrent collectives (different boxing ops, different pieces in flight,
+/// different hierarchy dims/groups) get distinct keys, so their chunk
+/// streams never interleave; piece wraps at 2^24, far beyond any register's
+/// slot quota (only *concurrent* pieces must differ).
+fn collective_key(node: usize, piece: usize, dim: usize, group: usize) -> u64 {
+    assert!(node < 1 << 16, "boxing op id {node} exceeds the 16-bit key field");
+    assert!(dim < 1 << 4 && group < 1 << 20, "hierarchy too large for the key layout");
+    ((node as u64) << 48)
+        | (((piece as u64) & 0xFF_FFFF) << 24)
+        | ((dim as u64) << 20)
+        | group as u64
+}
+
+/// Hierarchy coordinate of flat index `i` (row-major; mirrors
+/// `Placement::coord`).
+fn coord_of(i: usize, hierarchy: &[usize]) -> Vec<usize> {
+    let mut rem = i;
+    let mut coord = vec![0; hierarchy.len()];
+    for d in (0..hierarchy.len()).rev() {
+        coord[d] = rem % hierarchy[d];
+        rem /= hierarchy[d];
+    }
+    coord
+}
+
+/// The logical sub-tensor one group along `dim` transitions: the full
+/// logical shape narrowed by every *other* hierarchy dim's Split at this
+/// group's coordinate (in dim order — the nesting `sbp::scatter` applies).
+fn group_logical(
+    logical: &Shape,
+    cur: &NdSbp,
+    hierarchy: &[usize],
+    dim: usize,
+    coord: &[usize],
+) -> Shape {
+    let mut shape = logical.clone();
+    for (d2, s2) in cur.0.iter().enumerate() {
+        if d2 == dim {
+            continue;
+        }
+        if let Sbp::Split(a) = s2 {
+            let sizes = split_sizes(shape.dim(*a), hierarchy[d2]);
+            shape = shape.with_dim(*a, sizes[coord[d2]]);
+        }
+    }
+    shape
+}
+
+/// Apply a same-placement boxing transition rank-locally (see module docs).
+///
+/// * `node` / `piece` seed the per-collective sequence keys — pass the
+///   boxing op's plan id and the piece index so every rank derives the same
+///   tags independently.
+/// * `local_in` — `(flat placement index, shard)` for the members this rank
+///   owns, ascending. Ownership must agree with `cx.member_rank`.
+/// * `logical` — the logical tensor shape (carried by the physical plan).
+#[allow(clippy::too_many_arguments)]
+pub fn apply_boxing_ranked(
+    cx: &RankedBoxing,
+    node: usize,
+    piece: usize,
+    local_in: Vec<(usize, Tensor)>,
+    in_nd: &NdSbp,
+    out_nd: &NdSbp,
+    hierarchy: &[usize],
+    logical: &Shape,
+) -> crate::Result<RankedResult> {
+    anyhow::ensure!(
+        in_nd.rank() == out_nd.rank() && in_nd.rank() == hierarchy.len(),
+        "NdSbp rank mismatch in ranked boxing"
+    );
+    anyhow::ensure!(
+        !super::dims_interact(in_nd, out_nd),
+        "interacting hierarchy dims cannot run rank-locally ({in_nd} -> {out_nd})"
+    );
+    let total: usize = hierarchy.iter().product();
+    anyhow::ensure!(cx.member_rank.len() == total, "member/rank map vs hierarchy");
+    for (f, _) in &local_in {
+        anyhow::ensure!(
+            cx.member_rank[*f] == cx.my_rank,
+            "rank {} was handed shard {f} owned by rank {}",
+            cx.my_rank,
+            cx.member_rank[*f]
+        );
+    }
+
+    let mut shards: HashMap<usize, Tensor> = local_in.into_iter().collect();
+    let mut cur = in_nd.clone();
+    let mut bytes = 0.0;
+    // Innermost dim first — same transition order as the sequential path.
+    for d in (0..cur.rank()).rev() {
+        if cur.0[d] == out_nd.0[d] {
+            continue;
+        }
+        let p = hierarchy[d];
+        let inner: usize = hierarchy[d + 1..].iter().product();
+        let outer: usize = hierarchy[..d].iter().product();
+        for o in 0..outer {
+            for i in 0..inner {
+                let flat = |g: usize| o * p * inner + g * inner + i;
+                let group_ranks: Vec<usize> = (0..p).map(|g| cx.member_rank[flat(g)]).collect();
+                let owned: Vec<usize> =
+                    (0..p).filter(|&g| group_ranks[g] == cx.my_rank).collect();
+                if owned.is_empty() {
+                    continue;
+                }
+                let coord = coord_of(flat(owned[0]), hierarchy);
+                let glogical = group_logical(logical, &cur, hierarchy, d, &coord);
+                let key = collective_key(node, piece, d, o * inner + i);
+                let comm = GroupComm::new(
+                    key,
+                    cx.hub,
+                    cx.transport,
+                    &group_ranks,
+                    cx.my_rank,
+                    cx.timeout,
+                );
+                let local: Vec<(usize, Tensor)> = owned
+                    .iter()
+                    .map(|&g| (g, shards.remove(&flat(g)).expect("owned shard missing")))
+                    .collect();
+                let res = transition_group(&comm, &local, cur.0[d], out_nd.0[d], &glogical)?;
+                bytes += comm.bytes_sent_local();
+                for (g, t) in res {
+                    shards.insert(flat(g), t);
+                }
+            }
+        }
+        cur.0[d] = out_nd.0[d];
+    }
+    let mut out: Vec<(usize, Tensor)> = shards.into_iter().collect();
+    out.sort_by_key(|(f, _)| *f);
+    Ok(RankedResult { shards: out, bytes_sent: bytes })
+}
+
+/// One group's 1-D transition, rank-locally. `local` holds this rank's
+/// members (group-relative index, shard); returns the same members'
+/// outputs. Bitwise-equal to `transition_1d` in the sequential path.
+fn transition_group(
+    comm: &GroupComm,
+    local: &[(usize, Tensor)],
+    from: Sbp,
+    to: Sbp,
+    glogical: &Shape,
+) -> crate::Result<Vec<(usize, Tensor)>> {
+    use Sbp::*;
+    let p = comm.members();
+    let dtype = local[0].1.dtype;
+    Ok(match (from, to) {
+        (a, b) if a == b => local.to_vec(),
+        // all2all: re-split along a different axis, pure data motion
+        (Split(i), Split(j)) => {
+            let in_shapes: Vec<Shape> =
+                (0..p).map(|g| shard_shape(glogical, Split(i), p, g)).collect();
+            all_to_all(comm, local, i, j, &in_shapes)?
+        }
+        // ring all-gather
+        (Split(i), Broadcast) => {
+            let in_shapes: Vec<Shape> =
+                (0..p).map(|g| shard_shape(glogical, Split(i), p, g)).collect();
+            all_gather_axis(comm, local, i, &in_shapes, dtype)?
+        }
+        // zero-pad local view: no traffic
+        (Split(i), Partial(k)) => {
+            let ldim = glogical.dim(i);
+            let offs = split_offsets(ldim, p);
+            let fill = identity_elem(k);
+            local
+                .iter()
+                .map(|(g, t)| {
+                    let mut full = Tensor::full(t.shape.with_dim(i, ldim), t.dtype, fill);
+                    embed_slice(&mut full, t, i, offs[*g]);
+                    (*g, full)
+                })
+                .collect()
+        }
+        // local slice: no traffic
+        (Broadcast, Split(j)) => local
+            .iter()
+            .map(|(g, t)| {
+                let sizes = split_sizes(t.shape.dim(j), p);
+                let offs = split_offsets(t.shape.dim(j), p);
+                (*g, slice_axis(t, j, offs[*g], sizes[*g]))
+            })
+            .collect(),
+        // member 0 keeps the value, the rest hold the identity: no traffic
+        (Broadcast, Partial(k)) => {
+            let fill = identity_elem(k);
+            local
+                .iter()
+                .map(|(g, t)| {
+                    if *g == 0 {
+                        (*g, t.clone())
+                    } else {
+                        (*g, Tensor::full(t.shape.clone(), t.dtype, fill))
+                    }
+                })
+                .collect()
+        }
+        // ring reduce-scatter
+        (Partial(k), Split(j)) => reduce_scatter_axis(comm, local, j, k)?,
+        // ring all-reduce = reduce-scatter + all-gather
+        (Partial(k), Broadcast) => all_reduce_flat(comm, local, k)?,
+        (Partial(_), Partial(_)) => {
+            anyhow::bail!("P(sum) <-> P(max) transition is not meaningful")
+        }
+        // caught by the `a == b` guard
+        (Broadcast, Broadcast) => unreachable!(),
+    })
+}
+
+fn identity_elem(k: ReduceKind) -> f32 {
+    match k {
+        ReduceKind::Sum => 0.0,
+        ReduceKind::Max => f32::NEG_INFINITY,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sbp::{gather, s, scatter, B, P};
+    use crate::tensor::DType;
+    use crate::util::Rng;
+
+    /// Run every member on one rank through the ring algorithms and compare
+    /// the logical result bitwise against the `gather` ground truth.
+    fn ranked_all_local(
+        t: &Tensor,
+        in_nd: &NdSbp,
+        out_nd: &NdSbp,
+        hierarchy: &[usize],
+    ) -> (Vec<Tensor>, f64) {
+        let total: usize = hierarchy.iter().product();
+        let hub = CollectiveHub::new();
+        let ranks = vec![0; total];
+        let cx = RankedBoxing {
+            hub: &hub,
+            transport: None,
+            member_rank: &ranks,
+            my_rank: 0,
+            timeout: Duration::from_secs(5),
+        };
+        let shards = scatter(t, in_nd, hierarchy);
+        let local: Vec<(usize, Tensor)> = shards.into_iter().enumerate().collect();
+        let res =
+            apply_boxing_ranked(&cx, 1, 0, local, in_nd, out_nd, hierarchy, &t.shape).unwrap();
+        (res.shards.into_iter().map(|(_, t)| t).collect(), res.bytes_sent)
+    }
+
+    #[test]
+    fn ranked_equals_gather_bitwise_1d() {
+        let mut r = Rng::new(23);
+        let sigs = [s(0), s(1), B, P];
+        for &p in &[2usize, 4] {
+            for &a in &sigs {
+                for &b in &sigs {
+                    let t = Tensor::randn([8, 12], DType::F32, 1.0, &mut r);
+                    let (out, _) = ranked_all_local(&t, &NdSbp::d1(a), &NdSbp::d1(b), &[p]);
+                    let back = gather(&out, &NdSbp::d1(b), &[p]);
+                    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                    assert_eq!(bits(&back.data), bits(&t.data), "{a} -> {b} over {p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ranked_allreduce_bytes_match_table2_per_member() {
+        // 4 members, 16 elements: each member sends 2(p-1)/p · |T|
+        let mut r = Rng::new(5);
+        let t = Tensor::randn([4, 4], DType::F32, 1.0, &mut r);
+        let (out, bytes) = ranked_all_local(&t, &NdSbp::d1(P), &NdSbp::d1(B), &[4]);
+        assert_eq!(out.len(), 4);
+        let t_bytes = (t.elems() * 4) as f64;
+        // each member sends 2(p-1)/p · |T|; all 4 members are local, so this
+        // rank's share is the whole 2(p-1)·|T| ring volume
+        assert_eq!(bytes, 4.0 * (2.0 * 3.0 / 4.0) * t_bytes);
+    }
+
+    #[test]
+    fn ranked_2d_hybrid_gradient_combine() {
+        // (S(0), P) -> (S(0), B): per-node all-reduce on a 2x2 grid
+        let mut r = Rng::new(9);
+        let t = Tensor::randn([8, 6], DType::F32, 1.0, &mut r);
+        let in_nd = NdSbp::d2(s(0), P);
+        let out_nd = NdSbp::d2(s(0), B);
+        let (out, _) = ranked_all_local(&t, &in_nd, &out_nd, &[2, 2]);
+        let back = gather(&out, &out_nd, &[2, 2]);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        // legacy path ground truth
+        let legacy = crate::boxing::apply_boxing(
+            &scatter(&t, &in_nd, &[2, 2]),
+            &in_nd,
+            &crate::placement::Placement::grid(2, 2),
+            &out_nd,
+            &crate::placement::Placement::grid(2, 2),
+        );
+        for (a, b) in out.iter().zip(&legacy.shards) {
+            assert_eq!(bits(&a.data), bits(&b.data), "ranked vs legacy shard");
+        }
+        assert_eq!(bits(&back.data), bits(&t.data));
+    }
+}

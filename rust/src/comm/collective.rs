@@ -1,0 +1,460 @@
+//! Rank-aware **ring collectives over the transport plane** — the executable
+//! counterpart of Table 2's boxing methods for jobs whose device groups span
+//! worker processes.
+//!
+//! A collective runs among the *members* of one device group (the flat
+//! placement indices of a boxing op's hierarchy dim). Each worker rank owns
+//! the members whose devices it hosts; member-to-member chunks between
+//! co-resident members go through the in-process [`CollectiveHub`], chunks to
+//! members on other ranks cross the [`super::Transport`] as
+//! [`super::wire::Frame::Collective`] frames. Every collective instance
+//! carries a unique sequence `key`, so concurrent collectives on different
+//! tensors (or different pieces of the same tensor) never interleave.
+//!
+//! The algorithms are **bandwidth-optimal and bit-deterministic**:
+//!
+//! * reduce-scatter / all2all run as `p-1` ring-offset exchange steps — at
+//!   step `s` member `m` ships its chunk for member `(m+s) % p` — so every
+//!   member sends exactly `(p-1)/p · |T|`, the busiest-link volume
+//!   [`crate::boxing::cost::transfer_secs`] models;
+//! * all-gather forwards whole shards around the ring (`p-1` steps of
+//!   `|T|/p`), same per-link volume;
+//! * all-reduce = reduce-scatter + ring all-gather, `2(p-1)/p · |T|` per
+//!   member (tested against the Table 2 formula);
+//! * reductions are applied in **ascending member order** — the exact
+//!   association `((s0 + s1) + s2) + …` of [`crate::tensor::ops::add_n`] —
+//!   so a rank-local collective is bitwise-equal to the single-process
+//!   gather-based path (DESIGN.md invariant 7).
+
+use super::{lock_recover, wire, Transport};
+use crate::sbp::ReduceKind;
+use crate::tensor::ops::{concat_axis, slice_axis};
+use crate::tensor::shape::{split_offsets, split_sizes};
+use crate::tensor::{Shape, Tensor};
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// In-process mailbox for in-flight collective chunks, keyed by
+/// `(collective key, src member, dst member)`. The engine's transport
+/// ingress thread deposits remote chunks here; co-resident members deposit
+/// directly. Per-key queues are FIFO, which together with the transport's
+/// per-peer ordering gives each member pair an ordered chunk stream.
+#[derive(Default)]
+pub struct CollectiveHub {
+    inner: Mutex<HashMap<(u64, u32, u32), VecDeque<Vec<f32>>>>,
+    cv: Condvar,
+}
+
+impl CollectiveHub {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Deposit one chunk (called by the ingress thread and by local sends).
+    pub fn push(&self, key: u64, src: u32, dst: u32, data: Vec<f32>) {
+        lock_recover(&self.inner).entry((key, src, dst)).or_default().push_back(data);
+        self.cv.notify_all();
+    }
+
+    /// Next chunk from member `src` to member `dst` under `key`; errors if
+    /// `deadline` passes first (a peer rank died or the job deadlocked).
+    pub fn recv(&self, key: u64, src: u32, dst: u32, deadline: Instant) -> crate::Result<Vec<f32>> {
+        let mut m = lock_recover(&self.inner);
+        loop {
+            if let Some(q) = m.get_mut(&(key, src, dst)) {
+                if let Some(v) = q.pop_front() {
+                    if q.is_empty() {
+                        m.remove(&(key, src, dst));
+                    }
+                    return Ok(v);
+                }
+            }
+            let now = Instant::now();
+            anyhow::ensure!(
+                now < deadline,
+                "collective {key:#018x}: timed out waiting for the chunk from member {src} \
+                 to member {dst} (a peer worker died, or collectives were launched in \
+                 conflicting order)"
+            );
+            m = self
+                .cv
+                .wait_timeout(m, deadline - now)
+                .unwrap_or_else(|p| p.into_inner())
+                .0;
+        }
+    }
+}
+
+/// One member group of one collective instance: who owns each member, and
+/// how member-to-member chunks travel (hub locally, transport across ranks).
+pub struct GroupComm<'a> {
+    key: u64,
+    hub: &'a CollectiveHub,
+    transport: Option<&'a dyn Transport>,
+    /// Member index → owning worker rank.
+    member_rank: &'a [usize],
+    my_rank: usize,
+    deadline: Instant,
+    /// f32-payload bytes each member has sent across a device boundary
+    /// (i.e. to a member other than itself) — the Table 2 quantity.
+    sent: std::cell::RefCell<Vec<f64>>,
+}
+
+impl<'a> GroupComm<'a> {
+    pub fn new(
+        key: u64,
+        hub: &'a CollectiveHub,
+        transport: Option<&'a dyn Transport>,
+        member_rank: &'a [usize],
+        my_rank: usize,
+        timeout: Duration,
+    ) -> Self {
+        GroupComm {
+            key,
+            hub,
+            transport,
+            member_rank,
+            my_rank,
+            deadline: Instant::now() + timeout,
+            sent: std::cell::RefCell::new(vec![0.0; member_rank.len()]),
+        }
+    }
+
+    /// Number of members in the group.
+    pub fn members(&self) -> usize {
+        self.member_rank.len()
+    }
+
+    /// Does this worker rank own member `m`?
+    pub fn owns(&self, m: usize) -> bool {
+        self.member_rank[m] == self.my_rank
+    }
+
+    /// Ship one chunk from owned member `src` to member `dst`.
+    pub fn send(&self, src: usize, dst: usize, data: Vec<f32>) -> crate::Result<()> {
+        debug_assert!(self.owns(src), "sending from a member this rank does not own");
+        if src != dst {
+            self.sent.borrow_mut()[src] += (data.len() * 4) as f64;
+        }
+        if self.owns(dst) {
+            self.hub.push(self.key, src as u32, dst as u32, data);
+            return Ok(());
+        }
+        let t = self.transport.ok_or_else(|| {
+            anyhow::anyhow!(
+                "collective {:#018x}: member {dst} lives on rank {} but no transport is attached",
+                self.key,
+                self.member_rank[dst]
+            )
+        })?;
+        t.send(
+            self.member_rank[dst],
+            wire::encode_collective(self.key, src as u32, dst as u32, &data),
+        )
+    }
+
+    /// Blocking receive of the next chunk from `src` addressed to owned
+    /// member `dst`.
+    pub fn recv(&self, src: usize, dst: usize) -> crate::Result<Vec<f32>> {
+        debug_assert!(self.owns(dst), "receiving for a member this rank does not own");
+        self.hub.recv(self.key, src as u32, dst as u32, self.deadline)
+    }
+
+    /// Bytes sent per member so far (device-boundary payload bytes).
+    pub fn bytes_by_member(&self) -> Vec<f64> {
+        self.sent.borrow().clone()
+    }
+
+    /// Total bytes sent by this rank's members.
+    pub fn bytes_sent_local(&self) -> f64 {
+        self.member_rank
+            .iter()
+            .enumerate()
+            .filter(|&(_, &r)| r == self.my_rank)
+            .map(|(m, _)| self.sent.borrow()[m])
+            .sum()
+    }
+}
+
+/// Elementwise reduction of `b` into `a` (`a` is the earlier-member
+/// accumulator — ascending member order is the bitwise contract).
+fn reduce_into(a: &mut [f32], b: &[f32], kind: ReduceKind) {
+    debug_assert_eq!(a.len(), b.len());
+    match kind {
+        ReduceKind::Sum => {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        }
+        ReduceKind::Max => {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x = x.max(*y);
+            }
+        }
+    }
+}
+
+/// Ring all-gather of per-member blobs: after `p-1` forwarding steps every
+/// owned member holds all `p` blobs in member order. Each member sends
+/// exactly `(p-1)` blobs — `(p-1)/p · |T|` when blobs are `|T|/p` chunks.
+pub fn ring_all_gather_raw(
+    comm: &GroupComm,
+    local: &[(usize, Vec<f32>)],
+) -> crate::Result<Vec<(usize, Vec<Vec<f32>>)>> {
+    let p = comm.members();
+    // have[(holder, origin)] = blob
+    let mut have: HashMap<(usize, usize), Vec<f32>> = HashMap::new();
+    for (m, blob) in local {
+        debug_assert!(comm.owns(*m));
+        have.insert((*m, *m), blob.clone());
+    }
+    for s in 1..p {
+        // send first (never blocks), then receive — owners of adjacent
+        // members must not wait on their own unsent chunks
+        for &(m, _) in local {
+            let origin = (m + p + 1 - s) % p;
+            let blob = have[&(m, origin)].clone();
+            comm.send(m, (m + 1) % p, blob)?;
+        }
+        for &(m, _) in local {
+            let origin = (m + p - s) % p;
+            let left = (m + p - 1) % p;
+            let blob = comm.recv(left, m)?;
+            have.insert((m, origin), blob);
+        }
+    }
+    Ok(local
+        .iter()
+        .map(|&(m, _)| (m, (0..p).map(|g| have.remove(&(m, g)).unwrap()).collect()))
+        .collect())
+}
+
+/// Ring-offset exchange: at step `s` each owned member `m` ships
+/// `make(m, (m+s)%p)` to member `(m+s)%p`; returns, per owned member `d`,
+/// the `p` incoming blobs in **member order** (`make(d, d)` fills the local
+/// slot). This is the reduce-scatter / all2all data motion: `(p-1)` chunks
+/// sent per member.
+pub fn ring_exchange_raw(
+    comm: &GroupComm,
+    owned: &[usize],
+    make: impl Fn(usize, usize) -> Vec<f32>,
+) -> crate::Result<Vec<(usize, Vec<Vec<f32>>)>> {
+    let p = comm.members();
+    let mut incoming: HashMap<(usize, usize), Vec<f32>> = HashMap::new();
+    for &m in owned {
+        incoming.insert((m, m), make(m, m));
+    }
+    for s in 1..p {
+        for &m in owned {
+            let dst = (m + s) % p;
+            comm.send(m, dst, make(m, dst))?;
+        }
+        for &m in owned {
+            let src = (m + p - s) % p;
+            let blob = comm.recv(src, m)?;
+            incoming.insert((m, src), blob);
+        }
+    }
+    Ok(owned
+        .iter()
+        .map(|&m| (m, (0..p).map(|g| incoming.remove(&(m, g)).unwrap()).collect()))
+        .collect())
+}
+
+/// Ring all-gather along a tensor axis: every owned member ends with the
+/// member-order concatenation of all members' shards (`S(axis) → B`).
+/// `shapes[g]` is member `g`'s shard shape (derivable on every rank from the
+/// group-logical shape).
+pub fn all_gather_axis(
+    comm: &GroupComm,
+    local: &[(usize, Tensor)],
+    axis: usize,
+    shapes: &[Shape],
+    dtype: crate::tensor::DType,
+) -> crate::Result<Vec<(usize, Tensor)>> {
+    let raw: Vec<(usize, Vec<f32>)> =
+        local.iter().map(|(m, t)| (*m, t.data.clone())).collect();
+    let gathered = ring_all_gather_raw(comm, &raw)?;
+    gathered
+        .into_iter()
+        .map(|(m, blobs)| {
+            let parts: Vec<Tensor> = blobs
+                .into_iter()
+                .enumerate()
+                .map(|(g, b)| Tensor::new(shapes[g].clone(), dtype, b))
+                .collect();
+            let refs: Vec<&Tensor> = parts.iter().collect();
+            Ok((m, concat_axis(&refs, axis)))
+        })
+        .collect()
+}
+
+/// Ring reduce-scatter along a tensor axis (`P(kind) → S(axis)`): every
+/// owned member `d` ends with the ascending-member-order reduction of all
+/// members' slice `d` along `axis`.
+pub fn reduce_scatter_axis(
+    comm: &GroupComm,
+    local: &[(usize, Tensor)],
+    axis: usize,
+    kind: ReduceKind,
+) -> crate::Result<Vec<(usize, Tensor)>> {
+    let p = comm.members();
+    let full = &local[0].1.shape; // partial shards all have the full shape
+    let sizes = split_sizes(full.dim(axis), p);
+    let offs = split_offsets(full.dim(axis), p);
+    let by_member: HashMap<usize, &Tensor> = local.iter().map(|(m, t)| (*m, t)).collect();
+    let owned: Vec<usize> = local.iter().map(|(m, _)| *m).collect();
+    let make = |src: usize, dst: usize| -> Vec<f32> {
+        slice_axis(by_member[&src], axis, offs[dst], sizes[dst]).data
+    };
+    let exchanged = ring_exchange_raw(comm, &owned, make)?;
+    exchanged
+        .into_iter()
+        .map(|(d, blobs)| {
+            let mut acc = blobs[0].clone();
+            for b in &blobs[1..] {
+                reduce_into(&mut acc, b, kind);
+            }
+            let shape = full.with_dim(axis, sizes[d]);
+            Ok((d, Tensor::new(shape, local[0].1.dtype, acc)))
+        })
+        .collect()
+}
+
+/// Ring all-reduce (`P(kind) → B`): reduce-scatter over flat chunks, then a
+/// ring all-gather of the reduced chunks — `2(p-1)/p · |T|` sent per member,
+/// bitwise-equal to `add_n` over shards in member order.
+pub fn all_reduce_flat(
+    comm: &GroupComm,
+    local: &[(usize, Tensor)],
+    kind: ReduceKind,
+) -> crate::Result<Vec<(usize, Tensor)>> {
+    let p = comm.members();
+    let full = local[0].1.shape.clone();
+    let n = full.elems();
+    let sizes = split_sizes(n, p);
+    let offs = split_offsets(n, p);
+    let by_member: HashMap<usize, &Tensor> = local.iter().map(|(m, t)| (*m, t)).collect();
+    let owned: Vec<usize> = local.iter().map(|(m, _)| *m).collect();
+    let make = |src: usize, dst: usize| -> Vec<f32> {
+        by_member[&src].data[offs[dst]..offs[dst] + sizes[dst]].to_vec()
+    };
+    let exchanged = ring_exchange_raw(comm, &owned, make)?;
+    let reduced: Vec<(usize, Vec<f32>)> = exchanged
+        .into_iter()
+        .map(|(d, blobs)| {
+            let mut acc = blobs[0].clone();
+            for b in &blobs[1..] {
+                reduce_into(&mut acc, b, kind);
+            }
+            (d, acc)
+        })
+        .collect();
+    let gathered = ring_all_gather_raw(comm, &reduced)?;
+    gathered
+        .into_iter()
+        .map(|(m, chunks)| {
+            let mut data = Vec::with_capacity(n);
+            for c in chunks {
+                data.extend_from_slice(&c);
+            }
+            Ok((m, Tensor::new(full.clone(), local[0].1.dtype, data)))
+        })
+        .collect()
+}
+
+/// all2all re-split (`S(i) → S(j)`): member `d` ends with the member-order
+/// concatenation along `i` of every member's slice `d` along `j` —
+/// bitwise-equal to gather-then-scatter. `in_shapes[g]` is member `g`'s
+/// input shard shape.
+pub fn all_to_all(
+    comm: &GroupComm,
+    local: &[(usize, Tensor)],
+    from_axis: usize,
+    to_axis: usize,
+    in_shapes: &[Shape],
+) -> crate::Result<Vec<(usize, Tensor)>> {
+    let p = comm.members();
+    // every input shard has the full extent along `to_axis`
+    let jdim = local[0].1.shape.dim(to_axis);
+    let sizes = split_sizes(jdim, p);
+    let offs = split_offsets(jdim, p);
+    let by_member: HashMap<usize, &Tensor> = local.iter().map(|(m, t)| (*m, t)).collect();
+    let owned: Vec<usize> = local.iter().map(|(m, _)| *m).collect();
+    let make = |src: usize, dst: usize| -> Vec<f32> {
+        slice_axis(by_member[&src], to_axis, offs[dst], sizes[dst]).data
+    };
+    let exchanged = ring_exchange_raw(comm, &owned, make)?;
+    exchanged
+        .into_iter()
+        .map(|(d, blobs)| {
+            let parts: Vec<Tensor> = blobs
+                .into_iter()
+                .enumerate()
+                .map(|(g, b)| {
+                    let shape = in_shapes[g].with_dim(to_axis, sizes[d]);
+                    Tensor::new(shape, local[0].1.dtype, b)
+                })
+                .collect();
+            let refs: Vec<&Tensor> = parts.iter().collect();
+            Ok((d, concat_axis(&refs, from_axis)))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+
+    /// A group whose members are all owned by rank 0 — the loopback
+    /// degenerate world, exercising the ring schedule purely in-process.
+    fn local_comm<'a>(
+        hub: &'a CollectiveHub,
+        ranks: &'a [usize],
+    ) -> GroupComm<'a> {
+        GroupComm::new(1, hub, None, ranks, 0, Duration::from_secs(5))
+    }
+
+    #[test]
+    fn all_reduce_matches_ordered_sum_and_table2_bytes() {
+        let p = 4;
+        let hub = CollectiveHub::new();
+        let ranks = vec![0; p];
+        let comm = local_comm(&hub, &ranks);
+        // 8 elements → perfectly divisible chunks of 2
+        let shards: Vec<(usize, Tensor)> = (0..p)
+            .map(|m| {
+                (m, Tensor::new([8], DType::F32, (0..8).map(|i| (m * 8 + i) as f32 * 0.37).collect()))
+            })
+            .collect();
+        let out = all_reduce_flat(&comm, &shards, ReduceKind::Sum).unwrap();
+        // ascending-member-order fold, like add_n
+        let mut expect = shards[0].1.data.clone();
+        for (_, t) in &shards[1..] {
+            for (a, b) in expect.iter_mut().zip(&t.data) {
+                *a += b;
+            }
+        }
+        for (_, t) in &out {
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&t.data), bits(&expect));
+        }
+        // Table 2: each member sends 2(p-1)/p · |T| bytes
+        let t_bytes = 8.0 * 4.0;
+        for &b in &comm.bytes_by_member() {
+            assert_eq!(b, 2.0 * (p as f64 - 1.0) / p as f64 * t_bytes);
+        }
+    }
+
+    #[test]
+    fn hub_recv_times_out_with_context() {
+        let hub = CollectiveHub::new();
+        let e = hub
+            .recv(42, 0, 1, Instant::now() + Duration::from_millis(20))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("timed out"), "{e}");
+    }
+}

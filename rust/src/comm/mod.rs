@@ -21,18 +21,30 @@
 //! * [`launch`] — partitions a [`crate::compiler::PhysPlan`] by node so each
 //!   worker instantiates only its own actors; cross-rank `Req`/`Ack` traffic
 //!   (payload bytes and virtual timestamps included) crosses the transport.
+//! * [`collective`] — rank-aware ring all-reduce / reduce-scatter /
+//!   all-gather / all2all over any [`Transport`], tagged per-collective so
+//!   concurrent collectives never interleave; the engine uses them to run
+//!   boxing ops **rank-locally** ([`crate::boxing::ranked`]), which is what
+//!   makes data and hybrid parallelism real across processes.
 //!
 //! Because virtual time rides on the messages themselves (the `(max, +)`
-//! algebra of [`crate::actor`]), a multi-process run reports the same
-//! makespan as the single-process run — the determinism invariant
-//! (DESIGN.md §4.5–§4.6) holds under every transport.
+//! algebra of [`crate::actor`]), a multi-process run of a plan whose
+//! cross-rank traffic is all envelope traffic reports the same makespan as
+//! the single-process run — the determinism invariant (DESIGN.md §4.5–§4.6)
+//! holds under every transport. Replicated collectives are the scoped
+//! exception: each replica stamps its output from its **local** inputs only
+//! (ring chunks carry data, not timestamps), so their makespan is a
+//! per-rank approximation — numerics stay bitwise-exact, and the finalize
+//! barrier still makes every rank report the same global value.
 
+pub mod collective;
 pub mod launch;
 pub mod loopback;
 pub mod registry;
 pub mod tcp;
 pub mod wire;
 
+pub use collective::{CollectiveHub, GroupComm};
 pub use loopback::Loopback;
 pub use registry::{
     create_transport, register_transport, transport_from_args, transport_names, TransportFactory,
@@ -41,8 +53,17 @@ pub use tcp::{free_local_ports, tcp_local_world, TcpTransport};
 
 use crate::actor::msg::Envelope;
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Duration;
+
+/// Recover a poisoned mutex instead of unwinding: the guarded state (a
+/// socket handle, a channel receiver, a chunk mailbox) stays structurally
+/// valid after another thread panicked, and turning one dead peer's panic
+/// into a poisoned-mutex abort of every queue thread is exactly the cascade
+/// the transport error paths exist to prevent.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
 
 /// Where a worker sits in the job: its rank plus every rank's rendezvous
 /// address. Built from `--rank` / `--peers` by [`transport_from_args`].

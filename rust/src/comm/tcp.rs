@@ -15,7 +15,7 @@
 //! frame. TCP gives reliable per-peer ordering, which is exactly the
 //! guarantee the in-process channels give the req/ack protocol.
 
-use super::{Transport, TransportConfig};
+use super::{lock_recover, Transport, TransportConfig};
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::{mpsc, Mutex};
@@ -239,18 +239,25 @@ impl Transport for TcpTransport {
         let Some(writer) = self.writers.get(dst).and_then(|w| w.as_ref()) else {
             anyhow::bail!("rank {}: no connection to rank {dst}", self.rank)
         };
-        let mut s = writer.lock().unwrap();
-        s.write_all(&(frame.len() as u32).to_le_bytes())?;
-        s.write_all(&frame)?;
-        Ok(())
+        let mut s = lock_recover(writer);
+        let write = |s: &mut TcpStream, frame: &[u8]| -> std::io::Result<()> {
+            s.write_all(&(frame.len() as u32).to_le_bytes())?;
+            s.write_all(frame)
+        };
+        write(&mut s, &frame).map_err(|e| {
+            anyhow::anyhow!("rank {}: send to rank {dst} failed: {e}", self.rank)
+        })
     }
 
     fn recv_timeout(&self, timeout: Duration) -> crate::Result<Option<(usize, Vec<u8>)>> {
-        match self.inbox.lock().unwrap().recv_timeout(timeout) {
+        match lock_recover(&self.inbox).recv_timeout(timeout) {
             Ok(m) => Ok(Some(m)),
             Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                anyhow::bail!("all peer connections closed (a worker died or left the job)")
+                anyhow::bail!(
+                    "rank {}: all peer connections closed (a worker died or left the job)",
+                    self.rank
+                )
             }
         }
     }
@@ -258,12 +265,12 @@ impl Transport for TcpTransport {
 
 impl Drop for TcpTransport {
     fn drop(&mut self) {
+        // Poison-tolerant teardown: peers still get their sockets shut down
+        // even if some queue thread panicked while holding a writer lock.
         for w in self.writers.iter().flatten() {
-            if let Ok(s) = w.lock() {
-                let _ = s.shutdown(Shutdown::Both);
-            }
+            let _ = lock_recover(w).shutdown(Shutdown::Both);
         }
-        for h in self.readers.lock().unwrap().drain(..) {
+        for h in lock_recover(&self.readers).drain(..) {
             let _ = h.join();
         }
     }

@@ -18,6 +18,7 @@ use std::sync::Arc;
 /// Frame tags (first byte of every frame).
 const TAG_ENVELOPE: u8 = 0;
 const TAG_FINALIZE: u8 = 1;
+const TAG_COLLECTIVE: u8 = 2;
 
 /// Message tags within an envelope frame.
 const MSG_REQ: u8 = 0;
@@ -32,6 +33,13 @@ pub enum Frame {
     /// End-of-run barrier: `rank` finished all local actors with the given
     /// local virtual makespan; every rank reports the max over all ranks.
     Finalize { rank: u32, makespan: f64 },
+    /// One chunk of an in-flight ring collective (`comm::collective`):
+    /// `key` is the per-collective sequence tag — unique per (boxing op,
+    /// piece, hierarchy dim, device group) — so chunks of concurrent
+    /// collectives on different tensors never interleave; `src`/`dst` are
+    /// *member* indices within that collective's device group (not worker
+    /// ranks), and the payload is raw f32 bits.
+    Collective { key: u64, src: u32, dst: u32, data: Vec<f32> },
 }
 
 /// Encode an envelope frame without cloning the envelope.
@@ -76,6 +84,21 @@ pub fn encode_finalize(rank: u32, makespan: f64) -> Vec<u8> {
     out
 }
 
+/// Encode a collective chunk frame (f32 bits travel raw, so distributed
+/// reductions are bit-for-bit reproducible).
+pub fn encode_collective(key: u64, src: u32, dst: u32, data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(21 + data.len() * 4);
+    out.push(TAG_COLLECTIVE);
+    put_u64(&mut out, key);
+    put_u32(&mut out, src);
+    put_u32(&mut out, dst);
+    put_u32(&mut out, data.len() as u32);
+    for &x in data {
+        put_u32(&mut out, x.to_bits());
+    }
+    out
+}
+
 /// Decode a frame; rejects truncated, oversized-field, or trailing bytes.
 pub fn decode(bytes: &[u8]) -> crate::Result<Frame> {
     let mut c = Cursor { buf: bytes, pos: 0 };
@@ -114,6 +137,18 @@ pub fn decode(bytes: &[u8]) -> crate::Result<Frame> {
             Frame::Envelope(Envelope { to, msg })
         }
         TAG_FINALIZE => Frame::Finalize { rank: c.u32()?, makespan: f64::from_bits(c.u64()?) },
+        TAG_COLLECTIVE => {
+            let key = c.u64()?;
+            let src = c.u32()?;
+            let dst = c.u32()?;
+            let n = c.u32()? as usize;
+            anyhow::ensure!(c.remaining() >= n * 4, "collective payload truncated");
+            let mut data = Vec::with_capacity(n);
+            for _ in 0..n {
+                data.push(f32::from_bits(c.u32()?));
+            }
+            Frame::Collective { key, src, dst, data }
+        }
         other => anyhow::bail!("bad frame tag {other}"),
     };
     anyhow::ensure!(c.pos == bytes.len(), "{} trailing bytes after frame", bytes.len() - c.pos);
@@ -253,6 +288,22 @@ mod tests {
         assert_eq!(d[0].dtype, t.dtype);
         let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&d[0].data), bits(&t.data));
+    }
+
+    #[test]
+    fn collective_roundtrip_exact_bits() {
+        let data = vec![0.1f32, -0.0, f32::MIN_POSITIVE, 1.5e-30, -7.25];
+        let b = encode_collective(0xDEAD_BEEF_0042_0001, 3, 1, &data);
+        match decode(&b).unwrap() {
+            Frame::Collective { key, src, dst, data: d } => {
+                assert_eq!(key, 0xDEAD_BEEF_0042_0001);
+                assert_eq!((src, dst), (3, 1));
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&d), bits(&data));
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+        assert!(decode(&b[..b.len() - 1]).is_err(), "truncated payload must reject");
     }
 
     #[test]

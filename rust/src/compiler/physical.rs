@@ -49,6 +49,9 @@ pub enum PhysKernel {
         out_place: Placement,
         /// Logical tensor size in (dtype-weighted) bytes.
         t_bytes: f64,
+        /// Logical tensor shape — rank-local execution derives every
+        /// member's shard/chunk geometry from it without seeing the shards.
+        logical: Shape,
     },
     /// Parameter shard source; re-emits (or applies the fed-back update to)
     /// its slot each piece.
@@ -576,6 +579,7 @@ fn route(
         out_nd: want.clone(),
         out_place: want_pl.clone(),
         t_bytes,
+        logical: g.tensor(t).shape.clone(),
     };
     let out_shapes: Vec<Shape> = (0..want_pl.len())
         .map(|i| shard_shape_nd(&g.tensor(t).shape, want, &want_pl.hierarchy, &want_pl.coord(i)))

@@ -228,7 +228,13 @@ fn select_beam(
                 next.push(BeamState { chosen, cost });
             }
         }
-        next.sort_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap());
+        // A NaN modeled cost (e.g. a zero-throughput device or zero-bandwidth
+        // network model → 0/0 rooflines) must neither abort the beam search
+        // (partial_cmp().unwrap() did) nor win it: 0/0 is -NaN on x86, which
+        // bare total_cmp would sort *first* — so NaN-ness is the primary key.
+        next.sort_by(|a, b| {
+            a.cost.is_nan().cmp(&b.cost.is_nan()).then(a.cost.total_cmp(&b.cost))
+        });
         next.truncate(width);
         beam = next;
     }
@@ -304,6 +310,33 @@ mod tests {
     use crate::graph::OpKind;
     use crate::sbp::{s, B, P};
     use crate::tensor::DType;
+
+    /// Regression: a degenerate cluster model (zero throughput, zero
+    /// bandwidth) makes roofline costs 0/0 = NaN; the beam sort used
+    /// `partial_cmp().unwrap()` and aborted. `total_cmp` must select anyway.
+    #[test]
+    fn nan_costs_do_not_abort_selection() {
+        use crate::exec::{ClusterModel, DeviceModel, NetworkModel};
+        let dead = ClusterModel {
+            device: DeviceModel {
+                peak_f32: 0.0,
+                peak_f16: 0.0,
+                gemm_eff: 0.0,
+                hbm_bps: 0.0,
+                mem_bytes: 0,
+                launch_overhead: 0.0,
+                host_cpu_bps: 0.0,
+                pcie_bps: 0.0,
+                disk_bps: 0.0,
+            },
+            network: NetworkModel { intra_bps: 0.0, inter_bps: 0.0, latency: 0.0 },
+        };
+        let (g, wn, yn) = lin_graph(None, 4);
+        for strategy in [SelectStrategy::Greedy, SelectStrategy::Beam { width: 4 }] {
+            let sel = select_sbp(&g, strategy, &dead);
+            assert!(sel.contains_key(&wn) && sel.contains_key(&yn));
+        }
+    }
 
     fn lin_graph(hint_w: Option<NdSbp>, ndev: usize) -> (LogicalGraph, NodeId, NodeId) {
         let p = Placement::node(0, ndev);

@@ -30,7 +30,7 @@ fn main() {
             eprintln!(
                 "usage: oneflow <train|simulate|plan> [--flags]\n\
                  train:    --steps N --artifacts DIR --lr F  (needs a build with --features pjrt)\n\
-                 simulate: --model gpt|resnet --dp N --mp N --pp N --batch N --hidden N --layers N --pieces N [--zero] [--checkpoint] [--backend {}]\n\
+                 simulate: --model gpt|resnet --dp N --mp N --pp N --batch N --hidden N --layers N --pieces N [--devs-per-node N] [--zero] [--checkpoint] [--backend {}]\n\
                  \x20          [--transport {}] [--rank R --peers h:p,h:p,...]  (multi-process: one worker per rank)\n\
                  plan:     same flags as simulate [--world N]; prints the physical plan (+ per-rank partition)",
                 backend_names().join("|"),
@@ -56,12 +56,25 @@ fn train(args: &Args) {
         eprintln!("end-to-end training failed: {e}");
         std::process::exit(1);
     });
+    // `--steps 0` is a legal smoke invocation (artifacts load, plan
+    // compiles, nothing executes) — there is no last loss to print then
+    if steps == 0 {
+        println!(
+            "smoke run: 0 steps requested; {:.2}M-param GPT plan compiled and artifacts loaded, nothing executed",
+            report.params as f64 / 1e6,
+        );
+        return;
+    }
+    let Some(loss) = report.losses.last() else {
+        // steps > 0 but no losses came back: a fetch failure, not a smoke run
+        eprintln!("end-to-end training failed: {steps} steps ran but no loss was fetched");
+        std::process::exit(1);
+    };
     println!(
-        "trained {steps} steps of a {:.2}M-param GPT in {:.1}s wall ({:.2} steps/s), final loss {:.4}",
+        "trained {steps} steps of a {:.2}M-param GPT in {:.1}s wall ({:.2} steps/s), final loss {loss:.4}",
         report.params as f64 / 1e6,
         report.wall_secs,
         steps as f64 / report.wall_secs,
-        report.losses.last().unwrap()
     );
 }
 
@@ -93,6 +106,10 @@ fn build_model(args: &Args) -> Built {
                 args.usize("layers", 8),
             );
             cfg.seq = args.usize("seq", 1024);
+            // `--devs-per-node 1` spreads dp replicas one per plan node, so a
+            // multi-process launch gives each rank one replica and gradient
+            // all-reduces run as ring collectives across the transport
+            cfg.devs_per_node = args.usize("devs-per-node", 8).max(1);
             cfg.checkpoint = args.flag("checkpoint");
             cfg.zero = args.flag("zero");
             let gb = cfg.global_batch;

@@ -240,9 +240,8 @@ pub fn train_e2e(
     use crate::tensor::Shape;
     use std::sync::Arc;
 
-    // pieces == 0 short-circuits the engine to an empty report; the
-    // fetched-loss indexing below needs at least one piece
-    anyhow::ensure!(steps > 0, "train_e2e needs --steps >= 1");
+    // steps == 0 is a legal smoke invocation: the engine short-circuits to
+    // an empty report and the caller gets an empty loss history
     let meta = json::parse_file(&format!("{artifacts_dir}/gpt_meta.json"))
         .map_err(|e| anyhow::anyhow!(e))?;
     let dp = meta.req("dp").as_usize().unwrap();
@@ -350,10 +349,13 @@ pub fn train_e2e(
     let report = engine
         .run_with(crate::actor::RunOptions { pieces: steps, timeout: None })
         .map_err(|e| anyhow::anyhow!(e))?;
-    let losses: Vec<f32> = report.fetched[&loss]
-        .iter()
-        .map(|t| t.data.iter().sum::<f32>() / t.elems() as f32)
-        .collect();
+    let losses: Vec<f32> = report
+        .fetched
+        .get(&loss)
+        .map(|vals| {
+            vals.iter().map(|t| t.data.iter().sum::<f32>() / t.elems() as f32).collect()
+        })
+        .unwrap_or_default();
     for (i, &l) in losses.iter().enumerate() {
         on_step(i, l);
     }
@@ -481,6 +483,123 @@ pub fn gpt_pipeline_real(
     (g, loss, updates)
 }
 
+/// A **real-numerics data-parallel** GPT-style byte LM for the distributed
+/// collective experiments (`examples/dataparallel_tcp_gpt.rs`,
+/// `tests/collective.rs`): one full replica per **plan node** (1 device
+/// each), batch split `S(0)`, weights `B`, gradients `P(sum)`. A
+/// multi-process launch gives each rank one replica, and every gradient
+/// combine becomes a ring all-reduce across the transport
+/// (`boxing::ranked`) — the Fig 10 pattern, executable.
+#[derive(Clone, Debug)]
+pub struct GptDataParallelConfig {
+    /// Data-parallel replicas = plan nodes = worker ranks.
+    pub replicas: usize,
+    pub vocab: usize,
+    pub hidden: usize,
+    /// MLP expansion width.
+    pub ff: usize,
+    pub blocks: usize,
+    /// Tokens per piece (global batch, split over replicas).
+    pub rows: usize,
+    pub lr: f32,
+}
+
+impl Default for GptDataParallelConfig {
+    fn default() -> Self {
+        GptDataParallelConfig {
+            replicas: 2,
+            vocab: 64,
+            hidden: 32,
+            ff: 64,
+            blocks: 2,
+            rows: 64,
+            lr: 0.2,
+        }
+    }
+}
+
+/// Build the training graph for [`GptDataParallelConfig`]. Returns
+/// `(graph, loss, var-updates)`; inputs are named `ids` / `labels` like the
+/// pipeline model, so the same data sources feed both.
+pub fn gpt_dataparallel_real(
+    cfg: &GptDataParallelConfig,
+) -> (LogicalGraph, TensorId, HashMap<NodeId, TensorId>) {
+    use crate::placement::DeviceId;
+    assert!(cfg.replicas >= 1, "need at least one replica");
+    assert!(cfg.rows >= cfg.replicas, "each replica needs at least one row");
+    let pl = Placement::new(
+        vec![cfg.replicas],
+        (0..cfg.replicas).map(|n| DeviceId::new(n, 0)).collect(),
+    );
+    let b = NdSbp::d1(Sbp::Broadcast);
+    let mut g = LogicalGraph::new();
+
+    let ids = g.add1(
+        "ids",
+        OpKind::Input { shape: [cfg.rows].into(), dtype: DType::I32 },
+        &[],
+        pl.clone(),
+    );
+    g.hint_tensor(ids, NdSbp::d1(s(0)));
+    let table = g.add1(
+        "tok_embed",
+        OpKind::Variable {
+            shape: [cfg.vocab, cfg.hidden].into(),
+            dtype: DType::F32,
+            init_std: 0.08,
+        },
+        &[],
+        pl.clone(),
+    );
+    g.hint_tensor(table, b.clone());
+    let mut h = g.add1("embed", OpKind::Embedding, &[table, ids], pl.clone());
+
+    for blk in 0..cfg.blocks {
+        let name = format!("b{blk}");
+        let up = linear(
+            &mut g,
+            &format!("{name}_up"),
+            h,
+            cfg.ff,
+            &pl,
+            DType::F32,
+            Some(b.clone()),
+            Some(OpKind::Gelu),
+        );
+        let down = linear(
+            &mut g,
+            &format!("{name}_down"),
+            up,
+            cfg.hidden,
+            &pl,
+            DType::F32,
+            Some(b.clone()),
+            None,
+        );
+        h = g.add1(format!("{name}_res"), OpKind::Add, &[h, down], pl.clone());
+    }
+
+    let logits = linear(&mut g, "head", h, cfg.vocab, &pl, DType::F32, Some(b.clone()), None);
+    let labels = g.add1(
+        "labels",
+        OpKind::Input { shape: [cfg.rows].into(), dtype: DType::I32 },
+        &[],
+        pl.clone(),
+    );
+    g.hint_tensor(labels, NdSbp::d1(s(0)));
+    let outs = g.add("xent", OpKind::SparseXent, &[logits, labels], pl.clone());
+    let loss = outs[0];
+
+    let bw = autograd::build_backward(&mut g, loss);
+    let updates = autograd::append_sgd(&mut g, &bw, cfg.lr);
+    // Replicated updates: every P(sum) weight gradient must combine with a
+    // P→B all-reduce before the SGD step — the collective under test.
+    for &t in updates.values() {
+        g.hint_tensor(t, b.clone());
+    }
+    (g, loss, updates)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -555,6 +674,35 @@ mod tests {
             .count();
         assert!(pulls >= 2, "expected fwd+bwd stage crossings\n{}", plan.dump());
         // every variable got its training back edge
+        for v in &plan.vars {
+            for &pid in &v.phys {
+                assert!(plan.nodes[pid.0].update_from.is_some(), "var {} lacks back edge", v.name);
+            }
+        }
+    }
+
+    #[test]
+    fn dataparallel_real_spans_nodes_with_gradient_allreduce() {
+        let cfg = GptDataParallelConfig::default();
+        let (g, loss, upd) = gpt_dataparallel_real(&cfg);
+        let plan = compile(&g, &[loss], &upd, &CompileOptions::default());
+        let mut nodes: Vec<usize> = plan.nodes.iter().map(|n| n.device.node).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        assert_eq!(nodes, vec![0, 1], "one plan node per replica");
+        // gradient combines are same-placement partial-consuming collectives
+        // spanning both nodes — the ring-able pattern
+        let collectives = plan
+            .boxing_nodes()
+            .iter()
+            .filter(|n| {
+                matches!(&n.kernel, PhysKernel::Boxing { in_nd, in_place, out_place, .. }
+                    if in_nd.0.iter().any(|s| s.is_partial())
+                        && in_place.same_devices(out_place)
+                        && !in_place.single_node())
+            })
+            .count();
+        assert!(collectives > 0, "no cross-node gradient collective:\n{}", plan.dump());
         for v in &plan.vars {
             for &pid in &v.phys {
                 assert!(plan.nodes[pid.0].update_from.is_some(), "var {} lacks back edge", v.name);

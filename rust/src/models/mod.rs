@@ -13,7 +13,10 @@ pub mod gpt;
 pub mod insightface;
 pub mod wide_deep;
 
-pub use gpt::{gpt_pipeline_real, gpt_sim, GptPipelineConfig, GptSimConfig};
+pub use gpt::{
+    gpt_dataparallel_real, gpt_pipeline_real, gpt_sim, GptDataParallelConfig, GptPipelineConfig,
+    GptSimConfig,
+};
 pub use resnet::{resnet50, ResnetConfig};
 pub use bert::bert_base;
 pub use insightface::insightface;

@@ -58,7 +58,7 @@ pub trait Backend: Send + Sync {
 /// uniformly by all backends (see module docs).
 pub fn action_secs(node: &PhysNode, cluster: &ClusterModel) -> f64 {
     match &node.kernel {
-        PhysKernel::Boxing { in_nd, in_place, out_nd, out_place, t_bytes } => {
+        PhysKernel::Boxing { in_nd, in_place, out_nd, out_place, t_bytes, .. } => {
             crate::compiler::boxing_secs(
                 in_nd,
                 in_place,
@@ -76,7 +76,7 @@ pub fn action_secs(node: &PhysNode, cluster: &ClusterModel) -> f64 {
 /// Bytes a boxing action moves (metrics; matches Table 2 — tested).
 pub fn boxing_bytes(node: &PhysNode) -> f64 {
     match &node.kernel {
-        PhysKernel::Boxing { in_nd, in_place, out_nd, out_place, t_bytes } => {
+        PhysKernel::Boxing { in_nd, in_place, out_nd, out_place, t_bytes, .. } => {
             let same =
                 in_place.same_devices(out_place) && in_place.hierarchy == out_place.hierarchy;
             if same {

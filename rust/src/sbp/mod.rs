@@ -12,7 +12,7 @@
 
 pub mod scatter;
 
-pub use scatter::{gather, scatter, shard_shape, shard_shape_nd};
+pub use scatter::{gather, scatter, shard_shape, shard_shape_nd, try_gather};
 
 /// Reduction kind carried by a partial-value signature.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

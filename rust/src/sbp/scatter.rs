@@ -76,34 +76,54 @@ fn scatter_rec(t: &Tensor, comps: &[Sbp], hierarchy: &[usize]) -> Vec<Tensor> {
 
 /// Gather physical shards back into the logical tensor — exact inverse of
 /// [`scatter`] and the semantic ground truth for any shard set.
+///
+/// Panics if broadcast replicas diverged; use [`try_gather`] where the
+/// divergence should propagate as an error instead of aborting.
 pub fn gather(shards: &[Tensor], nd: &NdSbp, hierarchy: &[usize]) -> Tensor {
-    assert_eq!(nd.rank(), hierarchy.len());
-    assert_eq!(shards.len(), hierarchy.iter().product::<usize>());
+    try_gather(shards, nd, hierarchy).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// [`gather`], with the broadcast-divergence invariant as a **real** check:
+/// replicas of a `B` component that disagree (a broken collective, a
+/// corrupted frame) come back as `Err` in release builds too — the previous
+/// `debug_assert!` silently returned shard 0 in release.
+pub fn try_gather(shards: &[Tensor], nd: &NdSbp, hierarchy: &[usize]) -> crate::Result<Tensor> {
+    anyhow::ensure!(nd.rank() == hierarchy.len(), "NdSbp rank vs hierarchy");
+    anyhow::ensure!(
+        shards.len() == hierarchy.iter().product::<usize>(),
+        "{} shards for hierarchy {hierarchy:?}",
+        shards.len()
+    );
     gather_rec(shards, &nd.0, hierarchy)
 }
 
-fn gather_rec(shards: &[Tensor], comps: &[Sbp], hierarchy: &[usize]) -> Tensor {
+fn gather_rec(shards: &[Tensor], comps: &[Sbp], hierarchy: &[usize]) -> crate::Result<Tensor> {
     if comps.is_empty() {
-        assert_eq!(shards.len(), 1);
-        return shards[0].clone();
+        anyhow::ensure!(shards.len() == 1, "leaf gather with {} shards", shards.len());
+        return Ok(shards[0].clone());
     }
     let p = hierarchy[0];
     let inner: usize = hierarchy[1..].iter().product();
     let parts: Vec<Tensor> = (0..p)
         .map(|i| gather_rec(&shards[i * inner..(i + 1) * inner], &comps[1..], &hierarchy[1..]))
-        .collect();
+        .collect::<crate::Result<_>>()?;
     let refs: Vec<&Tensor> = parts.iter().collect();
-    match comps[0] {
+    Ok(match comps[0] {
         Sbp::Split(axis) => concat_axis(&refs, axis),
         Sbp::Broadcast => {
-            for r in &refs[1..] {
-                debug_assert!(r.allclose(refs[0], 1e-5), "broadcast shards diverged");
+            for (i, r) in refs.iter().enumerate().skip(1) {
+                anyhow::ensure!(
+                    r.allclose(refs[0], 1e-5),
+                    "broadcast shards diverged: replica {i} differs from replica 0 \
+                     (shape {}) — a collective produced inconsistent copies",
+                    refs[0].shape
+                );
             }
             parts[0].clone()
         }
         Sbp::Partial(ReduceKind::Sum) => add_n(&refs),
         Sbp::Partial(ReduceKind::Max) => max_n(&refs),
-    }
+    })
 }
 
 #[cfg(test)]
@@ -176,6 +196,17 @@ mod tests {
                 gather(&shards, nd, &[*h0, *h1]).allclose(t, 1e-5)
             },
         );
+    }
+
+    #[test]
+    fn diverged_broadcast_is_an_error_not_shard0() {
+        // Regression: this was a debug_assert!, so release builds silently
+        // returned replica 0 of a diverged broadcast.
+        let a = Tensor::f32([2], vec![1.0, 2.0]);
+        let b = Tensor::f32([2], vec![1.0, 2.5]);
+        let err = try_gather(&[a.clone(), b], &NdSbp::d1(B), &[2]).unwrap_err();
+        assert!(err.to_string().contains("diverged"), "{err}");
+        assert!(try_gather(&[a.clone(), a], &NdSbp::d1(B), &[2]).is_ok());
     }
 
     #[test]
