@@ -5,7 +5,7 @@
 //! Run: `cargo run --release --example hybrid_parallel_gpt -- --dp 2 --mp 8 --pp 2`
 
 use oneflow::actor::Engine;
-use oneflow::compiler::{compile, CompileOptions, PhysKernel};
+use oneflow::compiler::{compile, CompileOptions, TransferKind};
 use oneflow::config::Args;
 use oneflow::models::{gpt_sim, GptSimConfig};
 use oneflow::runtime::SimBackend;
@@ -33,26 +33,21 @@ fn main() {
     );
     let (g, loss, upd) = gpt_sim(&cfg);
     let plan = compile(&g, &[loss], &upd, &CompileOptions::default());
-    let mut allreduce = 0;
-    let mut pulls = 0;
-    for n in plan.boxing_nodes() {
-        match &n.kernel {
-            PhysKernel::Boxing { in_place, out_place, in_nd, .. } => {
-                if !in_place.same_devices(out_place) {
-                    pulls += 1;
-                } else if in_nd.0.iter().any(|s| s.is_partial()) {
-                    allreduce += 1;
-                }
-            }
-            _ => {}
+    let mut rings = 0;
+    let mut routed = 0;
+    for tr in &plan.transfers {
+        // the lowering's own classification, not re-derived from placements
+        match tr.kind {
+            TransferKind::Collective => rings += 1,
+            TransferKind::Routed { .. } => routed += 1,
         }
     }
     println!(
-        "plan: {} physical ops, {} collectives ({} reduce-class, {} cross-stage pulls)",
+        "plan: {} physical ops, {} transfer edges ({} ring collectives, {} routed sub-plans)",
         plan.nodes.len(),
         plan.boxing_count(),
-        allreduce,
-        pulls
+        rings,
+        routed
     );
     let pieces = args.usize("pieces", 4);
     let report = Engine::new(plan, Arc::new(SimBackend)).run(pieces);

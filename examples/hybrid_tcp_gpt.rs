@@ -1,22 +1,26 @@
-//! Distributed collective demo: train a **data-parallel** GPT byte LM
-//! across two localhost worker processes over the TCP transport — every
-//! gradient combine executes as a **rank-local ring all-reduce** over the
-//! wire (`boxing::ranked` + `comm::collective`) — and prove the numerics
-//! match the single-process loopback run **bitwise**.
+//! Decentralized **hybrid (DP×MP×pipeline) parallelism over TCP**: train a
+//! 2-stage pipeline × 2-way tensor-parallel × 2-way data-parallel GPT byte
+//! LM across **four** localhost worker processes, and prove the losses match
+//! the single-process loopback run **bitwise**.
+//!
+//! Every SBP transition executes as a *lowered transfer sub-plan*
+//! (`compiler::physical` + `boxing::route`):
+//!
+//! * per-block tensor-parallel combines ring among a rank's own devices;
+//! * data-parallel gradient combines ring across ranks over the wire;
+//! * stage boundaries travel as routed `ShardSend`/`ShardRecv` frames —
+//!
+//! so no rank ever materializes a tensor it doesn't own, and there is no
+//! centralized boxing actor anywhere.
 //!
 //! Run with no flags to orchestrate everything:
 //!
 //! ```text
-//! cargo run --release --example dataparallel_tcp_gpt
+//! cargo run --release --example hybrid_tcp_gpt
 //! ```
 //!
-//! The orchestrator (1) runs the job in-process over `loopback` (the same
-//! lowered per-member ring ops, exchanging through the in-process hub),
-//! then (2) re-execs itself as `--rank 0` / `--rank 1`, each hosting **one
-//! full model replica** and only its own gradient shards, rendezvousing over
-//! `--peers 127.0.0.1:p0,127.0.0.1:p1`, and (3) compares per-piece loss bits
-//! across the two runs. Worker mode (`--rank` present) is exactly what you
-//! would run by hand on two real machines.
+//! Worker mode (`--rank` present) is exactly what you would run by hand on
+//! four real machines.
 
 use oneflow::actor::{DataSource, Engine, FnSource, RunOptions, RunReport};
 use oneflow::comm::{free_local_ports, transport_from_args, Loopback, Transport};
@@ -24,7 +28,7 @@ use oneflow::compiler::{compile, CompileOptions, InputBinding};
 use oneflow::config::Args;
 use oneflow::data::SyntheticCorpus;
 use oneflow::graph::TensorId;
-use oneflow::models::{gpt_dataparallel_real, GptDataParallelConfig};
+use oneflow::models::{gpt_hybrid_real, GptHybridConfig};
 use oneflow::runtime::NativeBackend;
 use oneflow::tensor::{DType, Tensor};
 use oneflow::util::fmt;
@@ -33,23 +37,26 @@ use std::sync::Arc;
 use std::time::Duration;
 
 const PIECES: usize = 6;
+const WORLD: usize = 4;
 
-fn config() -> GptDataParallelConfig {
-    GptDataParallelConfig {
-        replicas: 2,
+fn config() -> GptHybridConfig {
+    GptHybridConfig {
+        stages: 2,
+        dp: 2,
+        tp: 2,
         vocab: 64,
         hidden: 32,
         ff: 64,
-        blocks: 2,
+        blocks_per_stage: 1,
         rows: 64,
         lr: 0.2,
     }
 }
 
 /// Every worker builds the identical deterministic source; the engine
-/// scatters only the batch shards its local replica consumes.
-fn source(cfg: &GptDataParallelConfig) -> Arc<dyn DataSource> {
-    let corpus = Arc::new(SyntheticCorpus::new(4096, cfg.vocab, 19));
+/// scatters only the batch shards its local actors consume.
+fn source(cfg: &GptHybridConfig) -> Arc<dyn DataSource> {
+    let corpus = Arc::new(SyntheticCorpus::new(4096, cfg.vocab, 29));
     let rows = cfg.rows;
     Arc::new(FnSource(move |b: &InputBinding, piece: usize| {
         let (ids, labels) = corpus.batch(piece, 1, rows);
@@ -62,11 +69,11 @@ fn source(cfg: &GptDataParallelConfig) -> Arc<dyn DataSource> {
 }
 
 /// Compile + run the job over `transport`. Every rank compiles the same
-/// plan locally; the launch partition gives it one replica's actors,
-/// including its own members of every gradient-combine ring collective.
+/// plan locally; the launch partition hands it one plan node (one dp
+/// replica of one stage, with both its tp device shards).
 fn run(transport: Arc<dyn Transport>) -> (RunReport, TensorId) {
     let cfg = config();
-    let (g, loss, upd) = gpt_dataparallel_real(&cfg);
+    let (g, loss, upd) = gpt_hybrid_real(&cfg);
     let plan = compile(&g, &[loss], &upd, &CompileOptions::default());
     let report = Engine::new(plan, Arc::new(NativeBackend))
         .with_source(source(&cfg))
@@ -116,26 +123,28 @@ fn worker(args: &Args) {
 fn orchestrate() {
     let cfg = config();
     println!(
-        "data-parallel GPT, {} replicas (vocab {}, hidden {}, {} tokens/piece, {} pieces)",
-        cfg.replicas, cfg.vocab, cfg.hidden, cfg.rows, PIECES
+        "hybrid GPT: {} stages x {} dp x {} tp (vocab {}, hidden {}, {} tokens/piece, {} pieces)",
+        cfg.stages, cfg.dp, cfg.tp, cfg.vocab, cfg.hidden, cfg.rows, PIECES
     );
 
     // -- single process, loopback transport: same lowered plan, all local --
     let (base, loss) = run(Arc::new(Loopback));
     let base_losses = loss_lines(&base, loss);
+    assert!(!base_losses.is_empty(), "single-process run fetched no losses");
     println!(
-        "loopback (1 process): {} collective bytes (Table 2 accounting)",
+        "loopback (1 process): {} transfer bytes per run (Table 2 accounting)",
         fmt::bytes(base.comm_bytes)
     );
     for l in &base_losses {
         println!("  {l}");
     }
 
-    // -- two worker processes, tcp transport: rank-local ring collectives --
+    // -- four worker processes over tcp: one dp replica of one stage each --
     let exe = std::env::current_exe().expect("current_exe");
-    let ports = free_local_ports(2).expect("free ports");
-    let peers = format!("127.0.0.1:{},127.0.0.1:{}", ports[0], ports[1]);
-    println!("spawning 2 workers over tcp ({peers})");
+    let ports = free_local_ports(WORLD).expect("free ports");
+    let peers: Vec<String> = ports.iter().map(|p| format!("127.0.0.1:{p}")).collect();
+    let peers = peers.join(",");
+    println!("spawning {WORLD} workers over tcp ({peers})");
     let spawn = |rank: usize| {
         Command::new(&exe)
             .args(["--transport", "tcp", "--rank", &rank.to_string(), "--peers", &peers])
@@ -144,7 +153,7 @@ fn orchestrate() {
             .spawn()
             .expect("spawn worker")
     };
-    let workers = [spawn(0), spawn(1)];
+    let workers: Vec<_> = (0..WORLD).map(spawn).collect();
     let mut worker_losses: Vec<String> = vec![];
     let mut comm: Vec<(usize, f64)> = vec![];
     for w in workers {
@@ -162,19 +171,19 @@ fn orchestrate() {
         }
     }
 
-    // -- verdict: bitwise loss equality; the loss lives on rank 0's fetch
-    // sink, and each rank must have moved real ring-collective bytes.
-    assert_eq!(comm.len(), 2, "missing worker reports");
+    // -- verdict: bitwise loss equality, and every rank moved real transfer
+    // payload (ring chunks and/or routed shard frames) over the wire.
+    assert_eq!(comm.len(), WORLD, "missing worker reports");
     for (rank, bytes) in &comm {
-        assert!(*bytes > 0.0, "rank {rank} moved no collective bytes");
-        println!("rank {rank}: {} of ring-collective payload sent", fmt::bytes(*bytes));
+        assert!(*bytes > 0.0, "rank {rank} moved no transfer bytes");
+        println!("rank {rank}: {} of transfer payload sent", fmt::bytes(*bytes));
     }
     assert_eq!(
         worker_losses, base_losses,
-        "2-process data-parallel losses diverged from the single-process run"
+        "4-process hybrid losses diverged from the single-process run"
     );
     println!(
-        "tcp (2 processes): {} loss pieces bitwise-equal to the single-process run ✓",
+        "tcp ({WORLD} processes): {} loss pieces bitwise-equal to the single-process run ✓",
         base_losses.len()
     );
 }

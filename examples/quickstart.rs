@@ -9,7 +9,7 @@
 //! Run: `cargo run --release --example quickstart`
 
 use oneflow::actor::{Engine, FnSource};
-use oneflow::compiler::{compile, CompileOptions, PhysKernel};
+use oneflow::compiler::{compile, CompileOptions};
 use oneflow::graph::{LogicalGraph, OpKind};
 use oneflow::placement::Placement;
 use oneflow::runtime::NativeBackend;
@@ -41,11 +41,17 @@ fn main() {
     let y2 = g.add1("y2", OpKind::MatMul { ta: false, tb: false }, &[y0, b1], p1.clone());
 
     let plan = compile(&g, &[y2], &HashMap::new(), &CompileOptions::default());
-    println!("boxing ops inserted by the compiler:");
-    for n in plan.boxing_nodes() {
-        if let PhysKernel::Boxing { in_nd, out_nd, in_place, out_place, .. } = &n.kernel {
-            println!("  {}: {in_nd} @ {in_place} -> {out_nd} @ {out_place}", n.name);
-        }
+    println!("transfer edges lowered by the compiler:");
+    for tr in &plan.transfers {
+        println!(
+            "  #{} ({} primitive ops): {} @ {} -> {} @ {}",
+            tr.id,
+            tr.ops.len(),
+            tr.in_nd,
+            tr.in_place,
+            tr.out_nd,
+            tr.out_place
+        );
     }
 
     let engine = Engine::new(plan, Arc::new(NativeBackend)).with_source(Arc::new(FnSource(

@@ -1,8 +1,10 @@
 //! Table 2 reproduction: measured bytes moved by every boxing transition vs
-//! the paper's formulas, same-placement (p=4) and disjoint (4 -> 2) columns.
+//! the paper's formulas, same-placement (p=4) and disjoint (4 -> 2) columns —
+//! plus (ISSUE 4) the *lowered* transfer plans: per-member ring shares and
+//! routed per-route bytes must land on the same closed forms.
 
 use oneflow::bench::Table;
-use oneflow::boxing::{apply_boxing, cost};
+use oneflow::boxing::{apply_boxing, cost, plan_transfer};
 use oneflow::placement::Placement;
 use oneflow::sbp::{s, scatter, NdSbp, B, P};
 use oneflow::tensor::{DType, Tensor};
@@ -43,4 +45,34 @@ fn main() {
     }
     tab.print();
     println!("\nall 32 cells match Table 2 exactly");
+
+    // ---- lowered-plan parity (ISSUE 4) ----
+    // Aligned same-placement edges lower to per-member ring ops; every
+    // member's analytic share times the member count is the Table 2 total.
+    for &a in &sigs {
+        for &b in &sigs {
+            let per_member = cost::member_bytes_same(&NdSbp::d1(a), &NdSbp::d1(b), &[4], t_bytes);
+            assert_eq!(
+                per_member * 4.0,
+                cost::transfer_bytes(a, b, 4, 4, true, t_bytes),
+                "{a} -> {b} ring member share"
+            );
+        }
+    }
+    // Cross-placement edges lower to routed sub-plans (with a producer-side
+    // LocalReduce hop for partial inputs): the sum of route bytes that cross
+    // devices equals the disjoint column exactly.
+    for &a in &sigs {
+        for &b in &sigs {
+            let hops =
+                plan_transfer(&NdSbp::d1(a), &p_same, &NdSbp::d1(b), &p_out, &t.shape, 4.0);
+            let moved: f64 = hops.iter().map(|h| h.crossing_bytes()).sum();
+            assert_eq!(
+                moved,
+                cost::transfer_bytes(a, b, 4, 2, false, t_bytes),
+                "{a} -> {b} routed bytes"
+            );
+        }
+    }
+    println!("lowered ring-member shares and routed route bytes match Table 2 ✓");
 }

@@ -6,17 +6,38 @@
 use crate::exec::QueueKind;
 
 /// 64-bit actor address: `node(16) | queue_kind(8) | device(8) | local(32)`.
+/// The top bit of the queue byte is the *shared-lane* flag: a Net actor that
+/// never blocks mid-action (shard sends/receives) rides the shared
+/// per-device Net thread instead of a private lane.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ActorAddr(pub u64);
+
+/// Queue-byte flag: Net actor on the shared per-device lane (see above).
+const SHARED_LANE: u64 = 1 << 47;
 
 /// The OS-thread key an actor is statically bound to: one dedicated thread
 /// per (node, device, hardware queue), mirroring the paper's "dedicated OS
 /// thread for each hardware queue".
+///
+/// `Net`-queue actors are the lowered transfer ops (`CollectiveMember`,
+/// `ShardSend`, `ShardRecv`). A ring member *blocks* mid-action while its
+/// peers' chunks arrive, so two of them must never share a thread — ranks
+/// can reach two independent collectives in opposite orders, and
+/// serializing one blocked exchange behind another deadlocks. Every ring
+/// member therefore gets its own `lane` (its plan-node id), parsed from the
+/// same address bits as everything else: no reservation table, no cap, no
+/// fallback path. Shard sends/receives never block in normal operation
+/// (the payload frame precedes the req that fires the receive on the same
+/// ordered stream), so they carry the shared-lane flag and share the
+/// per-device Net thread — a blocked receive there means a lost frame, and
+/// the run is already being torn down with a named route error.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ThreadKey {
     pub node: u16,
     pub queue: QueueKind,
     pub device: u8,
+    /// 0 for every shared hardware queue; the actor's own id for Net ops.
+    pub lane: u32,
 }
 
 fn queue_code(q: QueueKind) -> u8 {
@@ -52,12 +73,18 @@ impl ActorAddr {
         ActorAddr(v)
     }
 
+    /// Mark this (Net) actor as non-blocking: it shares the per-device Net
+    /// thread instead of getting a private lane.
+    pub fn shared_lane(self) -> Self {
+        ActorAddr(self.0 | SHARED_LANE)
+    }
+
     pub fn node(self) -> u16 {
         (self.0 >> 48) as u16
     }
 
     pub fn queue(self) -> QueueKind {
-        queue_from_code(((self.0 >> 40) & 0xFF) as u8)
+        queue_from_code(((self.0 >> 40) & 0x7F) as u8)
     }
 
     pub fn device(self) -> u8 {
@@ -69,9 +96,15 @@ impl ActorAddr {
     }
 
     /// The OS thread this actor is bound to — pure bit-field parsing, the
-    /// "ID translation mechanism" of §5.
+    /// "ID translation mechanism" of §5 (see [`ThreadKey`] for why blocking
+    /// Net actors ride private lanes).
     pub fn thread(self) -> ThreadKey {
-        ThreadKey { node: self.node(), queue: self.queue(), device: self.device() }
+        let lane = if self.queue() == QueueKind::Net && self.0 & SHARED_LANE == 0 {
+            self.local()
+        } else {
+            0
+        };
+        ThreadKey { node: self.node(), queue: self.queue(), device: self.device(), lane }
     }
 }
 
@@ -93,7 +126,23 @@ mod tests {
         assert_eq!(a.queue(), QueueKind::Net);
         assert_eq!(a.device(), 7);
         assert_eq!(a.local(), 12345);
-        assert_eq!(a.thread(), ThreadKey { node: 3, queue: QueueKind::Net, device: 7 });
+        // blocking Net actors ride a private lane keyed by their own id
+        assert_eq!(
+            a.thread(),
+            ThreadKey { node: 3, queue: QueueKind::Net, device: 7, lane: 12345 }
+        );
+        // non-blocking Net actors opt onto the shared per-device lane; the
+        // flag changes the thread, not the parsed fields
+        let s = a.shared_lane();
+        assert_eq!(s.queue(), QueueKind::Net);
+        assert_eq!(s.local(), 12345);
+        assert_eq!(s.thread(), ThreadKey { node: 3, queue: QueueKind::Net, device: 7, lane: 0 });
+        // shared hardware queues keep lane 0
+        let c = ActorAddr::new(3, QueueKind::Compute, 7, 12345);
+        assert_eq!(
+            c.thread(),
+            ThreadKey { node: 3, queue: QueueKind::Compute, device: 7, lane: 0 }
+        );
     }
 
     #[test]

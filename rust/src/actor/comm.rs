@@ -1,0 +1,195 @@
+//! Runtime context for **lowered transfer ops** (`CollectiveMember`,
+//! `ShardSend`, `ShardRecv`): the hub, transport and rank map their actions
+//! use to move shard payloads between ordinary actors.
+//!
+//! The compiler places every transfer op on the device that owns its data
+//! ([`crate::compiler::physical`]); at runtime each op is an ordinary actor
+//! and this context only answers "which worker rank hosts that device" and
+//! carries the chunk mailbox. Payloads between co-resident ops go through
+//! the in-process [`CollectiveHub`]; payloads to foreign ranks cross the
+//! [`Transport`] as tagged [`crate::comm::wire`] frames. Failures (a lost
+//! shard frame, a dead peer) surface as rank-tagged errors naming the route
+//! — the engine aborts the run instead of hanging.
+
+use crate::boxing::{self, RankedBoxing};
+use crate::comm::{wire, CollectiveHub, Transport};
+use crate::compiler::{PhysKernel, PhysNode};
+use crate::placement::DeviceId;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// See module docs. Built once per run by the engine; shared by every queue
+/// thread.
+pub(crate) struct CommRt {
+    pub hub: Arc<CollectiveHub>,
+    pub transport: Option<Arc<dyn Transport>>,
+    /// Plan node → owning worker rank (identity-to-0 for world size 1).
+    pub node_rank: Arc<HashMap<u16, usize>>,
+    pub my_rank: usize,
+    /// Per-payload receive deadline: a lost frame or dead peer surfaces as
+    /// an error here, well before the engine watchdog.
+    pub timeout: Duration,
+}
+
+impl CommRt {
+    fn rank_of(&self, dev: DeviceId) -> usize {
+        self.node_rank.get(&(dev.node as u16)).copied().unwrap_or(self.my_rank)
+    }
+
+    /// Execute one action of a lowered transfer op. Returns the slot
+    /// contents plus the payload bytes the action moved across devices.
+    pub fn execute(
+        &self,
+        node: &PhysNode,
+        inputs: &[&Tensor],
+        piece: usize,
+        has_data: bool,
+    ) -> Result<(Vec<Tensor>, f64), String> {
+        match &node.kernel {
+            PhysKernel::CollectiveMember { spec, member } => {
+                if !has_data {
+                    // data-free mode: no chunks move; account this member's
+                    // equal share of the Table 2 ring volume
+                    return Ok((
+                        Vec::new(),
+                        boxing::member_bytes_same(
+                            &spec.in_nd,
+                            &spec.out_nd,
+                            &spec.hierarchy,
+                            spec.t_bytes,
+                        ),
+                    ));
+                }
+                let member_rank: Vec<usize> =
+                    spec.devices.iter().map(|d| self.rank_of(*d)).collect();
+                let cx = RankedBoxing {
+                    hub: self.hub.as_ref(),
+                    transport: self.transport.as_deref(),
+                    member_rank: &member_rank,
+                    my_rank: self.my_rank,
+                    timeout: self.timeout,
+                };
+                let res = boxing::apply_boxing_ranked(
+                    &cx,
+                    spec.chan,
+                    piece,
+                    vec![(*member, inputs[0].clone())],
+                    &spec.in_nd,
+                    &spec.out_nd,
+                    &spec.hierarchy,
+                    &spec.logical,
+                )
+                .map_err(|e| {
+                    format!(
+                        "rank {}: ring collective `{}` piece {piece} failed: {e}",
+                        self.my_rank, node.name
+                    )
+                })?;
+                let (_, t) = res
+                    .shards
+                    .into_iter()
+                    .find(|(m, _)| m == member)
+                    .ok_or_else(|| {
+                        format!("collective `{}` returned no shard for its member", node.name)
+                    })?;
+                Ok((vec![t], res.bytes_sent))
+            }
+            PhysKernel::ShardSend { spec } => {
+                let crossing = if spec.src_dev == spec.dst_dev { 0.0 } else { spec.bytes };
+                if !has_data {
+                    return Ok((Vec::new(), crossing));
+                }
+                let payload = boxing::route::slice_box(inputs[0], &spec.src_box);
+                let dst_rank = self.rank_of(spec.dst_dev);
+                if dst_rank == self.my_rank {
+                    self.hub.push(
+                        wire::shard_key(spec.chan as u64, piece as u64),
+                        spec.src as u32,
+                        spec.dst as u32,
+                        payload.data,
+                    );
+                } else {
+                    let t = self.transport.as_ref().ok_or_else(|| {
+                        format!(
+                            "rank {}: shard route m{} -> m{} targets rank {dst_rank} \
+                             but no transport is attached",
+                            self.my_rank, spec.src, spec.dst
+                        )
+                    })?;
+                    t.send(
+                        dst_rank,
+                        wire::encode_shard(
+                            spec.chan as u64,
+                            piece as u64,
+                            spec.src as u32,
+                            spec.dst as u32,
+                            &payload.data,
+                        ),
+                    )
+                    .map_err(|e| {
+                        format!(
+                            "rank {}: shard send m{}({}) -> m{}({}) piece {piece} failed: {e}",
+                            self.my_rank, spec.src, spec.src_dev, spec.dst, spec.dst_dev
+                        )
+                    })?;
+                }
+                Ok((Vec::new(), crossing))
+            }
+            PhysKernel::ShardRecv { spec } => {
+                if !has_data {
+                    return Ok((Vec::new(), 0.0));
+                }
+                let recv = spec.recv();
+                if let Some(fill) = recv.fill {
+                    // off-coordinate partial member: local identity fill
+                    return Ok((
+                        vec![Tensor::full(recv.out_shape.clone(), node.dtype, fill)],
+                        0.0,
+                    ));
+                }
+                let deadline = Instant::now() + self.timeout;
+                let key = wire::shard_key(spec.chan as u64, piece as u64);
+                let mut payloads = Vec::with_capacity(recv.parts.len());
+                for (i, part) in recv.parts.iter().enumerate() {
+                    let data = self
+                        .hub
+                        .recv(key, part.src as u32, recv.dst as u32, deadline)
+                        .map_err(|e| {
+                            format!(
+                                "rank {}: transfer `{}` piece {piece}: shard route \
+                                 m{}({}) -> m{}({}) lost or late: {e}",
+                                self.my_rank,
+                                node.name,
+                                part.src,
+                                spec.src_dev(i),
+                                recv.dst,
+                                spec.dst_dev()
+                            )
+                        })?;
+                    let shape = part.src_box.shape();
+                    if shape.elems() != data.len() {
+                        return Err(format!(
+                            "rank {}: transfer `{}` piece {piece}: route m{} -> m{} \
+                             carried {} elements, expected {}",
+                            self.my_rank,
+                            node.name,
+                            part.src,
+                            recv.dst,
+                            data.len(),
+                            shape.elems()
+                        ));
+                    }
+                    payloads.push(Tensor::new(shape, node.dtype, data));
+                }
+                let recipe = recv
+                    .assemble
+                    .as_ref()
+                    .ok_or_else(|| format!("transfer `{}` has no reassembly recipe", node.name))?;
+                Ok((vec![boxing::route::assemble(recipe, &payloads)], 0.0))
+            }
+            _ => unreachable!("CommRt only executes lowered transfer ops"),
+        }
+    }
+}

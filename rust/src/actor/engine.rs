@@ -7,26 +7,29 @@
 //! one worker of a multi-process job: [`crate::comm::launch`] assigns each
 //! plan node an owning rank, only this rank's actors are instantiated, and
 //! envelopes addressed to foreign nodes cross the wire ([`crate::comm::wire`])
-//! instead of the in-process bus. Same-placement boxing ops spanning ranks
-//! are **replicated**: each participating rank runs a replica fed only its
-//! own shards, and the replicas execute the transition as ring collectives
-//! over the transport ([`crate::boxing::ranked`]) — so data-parallel
-//! gradient all-reduce overlaps the backward pass without any rank
-//! materializing a peer's shards. At end of run, ranks exchange a finalize
-//! barrier so every worker reports the global virtual makespan.
+//! instead of the in-process bus.
+//!
+//! Data movement needs no engine special-casing: the compiler has already
+//! lowered every boxing edge into ordinary actors — per-member ring
+//! collectives and routed `ShardSend`/`ShardRecv` ops placed on the devices
+//! that own the data (`compiler::physical`, `boxing::route`). The engine
+//! only supplies the comm context ([`super::comm::CommRt`]) their actions
+//! use: the chunk mailbox, the transport, and the node→rank map. A transfer
+//! failure (lost shard frame, dead peer) aborts the run with a rank-tagged
+//! error naming the route. At end of run, ranks exchange a finalize barrier
+//! so every worker reports the global virtual makespan.
 
 use super::addr::{ActorAddr, ThreadKey};
+use super::comm::CommRt;
 use super::msg::{Envelope, Msg};
 use super::{set_slots, Actor, Ctx};
-use crate::boxing;
 use crate::comm::{self, collective::CollectiveHub, wire, Transport};
-use crate::compiler::{InputBinding, PhysKernel, PhysNode, PhysOpId, PhysPlan, RegId};
+use crate::compiler::{InputBinding, PhysKernel, PhysNode, PhysPlan, RegId};
 use crate::exec::QueueKind;
 use crate::graph::{NodeId, TensorId};
 use crate::runtime::Backend;
 use crate::sbp::try_gather;
-use crate::tensor::{Shape, Tensor};
-use crate::util::Rng;
+use crate::tensor::Tensor;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -51,6 +54,8 @@ impl<F: Fn(&InputBinding, usize) -> Tensor + Send + Sync> DataSource for FnSourc
 pub struct RunOptions {
     pub pieces: usize,
     /// Wall-clock budget; exceeded ⇒ `Err` (deadlock detection in tests).
+    /// Transfer receives use half this budget as their per-payload deadline,
+    /// so a lost frame surfaces as a named route error before the watchdog.
     pub timeout: Option<Duration>,
 }
 
@@ -69,7 +74,8 @@ pub struct RunReport {
     pub remote_msgs: u64,
     /// Messages that crossed nodes (cases ⑤–⑦ — the CommNet path).
     pub cross_node_msgs: u64,
-    /// Bytes moved by boxing collectives (Table 2 accounting).
+    /// Payload bytes moved across devices by lowered transfer ops (ring
+    /// chunks + routed shard frames; Table 2 accounting).
     pub comm_bytes: f64,
     /// Virtual busy-seconds per hardware-queue thread.
     pub queue_busy: HashMap<ThreadKey, f64>,
@@ -110,176 +116,9 @@ enum Control {
     PeerDone { rank: usize, makespan: f64 },
     /// The transport died (peer connections closed before the barrier).
     CommLost(String),
-}
-
-/// One replicated boxing op's rank layout (multi-rank worlds only).
-struct CollMeta {
-    /// Flat placement (member) index → owning worker rank.
-    member_rank: Vec<usize>,
-    /// Members this rank owns, ascending — the order of the replica's
-    /// filtered inputs.
-    owned: Vec<usize>,
-    /// Owned fraction, for analytic per-rank byte shares in data-free mode.
-    share: f64,
-}
-
-/// Runtime context for rank-local collective boxing: which boxing ops are
-/// replicated across ranks, plus the hub/transport their ring chunks travel
-/// through. Built once per run when the world has more than one rank.
-pub(crate) struct CollectiveRt {
-    metas: HashMap<usize, CollMeta>,
-    hub: Arc<CollectiveHub>,
-    transport: Option<Arc<dyn Transport>>,
-    my_rank: usize,
-    timeout: Duration,
-}
-
-impl CollectiveRt {
-    /// Is `node` a replicated collective boxing op?
-    pub(crate) fn is_collective(&self, node: usize) -> bool {
-        self.metas.contains_key(&node)
-    }
-
-    /// This rank's owned-member fraction of `node` (analytic byte share).
-    pub(crate) fn share(&self, node: usize) -> f64 {
-        self.metas[&node].share
-    }
-
-    /// Execute one piece of a replicated boxing actor rank-locally. `inputs`
-    /// are this rank's shards in the replica's (filtered, ascending-member)
-    /// input order; the result is the full element vector with empty
-    /// placeholders at foreign members — their consumers are replicas on the
-    /// owning ranks and never read them. Returns `(elements, bytes sent)`.
-    ///
-    /// A failed exchange (dead peer, conflicting launch order) panics this
-    /// queue thread with full context; the engine watchdog then reports the
-    /// run as timed out instead of hanging.
-    pub(crate) fn execute(
-        &self,
-        node: &PhysNode,
-        inputs: &[&Tensor],
-        piece: usize,
-    ) -> (Vec<Tensor>, f64) {
-        let PhysKernel::Boxing { in_nd, in_place, out_nd, logical, .. } = &node.kernel else {
-            panic!("collective execute on non-boxing node {}", node.name)
-        };
-        let meta = &self.metas[&node.id.0];
-        assert_eq!(inputs.len(), meta.owned.len(), "local shard count for {}", node.name);
-        let local_in: Vec<(usize, Tensor)> =
-            meta.owned.iter().zip(inputs).map(|(&m, t)| (m, (*t).clone())).collect();
-        let cx = boxing::RankedBoxing {
-            hub: &self.hub,
-            transport: self.transport.as_deref(),
-            member_rank: &meta.member_rank,
-            my_rank: self.my_rank,
-            timeout: self.timeout,
-        };
-        let res = boxing::apply_boxing_ranked(
-            &cx,
-            node.id.0,
-            piece,
-            local_in,
-            in_nd,
-            out_nd,
-            &in_place.hierarchy,
-            logical,
-        )
-        .unwrap_or_else(|e| {
-            panic!(
-                "rank {}: collective boxing `{}` piece {piece} failed: {e}",
-                self.my_rank, node.name
-            )
-        });
-        let mut out: Vec<Tensor> = (0..meta.member_rank.len())
-            .map(|_| Tensor { shape: Shape(vec![0]), dtype: node.dtype, data: vec![] })
-            .collect();
-        for (m, t) in res.shards {
-            out[m] = t;
-        }
-        (out, res.bytes_sent)
-    }
-}
-
-/// Which boxing ops of `plan` can run rank-locally over the transport: same
-/// device set, non-interacting per-dim transitions, spanning more than one
-/// rank, and with every input shard produced on — and every output element
-/// consumed on — the rank that owns that member. Anything else keeps the
-/// single-actor gather path (still correct, just centralized).
-fn collective_metas(
-    plan: &PhysPlan,
-    node_rank: &HashMap<u16, usize>,
-    my_rank: usize,
-) -> HashMap<usize, CollMeta> {
-    let rank_of =
-        |pid: PhysOpId| node_rank.get(&(plan.nodes[pid.0].device.node as u16)).copied();
-    let mut metas = HashMap::new();
-    for node in &plan.nodes {
-        let PhysKernel::Boxing { in_nd, in_place, out_nd, out_place, .. } = &node.kernel else {
-            continue;
-        };
-        if !(in_place.same_devices(out_place) && in_place.hierarchy == out_place.hierarchy) {
-            continue; // cross-placement pull: consumer-side single actor (§5)
-        }
-        if boxing::dims_interact(in_nd, out_nd) {
-            continue; // needs the global gather+scatter fallback
-        }
-        // the collective key layout bounds these (boxing/ranked.rs)
-        if node.id.0 >= 1 << 16 || in_nd.rank() >= 1 << 4 {
-            continue;
-        }
-        let Some(member_rank) = in_place
-            .devices
-            .iter()
-            .map(|d| node_rank.get(&(d.node as u16)).copied())
-            .collect::<Option<Vec<usize>>>()
-        else {
-            continue;
-        };
-        let mut distinct = member_rank.clone();
-        distinct.sort_unstable();
-        distinct.dedup();
-        if distinct.len() <= 1 {
-            continue; // single-rank group: the legacy local path is exact
-        }
-        // producer alignment: input shard j must be produced on member j's rank
-        if node.inputs.len() != in_place.len() || !node.controls.is_empty() {
-            continue;
-        }
-        let producers_aligned = node
-            .inputs
-            .iter()
-            .enumerate()
-            .all(|(j, &(reg, _))| rank_of(plan.regs[reg.0].producer) == Some(member_rank[j]));
-        if !producers_aligned {
-            continue;
-        }
-        // consumer alignment: every reader of element e lives on member e's rank
-        let out_reg = node.out_reg;
-        let consumers_aligned = plan.nodes.iter().all(|c| {
-            let cr = rank_of(c.id);
-            let update_ok = match c.update_from {
-                Some((reg, elem)) => reg != out_reg || cr == Some(member_rank[elem]),
-                None => true,
-            };
-            c.inputs
-                .iter()
-                .all(|&(reg, elem)| reg != out_reg || cr == Some(member_rank[elem]))
-                && !c.controls.contains(&out_reg)
-                && update_ok
-        });
-        if !consumers_aligned {
-            continue;
-        }
-        let owned: Vec<usize> = member_rank
-            .iter()
-            .enumerate()
-            .filter(|&(_, &r)| r == my_rank)
-            .map(|(m, _)| m)
-            .collect();
-        let share = owned.len() as f64 / member_rank.len() as f64;
-        metas.insert(node.id.0, CollMeta { member_rank, owned, share });
-    }
-    metas
+    /// A transfer action failed (lost shard frame, dead peer, misrouted
+    /// chunk): abort the run and surface this rank-tagged error.
+    Failed(String),
 }
 
 /// The runtime engine (see module docs).
@@ -321,7 +160,7 @@ impl Engine {
             .expect("runtime deadlock or timeout")
     }
 
-    /// Run with explicit options; `Err` on timeout.
+    /// Run with explicit options; `Err` on timeout or transfer failure.
     pub fn run_with(&self, opts: RunOptions) -> Result<RunReport, String> {
         let pieces = opts.pieces;
         if pieces == 0 {
@@ -334,67 +173,44 @@ impl Engine {
         let my_rank = self.transport.as_ref().map(|t| t.rank()).unwrap_or(0);
         let node_rank: Arc<HashMap<u16, usize>> =
             Arc::new(comm::launch::node_rank_map(&plan, world));
-
-        // Collective boxing ops that span ranks are *replicated*: every
-        // participating rank instantiates the actor, feeds it only its own
-        // shards, and the replicas exchange ring chunks over the transport
-        // (boxing::ranked). Everything else is instantiated on exactly the
-        // rank owning its plan node.
-        let mut coll_metas: HashMap<usize, CollMeta> =
-            if world > 1 { collective_metas(&plan, &node_rank, my_rank) } else { HashMap::new() };
-        // Dense per-home-node device numbering for replicated collectives
-        // (identical on every rank: derived from the plan alone). A blocking
-        // ring exchange must never share a queue thread with another one —
-        // two ranks can reach two collectives in opposite orders — so when a
-        // home node exhausts its 255 dedicated device slots, the overflow
-        // collectives fall back to the single-actor gather path instead of
-        // wrapping onto an occupied thread.
-        let coll_dev: HashMap<usize, u8> = {
-            let mut ids: Vec<usize> = coll_metas.keys().copied().collect();
-            ids.sort_unstable();
-            let mut next_dev: HashMap<u16, usize> = HashMap::new();
-            let mut dev_of = HashMap::new();
-            for id in ids {
-                let home = plan.nodes[id].device.node as u16;
-                let c = next_dev.entry(home).or_insert(0usize);
-                if *c >= 255 {
-                    coll_metas.remove(&id);
-                    continue;
-                }
-                dev_of.insert(id, 1 + *c as u8);
-                *c += 1;
-            }
-            dev_of
-        };
         let local: Vec<bool> = plan
             .nodes
             .iter()
-            .map(|n| match coll_metas.get(&n.id.0) {
-                Some(m) => m.member_rank.contains(&my_rank),
-                None => node_rank
+            .map(|n| {
+                node_rank
                     .get(&(n.device.node as u16))
                     .map(|&r| r == my_rank)
-                    .unwrap_or(true),
+                    .unwrap_or(true)
             })
             .collect();
         // the low 32 bits of an actor address are its plan-node id
         let is_local = |a: &ActorAddr| local[a.local() as usize];
 
         // ---- address assignment (Fig 8) ----
+        // Ring-collective members run on the Net queue and, in data mode,
+        // each get a private lane thread (ThreadKey::lane, derived from the
+        // id bits): a member blocks mid-action for its peers' chunks, so no
+        // two may share a thread. Shard sends/receives never block in
+        // normal operation, and in data-free mode nothing blocks at all —
+        // those share the per-device Net thread (the shared-lane address
+        // flag), which also keeps the simulated NIC a single contended
+        // queue per device. Other hardware queues stay per-(node, device)
+        // or per-node exactly as before. Every rank of a job runs the same
+        // backend, so all ranks derive identical addresses.
+        let has_data = self.backend.has_data();
         let addr_of = |n: &PhysNode| -> ActorAddr {
             let dev = match n.queue {
-                QueueKind::Compute | QueueKind::H2D | QueueKind::D2H => n.device.dev as u8,
-                // Replicated collectives each get their own queue thread:
-                // two ranks may reach two collectives in opposite orders, so
-                // serializing a blocking ring exchange behind another actor
-                // on a shared Net thread could deadlock. dev 0 (where every
-                // legacy per-node Net actor lives) is never used, and the
-                // dense numbering keeps collectives on distinct threads up
-                // to 255 of them per home node.
-                _ if coll_dev.contains_key(&n.id.0) => coll_dev[&n.id.0],
-                _ => 0, // per-node queues (Net / HostCpu / Disk)
+                QueueKind::Compute | QueueKind::H2D | QueueKind::D2H | QueueKind::Net => {
+                    n.device.dev as u8
+                }
+                _ => 0, // per-node host queues (HostCpu / Disk)
             };
-            ActorAddr::new(n.device.node as u16, n.queue, dev, n.id.0 as u32)
+            let a = ActorAddr::new(n.device.node as u16, n.queue, dev, n.id.0 as u32);
+            match n.kernel {
+                PhysKernel::ShardSend { .. } | PhysKernel::ShardRecv { .. } => a.shared_lane(),
+                PhysKernel::CollectiveMember { .. } if !has_data => a.shared_lane(),
+                _ => a,
+            }
         };
         let addrs: Vec<ActorAddr> = plan.nodes.iter().map(addr_of).collect();
 
@@ -428,14 +244,15 @@ impl Engine {
             Arc::new(thread_keys.iter().enumerate().map(|(i, k)| (*k, i)).collect());
         let mut per_thread: Vec<Vec<Actor>> = (0..thread_keys.len()).map(|_| vec![]).collect();
 
-        let has_data = self.backend.has_data();
         let mut init_values: HashMap<usize, super::Piece> = HashMap::new();
         if has_data {
             for vb in &plan.vars {
                 if !vb.phys.iter().any(|&p| is_local(&addrs[p.0])) {
                     continue; // every shard is another rank's problem
                 }
-                let mut rng = Rng::new(plan.options.seed ^ (vb.node.0 as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let mut rng = crate::util::Rng::new(
+                    plan.options.seed ^ (vb.node.0 as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                );
                 let logical = Tensor::randn(vb.shape.clone(), vb.dtype, vb.init_std, &mut rng);
                 let shards = crate::sbp::scatter(&logical, &vb.nd_sbp, &vb.placement.hierarchy);
                 for (i, &pid) in vb.phys.iter().enumerate() {
@@ -450,27 +267,8 @@ impl Engine {
             if !is_local(&addr) {
                 continue;
             }
-            let mut consumers = consumers_of.get(&node.out_reg).cloned().unwrap_or_default();
-            let node_inst = match coll_metas.get(&node.id.0) {
-                // A replica of a collective boxing op sees only this rank's
-                // slice of the protocol: in registers fed by local producers,
-                // acks to/from local consumers. The remote shards arrive as
-                // ring chunks inside the action itself, not as envelopes.
-                Some(m) => {
-                    consumers.retain(|a| is_local(a));
-                    let mut n2 = node.clone();
-                    n2.inputs = node
-                        .inputs
-                        .iter()
-                        .enumerate()
-                        .filter(|(j, _)| m.member_rank[*j] == my_rank)
-                        .map(|(_, &x)| x)
-                        .collect();
-                    n2
-                }
-                None => node.clone(),
-            };
-            let mut actor = Actor::new(node_inst, addr, &producer_of, consumers, pieces);
+            let consumers = consumers_of.get(&node.out_reg).cloned().unwrap_or_default();
+            let mut actor = Actor::new(node.clone(), addr, &producer_of, consumers, pieces);
             set_slots(&mut actor, plan.regs[node.out_reg.0].slots);
             if let Some(v) = init_values.remove(&node.id.0) {
                 actor.set_var_value(v);
@@ -504,21 +302,19 @@ impl Engine {
             }
             _ => None,
         };
-        // Ring-chunk mailbox + runtime for replicated collectives. The hub
-        // also exists with no collectives so the ingress thread always has a
-        // place to deposit stray collective frames.
+        // Chunk mailbox + comm context for the lowered transfer ops. The hub
+        // also gives the ingress thread a place to deposit stray frames.
         let hub = Arc::new(CollectiveHub::new());
-        let coll_rt: Option<Arc<CollectiveRt>> = if coll_metas.is_empty() {
-            None
-        } else {
-            Some(Arc::new(CollectiveRt {
-                metas: coll_metas,
-                hub: hub.clone(),
-                transport: self.transport.clone(),
-                my_rank,
-                timeout: opts.timeout.unwrap_or(Duration::from_secs(600)),
-            }))
-        };
+        let comm_rt = Arc::new(CommRt {
+            hub: hub.clone(),
+            transport: self.transport.clone(),
+            node_rank: node_rank.clone(),
+            my_rank,
+            timeout: opts
+                .timeout
+                .map(|t| (t / 2).max(Duration::from_millis(250)))
+                .unwrap_or(Duration::from_secs(600)),
+        });
         let mut handles = vec![];
         for (ti, key) in thread_keys.iter().enumerate() {
             let actors = std::mem::take(&mut per_thread[ti]);
@@ -534,14 +330,14 @@ impl Engine {
             let src = self.source.clone();
             let bindings = input_bindings.clone();
             let router = router.clone();
-            let coll = coll_rt.clone();
+            let comm_rt = comm_rt.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("of-{:?}-n{}d{}", key.queue, key.node, key.device))
                     .spawn(move || {
                         thread_main(
                             actors, rx, senders, tindex, ctl, stop, backend, plan, key, cache,
-                            src, bindings, router, coll,
+                            src, bindings, router, comm_rt,
                         )
                     })
                     .expect("spawn queue thread"),
@@ -588,9 +384,14 @@ impl Engine {
                                         });
                                     }
                                     Ok(wire::Frame::Collective { key, src, dst, data }) => {
-                                        // a peer replica's ring chunk: park it
-                                        // where the blocked collective waits
+                                        // a peer member's ring chunk: park it
+                                        // where the blocked member waits
                                         hub.push(key, src, dst, data);
+                                    }
+                                    Ok(wire::Frame::Shard { chan, piece, src, dst, data }) => {
+                                        // a routed-transfer payload: the
+                                        // ShardRecv actor collects it by key
+                                        hub.push(wire::shard_key(chan, piece), src, dst, data);
                                     }
                                     Err(e) => eprintln!(
                                         "comm: undecodable frame from rank {src_rank}: {e}"
@@ -659,6 +460,7 @@ impl Engine {
                     if now >= d {
                         shutdown.store(true, Ordering::SeqCst);
                         comm_stop.store(true, Ordering::SeqCst);
+                        hub.abort("run timed out");
                         for h in handles {
                             let _ = h.join();
                         }
@@ -711,12 +513,28 @@ impl Engine {
                         report.makespan = report.makespan.max(makespan);
                     }
                 }
+                Control::Failed(why) => {
+                    // a transfer action errored: tear the run down promptly
+                    // (blocked exchanges wake through the hub abort) and
+                    // surface the rank-tagged route error
+                    shutdown.store(true, Ordering::SeqCst);
+                    comm_stop.store(true, Ordering::SeqCst);
+                    hub.abort(&why);
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    if let Some(h) = ingress.take() {
+                        let _ = h.join();
+                    }
+                    return Err(why);
+                }
                 Control::CommLost(why) => {
                     // Peer finalizes queued before the loss are already
                     // processed (channel order); reaching this arm means the
                     // barrier genuinely cannot complete.
                     shutdown.store(true, Ordering::SeqCst);
                     comm_stop.store(true, Ordering::SeqCst);
+                    hub.abort(&why);
                     for h in handles {
                         let _ = h.join();
                     }
@@ -759,7 +577,8 @@ impl Engine {
 }
 
 /// One hardware-queue OS thread: poll the bus, prefer the local queue, run
-/// actor state machines inline (the thread *is* the FIFO hardware queue).
+/// actor state machines inline (the thread *is* the FIFO hardware queue —
+/// or, for a lowered transfer op, its private lane).
 #[allow(clippy::too_many_arguments, clippy::type_complexity)]
 fn thread_main(
     mut actors: Vec<Actor>,
@@ -775,7 +594,7 @@ fn thread_main(
     src: Option<Arc<dyn DataSource>>,
     bindings: Arc<HashMap<NodeId, InputBinding>>,
     router: Option<Arc<comm::Router>>,
-    coll: Option<Arc<CollectiveRt>>,
+    comm_rt: Arc<CommRt>,
 ) {
     let feeder = move |nid: NodeId, shard: usize, piece: usize| -> Vec<Tensor> {
         let Some(src) = &src else { return vec![] };
@@ -798,7 +617,7 @@ fn thread_main(
         queue_free: 0.0,
         feeder: &feeder,
         data: backend.has_data(),
-        coll: coll.as_deref(),
+        comm: comm_rt.as_ref(),
     };
     let local_index: HashMap<ActorAddr, usize> =
         actors.iter().enumerate().map(|(i, a)| (a.addr, i)).collect();
@@ -865,6 +684,12 @@ fn thread_main(
             } else {
                 panic!("thread {key:?} produced a message for unknown thread {tkey:?}");
             }
+        }
+        if let Some(e) = fx.failed {
+            // a transfer action failed: report and stop this queue thread —
+            // the engine aborts the whole run
+            let _ = ctl.send(Control::Failed(e));
+            break;
         }
     }
     let mut busy = HashMap::new();

@@ -22,6 +22,7 @@
 //! deterministic discrete-event simulator of the paper's cluster.
 
 pub mod addr;
+pub mod comm;
 pub mod msg;
 pub mod engine;
 
@@ -30,7 +31,7 @@ pub use engine::{DataSource, Engine, FnSource, RunOptions, RunReport};
 pub use msg::{Envelope, Msg};
 
 use crate::compiler::{PhysKernel, PhysNode, PhysPlan, RegId};
-use crate::runtime::{action_secs, boxing_bytes, Backend};
+use crate::runtime::{action_secs, Backend};
 use crate::tensor::Tensor;
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
@@ -77,12 +78,15 @@ pub struct Actor {
 /// What an actor wants the engine to do after handling a message.
 pub struct Effects {
     pub outgoing: Vec<Envelope>,
-    /// Action executed: (duration, boxing bytes) — engine updates queue time.
+    /// Action executed: (duration, transfer bytes) — engine updates queue time.
     pub executed: Vec<(f64, f64)>,
     /// Fetched values to hand to the driver: (piece, tensors).
     pub fetched: Vec<(usize, Piece)>,
     /// This actor just finished its final piece.
     pub done: bool,
+    /// A transfer action failed (lost shard frame, dead peer): the engine
+    /// aborts the run and reports this rank-tagged error — no hang.
+    pub failed: Option<String>,
 }
 
 impl Actor {
@@ -138,7 +142,13 @@ impl Actor {
 
     /// Handle one message; then fire as many actions as have become ready.
     pub fn handle(&mut self, msg: Msg, ctx: &mut Ctx) -> Effects {
-        let mut fx = Effects { outgoing: vec![], executed: vec![], fetched: vec![], done: false };
+        let mut fx = Effects {
+            outgoing: vec![],
+            executed: vec![],
+            fetched: vec![],
+            done: false,
+            failed: None,
+        };
         match msg {
             Msg::Req { reg, piece, data, ts } => {
                 let ir = self
@@ -236,19 +246,26 @@ impl Actor {
                 } else {
                     vec![]
                 };
-                // A replicated collective boxing op runs rank-locally: this
-                // replica transforms only the shards its rank owns, trading
-                // ring chunks with peer replicas instead of gathering every
-                // shard into one process (boxing::ranked).
-                let coll = ctx.coll.filter(|rt| rt.is_collective(self.node.id.0));
-                let (out, moved) = match coll {
-                    Some(rt) if ctx.has_data() => rt.execute(&self.node, &resolved, piece),
-                    Some(rt) => {
-                        // data-free mode: no chunks move; account this
-                        // rank's analytic share of the Table 2 bytes
-                        (Vec::new(), boxing_bytes(&self.node) * rt.share(self.node.id.0))
+                // Lowered transfer ops (ring members, shard sends/receives)
+                // execute against the comm context — every other kernel goes
+                // to the backend. A transfer failure aborts the run with a
+                // rank-tagged error instead of unwinding the queue thread.
+                let is_transfer = matches!(
+                    self.node.kernel,
+                    PhysKernel::CollectiveMember { .. }
+                        | PhysKernel::ShardSend { .. }
+                        | PhysKernel::ShardRecv { .. }
+                );
+                let (out, moved) = if is_transfer {
+                    match ctx.comm.execute(&self.node, &resolved, piece, ctx.has_data()) {
+                        Ok(r) => r,
+                        Err(e) => {
+                            fx.failed = Some(e);
+                            return false;
+                        }
                     }
-                    None => (ctx.execute(&self.node, &resolved), boxing_bytes(&self.node)),
+                } else {
+                    (ctx.execute(&self.node, &resolved), 0.0)
                 };
                 let dur = action_secs(&self.node, ctx.cluster());
                 (Arc::new(out), dur, moved)
@@ -326,9 +343,9 @@ pub struct Ctx<'a> {
     pub queue_free: f64,
     pub feeder: &'a dyn Fn(crate::graph::NodeId, usize, usize) -> Vec<Tensor>,
     pub data: bool,
-    /// Rank-local collective runtime (multi-rank worlds with replicated
-    /// boxing ops only; `None` leaves behavior identical to the seed).
-    pub(crate) coll: Option<&'a engine::CollectiveRt>,
+    /// Comm context for lowered transfer ops (always present; degenerate
+    /// single-process worlds simply never cross the transport).
+    pub(crate) comm: &'a comm::CommRt,
 }
 
 /// `OF_TRACE=1` prints every action with its input shapes (debug aid).

@@ -122,6 +122,90 @@ pub fn transfer_secs(
     }
 }
 
+/// Total link-crossing bytes of a same-placement multi-dim transition: each
+/// differing hierarchy dim runs its 1-D collective within every group along
+/// that dim (Table 2's "same" column, applied per group). This is the one
+/// closed form both the compile-time cost model and the runtime accounting
+/// derive from.
+pub fn nd_bytes_same(
+    in_nd: &crate::sbp::NdSbp,
+    out_nd: &crate::sbp::NdSbp,
+    hierarchy: &[usize],
+    t_bytes: f64,
+) -> f64 {
+    let mut total = 0.0;
+    for d in 0..in_nd.rank() {
+        if in_nd.0[d] == out_nd.0[d] {
+            continue;
+        }
+        let mut group_bytes = t_bytes;
+        for (d2, s2) in in_nd.0.iter().enumerate() {
+            if d2 != d && s2.is_split() {
+                group_bytes /= hierarchy[d2] as f64;
+            }
+        }
+        let groups: usize = hierarchy
+            .iter()
+            .enumerate()
+            .filter(|&(d2, _)| d2 != d)
+            .map(|(_, &h)| h)
+            .product();
+        total += groups as f64 * bytes_same(in_nd.0[d], out_nd.0[d], hierarchy[d], group_bytes);
+    }
+    total
+}
+
+/// Per-member share of [`nd_bytes_same`]: the ring algorithms send equal
+/// volumes from every member, so one member's share is the total divided by
+/// the member count. Benches assert this against Table 2's closed forms.
+pub fn member_bytes_same(
+    in_nd: &crate::sbp::NdSbp,
+    out_nd: &crate::sbp::NdSbp,
+    hierarchy: &[usize],
+    t_bytes: f64,
+) -> f64 {
+    let members: usize = hierarchy.iter().product();
+    nd_bytes_same(in_nd, out_nd, hierarchy, t_bytes) / members.max(1) as f64
+}
+
+/// Ring wall-clock of a same-placement multi-dim transition: the per-dim
+/// collectives run sequentially (innermost first); a dim is inter-node when
+/// the placement spans nodes and the dim is the node-spanning one (dim 0 of
+/// a grid, or the only dim of a flat multi-node placement).
+pub fn nd_secs_same(
+    in_nd: &crate::sbp::NdSbp,
+    out_nd: &crate::sbp::NdSbp,
+    hierarchy: &[usize],
+    single_node: bool,
+    t_bytes: f64,
+    net: &NetworkModel,
+) -> f64 {
+    let mut total = 0.0;
+    for d in 0..in_nd.rank() {
+        if in_nd.0[d] == out_nd.0[d] {
+            continue;
+        }
+        let mut group_bytes = t_bytes;
+        for (d2, s2) in in_nd.0.iter().enumerate() {
+            if d2 != d && s2.is_split() {
+                group_bytes /= hierarchy[d2] as f64;
+            }
+        }
+        let inter = if single_node { false } else { d == 0 || hierarchy.len() == 1 };
+        total += transfer_secs(
+            in_nd.0[d],
+            out_nd.0[d],
+            hierarchy[d],
+            hierarchy[d],
+            true,
+            inter,
+            group_bytes,
+            net,
+        );
+    }
+    total
+}
+
 /// Reduce kind required to consume a partial tensor (sum/max), if any.
 pub fn partial_kind(sbp: Sbp) -> Option<ReduceKind> {
     match sbp {

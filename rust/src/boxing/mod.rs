@@ -1,16 +1,22 @@
-//! **Boxing** (paper §3.2): the data-routing ops the compiler inserts when a
-//! producer's SBP signature differs from a consumer's expectation.
+//! **Boxing** (paper §3.2–3.3): the data movement the compiler inserts when
+//! a producer's SBP signature differs from a consumer's expectation.
 //!
 //! [`cost`] implements Table 2 (bytes transferred per transition, same vs
 //! disjoint device sets) and the time model for each collective on the
 //! simulated interconnect. [`collective`] implements the collectives over
-//! real shards so the runtime can execute boxing with correct numerics, and
-//! reports the bytes it actually moved — tests assert those equal Table 2.
+//! real shards — the single-process *reference semantics* every distributed
+//! execution is tested against — and reports the bytes it actually moved;
+//! tests assert those equal Table 2. [`ranked`] runs aligned same-placement
+//! transitions member-locally over ring collectives, and [`route`] computes
+//! the shard-intersection routes the compiler lowers everything else to
+//! (`ShardSend`/`ShardRecv` sub-plans with producer-side LocalReduce).
 
 pub mod cost;
 pub mod collective;
 pub mod ranked;
+pub mod route;
 
-pub use cost::{transfer_bytes, transfer_secs, BoxingMethod};
+pub use cost::{member_bytes_same, nd_bytes_same, nd_secs_same, transfer_bytes, transfer_secs, BoxingMethod};
 pub use collective::{apply_boxing, dims_interact};
 pub use ranked::{apply_boxing_ranked, RankedBoxing, RankedResult};
+pub use route::{apply_hops, plan_transfer, BoxSpec, RecvSpec, RoutedTransfer};

@@ -3,18 +3,20 @@
 //! with peer ranks through [`crate::comm::collective`] ring collectives.
 //!
 //! [`apply_boxing`](super::apply_boxing) assumes every shard of the logical
-//! tensor is present in one address space — fine for a single process, wrong
-//! for a multi-process job where the gradient all-reduce of a data-parallel
-//! run spans worker ranks. [`apply_boxing_ranked`] is the multi-process
-//! entry point the actor engine calls with its partition from
-//! [`crate::comm::launch`]: `local_in` holds only this rank's input shards,
-//! the ring steps move exactly the Table 2 byte volumes, and the result is
-//! **bitwise-equal** to the single-process path (reductions fold in
-//! ascending member order, the `add_n` association) — DESIGN.md invariant 7.
+//! tensor is present in one address space — fine as a reference semantics,
+//! wrong for a multi-process job where the gradient all-reduce of a
+//! data-parallel run spans worker ranks. [`apply_boxing_ranked`] is the
+//! entry point each lowered `CollectiveMember` actor calls
+//! ([`crate::actor::comm`]): `local_in` holds only the members this call
+//! transforms (one per actor), the ring steps move exactly the Table 2 byte
+//! volumes, and the result is **bitwise-equal** to the single-process path
+//! (reductions fold in ascending member order, the `add_n` association) —
+//! DESIGN.md invariant 7.
 //!
 //! Only non-interacting per-dim transitions are supported (the same
 //! precondition [`super::dims_interact`] guards in the sequential path);
-//! the engine falls back to the single-actor gather path otherwise.
+//! the compiler lowers everything else to routed transfer sub-plans
+//! ([`super::route`]).
 
 use super::collective::embed_slice;
 use crate::comm::collective::{
@@ -153,8 +155,12 @@ pub fn apply_boxing_ranked(
             for i in 0..inner {
                 let flat = |g: usize| o * p * inner + g * inner + i;
                 let group_ranks: Vec<usize> = (0..p).map(|g| cx.member_rank[flat(g)]).collect();
+                // The members *this call* transforms — not every member of
+                // the caller's rank: with the lowered per-member collective
+                // ops each actor owns exactly one member, and co-resident
+                // members trade chunks through the hub like remote ones.
                 let owned: Vec<usize> =
-                    (0..p).filter(|&g| group_ranks[g] == cx.my_rank).collect();
+                    (0..p).filter(|&g| shards.contains_key(&flat(g))).collect();
                 if owned.is_empty() {
                     continue;
                 }

@@ -1,0 +1,638 @@
+//! **Transfer routing** (ISSUE 4): the shard-intersection math that lowers a
+//! boxing edge `(in_nd, in_place) → (out_nd, out_place)` into a *routed
+//! transfer sub-plan* — which byte ranges of which producer shard each
+//! consumer shard needs, and how the received slices reassemble.
+//!
+//! The compiler uses this for every transition the ring collectives cannot
+//! run (cross-placement re-layouts, interacting hierarchy dims): it emits one
+//! `ShardSend` per route and one `ShardRecv` per consumer shard, placed on
+//! the devices that own the data, so **no rank ever materializes a tensor it
+//! doesn't own** (DESIGN.md invariant 8). The same plan drives compile-time
+//! costing ([`RoutedTransfer::busiest_link_secs`]) and runtime byte
+//! accounting — one model for both.
+//!
+//! Reassembly mirrors [`crate::sbp::gather`]'s recursion exactly (concat per
+//! split dim, ascending-member left-fold per partial dim, one replica per
+//! broadcast dim), so a routed transfer is **bitwise-equal** to the
+//! single-process `apply_boxing` path — property-tested in
+//! `tests/proptests.rs`.
+//!
+//! Transfers whose input carries a partial value over more than one member
+//! are planned as **two hops**: a producer-side `LocalReduce` hop that folds
+//! the partials onto the coordinate-0 members (`(p1-1)·|T|` moved), then a
+//! pure-movement hop to the consumers — which is how the routed bytes land
+//! exactly on Table 2's disjoint column (e.g. `P→B`: `(p1+p2-1)·|T|`).
+
+use crate::exec::NetworkModel;
+use crate::placement::{DeviceId, Placement};
+use crate::sbp::{NdSbp, ReduceKind, Sbp};
+use crate::tensor::ops::{add_n, concat_axis, max_n};
+use crate::tensor::shape::{split_offsets, split_sizes};
+use crate::tensor::{Shape, Tensor};
+use std::collections::HashMap;
+
+/// An axis-aligned sub-box of a tensor: per-axis offset and length.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BoxSpec {
+    pub off: Vec<usize>,
+    pub len: Vec<usize>,
+}
+
+impl BoxSpec {
+    /// The full box of `shape`.
+    pub fn full(shape: &Shape) -> Self {
+        BoxSpec { off: vec![0; shape.rank()], len: shape.0.clone() }
+    }
+
+    /// Shape of the box contents.
+    pub fn shape(&self) -> Shape {
+        Shape(self.len.clone())
+    }
+
+    pub fn elems(&self) -> usize {
+        self.len.iter().product()
+    }
+
+    /// Intersect with `[off, off+len)` along `axis`; `None` if empty.
+    fn narrowed(&self, axis: usize, off: usize, len: usize) -> Option<BoxSpec> {
+        let lo = self.off[axis].max(off);
+        let hi = (self.off[axis] + self.len[axis]).min(off + len);
+        if lo >= hi {
+            return None;
+        }
+        let mut b = self.clone();
+        b.off[axis] = lo;
+        b.len[axis] = hi - lo;
+        Some(b)
+    }
+
+    /// Translate from the enclosing box's coordinates (self ⊆ outer).
+    fn local_to(&self, outer: &BoxSpec) -> BoxSpec {
+        let off = self
+            .off
+            .iter()
+            .zip(&outer.off)
+            .map(|(a, b)| {
+                debug_assert!(a >= b, "box not inside its enclosing box");
+                a - b
+            })
+            .collect();
+        BoxSpec { off, len: self.len.clone() }
+    }
+}
+
+/// Copy the contents of `b` (in `t`-local coordinates) into a fresh tensor.
+pub fn slice_box(t: &Tensor, b: &BoxSpec) -> Tensor {
+    let rank = t.shape.rank();
+    assert_eq!(rank, b.off.len(), "box rank vs tensor rank");
+    if rank == 0 {
+        return t.clone();
+    }
+    let mut strides = vec![1usize; rank];
+    for d in (0..rank.saturating_sub(1)).rev() {
+        strides[d] = strides[d + 1] * t.shape.dim(d + 1);
+    }
+    let outer: usize = b.len[..rank - 1].iter().product();
+    let run = b.len[rank - 1];
+    let mut out = Vec::with_capacity(outer * run);
+    let mut idx = vec![0usize; rank - 1];
+    for _ in 0..outer {
+        let mut base = b.off[rank - 1];
+        for d in 0..rank - 1 {
+            base += (b.off[d] + idx[d]) * strides[d];
+        }
+        out.extend_from_slice(&t.data[base..base + run]);
+        for d in (0..rank - 1).rev() {
+            idx[d] += 1;
+            if idx[d] < b.len[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    Tensor::new(b.shape(), t.dtype, out)
+}
+
+/// The sub-box of the logical tensor that member `coord` of `(nd, hierarchy)`
+/// covers (split dims narrow — nested, in dim order, exactly like
+/// [`crate::sbp::shard_shape_nd`]; broadcast/partial dims cover everything).
+pub fn member_box(logical: &Shape, nd: &NdSbp, hierarchy: &[usize], coord: &[usize]) -> BoxSpec {
+    let mut b = BoxSpec::full(logical);
+    for (d, s) in nd.0.iter().enumerate() {
+        if let Sbp::Split(a) = s {
+            let sizes = split_sizes(b.len[*a], hierarchy[d]);
+            let offs = split_offsets(b.len[*a], hierarchy[d]);
+            b.off[*a] += offs[coord[d]];
+            b.len[*a] = sizes[coord[d]];
+        }
+    }
+    b
+}
+
+/// One leaf route: consumer `dst` needs `src_box` (in `src`-shard-local
+/// coordinates) of producer shard `src`.
+#[derive(Clone, Debug)]
+pub struct RoutePart {
+    pub src: usize,
+    pub src_box: BoxSpec,
+}
+
+/// How a consumer shard reassembles from its received slices — the same
+/// recursion `sbp::gather` runs, restricted to the consumer's box. `Leaf`
+/// indexes into [`RecvSpec::parts`].
+#[derive(Clone, Debug)]
+pub enum Assemble {
+    Leaf(usize),
+    Concat { axis: usize, parts: Vec<Assemble> },
+    Reduce { kind: ReduceKind, parts: Vec<Assemble> },
+}
+
+/// Everything one consumer shard needs: its routes, the reassembly recipe,
+/// or — for partial-output members off the value-carrying coordinate — the
+/// identity fill it materializes locally with zero traffic.
+#[derive(Clone, Debug)]
+pub struct RecvSpec {
+    /// Flat member index in the output placement.
+    pub dst: usize,
+    pub out_shape: Shape,
+    /// `Some(identity)` for out-partial members with a non-zero partial
+    /// coordinate: no routes, no traffic, locally-created fill.
+    pub fill: Option<f32>,
+    pub parts: Vec<RoutePart>,
+    pub assemble: Option<Assemble>,
+}
+
+/// One directed route with its placement-level endpoints.
+#[derive(Clone, Debug)]
+pub struct RouteDesc {
+    pub src: usize,
+    pub dst: usize,
+    pub src_dev: DeviceId,
+    pub dst_dev: DeviceId,
+    pub bytes: f64,
+}
+
+/// A fully-routed transfer hop: per-consumer receive specs plus the
+/// placements the route endpoints live on.
+#[derive(Clone, Debug)]
+pub struct RoutedTransfer {
+    pub in_nd: NdSbp,
+    pub in_place: Placement,
+    pub out_nd: NdSbp,
+    pub out_place: Placement,
+    pub logical: Shape,
+    pub elem_bytes: f64,
+    pub recvs: Vec<RecvSpec>,
+}
+
+impl RoutedTransfer {
+    /// Compute the routes of a single hop.
+    pub fn plan(
+        in_nd: &NdSbp,
+        in_place: &Placement,
+        out_nd: &NdSbp,
+        out_place: &Placement,
+        logical: &Shape,
+        elem_bytes: f64,
+    ) -> Self {
+        assert_eq!(in_nd.rank(), in_place.hierarchy.len(), "in NdSbp vs hierarchy");
+        assert_eq!(out_nd.rank(), out_place.hierarchy.len(), "out NdSbp vs hierarchy");
+        let aligned = in_place.hierarchy == out_place.hierarchy
+            && in_place.devices == out_place.devices;
+        let mut recvs = Vec::with_capacity(out_place.len());
+        for j in 0..out_place.len() {
+            let coord = out_place.coord(j);
+            let out_shape =
+                crate::sbp::shard_shape_nd(logical, out_nd, &out_place.hierarchy, &coord);
+            // Off-coordinate members of an output partial dim carry the
+            // identity element; scatter nests fills, so the *last* non-zero
+            // partial coordinate decides the value.
+            let mut fill = None;
+            for (d, s) in out_nd.0.iter().enumerate() {
+                if let Sbp::Partial(k) = s {
+                    if coord[d] != 0 {
+                        fill = Some(identity_elem(*k));
+                    }
+                }
+            }
+            if let Some(f) = fill {
+                recvs.push(RecvSpec {
+                    dst: j,
+                    out_shape,
+                    fill: Some(f),
+                    parts: vec![],
+                    assemble: None,
+                });
+                continue;
+            }
+            let region = member_box(logical, out_nd, &out_place.hierarchy, &coord);
+            let mut parts = Vec::new();
+            let mut bx = Builder {
+                in_nd,
+                hierarchy: &in_place.hierarchy,
+                aligned,
+                out_coord: &coord,
+                parts: &mut parts,
+            };
+            let in_box = BoxSpec::full(logical);
+            let assemble = bx.build(0, &in_box, &region, &mut vec![]);
+            recvs.push(RecvSpec { dst: j, out_shape, fill: None, parts, assemble: Some(assemble) });
+        }
+        RoutedTransfer {
+            in_nd: in_nd.clone(),
+            in_place: in_place.clone(),
+            out_nd: out_nd.clone(),
+            out_place: out_place.clone(),
+            logical: logical.clone(),
+            elem_bytes,
+            recvs,
+        }
+    }
+
+    /// Flat route list with device endpoints and byte volumes.
+    pub fn routes(&self) -> Vec<RouteDesc> {
+        let mut v = Vec::new();
+        for r in &self.recvs {
+            for p in &r.parts {
+                v.push(RouteDesc {
+                    src: p.src,
+                    dst: r.dst,
+                    src_dev: self.in_place.devices[p.src],
+                    dst_dev: self.out_place.devices[r.dst],
+                    bytes: p.src_box.elems() as f64 * self.elem_bytes,
+                });
+            }
+        }
+        v
+    }
+
+    /// Bytes that cross a device boundary (the runtime-accounted quantity).
+    pub fn crossing_bytes(&self) -> f64 {
+        self.routes().iter().filter(|r| r.src_dev != r.dst_dev).map(|r| r.bytes).sum()
+    }
+
+    /// Wall-clock of this hop under the ring-free point-to-point model: each
+    /// device's egress and ingress serialize on its link; routes to
+    /// co-resident members are free. The busiest link bounds the hop.
+    pub fn busiest_link_secs(&self, net: &NetworkModel) -> f64 {
+        let mut egress: HashMap<DeviceId, f64> = HashMap::new();
+        let mut ingress: HashMap<DeviceId, f64> = HashMap::new();
+        let mut any = false;
+        for r in self.routes() {
+            if r.src_dev == r.dst_dev {
+                continue;
+            }
+            any = true;
+            let bw = if r.src_dev.node != r.dst_dev.node { net.inter_bps } else { net.intra_bps };
+            *egress.entry(r.src_dev).or_default() += r.bytes / bw;
+            *ingress.entry(r.dst_dev).or_default() += r.bytes / bw;
+        }
+        if !any {
+            return 0.0;
+        }
+        let busiest = egress
+            .values()
+            .chain(ingress.values())
+            .cloned()
+            .fold(0.0f64, f64::max);
+        busiest + net.latency
+    }
+
+    /// Execute the hop in one address space — the reference semantics every
+    /// distributed execution is tested against, bitwise.
+    pub fn apply(&self, in_shards: &[Tensor]) -> Vec<Tensor> {
+        assert_eq!(in_shards.len(), self.in_place.len(), "input shard count");
+        let dtype = in_shards[0].dtype;
+        self.recvs
+            .iter()
+            .map(|r| match r.fill {
+                Some(f) => Tensor::full(r.out_shape.clone(), dtype, f),
+                None => {
+                    let payloads: Vec<Tensor> = r
+                        .parts
+                        .iter()
+                        .map(|p| slice_box(&in_shards[p.src], &p.src_box))
+                        .collect();
+                    assemble(r.assemble.as_ref().expect("recv without recipe"), &payloads)
+                }
+            })
+            .collect()
+    }
+}
+
+/// Reassemble a consumer shard from its received slices.
+pub fn assemble(a: &Assemble, payloads: &[Tensor]) -> Tensor {
+    match a {
+        Assemble::Leaf(i) => payloads[*i].clone(),
+        Assemble::Concat { axis, parts } => {
+            let built: Vec<Tensor> = parts.iter().map(|c| assemble(c, payloads)).collect();
+            let refs: Vec<&Tensor> = built.iter().collect();
+            concat_axis(&refs, *axis)
+        }
+        Assemble::Reduce { kind, parts } => {
+            let built: Vec<Tensor> = parts.iter().map(|c| assemble(c, payloads)).collect();
+            let refs: Vec<&Tensor> = built.iter().collect();
+            match kind {
+                ReduceKind::Sum => add_n(&refs),
+                ReduceKind::Max => max_n(&refs),
+            }
+        }
+    }
+}
+
+struct Builder<'a> {
+    in_nd: &'a NdSbp,
+    hierarchy: &'a [usize],
+    /// Same hierarchy and device list on both sides: broadcast replicas are
+    /// read from the consumer's own coordinate (zero traffic); otherwise from
+    /// coordinate 0 (the deterministic choice `sbp::gather` makes).
+    aligned: bool,
+    out_coord: &'a [usize],
+    parts: &'a mut Vec<RoutePart>,
+}
+
+impl Builder<'_> {
+    /// Mirror `gather_rec` over the *input* hierarchy, restricted to
+    /// `region`: `in_box` is the logical box the current input subtree
+    /// covers, `coord` the member coordinate prefix.
+    fn build(
+        &mut self,
+        d: usize,
+        in_box: &BoxSpec,
+        region: &BoxSpec,
+        coord: &mut Vec<usize>,
+    ) -> Assemble {
+        if d == self.in_nd.rank() {
+            let src = flat_index(coord, self.hierarchy);
+            let idx = self.parts.len();
+            self.parts.push(RoutePart { src, src_box: region.local_to(in_box) });
+            return Assemble::Leaf(idx);
+        }
+        let p = self.hierarchy[d];
+        match self.in_nd.0[d] {
+            Sbp::Split(a) => {
+                let sizes = split_sizes(in_box.len[a], p);
+                let offs = split_offsets(in_box.len[a], p);
+                let mut children = Vec::new();
+                for g in 0..p {
+                    let lo = in_box.off[a] + offs[g];
+                    let Some(sub_region) = region.narrowed(a, lo, sizes[g]) else {
+                        continue;
+                    };
+                    let mut sub_box = in_box.clone();
+                    sub_box.off[a] = lo;
+                    sub_box.len[a] = sizes[g];
+                    coord.push(g);
+                    children.push(self.build(d + 1, &sub_box, &sub_region, coord));
+                    coord.pop();
+                }
+                assert!(!children.is_empty(), "consumer region misses every producer shard");
+                if children.len() == 1 {
+                    children.pop().unwrap()
+                } else {
+                    Assemble::Concat { axis: a, parts: children }
+                }
+            }
+            Sbp::Broadcast => {
+                let r = if self.aligned && d < self.out_coord.len() && self.out_coord[d] < p {
+                    self.out_coord[d]
+                } else {
+                    0
+                };
+                coord.push(r);
+                let child = self.build(d + 1, in_box, region, coord);
+                coord.pop();
+                child
+            }
+            Sbp::Partial(k) => {
+                let mut children = Vec::with_capacity(p);
+                for g in 0..p {
+                    coord.push(g);
+                    children.push(self.build(d + 1, in_box, region, coord));
+                    coord.pop();
+                }
+                if children.len() == 1 {
+                    children.pop().unwrap()
+                } else {
+                    Assemble::Reduce { kind: k, parts: children }
+                }
+            }
+        }
+    }
+}
+
+fn flat_index(coord: &[usize], hierarchy: &[usize]) -> usize {
+    let mut idx = 0;
+    for (c, h) in coord.iter().zip(hierarchy) {
+        idx = idx * h + c;
+    }
+    idx
+}
+
+fn identity_elem(k: ReduceKind) -> f32 {
+    match k {
+        ReduceKind::Sum => 0.0,
+        ReduceKind::Max => f32::NEG_INFINITY,
+    }
+}
+
+/// Collapse every multi-member partial dim of `(in_nd, in_place)` onto its
+/// coordinate-0 members: the intermediate state of a two-hop transfer.
+pub fn collapse_partial(in_nd: &NdSbp, in_place: &Placement) -> (NdSbp, Placement) {
+    let mut nd = in_nd.clone();
+    let mut hier = in_place.hierarchy.clone();
+    for (d, s) in in_nd.0.iter().enumerate() {
+        if s.is_partial() {
+            nd.0[d] = Sbp::Broadcast;
+            hier[d] = 1;
+        }
+    }
+    let devices: Vec<DeviceId> = (0..in_place.len())
+        .filter(|&m| {
+            let c = in_place.coord(m);
+            in_nd.0.iter().enumerate().all(|(d, s)| !s.is_partial() || c[d] == 0)
+        })
+        .map(|m| in_place.devices[m])
+        .collect();
+    (nd, Placement::new(hier, devices))
+}
+
+/// Plan a transfer as one hop, or two hops (producer-side `LocalReduce`,
+/// then pure movement) when the input carries a partial value over more than
+/// one member — the decomposition whose crossing bytes equal Table 2's
+/// disjoint column.
+pub fn plan_transfer(
+    in_nd: &NdSbp,
+    in_place: &Placement,
+    out_nd: &NdSbp,
+    out_place: &Placement,
+    logical: &Shape,
+    elem_bytes: f64,
+) -> Vec<RoutedTransfer> {
+    let wide_partial = in_nd
+        .0
+        .iter()
+        .zip(&in_place.hierarchy)
+        .any(|(s, &h)| s.is_partial() && h > 1);
+    if wide_partial {
+        let (mid_nd, mid_place) = collapse_partial(in_nd, in_place);
+        vec![
+            RoutedTransfer::plan(in_nd, in_place, &mid_nd, &mid_place, logical, elem_bytes),
+            RoutedTransfer::plan(&mid_nd, &mid_place, out_nd, out_place, logical, elem_bytes),
+        ]
+    } else {
+        vec![RoutedTransfer::plan(in_nd, in_place, out_nd, out_place, logical, elem_bytes)]
+    }
+}
+
+/// Execute a (possibly multi-hop) routed transfer in one address space.
+pub fn apply_hops(hops: &[RoutedTransfer], in_shards: &[Tensor]) -> Vec<Tensor> {
+    let mut shards = in_shards.to_vec();
+    for hop in hops {
+        shards = hop.apply(&shards);
+    }
+    shards
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::boxing::apply_boxing;
+    use crate::sbp::{gather, s, scatter, B, P};
+    use crate::tensor::DType;
+    use crate::util::Rng;
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn slice_box_picks_the_sub_block() {
+        let t = Tensor::f32([3, 4], (0..12).map(|x| x as f32).collect());
+        let b = BoxSpec { off: vec![1, 1], len: vec![2, 2] };
+        let out = slice_box(&t, &b);
+        assert_eq!(out.shape.0, vec![2, 2]);
+        assert_eq!(out.data, vec![5.0, 6.0, 9.0, 10.0]);
+    }
+
+    #[test]
+    fn member_boxes_tile_split_dims() {
+        let logical: Shape = [5, 4].into();
+        let nd = NdSbp::d2(s(0), s(0));
+        // rows 5 split 2 then each part split 2: member (0,0) gets rows 0..2
+        let b = member_box(&logical, &nd, &[2, 2], &[0, 0]);
+        assert_eq!((b.off[0], b.len[0]), (0, 2));
+        let b = member_box(&logical, &nd, &[2, 2], &[1, 1]);
+        // rows 3..5 -> split 2 -> second part = row 4
+        assert_eq!((b.off[0], b.len[0]), (4, 1));
+    }
+
+    /// Disjoint-placement routed transfers are bitwise-equal to the
+    /// gather-then-scatter `apply_boxing` path, shard for shard, and the
+    /// crossing bytes equal Table 2's disjoint column.
+    #[test]
+    fn routed_disjoint_matches_apply_boxing_and_table2() {
+        let sigs = [s(0), s(1), B, P];
+        let mut r = Rng::new(41);
+        let in_pl = Placement::node(0, 4);
+        let out_pl = Placement::node(1, 2);
+        for &a in &sigs {
+            for &b in &sigs {
+                let t = Tensor::randn([8, 8], DType::F32, 1.0, &mut r);
+                let (in_nd, out_nd) = (NdSbp::d1(a), NdSbp::d1(b));
+                let shards = scatter(&t, &in_nd, &[4]);
+                let hops = plan_transfer(&in_nd, &in_pl, &out_nd, &out_pl, &t.shape, 4.0);
+                let routed = apply_hops(&hops, &shards);
+                let legacy = apply_boxing(&shards, &in_nd, &in_pl, &out_nd, &out_pl);
+                assert_eq!(routed.len(), legacy.shards.len());
+                for (i, (x, y)) in routed.iter().zip(&legacy.shards).enumerate() {
+                    assert_eq!(x.shape, y.shape, "{a} -> {b} shard {i} shape");
+                    assert_eq!(bits(&x.data), bits(&y.data), "{a} -> {b} shard {i} bits");
+                }
+                let moved: f64 = hops.iter().map(|h| h.crossing_bytes()).sum();
+                let expect =
+                    crate::boxing::cost::transfer_bytes(a, b, 4, 2, false, t.bytes() as f64);
+                assert_eq!(moved, expect, "{a} -> {b} crossing bytes");
+            }
+        }
+    }
+
+    /// Interacting same-placement transitions (the case the ring collectives
+    /// cannot run) also route bitwise-equal to `apply_boxing`.
+    #[test]
+    fn routed_interacting_dims_match_apply_boxing() {
+        let mut r = Rng::new(11);
+        let pl = Placement::grid(2, 2);
+        // (S(0), S(0)) -> (S(0), P): both dims split the same axis
+        let in_nd = NdSbp::d2(s(0), s(0));
+        let out_nd = NdSbp::d2(s(0), P);
+        assert!(crate::boxing::dims_interact(&in_nd, &out_nd));
+        let t = Tensor::randn([8, 6], DType::F32, 1.0, &mut r);
+        let shards = scatter(&t, &in_nd, &[2, 2]);
+        let hops = plan_transfer(&in_nd, &pl, &out_nd, &pl, &t.shape, 4.0);
+        let routed = apply_hops(&hops, &shards);
+        let legacy = apply_boxing(&shards, &in_nd, &pl, &out_nd, &pl);
+        for (i, (x, y)) in routed.iter().zip(&legacy.shards).enumerate() {
+            assert_eq!(bits(&x.data), bits(&y.data), "shard {i}");
+        }
+        let back = gather(&routed, &out_nd, &[2, 2]);
+        assert_eq!(bits(&back.data), bits(&t.data));
+    }
+
+    /// Aligned broadcast dims read the consumer's own replica: a same-device
+    /// interacting transition moves nothing it does not have to.
+    #[test]
+    fn aligned_broadcast_prefers_local_replica() {
+        let pl = Placement::grid(2, 2);
+        let in_nd = NdSbp::d2(B, s(0));
+        let out_nd = NdSbp::d2(s(0), s(0));
+        assert!(crate::boxing::dims_interact(&in_nd, &out_nd));
+        let hops = plan_transfer(&in_nd, &pl, &out_nd, &pl, &[8, 4].into(), 4.0);
+        assert_eq!(hops.len(), 1);
+        // every consumer's routes stay within its own broadcast replica row
+        for rd in hops[0].routes() {
+            let src_coord = pl.coord(rd.src);
+            let dst_coord = pl.coord(rd.dst);
+            assert_eq!(src_coord[0], dst_coord[0], "crossed a broadcast replica");
+        }
+    }
+
+    /// Two-hop partial collapse: the producer-side reduce moves
+    /// `(p1-1)·|T|`, the movement hop exactly what consumers materialize.
+    #[test]
+    fn partial_input_two_hop_byte_split() {
+        let t_shape: Shape = [4, 4].into();
+        let in_pl = Placement::node(0, 4);
+        let out_pl = Placement::node(1, 2);
+        let hops =
+            plan_transfer(&NdSbp::d1(P), &in_pl, &NdSbp::d1(B), &out_pl, &t_shape, 4.0);
+        assert_eq!(hops.len(), 2, "partial input must collapse producer-side");
+        let t_bytes = t_shape.elems() as f64 * 4.0;
+        assert_eq!(hops[0].crossing_bytes(), 3.0 * t_bytes, "LocalReduce hop");
+        assert_eq!(hops[1].crossing_bytes(), 2.0 * t_bytes, "movement hop");
+    }
+
+    /// Random 2-D cross-placement transfers gather back to the logical value.
+    #[test]
+    fn routed_random_2d_roundtrip() {
+        let mut r = Rng::new(77);
+        let sigs = [s(0), s(1), B, P];
+        for _ in 0..40 {
+            let m = r.range(2, 10);
+            let n = r.range(2, 10);
+            let in_nd = NdSbp::d2(*r.choose(&sigs), *r.choose(&sigs));
+            let out_nd = NdSbp::d2(*r.choose(&sigs), *r.choose(&sigs));
+            let in_pl = Placement::grid(2, 2);
+            let out_pl = Placement::new(
+                vec![2, 2],
+                (0..4).map(|i| DeviceId::new(4 + i / 2, i % 2)).collect(),
+            );
+            let t = Tensor::randn([m, n], DType::F32, 1.0, &mut r);
+            let shards = scatter(&t, &in_nd, &[2, 2]);
+            let hops = plan_transfer(&in_nd, &in_pl, &out_nd, &out_pl, &t.shape, 4.0);
+            let routed = apply_hops(&hops, &shards);
+            let back = gather(&routed, &out_nd, &[2, 2]);
+            assert_eq!(bits(&back.data), bits(&t.data), "{in_nd} -> {out_nd}");
+        }
+    }
+}

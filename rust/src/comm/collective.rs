@@ -44,6 +44,9 @@ use std::time::{Duration, Instant};
 pub struct CollectiveHub {
     inner: Mutex<HashMap<(u64, u32, u32), VecDeque<Vec<f32>>>>,
     cv: Condvar,
+    /// Set when the run aborts: blocked receivers wake and error out
+    /// immediately instead of waiting for their full deadline.
+    dead: Mutex<Option<String>>,
 }
 
 impl CollectiveHub {
@@ -57,8 +60,23 @@ impl CollectiveHub {
         self.cv.notify_all();
     }
 
+    /// Abort every blocked receive: the engine calls this when the run is
+    /// being torn down (a failed actor, a lost transport, the watchdog), so
+    /// queue threads blocked mid-exchange join promptly.
+    pub fn abort(&self, why: &str) {
+        *lock_recover(&self.dead) = Some(why.to_string());
+        // Serialize with receivers on the condvar's mutex before notifying:
+        // a receiver that already checked `dead` is now either inside
+        // wait_timeout (gets the notify) or still holds `inner` (will
+        // re-check `dead` after we release) — no lost wakeup, no receiver
+        // sleeping out its full deadline.
+        let _waiters = lock_recover(&self.inner);
+        self.cv.notify_all();
+    }
+
     /// Next chunk from member `src` to member `dst` under `key`; errors if
-    /// `deadline` passes first (a peer rank died or the job deadlocked).
+    /// `deadline` passes first (a peer rank died or the job deadlocked) or
+    /// the hub was [`abort`](CollectiveHub::abort)ed.
     pub fn recv(&self, key: u64, src: u32, dst: u32, deadline: Instant) -> crate::Result<Vec<f32>> {
         let mut m = lock_recover(&self.inner);
         loop {
@@ -69,6 +87,9 @@ impl CollectiveHub {
                     }
                     return Ok(v);
                 }
+            }
+            if let Some(why) = lock_recover(&self.dead).as_ref() {
+                anyhow::bail!("run aborted while waiting for a chunk: {why}");
             }
             let now = Instant::now();
             anyhow::ensure!(

@@ -8,7 +8,7 @@
 //! agree, which is what lets workers compile the same plan locally instead
 //! of shipping it.
 
-use crate::compiler::{PhysOpId, PhysPlan};
+use crate::compiler::{PhysKernel, PhysOpId, PhysPlan};
 use std::collections::HashMap;
 
 /// Sorted distinct node ids used by the plan.
@@ -56,14 +56,16 @@ pub fn partition(plan: &PhysPlan, world: usize) -> Vec<Partition> {
 
 /// Count register reads whose producer lives on a different rank than the
 /// consumer — the `Req` edges (and matching `Ack` backflow) that must cross
-/// the transport each piece.
+/// the transport each piece. Control edges count too: a routed transfer's
+/// `ShardRecv` is driven by its sends through controls (the payload itself
+/// travels as a tagged shard frame).
 pub fn cross_rank_edges(plan: &PhysPlan, world: usize) -> usize {
     let map = node_rank_map(plan, world);
     let rank_of = |pid: PhysOpId| map[&(plan.nodes[pid.0].device.node as u16)];
     let mut n = 0;
     for node in &plan.nodes {
         let mine = rank_of(node.id);
-        for &(reg, _) in &node.inputs {
+        for reg in node.inputs.iter().map(|&(r, _)| r).chain(node.controls.iter().copied()) {
             if rank_of(plan.regs[reg.0].producer) != mine {
                 n += 1;
             }
@@ -72,15 +74,29 @@ pub fn cross_rank_edges(plan: &PhysPlan, world: usize) -> usize {
     n
 }
 
-/// Human-readable partition summary (the `plan --world N` view).
+/// Human-readable partition summary (the `plan --world N` view). Lowered
+/// transfer ops are ordinary actors, so each rank's line itemizes the
+/// primitive transfer ops it hosts — there is no opaque boxing node.
 pub fn dump(plan: &PhysPlan, world: usize) -> String {
     let mut s = String::new();
     for p in partition(plan, world) {
+        let (mut rings, mut sends, mut recvs) = (0usize, 0usize, 0usize);
+        for pid in &p.actors {
+            match plan.nodes[pid.0].kernel {
+                PhysKernel::CollectiveMember { .. } => rings += 1,
+                PhysKernel::ShardSend { .. } => sends += 1,
+                PhysKernel::ShardRecv { .. } => recvs += 1,
+                _ => {}
+            }
+        }
         s.push_str(&format!(
-            "rank {}: nodes {:?}, {} actors\n",
+            "rank {}: nodes {:?}, {} actors ({} ring members, {} shard sends, {} shard recvs)\n",
             p.rank,
             p.nodes,
-            p.actors.len()
+            p.actors.len(),
+            rings,
+            sends,
+            recvs
         ));
     }
     s.push_str(&format!(

@@ -23,19 +23,22 @@
 //!   (payload bytes and virtual timestamps included) crosses the transport.
 //! * [`collective`] — rank-aware ring all-reduce / reduce-scatter /
 //!   all-gather / all2all over any [`Transport`], tagged per-collective so
-//!   concurrent collectives never interleave; the engine uses them to run
-//!   boxing ops **rank-locally** ([`crate::boxing::ranked`]), which is what
-//!   makes data and hybrid parallelism real across processes.
+//!   concurrent collectives never interleave; the compiler's lowered
+//!   `CollectiveMember` actors run boxing **member-locally** through them
+//!   ([`crate::boxing::ranked`]), and its `ShardSend`/`ShardRecv` actors
+//!   ship routed transfer payloads as tagged `Shard` frames through the
+//!   same hub — which is what makes data, tensor and pipeline parallelism
+//!   real across processes.
 //!
 //! Because virtual time rides on the messages themselves (the `(max, +)`
 //! algebra of [`crate::actor`]), a multi-process run of a plan whose
 //! cross-rank traffic is all envelope traffic reports the same makespan as
 //! the single-process run — the determinism invariant (DESIGN.md §4.5–§4.6)
-//! holds under every transport. Replicated collectives are the scoped
-//! exception: each replica stamps its output from its **local** inputs only
-//! (ring chunks carry data, not timestamps), so their makespan is a
-//! per-rank approximation — numerics stay bitwise-exact, and the finalize
-//! barrier still makes every rank report the same global value.
+//! holds under every transport. Ring collectives are the scoped exception:
+//! each member op stamps its output from its **local** input only (ring
+//! chunks carry data, not timestamps), so their makespan is a per-member
+//! approximation — numerics stay bitwise-exact, and the finalize barrier
+//! still makes every rank report the same global value.
 
 pub mod collective;
 pub mod launch;

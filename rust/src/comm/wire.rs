@@ -19,6 +19,7 @@ use std::sync::Arc;
 const TAG_ENVELOPE: u8 = 0;
 const TAG_FINALIZE: u8 = 1;
 const TAG_COLLECTIVE: u8 = 2;
+const TAG_SHARD: u8 = 3;
 
 /// Message tags within an envelope frame.
 const MSG_REQ: u8 = 0;
@@ -40,6 +41,26 @@ pub enum Frame {
     /// *member* indices within that collective's device group (not worker
     /// ranks), and the payload is raw f32 bits.
     Collective { key: u64, src: u32, dst: u32, data: Vec<f32> },
+    /// One point-to-point slice of a routed transfer sub-plan
+    /// (`boxing::route`): a `ShardSend` op shipping the byte range consumer
+    /// member `dst` needs from producer member `src`. `chan` is the
+    /// plan-wide transfer-hop channel, `piece` the pipeline piece — together
+    /// they tag the route so a lost or late frame is attributable. Payload
+    /// is raw f32 bits, so routed re-layouts are bit-exact.
+    Shard { chan: u64, piece: u64, src: u32, dst: u32, data: Vec<f32> },
+}
+
+/// Hub mailbox key of a shard frame: bit 63 marks the shard namespace so
+/// routed-transfer chunks can never collide with ring-collective keys
+/// (whose top 16 bits are a sub-2^15 channel id — asserted at lowering).
+pub fn shard_key(chan: u64, piece: u64) -> u64 {
+    (1u64 << 63) | ((chan & 0x3FFF_FFFF) << 32) | (piece & 0xFFFF_FFFF)
+}
+
+/// Cheap tag probe used by fault-injection tests and transport wrappers:
+/// is this encoded frame a routed-transfer shard frame?
+pub fn frame_is_shard(frame: &[u8]) -> bool {
+    frame.first() == Some(&TAG_SHARD)
 }
 
 /// Encode an envelope frame without cloning the envelope.
@@ -99,6 +120,21 @@ pub fn encode_collective(key: u64, src: u32, dst: u32, data: &[f32]) -> Vec<u8> 
     out
 }
 
+/// Encode a shard frame (see [`Frame::Shard`]).
+pub fn encode_shard(chan: u64, piece: u64, src: u32, dst: u32, data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(29 + data.len() * 4);
+    out.push(TAG_SHARD);
+    put_u64(&mut out, chan);
+    put_u64(&mut out, piece);
+    put_u32(&mut out, src);
+    put_u32(&mut out, dst);
+    put_u32(&mut out, data.len() as u32);
+    for &x in data {
+        put_u32(&mut out, x.to_bits());
+    }
+    out
+}
+
 /// Decode a frame; rejects truncated, oversized-field, or trailing bytes.
 pub fn decode(bytes: &[u8]) -> crate::Result<Frame> {
     let mut c = Cursor { buf: bytes, pos: 0 };
@@ -148,6 +184,19 @@ pub fn decode(bytes: &[u8]) -> crate::Result<Frame> {
                 data.push(f32::from_bits(c.u32()?));
             }
             Frame::Collective { key, src, dst, data }
+        }
+        TAG_SHARD => {
+            let chan = c.u64()?;
+            let piece = c.u64()?;
+            let src = c.u32()?;
+            let dst = c.u32()?;
+            let n = c.u32()? as usize;
+            anyhow::ensure!(c.remaining() >= n * 4, "shard payload truncated");
+            let mut data = Vec::with_capacity(n);
+            for _ in 0..n {
+                data.push(f32::from_bits(c.u32()?));
+            }
+            Frame::Shard { chan, piece, src, dst, data }
         }
         other => anyhow::bail!("bad frame tag {other}"),
     };
@@ -304,6 +353,26 @@ mod tests {
             f => panic!("wrong frame {f:?}"),
         }
         assert!(decode(&b[..b.len() - 1]).is_err(), "truncated payload must reject");
+    }
+
+    #[test]
+    fn shard_roundtrip_exact_bits() {
+        let data = vec![0.5f32, -0.0, f32::NEG_INFINITY, 2.25e-12];
+        let b = encode_shard(42, 7, 3, 1, &data);
+        assert!(frame_is_shard(&b));
+        match decode(&b).unwrap() {
+            Frame::Shard { chan, piece, src, dst, data: d } => {
+                assert_eq!((chan, piece, src, dst), (42, 7, 3, 1));
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&d), bits(&data));
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+        assert!(decode(&b[..b.len() - 1]).is_err(), "truncated payload must reject");
+        // shard keys live in their own namespace: bit 63 set, collective
+        // keys (channel < 2^15 in the top field) can never collide
+        assert!(shard_key(42, 7) >> 63 == 1);
+        assert!(!frame_is_shard(&encode_finalize(0, 1.0)));
     }
 
     #[test]

@@ -19,8 +19,9 @@ pub mod physical;
 pub mod fusion;
 
 pub use physical::{
-    compile, FetchBinding, InputBinding, PhysKernel, PhysNode, PhysOpId, PhysPlan, RegDesc,
-    RegId, ShardInfo, VarBinding,
+    compile, CollectiveSpec, FetchBinding, InputBinding, PhysKernel, PhysNode, PhysOpId,
+    PhysPlan, RecvOpSpec, RegDesc, RegId, SendSpec, ShardInfo, TransferDesc, TransferKind,
+    VarBinding,
 };
 pub use select::{boxing_secs, plan_cost, select_sbp, SelectStrategy, Signature};
 

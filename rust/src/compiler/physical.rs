@@ -1,11 +1,19 @@
 //! Logical → physical expansion (paper Fig 1, Fig 5): every logical op
-//! becomes one physical op per device of its placement; *boxing* ops are
-//! inserted wherever a consumer expects a different SBP signature or a
-//! different placement than the producer provides; registers (with slot
-//! counts = pipelining depth) and the compile-time memory plan are emitted.
+//! becomes one physical op per device of its placement; wherever a consumer
+//! expects a different SBP signature or placement than the producer
+//! provides, the **boxing-lowering pass** compiles the edge into a *transfer
+//! sub-plan* of primitive ops — per-member ring-collective ops for aligned
+//! same-placement transitions ([`crate::boxing::ranked`]), and routed
+//! `ShardSend`/`ShardRecv` pairs (slice / concat / local-reduce) computed by
+//! [`crate::boxing::route`] for everything else — placed on the devices that
+//! own the data. No monolithic boxing actor exists: no rank ever
+//! materializes a tensor it doesn't own (DESIGN.md invariant 8). Registers
+//! (with slot counts = pipelining depth) and the compile-time memory plan
+//! are emitted alongside.
 
 use super::select::{select_sbp, Signature};
 use super::{fusion, CompileOptions};
+use crate::boxing::route::{Assemble, BoxSpec, RecvSpec, RoutedTransfer};
 use crate::exec::{CostSpec, QueueKind};
 use crate::graph::{LogicalGraph, NodeId, OpKind, TensorId};
 use crate::placement::{DeviceId, Placement};
@@ -13,6 +21,7 @@ use crate::sbp::{shard_shape_nd, NdSbp, Sbp};
 use crate::tensor::shape::split_offsets;
 use crate::tensor::{DType, Shape};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Physical op id.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -34,25 +43,81 @@ pub struct ShardInfo {
     pub vocab_offset: usize,
 }
 
+/// Shared descriptor of one lowered ring-collective transfer: every member
+/// op carries the same spec and derives its group geometry from it.
+#[derive(Clone, Debug)]
+pub struct CollectiveSpec {
+    /// Plan-wide transfer channel — seeds the per-collective wire keys.
+    pub chan: usize,
+    pub in_nd: NdSbp,
+    pub out_nd: NdSbp,
+    pub hierarchy: Vec<usize>,
+    /// Member devices in row-major hierarchy order.
+    pub devices: Vec<DeviceId>,
+    /// Logical tensor shape — members derive every peer's shard/chunk
+    /// geometry from it without ever seeing foreign shards.
+    pub logical: Shape,
+    /// Logical tensor size in (dtype-weighted) bytes.
+    pub t_bytes: f64,
+}
+
+/// One route of a routed transfer hop: slice `src_box` out of producer
+/// member `src`'s shard and ship it to consumer member `dst` as a tagged
+/// shard frame (hub-local when co-resident, wire otherwise).
+#[derive(Clone, Debug)]
+pub struct SendSpec {
+    /// Transfer-hop channel (tags the wire frames).
+    pub chan: usize,
+    pub src: usize,
+    pub dst: usize,
+    pub src_box: BoxSpec,
+    pub src_dev: DeviceId,
+    pub dst_dev: DeviceId,
+    /// Payload bytes of one piece of this route.
+    pub bytes: f64,
+}
+
+/// One consumer shard of a routed transfer hop: collect the tagged shard
+/// frames of its routes and reassemble (concat / local-reduce / fill).
+/// Shares the hop's route table rather than copying it — `idx` picks this
+/// op's [`RecvSpec`] out of [`RoutedTransfer::recvs`].
+#[derive(Clone, Debug)]
+pub struct RecvOpSpec {
+    pub chan: usize,
+    pub hop: Arc<RoutedTransfer>,
+    /// Index into `hop.recvs`.
+    pub idx: usize,
+}
+
+impl RecvOpSpec {
+    pub fn recv(&self) -> &RecvSpec {
+        &self.hop.recvs[self.idx]
+    }
+
+    pub fn dst_dev(&self) -> DeviceId {
+        self.hop.out_place.devices[self.recv().dst]
+    }
+
+    /// Device of route `part`'s source member.
+    pub fn src_dev(&self, part: usize) -> DeviceId {
+        self.hop.in_place.devices[self.recv().parts[part].src]
+    }
+}
+
 /// What a physical node executes.
 #[derive(Clone, Debug)]
 pub enum PhysKernel {
     /// A sharded instance of a logical compute op.
     Compute { op: OpKind, shard: ShardInfo },
-    /// A boxing (collective) op transforming all shards of one logical
-    /// tensor between signatures/placements. Consumer shard `i` reads output
-    /// element `i`.
-    Boxing {
-        in_nd: NdSbp,
-        in_place: Placement,
-        out_nd: NdSbp,
-        out_place: Placement,
-        /// Logical tensor size in (dtype-weighted) bytes.
-        t_bytes: f64,
-        /// Logical tensor shape — rank-local execution derives every
-        /// member's shard/chunk geometry from it without seeing the shards.
-        logical: Shape,
-    },
+    /// One member of an aligned same-placement transfer, lowered onto the
+    /// ring collectives: this op transforms only member `member`'s shard,
+    /// trading ring chunks with its peer members (other ordinary actors)
+    /// through the collective hub / transport.
+    CollectiveMember { spec: Arc<CollectiveSpec>, member: usize },
+    /// Producer side of one routed-transfer route (see [`SendSpec`]).
+    ShardSend { spec: Arc<SendSpec> },
+    /// Consumer side of a routed transfer hop (see [`RecvOpSpec`]).
+    ShardRecv { spec: Arc<RecvOpSpec> },
     /// Parameter shard source; re-emits (or applies the fed-back update to)
     /// its slot each piece.
     Var { var: NodeId, shard_idx: usize },
@@ -60,6 +125,35 @@ pub enum PhysKernel {
     Input { input: NodeId, shard_idx: usize },
     /// Sink collecting all shards of a fetched logical tensor.
     Fetch { tensor: TensorId },
+}
+
+/// How one boxing edge was lowered.
+#[derive(Clone, Debug)]
+pub enum TransferKind {
+    /// Aligned same-placement, non-interacting dims: per-member ring ops.
+    Collective,
+    /// Routed point-to-point sub-plan — one hop, or two when the input
+    /// carries a partial value (producer-side LocalReduce, then movement).
+    Routed { hops: Vec<Arc<RoutedTransfer>> },
+}
+
+/// One lowered transfer edge: the compile-time record tying the primitive
+/// ops back to the `(in_nd, in_place) → (out_nd, out_place)` transition they
+/// realize. Plan inspection, costing and the `oneflow plan` report all read
+/// this instead of a monolithic boxing node.
+#[derive(Clone, Debug)]
+pub struct TransferDesc {
+    pub id: usize,
+    pub tensor: TensorId,
+    pub in_nd: NdSbp,
+    pub in_place: Placement,
+    pub out_nd: NdSbp,
+    pub out_place: Placement,
+    pub logical: Shape,
+    pub t_bytes: f64,
+    pub kind: TransferKind,
+    /// The primitive phys ops this edge lowered to.
+    pub ops: Vec<PhysOpId>,
 }
 
 /// One physical op (one actor at runtime).
@@ -144,6 +238,8 @@ pub struct PhysPlan {
     pub vars: Vec<VarBinding>,
     pub inputs: Vec<InputBinding>,
     pub fetches: Vec<FetchBinding>,
+    /// Lowered transfer edges (the boxing-lowering pass's record).
+    pub transfers: Vec<TransferDesc>,
     pub signatures: HashMap<NodeId, Signature>,
     pub options: CompileOptions,
     /// The (possibly fusion-rewritten) logical graph this plan realizes.
@@ -151,14 +247,10 @@ pub struct PhysPlan {
 }
 
 impl PhysPlan {
-    /// Number of boxing ops inserted (plan-structure tests use this).
+    /// Number of lowered transfer edges (plan-structure tests use this —
+    /// one edge may expand to many primitive ops).
     pub fn boxing_count(&self) -> usize {
-        self.nodes.iter().filter(|n| matches!(n.kernel, PhysKernel::Boxing { .. })).count()
-    }
-
-    /// Boxing nodes (method inspection in tests/benches).
-    pub fn boxing_nodes(&self) -> Vec<&PhysNode> {
-        self.nodes.iter().filter(|n| matches!(n.kernel, PhysKernel::Boxing { .. })).collect()
+        self.transfers.len()
     }
 
     /// Per-device planned memory footprint in bytes (registers × slots) —
@@ -196,6 +288,76 @@ impl PhysPlan {
         }
         s
     }
+
+    /// The lowered transfer sub-plan: per-edge routes plus, when `world > 1`
+    /// ranks partition the plan ([`crate::comm::launch`]), per-rank
+    /// send/receive byte totals per piece — the `oneflow plan` view.
+    pub fn transfer_report(&self, world: usize) -> String {
+        use std::collections::BTreeMap;
+        let node_rank = crate::comm::launch::node_rank_map(self, world);
+        let rank_of = |d: DeviceId| node_rank.get(&(d.node as u16)).copied().unwrap_or(0);
+        let mut s = String::new();
+        let mut sent: BTreeMap<usize, f64> = BTreeMap::new();
+        let mut recvd: BTreeMap<usize, f64> = BTreeMap::new();
+        for tr in &self.transfers {
+            s.push_str(&format!(
+                "transfer #{} t{}: {} @{} -> {} @{}\n",
+                tr.id, tr.tensor.0, tr.in_nd, tr.in_place, tr.out_nd, tr.out_place
+            ));
+            match &tr.kind {
+                TransferKind::Collective => {
+                    let per_member = crate::boxing::member_bytes_same(
+                        &tr.in_nd,
+                        &tr.out_nd,
+                        &tr.in_place.hierarchy,
+                        tr.t_bytes,
+                    );
+                    s.push_str(&format!(
+                        "  ring collective: {} members, {} per member per piece\n",
+                        tr.in_place.len(),
+                        crate::util::fmt::bytes(per_member)
+                    ));
+                    for d in &tr.in_place.devices {
+                        *sent.entry(rank_of(*d)).or_default() += per_member;
+                        *recvd.entry(rank_of(*d)).or_default() += per_member;
+                    }
+                }
+                TransferKind::Routed { hops } => {
+                    for (h, hop) in hops.iter().enumerate() {
+                        for r in hop.routes() {
+                            if r.src_dev == r.dst_dev {
+                                continue;
+                            }
+                            s.push_str(&format!(
+                                "  hop {h}: m{}({}) -> m{}({}): {}\n",
+                                r.src,
+                                r.src_dev,
+                                r.dst,
+                                r.dst_dev,
+                                crate::util::fmt::bytes(r.bytes)
+                            ));
+                            *sent.entry(rank_of(r.src_dev)).or_default() += r.bytes;
+                            *recvd.entry(rank_of(r.dst_dev)).or_default() += r.bytes;
+                        }
+                    }
+                }
+            }
+        }
+        if world > 1 && !self.transfers.is_empty() {
+            s.push_str("per-rank transfer bytes per piece:\n");
+            let mut ranks: Vec<usize> = sent.keys().chain(recvd.keys()).copied().collect();
+            ranks.sort_unstable();
+            ranks.dedup();
+            for r in ranks {
+                s.push_str(&format!(
+                    "  rank {r}: send {}, recv {}\n",
+                    crate::util::fmt::bytes(sent.get(&r).copied().unwrap_or(0.0)),
+                    crate::util::fmt::bytes(recvd.get(&r).copied().unwrap_or(0.0)),
+                ));
+            }
+        }
+        s
+    }
 }
 
 /// Placement of each producer's physical outputs for routing.
@@ -229,10 +391,9 @@ impl Builder {
         let rid = RegId(self.regs.len());
         let bytes_per_slot: f64 =
             out_shapes.iter().map(|s| s.elems() as f64 * dtype.bytes() as f64).sum();
-        let span = match &kernel {
-            PhysKernel::Boxing { out_place, .. } => out_place.devices.clone(),
-            _ => vec![device],
-        };
+        // lowered transfer ops buffer on their own device like any other
+        // actor, so a register's span is always exactly its device
+        let span = vec![device];
         self.regs.push(RegDesc { id: rid, producer: id, slots, bytes_per_slot, device, span });
         self.nodes.push(PhysNode {
             id,
@@ -281,12 +442,15 @@ pub fn compile(
     // Pass 2: SBP selection.
     let signatures = select_sbp(&g, opts.strategy, &opts.cluster);
 
-    // Pass 3: expansion.
+    // Pass 3: expansion + boxing lowering.
     let mut b = Builder { nodes: vec![], regs: vec![] };
     let mut produced: HashMap<TensorId, Produced> = HashMap::new();
-    // boxing cache: one boxing op per (tensor, target sbp, target placement)
+    // transfer cache: one lowered sub-plan per (tensor, target sbp, target
+    // placement) — shared by every consumer expecting that state
     let mut boxing_cache: HashMap<(TensorId, NdSbp, Vec<DeviceId>), Vec<(RegId, usize)>> =
         HashMap::new();
+    let mut transfers: Vec<TransferDesc> = vec![];
+    let mut chan_next: usize = 0;
     let mut vars: Vec<VarBinding> = vec![];
     let mut inputs: Vec<InputBinding> = vec![];
     let mut var_phys: HashMap<NodeId, Vec<PhysOpId>> = HashMap::new();
@@ -378,6 +542,8 @@ pub fn compile(
                         &g,
                         &mut b,
                         &mut boxing_cache,
+                        &mut transfers,
+                        &mut chan_next,
                         &produced,
                         t,
                         &sig.ins[i],
@@ -458,6 +624,8 @@ pub fn compile(
             &g,
             &mut b,
             &mut boxing_cache,
+            &mut transfers,
+            &mut chan_next,
             &produced,
             ut,
             &vb.nd_sbp.clone(),
@@ -470,8 +638,9 @@ pub fn compile(
     }
 
     // Baseline emulation: serialize collectives after the whole backward
-    // pass (unbucketed-allreduce schedulers). Every partial-consuming boxing
-    // op gets ordering deps on every gradient producer.
+    // pass (unbucketed-allreduce schedulers). Every op of a partial-consuming
+    // transfer that reads registers gets ordering deps on every gradient
+    // producer (receive-side ops are driven by their sends).
     if opts.serialize_comm {
         let grad_tensors: Vec<TensorId> = g
             .nodes
@@ -484,14 +653,11 @@ pub fn compile(
             .filter_map(|t| produced.get(t))
             .flat_map(|p| p.regs.iter().map(|&(r, _)| r))
             .collect();
-        let boxing_ids: Vec<usize> = b
-            .nodes
+        let boxing_ids: Vec<usize> = transfers
             .iter()
-            .filter(|n| {
-                matches!(&n.kernel, PhysKernel::Boxing { in_nd, .. }
-                    if in_nd.0.iter().any(|s| s.is_partial()))
-            })
-            .map(|n| n.id.0)
+            .filter(|tr| tr.in_nd.0.iter().any(|s| s.is_partial()))
+            .flat_map(|tr| tr.ops.iter().map(|p| p.0))
+            .filter(|&id| !matches!(b.nodes[id].kernel, PhysKernel::ShardRecv { .. }))
             .collect();
         for id in boxing_ids {
             for &r in &grad_regs {
@@ -537,6 +703,7 @@ pub fn compile(
         vars,
         inputs,
         fetches: fetch_bindings,
+        transfers,
         signatures,
         options: opts.clone(),
         graph: g,
@@ -545,12 +712,15 @@ pub fn compile(
 
 /// Resolve how each consumer shard of `t` (expected under `(want, want_pl)`)
 /// reads its data: direct per-index edges when signatures and placements
-/// match, otherwise through a (cached) boxing op — paper Fig 5.
+/// match, otherwise through a (cached) lowered transfer sub-plan — the
+/// boxing-lowering pass (paper Fig 5, compiled into primitive ops).
 #[allow(clippy::too_many_arguments)]
 fn route(
     g: &LogicalGraph,
     b: &mut Builder,
     cache: &mut HashMap<(TensorId, NdSbp, Vec<DeviceId>), Vec<(RegId, usize)>>,
+    transfers: &mut Vec<TransferDesc>,
+    chan_next: &mut usize,
     produced: &HashMap<TensorId, Produced>,
     t: TensorId,
     want: &NdSbp,
@@ -569,35 +739,176 @@ fn route(
         return r.clone();
     }
     let dtype = g.tensor(t).dtype;
-    let t_bytes = g.tensor(t).shape.elems() as f64 * dtype.bytes() as f64;
-    // Consumer-side placement for cross-placement pulls (§5: the compiler
-    // "only inserts a networking actor at the consumer's side").
-    let home = if same_pl { prod.placement.devices[0] } else { want_pl.devices[0] };
-    let kernel = PhysKernel::Boxing {
+    let logical = g.tensor(t).shape.clone();
+    let t_bytes = logical.elems() as f64 * dtype.bytes() as f64;
+    let tid = transfers.len();
+    let mut ops: Vec<PhysOpId> = vec![];
+    // The ring lowering pairs member m's input with want_pl.devices[m], so
+    // it needs the exact device order; anything else routes explicitly.
+    let aligned = same_pl
+        && prod.placement.devices == want_pl.devices
+        && !crate::boxing::dims_interact(&prod.nd_sbp, want);
+    let (kind, routed) = if aligned {
+        // Aligned same-placement: lower onto the ring collectives — one
+        // ordinary actor per member, each transforming only its own shard.
+        let chan = *chan_next;
+        *chan_next += 1;
+        assert!(chan < 1 << 15, "transfer channel {chan} overflows the collective key layout");
+        let spec = Arc::new(CollectiveSpec {
+            chan,
+            in_nd: prod.nd_sbp.clone(),
+            out_nd: want.clone(),
+            hierarchy: want_pl.hierarchy.clone(),
+            devices: want_pl.devices.clone(),
+            logical: logical.clone(),
+            t_bytes,
+        });
+        let member_bytes =
+            crate::boxing::member_bytes_same(&spec.in_nd, &spec.out_nd, &spec.hierarchy, t_bytes);
+        let mut regs = Vec::with_capacity(want_pl.len());
+        for m in 0..want_pl.len() {
+            let sh = shard_shape_nd(&logical, want, &want_pl.hierarchy, &want_pl.coord(m));
+            let (pid, rid) = b.add_node(
+                format!("t{}_ring{}_{}to{}", t.0, m, prod.nd_sbp, want),
+                PhysKernel::CollectiveMember { spec: spec.clone(), member: m },
+                want_pl.devices[m],
+                QueueKind::Net,
+                vec![prod.regs[m]],
+                CostSpec {
+                    flops: 0.0,
+                    read_bytes: member_bytes,
+                    write_bytes: member_bytes,
+                    queue: QueueKind::Net,
+                },
+                dtype,
+                vec![sh],
+                opts.pipeline_depth,
+            );
+            ops.push(pid);
+            regs.push((rid, 0));
+        }
+        (TransferKind::Collective, regs)
+    } else {
+        // Routed transfer sub-plan: shard-intersection routes, executed as
+        // ShardSend / ShardRecv (slice, concat, local-reduce) actors on the
+        // devices that own the data.
+        let hops: Vec<Arc<RoutedTransfer>> = crate::boxing::plan_transfer(
+            &prod.nd_sbp,
+            &prod.placement,
+            want,
+            want_pl,
+            &logical,
+            dtype.bytes() as f64,
+        )
+        .into_iter()
+        .map(Arc::new)
+        .collect();
+        let mut cur_regs = prod.regs.clone();
+        for hop in &hops {
+            let chan = *chan_next;
+            *chan_next += 1;
+            cur_regs = lower_hop(b, t, chan, hop, &cur_regs, dtype, opts, &mut ops);
+        }
+        (TransferKind::Routed { hops }, cur_regs)
+    };
+    transfers.push(TransferDesc {
+        id: tid,
+        tensor: t,
         in_nd: prod.nd_sbp.clone(),
         in_place: prod.placement.clone(),
         out_nd: want.clone(),
         out_place: want_pl.clone(),
+        logical,
         t_bytes,
-        logical: g.tensor(t).shape.clone(),
-    };
-    let out_shapes: Vec<Shape> = (0..want_pl.len())
-        .map(|i| shard_shape_nd(&g.tensor(t).shape, want, &want_pl.hierarchy, &want_pl.coord(i)))
-        .collect();
-    let (_, rid) = b.add_node(
-        format!("boxing_t{}_{}to{}", t.0, prod.nd_sbp, want),
-        kernel,
-        home,
-        QueueKind::Net,
-        prod.regs.clone(),
-        CostSpec { flops: 0.0, read_bytes: t_bytes, write_bytes: t_bytes, queue: QueueKind::Net },
-        dtype,
-        out_shapes,
-        opts.pipeline_depth,
-    );
-    let routed: Vec<(RegId, usize)> = (0..want_pl.len()).map(|i| (rid, i)).collect();
+        kind,
+        ops,
+    });
     cache.insert(key, routed.clone());
     routed
+}
+
+/// Emit the ShardSend / ShardRecv actors of one routed hop; returns the
+/// per-consumer-member output registers.
+#[allow(clippy::too_many_arguments)]
+fn lower_hop(
+    b: &mut Builder,
+    t: TensorId,
+    chan: usize,
+    hop: &Arc<RoutedTransfer>,
+    in_regs: &[(RegId, usize)],
+    dtype: DType,
+    opts: &CompileOptions,
+    ops: &mut Vec<PhysOpId>,
+) -> Vec<(RegId, usize)> {
+    assert_eq!(in_regs.len(), hop.in_place.len(), "hop inputs vs placement");
+    let mut out_regs = Vec::with_capacity(hop.recvs.len());
+    for (ri, recv) in hop.recvs.iter().enumerate() {
+        let dst_dev = hop.out_place.devices[recv.dst];
+        // one send per route, on the producer's device — the req/ack edge to
+        // the receive op carries the protocol and timestamps, the payload
+        // travels as a tagged shard frame
+        let mut controls = Vec::with_capacity(recv.parts.len());
+        for part in &recv.parts {
+            let src_dev = hop.in_place.devices[part.src];
+            let bytes = part.src_box.elems() as f64 * dtype.bytes() as f64;
+            let spec = Arc::new(SendSpec {
+                chan,
+                src: part.src,
+                dst: recv.dst,
+                src_box: part.src_box.clone(),
+                src_dev,
+                dst_dev,
+                bytes,
+            });
+            let (pid, rid) = b.add_node(
+                format!("t{}_send_m{}to{}", t.0, part.src, recv.dst),
+                PhysKernel::ShardSend { spec },
+                src_dev,
+                QueueKind::Net,
+                vec![in_regs[part.src]],
+                CostSpec {
+                    flops: 0.0,
+                    read_bytes: bytes,
+                    write_bytes: bytes,
+                    queue: QueueKind::Net,
+                },
+                dtype,
+                vec![],
+                opts.pipeline_depth,
+            );
+            ops.push(pid);
+            controls.push(rid);
+        }
+        let name = if recv.parts.is_empty() {
+            format!("t{}_fill_m{}", t.0, recv.dst)
+        } else if matches!(recv.assemble, Some(Assemble::Reduce { .. })) {
+            format!("t{}_reduce_m{}", t.0, recv.dst)
+        } else {
+            format!("t{}_recv_m{}", t.0, recv.dst)
+        };
+        let recv_bytes = recv.out_shape.elems() as f64 * dtype.bytes() as f64;
+        let spec = Arc::new(RecvOpSpec { chan, hop: hop.clone(), idx: ri });
+        let (pid, rid) = b.add_node(
+            name,
+            PhysKernel::ShardRecv { spec },
+            dst_dev,
+            QueueKind::Net,
+            vec![],
+            CostSpec {
+                flops: 0.0,
+                read_bytes: recv_bytes,
+                write_bytes: recv_bytes,
+                queue: QueueKind::Net,
+            },
+            dtype,
+            vec![recv.out_shape.clone()],
+            opts.pipeline_depth,
+        );
+        b.nodes[pid.0].controls = controls;
+        ops.push(pid);
+        out_regs.push((rid, 0));
+    }
+    out_regs
 }
 
 /// Vocabulary offset for sharded embedding ops (paper §6.3.2): derived from
@@ -656,13 +967,18 @@ mod tests {
         let y2 = g.add1("y2", OpKind::MatMul { ta: false, tb: false }, &[y0, b1], p.clone());
         let plan = compile(&g, &[y2], &HashMap::new(), &CompileOptions { fuse: false, ..Default::default() });
 
-        assert_eq!(plan.boxing_count(), 1, "exactly one boxing op:\n{}", plan.dump());
-        let boxing = plan.boxing_nodes()[0];
-        if let PhysKernel::Boxing { in_nd, out_nd, .. } = &boxing.kernel {
-            assert_eq!(in_nd, &NdSbp::d1(s(0)));
-            assert_eq!(out_nd, &NdSbp::d1(B));
-        } else {
-            unreachable!()
+        assert_eq!(plan.boxing_count(), 1, "exactly one transfer edge:\n{}", plan.dump());
+        let tr = &plan.transfers[0];
+        assert_eq!(tr.in_nd, NdSbp::d1(s(0)));
+        assert_eq!(tr.out_nd, NdSbp::d1(B));
+        // aligned same-placement all-gather: lowered onto per-member ring ops
+        assert!(matches!(tr.kind, TransferKind::Collective));
+        assert_eq!(tr.ops.len(), 2, "one ring member per device");
+        for &pid in &tr.ops {
+            assert!(matches!(
+                plan.nodes[pid.0].kernel,
+                PhysKernel::CollectiveMember { .. }
+            ));
         }
     }
 
@@ -711,10 +1027,27 @@ mod tests {
         let y = g.add1("y", OpKind::Gelu, &[h], p1.clone());
         let plan = compile(&g, &[y], &HashMap::new(), &CompileOptions::default());
         assert_eq!(plan.boxing_count(), 1);
-        let pull = plan.boxing_nodes()[0];
-        // consumer-side networking actor (§5)
-        assert_eq!(pull.device.node, 1, "pull lives on the consumer node");
-        assert_eq!(pull.queue, QueueKind::Net);
+        let tr = &plan.transfers[0];
+        let TransferKind::Routed { hops } = &tr.kind else {
+            panic!("cross-placement edge must lower to a routed sub-plan")
+        };
+        assert_eq!(hops.len(), 1, "no partial input: single movement hop");
+        // producer-side send on node 0, consumer-side receive on node 1
+        let sends: Vec<_> = tr
+            .ops
+            .iter()
+            .filter(|p| matches!(plan.nodes[p.0].kernel, PhysKernel::ShardSend { .. }))
+            .collect();
+        let recvs: Vec<_> = tr
+            .ops
+            .iter()
+            .filter(|p| matches!(plan.nodes[p.0].kernel, PhysKernel::ShardRecv { .. }))
+            .collect();
+        assert_eq!(sends.len(), 1);
+        assert_eq!(recvs.len(), 1);
+        assert_eq!(plan.nodes[sends[0].0].device.node, 0, "send lives with the producer");
+        assert_eq!(plan.nodes[recvs[0].0].device.node, 1, "receive lives with the consumer");
+        assert_eq!(plan.nodes[recvs[0].0].queue, QueueKind::Net);
     }
 
     #[test]
@@ -743,9 +1076,7 @@ mod tests {
         // moves the same bytes — a ZeRO-style P->S reduce-scatter for the
         // update plus an S->B all-gather of the updated parameter.
         let has = |f: &dyn Fn(&NdSbp, &NdSbp) -> bool| {
-            plan.boxing_nodes().iter().any(|n| {
-                matches!(&n.kernel, PhysKernel::Boxing { in_nd, out_nd, .. } if f(in_nd, out_nd))
-            })
+            plan.transfers.iter().any(|tr| f(&tr.in_nd, &tr.out_nd))
         };
         let allreduce = has(&|i, o| i.0[0].is_partial() && o.0[0] == B);
         let reduce_scatter = has(&|i, o| i.0[0].is_partial() && o.0[0].is_split());

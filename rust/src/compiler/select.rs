@@ -3,9 +3,9 @@
 //! the modeled cost — boxing time from the Table 2 cost model plus shard
 //! compute time — is minimized.
 
-use crate::boxing::cost::transfer_secs;
+use crate::boxing::cost::nd_secs_same;
 use crate::exec::{ClusterModel, NetworkModel};
-use crate::graph::{LogicalGraph, Node, NodeId, SigCand};
+use crate::graph::{LogicalGraph, Node, NodeId, SigCand, TensorId};
 use crate::placement::Placement;
 use crate::sbp::{shard_shape_nd, NdSbp, Sbp};
 use crate::tensor::Shape;
@@ -26,75 +26,52 @@ pub enum SelectStrategy {
     Beam { width: usize },
 }
 
-/// Estimated wall-clock of converting a logical tensor of `t_bytes` from the
-/// producer's `(in_nd, in_place)` to the consumer's `(out_nd, out_place)`.
-/// Same-placement transitions decompose per hierarchy dim (hierarchical
-/// collectives); cross-placement uses the pull path on the narrower link.
+/// Estimated wall-clock of converting a logical tensor from the producer's
+/// `(in_nd, in_place)` to the consumer's `(out_nd, out_place)` — derived
+/// from the **same lowering the runtime executes**, so compile-time choice
+/// and runtime accounting share one model (ISSUE 4 satellite):
+///
+/// * aligned same-placement, non-interacting dims → the per-dim ring
+///   formulas ([`nd_secs_same`]), which are exactly the lowered collective's
+///   per-member busiest-link volumes;
+/// * everything else → the routed sub-plan's busiest-link bytes
+///   ([`crate::boxing::route::RoutedTransfer::busiest_link_secs`], summed
+///   over hops). The old closed-form heuristic collapsed multi-dim
+///   signatures to a "dominant" 1-D one and could disagree with what the
+///   runtime actually moves.
 pub fn boxing_secs(
     in_nd: &NdSbp,
     in_place: &Placement,
     out_nd: &NdSbp,
     out_place: &Placement,
-    t_bytes: f64,
+    logical: &Shape,
+    elem_bytes: f64,
     net: &NetworkModel,
 ) -> f64 {
-    if in_place.same_devices(out_place) && in_place.hierarchy == out_place.hierarchy {
-        if in_nd == out_nd {
-            return 0.0;
-        }
-        let hier = &in_place.hierarchy;
-        let mut total = 0.0;
-        for d in 0..in_nd.rank() {
-            if in_nd.0[d] == out_nd.0[d] {
-                continue;
-            }
-            // Per-group sub-tensor size: other Split dims shrink the group's
-            // logical tensor; B/P dims replicate it.
-            let mut group_bytes = t_bytes;
-            for (d2, s2) in in_nd.0.iter().enumerate() {
-                if d2 != d && s2.is_split() {
-                    group_bytes /= hier[d2] as f64;
-                }
-            }
-            // grid placements: dim 0 spans nodes, inner dims stay in-node
-            let inter = if in_place.single_node() {
-                false
-            } else {
-                d == 0 || in_place.hierarchy.len() == 1
-            };
-            total += transfer_secs(
-                in_nd.0[d],
-                out_nd.0[d],
-                hier[d],
-                hier[d],
-                true,
-                inter,
-                group_bytes,
-                net,
-            );
-        }
-        total
-    } else {
-        // Cross-placement pull: the dominant (first differing or first) dim
-        // decides the Table 2 disjoint formula; collapse multi-dim counts.
-        let a = effective_1d(in_nd);
-        let b = effective_1d(out_nd);
-        let inter = !(in_place.single_node()
-            && out_place.single_node()
-            && in_place.nodes() == out_place.nodes());
-        transfer_secs(a, b, in_place.len(), out_place.len(), false, inter, t_bytes, net)
+    let t_bytes = logical.elems() as f64 * elem_bytes;
+    let same =
+        in_place.same_devices(out_place) && in_place.hierarchy == out_place.hierarchy;
+    if same && (in_nd == out_nd || in_place.len() == 1) {
+        return 0.0;
     }
-}
-
-/// Collapse an NdSbp to the 1-D signature that dominates its transfer cost.
-fn effective_1d(nd: &NdSbp) -> Sbp {
-    if let Some(p) = nd.0.iter().find(|s| s.is_partial()) {
-        return *p;
+    // mirror the lowering's choice exactly (physical::route)
+    if same
+        && in_place.devices == out_place.devices
+        && !crate::boxing::dims_interact(in_nd, out_nd)
+    {
+        return nd_secs_same(
+            in_nd,
+            out_nd,
+            &in_place.hierarchy,
+            in_place.single_node(),
+            t_bytes,
+            net,
+        );
     }
-    if let Some(s) = nd.0.iter().find(|s| s.is_split()) {
-        return *s;
-    }
-    Sbp::Broadcast
+    crate::boxing::plan_transfer(in_nd, in_place, out_nd, out_place, logical, elem_bytes)
+        .iter()
+        .map(|hop| hop.busiest_link_secs(net))
+        .sum()
 }
 
 /// All multi-dim candidate signatures of a node: the cartesian product of
@@ -193,6 +170,11 @@ fn select_beam(
 ) -> HashMap<NodeId, Signature> {
     let order = g.topo_order();
     let mut beam = vec![BeamState { chosen: HashMap::new(), cost: 0.0 }];
+    // boxing_secs is route-accurate (it plans the lowered transfer), so it
+    // is not free; the same (producer sig → consumer sig) edge cost is
+    // queried many times across beam states and candidate combos — memoize
+    // per (consumer node, tensor, signature pair).
+    let mut edge_cost: HashMap<(NodeId, TensorId, NdSbp, NdSbp), f64> = HashMap::new();
     for nid in order {
         let node = g.node(nid);
         let cands = admissible_candidates(g, node);
@@ -212,16 +194,19 @@ fn select_beam(
                     let prod_node = g.node(prod);
                     let prod_sig = &state.chosen[&prod];
                     let out_idx = g.tensor(t).out_idx;
-                    let t_bytes = g.tensor(t).shape.elems() as f64
-                        * g.tensor(t).dtype.bytes() as f64;
-                    cost += boxing_secs(
-                        &prod_sig.outs[out_idx],
-                        &prod_node.placement,
-                        &sig.ins[i],
-                        &node.placement,
-                        t_bytes,
-                        &cluster.network,
-                    );
+                    let key =
+                        (nid, t, prod_sig.outs[out_idx].clone(), sig.ins[i].clone());
+                    cost += *edge_cost.entry(key).or_insert_with(|| {
+                        boxing_secs(
+                            &prod_sig.outs[out_idx],
+                            &prod_node.placement,
+                            &sig.ins[i],
+                            &node.placement,
+                            &g.tensor(t).shape,
+                            g.tensor(t).dtype.bytes() as f64,
+                            &cluster.network,
+                        )
+                    });
                 }
                 let mut chosen = state.chosen.clone();
                 chosen.insert(nid, sig.clone());
@@ -255,13 +240,13 @@ pub fn plan_cost(
         for (i, &t) in node.inputs.iter().enumerate() {
             let prod = g.tensor(t).producer;
             let prod_sig = &sel[&prod];
-            let t_bytes = g.tensor(t).shape.elems() as f64 * g.tensor(t).dtype.bytes() as f64;
             cost += boxing_secs(
                 &prod_sig.outs[g.tensor(t).out_idx],
                 &g.node(prod).placement,
                 &sig.ins[i],
                 &node.placement,
-                t_bytes,
+                &g.tensor(t).shape,
+                g.tensor(t).dtype.bytes() as f64,
                 &cluster.network,
             );
         }

@@ -191,8 +191,11 @@ fn plan(args: &Args) {
     let opts = CompileOptions::default();
     let plan = compile(&g, &[loss], &upd, &opts);
     println!("{}", plan.dump());
-    println!("nodes: {}  boxing ops: {}", plan.nodes.len(), plan.boxing_count());
+    println!("nodes: {}  transfer edges: {}", plan.nodes.len(), plan.boxing_count());
     let world = args.usize("world", 1);
+    if !plan.transfers.is_empty() {
+        println!("\nlowered transfer sub-plan (per-edge routes):\n{}", plan.transfer_report(world));
+    }
     if world > 1 {
         println!("\npartition over {world} worker ranks:\n{}", comm::launch::dump(&plan, world));
     }

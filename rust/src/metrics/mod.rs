@@ -29,7 +29,12 @@ mod tests {
         assert_eq!(samples_per_sec(&r, 32), 160.0);
         assert!((scaling_efficiency(10.0, 72.0, 8) - 0.9).abs() < 1e-9);
         r.queue_busy.insert(
-            crate::actor::ThreadKey { node: 0, queue: crate::exec::QueueKind::Compute, device: 0 },
+            crate::actor::ThreadKey {
+                node: 0,
+                queue: crate::exec::QueueKind::Compute,
+                device: 0,
+                lane: 0,
+            },
             1.5,
         );
         assert!((compute_utilization(&r, crate::exec::QueueKind::Compute) - 0.75).abs() < 1e-9);

@@ -600,10 +600,221 @@ pub fn gpt_dataparallel_real(
     (g, loss, updates)
 }
 
+/// A **real-numerics hybrid-parallel** GPT-style byte LM for the
+/// decentralized DP×MP-over-TCP experiments (`examples/hybrid_tcp_gpt.rs`):
+/// a pipeline of `stages`, each placed on its own `[dp, tp]` device grid —
+/// `dp` data-parallel replicas (one plan node each) × `tp` Megatron
+/// column/row tensor-parallel shards (devices within a node). A
+/// multi-process launch gives each rank one node, so:
+///
+/// * per-block tensor-parallel combines (`(S(0), P) → (S(0), B)`) run as
+///   ring collectives among a node's own devices (hub-local);
+/// * data-parallel gradient combines (`(P, ·) → (B, ·)`) ring across nodes
+///   over the transport;
+/// * stage boundaries cross placements, so activations/gradients travel as
+///   routed `ShardSend`/`ShardRecv` sub-plans over the wire —
+///
+/// and no rank ever materializes a shard it doesn't own.
+#[derive(Clone, Debug)]
+pub struct GptHybridConfig {
+    /// Pipeline stages, each on `dp` fresh nodes.
+    pub stages: usize,
+    /// Data-parallel replicas per stage (= nodes per stage = ranks/stage).
+    pub dp: usize,
+    /// Tensor-parallel ways (devices within each node).
+    pub tp: usize,
+    pub vocab: usize,
+    pub hidden: usize,
+    /// MLP expansion width.
+    pub ff: usize,
+    pub blocks_per_stage: usize,
+    /// Tokens per piece (global batch, split over dp).
+    pub rows: usize,
+    pub lr: f32,
+}
+
+impl Default for GptHybridConfig {
+    fn default() -> Self {
+        GptHybridConfig {
+            stages: 2,
+            dp: 2,
+            tp: 2,
+            vocab: 64,
+            hidden: 32,
+            ff: 64,
+            blocks_per_stage: 1,
+            rows: 64,
+            lr: 0.2,
+        }
+    }
+}
+
+impl GptHybridConfig {
+    /// Plan nodes (= worker ranks of the intended launch).
+    pub fn n_nodes(&self) -> usize {
+        self.stages * self.dp
+    }
+}
+
+enum TpLinear {
+    /// Weight `(B, S(1))`, bias `(B, S(0))`: column-parallel (Table 3 row 1).
+    Col,
+    /// Weight `(B, S(0))`, no bias: row-parallel, output `(S(0), P)`.
+    Row,
+}
+
+fn hybrid_linear(
+    g: &mut LogicalGraph,
+    name: &str,
+    x: TensorId,
+    out_dim: usize,
+    pl: &Placement,
+    tp: usize,
+    kind: TpLinear,
+) -> TensorId {
+    let in_dim = g.tensor(x).shape.dim(1);
+    let w = g.add1(
+        format!("{name}_w"),
+        OpKind::Variable { shape: [in_dim, out_dim].into(), dtype: DType::F32, init_std: 0.02 },
+        &[],
+        pl.clone(),
+    );
+    let wsbp = match kind {
+        TpLinear::Col if tp > 1 => NdSbp::d2(Sbp::Broadcast, s(1)),
+        TpLinear::Row if tp > 1 => NdSbp::d2(Sbp::Broadcast, s(0)),
+        _ => NdSbp::d2(Sbp::Broadcast, Sbp::Broadcast),
+    };
+    g.hint_tensor(w, wsbp);
+    let mm =
+        g.add1(format!("{name}_mm"), OpKind::MatMul { ta: false, tb: false }, &[x, w], pl.clone());
+    match kind {
+        TpLinear::Col => {
+            let b = g.add1(
+                format!("{name}_b"),
+                OpKind::Variable { shape: [out_dim].into(), dtype: DType::F32, init_std: 0.0 },
+                &[],
+                pl.clone(),
+            );
+            let bsbp = if tp > 1 {
+                NdSbp::d2(Sbp::Broadcast, s(0))
+            } else {
+                NdSbp::d2(Sbp::Broadcast, Sbp::Broadcast)
+            };
+            g.hint_tensor(b, bsbp);
+            g.add1(format!("{name}_bias"), OpKind::BiasAdd, &[mm, b], pl.clone())
+        }
+        // row-parallel output is P(sum) over tp; the residual's (S(0), B)
+        // demand inserts the per-block tensor-parallel ring all-reduce
+        TpLinear::Row => mm,
+    }
+}
+
+/// Build the training graph for [`GptHybridConfig`]. Returns
+/// `(graph, loss, var-updates)`; inputs are named `ids` / `labels` like the
+/// other real models, so the same data sources feed all three.
+pub fn gpt_hybrid_real(
+    cfg: &GptHybridConfig,
+) -> (LogicalGraph, TensorId, HashMap<NodeId, TensorId>) {
+    use crate::placement::DeviceId;
+    assert!(cfg.stages >= 1 && cfg.dp >= 1 && cfg.tp >= 1, "degenerate hybrid config");
+    assert!(cfg.rows >= cfg.dp, "each data-parallel replica needs at least one row");
+    let stage_pl = |stage: usize| {
+        Placement::new(
+            vec![cfg.dp, cfg.tp],
+            (0..cfg.dp * cfg.tp)
+                .map(|m| DeviceId::new(stage * cfg.dp + m / cfg.tp, m % cfg.tp))
+                .collect(),
+        )
+    };
+    let stages: Vec<Placement> = (0..cfg.stages).map(stage_pl).collect();
+    let dp_b = NdSbp::d2(s(0), Sbp::Broadcast);
+    let bb = NdSbp::d2(Sbp::Broadcast, Sbp::Broadcast);
+
+    let mut g = LogicalGraph::new();
+    let p0 = stages[0].clone();
+    let ids = g.add1(
+        "ids",
+        OpKind::Input { shape: [cfg.rows].into(), dtype: DType::I32 },
+        &[],
+        p0.clone(),
+    );
+    g.hint_tensor(ids, dp_b.clone());
+    let table = g.add1(
+        "tok_embed",
+        OpKind::Variable {
+            shape: [cfg.vocab, cfg.hidden].into(),
+            dtype: DType::F32,
+            init_std: 0.08,
+        },
+        &[],
+        p0.clone(),
+    );
+    g.hint_tensor(table, bb.clone());
+    let mut h = g.add1("embed", OpKind::Embedding, &[table, ids], p0);
+
+    for (stage, pl) in stages.iter().enumerate() {
+        for blk in 0..cfg.blocks_per_stage {
+            let name = format!("s{stage}b{blk}");
+            let up =
+                hybrid_linear(&mut g, &format!("{name}_up"), h, cfg.ff, pl, cfg.tp, TpLinear::Col);
+            let act = g.add1(format!("{name}_gelu"), OpKind::Gelu, &[up], pl.clone());
+            let down = hybrid_linear(
+                &mut g,
+                &format!("{name}_down"),
+                act,
+                cfg.hidden,
+                pl,
+                cfg.tp,
+                TpLinear::Row,
+            );
+            h = g.add1(format!("{name}_res"), OpKind::Add, &[h, down], pl.clone());
+            // pin the residual to (S(0), B): the Megatron per-block combine
+            g.hint_tensor(h, dp_b.clone());
+        }
+    }
+
+    let last = stages[cfg.stages - 1].clone();
+    let head_w = g.add1(
+        "head_w",
+        OpKind::Variable {
+            shape: [cfg.hidden, cfg.vocab].into(),
+            dtype: DType::F32,
+            init_std: 0.02,
+        },
+        &[],
+        last.clone(),
+    );
+    g.hint_tensor(head_w, bb.clone());
+    let logits =
+        g.add1("head_mm", OpKind::MatMul { ta: false, tb: false }, &[h, head_w], last.clone());
+    let labels = g.add1(
+        "labels",
+        OpKind::Input { shape: [cfg.rows].into(), dtype: DType::I32 },
+        &[],
+        last.clone(),
+    );
+    g.hint_tensor(labels, dp_b.clone());
+    let outs = g.add("xent", OpKind::SparseXent, &[logits, labels], last);
+    let loss = outs[0];
+
+    let bw = autograd::build_backward(&mut g, loss);
+    let updates = autograd::append_sgd(&mut g, &bw, cfg.lr);
+    // Every update must land back in its variable's layout: hint each update
+    // with the variable's own signature, which inserts the dp gradient ring
+    // all-reduce (dim 0, across nodes) and keeps tp shards sharded (dim 1).
+    let pairs: Vec<(NodeId, TensorId)> = updates.iter().map(|(&v, &t)| (v, t)).collect();
+    for (var, ut) in pairs {
+        if let Some(hint) = g.node(var).sbp_hint.clone() {
+            g.hint_tensor(ut, hint[0].clone());
+        }
+    }
+    (g, loss, updates)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compiler::{compile, CompileOptions, PhysKernel};
+    use crate::compiler::{compile, CompileOptions, PhysKernel, TransferKind};
 
     #[test]
     fn param_count_formula() {
@@ -623,11 +834,12 @@ mod tests {
         let (g, loss, upd) = gpt_sim(&cfg);
         let plan = compile(&g, &[loss], &upd, &CompileOptions { fuse: false, ..Default::default() });
         let mp_allreduce = plan
-            .boxing_nodes()
+            .transfers
             .iter()
-            .filter(|n| {
-                matches!(&n.kernel, PhysKernel::Boxing { in_nd, out_nd, .. }
-                    if in_nd.0.len() == 2 && in_nd.0[1].is_partial() && out_nd.0[1] == Sbp::Broadcast)
+            .filter(|tr| {
+                tr.in_nd.0.len() == 2
+                    && tr.in_nd.0[1].is_partial()
+                    && tr.out_nd.0[1] == Sbp::Broadcast
             })
             .count();
         assert!(mp_allreduce >= 2 * cfg.layers, "found {mp_allreduce} mp allreduces\n");
@@ -641,14 +853,11 @@ mod tests {
         cfg.devs_per_node = 2;
         let (g, loss, upd) = gpt_sim(&cfg);
         let plan = compile(&g, &[loss], &upd, &CompileOptions { fuse: false, ..Default::default() });
-        // cross-placement pulls exist between stages
+        // cross-placement routed transfers exist between stages
         let pulls = plan
-            .boxing_nodes()
+            .transfers
             .iter()
-            .filter(|n| {
-                matches!(&n.kernel, PhysKernel::Boxing { in_place, out_place, .. }
-                    if !in_place.same_devices(out_place))
-            })
+            .filter(|tr| !tr.in_place.same_devices(&tr.out_place))
             .count();
         assert!(pulls > 0, "no cross-stage transfers\n{}", plan.dump());
     }
@@ -662,15 +871,12 @@ mod tests {
         nodes.sort_unstable();
         nodes.dedup();
         assert_eq!(nodes, vec![0, 1, 2], "one plan node per stage");
-        // cross-stage pulls exist in both directions (activations fwd,
-        // gradients bwd)
+        // cross-stage routed transfers exist in both directions (activations
+        // fwd, gradients bwd)
         let pulls = plan
-            .boxing_nodes()
+            .transfers
             .iter()
-            .filter(|n| {
-                matches!(&n.kernel, PhysKernel::Boxing { in_place, out_place, .. }
-                    if !in_place.same_devices(out_place))
-            })
+            .filter(|tr| !tr.in_place.same_devices(&tr.out_place))
             .count();
         assert!(pulls >= 2, "expected fwd+bwd stage crossings\n{}", plan.dump());
         // every variable got its training back edge
@@ -693,13 +899,12 @@ mod tests {
         // gradient combines are same-placement partial-consuming collectives
         // spanning both nodes — the ring-able pattern
         let collectives = plan
-            .boxing_nodes()
+            .transfers
             .iter()
-            .filter(|n| {
-                matches!(&n.kernel, PhysKernel::Boxing { in_nd, in_place, out_place, .. }
-                    if in_nd.0.iter().any(|s| s.is_partial())
-                        && in_place.same_devices(out_place)
-                        && !in_place.single_node())
+            .filter(|tr| {
+                tr.in_nd.0.iter().any(|s| s.is_partial())
+                    && tr.in_place.same_devices(&tr.out_place)
+                    && !tr.in_place.single_node()
             })
             .count();
         assert!(collectives > 0, "no cross-node gradient collective:\n{}", plan.dump());
@@ -708,6 +913,96 @@ mod tests {
                 assert!(plan.nodes[pid.0].update_from.is_some(), "var {} lacks back edge", v.name);
             }
         }
+    }
+
+    #[test]
+    fn hybrid_real_plan_structure() {
+        let cfg = GptHybridConfig::default();
+        let (g, loss, upd) = gpt_hybrid_real(&cfg);
+        let plan = compile(&g, &[loss], &upd, &CompileOptions::default());
+        // stages × dp plan nodes, one per intended worker rank
+        let mut nodes: Vec<usize> = plan.nodes.iter().map(|n| n.device.node).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        assert_eq!(nodes, vec![0, 1, 2, 3], "2 stages x 2 dp replicas");
+        // ring collectives exist, and at least one (the dp gradient
+        // combine) spans a stage's two nodes
+        assert!(
+            plan.transfers.iter().any(|tr| matches!(tr.kind, TransferKind::Collective)),
+            "no ring collectives\n{}",
+            plan.dump()
+        );
+        assert!(
+            plan.transfers.iter().any(|tr| {
+                matches!(tr.kind, TransferKind::Collective) && !tr.in_place.single_node()
+            }),
+            "no cross-node (data-parallel) ring collective\n{}",
+            plan.dump()
+        );
+        // stage boundaries lower to routed sub-plans with producer-side
+        // sends and consumer-side receives
+        let routed = plan
+            .transfers
+            .iter()
+            .find(|tr| !tr.in_place.same_devices(&tr.out_place))
+            .expect("no cross-stage transfer");
+        assert!(matches!(routed.kind, TransferKind::Routed { .. }));
+        let mut sends = 0;
+        let mut recvs = 0;
+        for &pid in &routed.ops {
+            match &plan.nodes[pid.0].kernel {
+                PhysKernel::ShardSend { spec } => {
+                    sends += 1;
+                    assert_eq!(plan.nodes[pid.0].device, spec.src_dev);
+                }
+                PhysKernel::ShardRecv { spec } => {
+                    recvs += 1;
+                    assert_eq!(plan.nodes[pid.0].device, spec.dst_dev());
+                }
+                k => panic!("unexpected kernel in routed transfer: {k:?}"),
+            }
+        }
+        assert!(sends > 0 && recvs > 0, "routed transfer has no primitive ops");
+        // every variable got its training back edge
+        for v in &plan.vars {
+            for &pid in &v.phys {
+                assert!(plan.nodes[pid.0].update_from.is_some(), "var {} lacks back edge", v.name);
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_real_trains_single_process() {
+        use crate::actor::{Engine, FnSource, RunOptions};
+        use crate::compiler::InputBinding;
+        use crate::data::SyntheticCorpus;
+        use crate::runtime::NativeBackend;
+        use crate::tensor::Tensor;
+        use std::sync::Arc;
+        use std::time::Duration;
+        let cfg = GptHybridConfig { rows: 32, vocab: 32, hidden: 16, ff: 32, ..Default::default() };
+        let (g, loss, upd) = gpt_hybrid_real(&cfg);
+        let plan = compile(&g, &[loss], &upd, &CompileOptions::default());
+        let corpus = Arc::new(SyntheticCorpus::new(2048, cfg.vocab, 23));
+        let rows = cfg.rows;
+        let source = FnSource(move |b: &InputBinding, piece: usize| {
+            let (ids, labels) = corpus.batch(piece, 1, rows);
+            match b.name.as_str() {
+                "ids" => Tensor::new([rows], DType::I32, ids.data),
+                "labels" => Tensor::new([rows], DType::I32, labels.data),
+                _ => Tensor::full(b.shape.clone(), b.dtype, 1.0),
+            }
+        });
+        let report = Engine::new(plan, Arc::new(NativeBackend))
+            .with_source(Arc::new(source))
+            .run_with(RunOptions { pieces: 4, timeout: Some(Duration::from_secs(120)) })
+            .expect("hybrid run");
+        let losses: Vec<f32> = report.fetched[&loss]
+            .iter()
+            .map(|t| t.data.iter().sum::<f32>() / t.elems() as f32)
+            .collect();
+        assert_eq!(losses.len(), 4);
+        assert!(losses[3] < losses[0], "hybrid model never learned: {losses:?}");
     }
 
     #[test]

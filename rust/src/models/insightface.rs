@@ -115,7 +115,7 @@ pub fn insightface(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compiler::{compile, CompileOptions, PhysKernel};
+    use crate::compiler::{compile, CompileOptions};
     use crate::sbp::ReduceKind;
 
     /// Fig 11 plan structure: the compiled graph must contain a P(max)→B
@@ -128,10 +128,9 @@ mod tests {
             insightface(Backbone::MobileFaceNet, 4096, 8, &pl, DType::F32);
         let plan = compile(&g, &[loss], &upd, &CompileOptions { fuse: false, ..Default::default() });
         let has_partial = |kind: ReduceKind| {
-            plan.boxing_nodes().iter().any(|n| {
-                matches!(&n.kernel, PhysKernel::Boxing { in_nd, out_nd, .. }
-                    if in_nd.0.last() == Some(&Sbp::Partial(kind))
-                        && *out_nd.0.last().unwrap() == Sbp::Broadcast)
+            plan.transfers.iter().any(|tr| {
+                tr.in_nd.0.last() == Some(&Sbp::Partial(kind))
+                    && *tr.out_nd.0.last().unwrap() == Sbp::Broadcast
             })
         };
         assert!(has_partial(ReduceKind::Max), "missing P(max) combine\n{}", plan.dump());

@@ -14,8 +14,8 @@ pub mod insightface;
 pub mod wide_deep;
 
 pub use gpt::{
-    gpt_dataparallel_real, gpt_pipeline_real, gpt_sim, GptDataParallelConfig, GptPipelineConfig,
-    GptSimConfig,
+    gpt_dataparallel_real, gpt_hybrid_real, gpt_pipeline_real, gpt_sim, GptDataParallelConfig,
+    GptHybridConfig, GptPipelineConfig, GptSimConfig,
 };
 pub use resnet::{resnet50, ResnetConfig};
 pub use bert::bert_base;

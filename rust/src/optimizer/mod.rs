@@ -115,7 +115,7 @@ pub fn fp16_cast(g: &mut LogicalGraph, param: TensorId, master_sbp: NdSbp) -> Te
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compiler::{compile, CompileOptions, PhysKernel};
+    use crate::compiler::{compile, CompileOptions};
     use crate::graph::autograd::build_backward;
     use crate::placement::Placement;
     use crate::sbp::B;
@@ -143,9 +143,7 @@ mod tests {
         let (g, updated, loss) = train_graph(Sharding::Zero);
         let plan = compile(&g, &[loss], &updated, &CompileOptions::default());
         let has = |f: &dyn Fn(&NdSbp, &NdSbp) -> bool| {
-            plan.boxing_nodes().iter().any(|n| {
-                matches!(&n.kernel, PhysKernel::Boxing { in_nd, out_nd, .. } if f(in_nd, out_nd))
-            })
+            plan.transfers.iter().any(|tr| f(&tr.in_nd, &tr.out_nd))
         };
         assert!(has(&|i, o| i.0[0].is_partial() && o.0[0].is_split()), "reduce-scatter\n{}", plan.dump());
         assert!(has(&|i, o| i.0[0].is_split() && o.0[0] == B), "all-gather\n{}", plan.dump());
@@ -156,10 +154,10 @@ mod tests {
     fn replicated_plan_uses_allreduce() {
         let (g, updated, loss) = train_graph(Sharding::Replicated);
         let plan = compile(&g, &[loss], &updated, &CompileOptions::default());
-        let has_allreduce = plan.boxing_nodes().iter().any(|n| {
-            matches!(&n.kernel, PhysKernel::Boxing { in_nd, out_nd, .. }
-                if in_nd.0[0].is_partial() && out_nd.0[0] == B)
-        });
+        let has_allreduce = plan
+            .transfers
+            .iter()
+            .any(|tr| tr.in_nd.0[0].is_partial() && tr.out_nd.0[0] == B);
         assert!(has_allreduce, "{}", plan.dump());
     }
 

@@ -55,75 +55,37 @@ pub trait Backend: Send + Sync {
 }
 
 /// Virtual duration of one action of `node` under the cluster model — used
-/// uniformly by all backends (see module docs).
+/// uniformly by all backends (see module docs). Lowered transfer ops are
+/// timed from the same route/ring geometry the runtime executes:
+///
+/// * a ring-collective member's action spans the whole ring exchange (all
+///   members run it concurrently, so the critical path charges it once);
+/// * a shard send charges its route's link time (free when the route stays
+///   on one device);
+/// * a shard receive only reassembles locally — the link time was charged
+///   on the sending side.
 pub fn action_secs(node: &PhysNode, cluster: &ClusterModel) -> f64 {
     match &node.kernel {
-        PhysKernel::Boxing { in_nd, in_place, out_nd, out_place, t_bytes, .. } => {
-            crate::compiler::boxing_secs(
-                in_nd,
-                in_place,
-                out_nd,
-                out_place,
-                *t_bytes,
+        PhysKernel::CollectiveMember { spec, .. } => {
+            let single_node = spec.devices.iter().all(|d| d.node == spec.devices[0].node);
+            crate::boxing::nd_secs_same(
+                &spec.in_nd,
+                &spec.out_nd,
+                &spec.hierarchy,
+                single_node,
+                spec.t_bytes,
                 &cluster.network,
             )
         }
-        PhysKernel::Var { .. } => 0.0,
-        _ => cluster.device.kernel_secs(&node.cost, node.dtype),
-    }
-}
-
-/// Bytes a boxing action moves (metrics; matches Table 2 — tested).
-pub fn boxing_bytes(node: &PhysNode) -> f64 {
-    match &node.kernel {
-        PhysKernel::Boxing { in_nd, in_place, out_nd, out_place, t_bytes, .. } => {
-            let same =
-                in_place.same_devices(out_place) && in_place.hierarchy == out_place.hierarchy;
-            if same {
-                let mut total = 0.0;
-                for d in 0..in_nd.rank() {
-                    if in_nd.0[d] == out_nd.0[d] {
-                        continue;
-                    }
-                    let mut group_bytes = *t_bytes;
-                    for (d2, s2) in in_nd.0.iter().enumerate() {
-                        if d2 != d && s2.is_split() {
-                            group_bytes /= in_place.hierarchy[d2] as f64;
-                        }
-                    }
-                    let groups: usize = in_place
-                        .hierarchy
-                        .iter()
-                        .enumerate()
-                        .filter(|&(d2, _)| d2 != d)
-                        .map(|(_, &h)| h)
-                        .product();
-                    total += groups as f64
-                        * crate::boxing::cost::bytes_same(
-                            in_nd.0[d],
-                            out_nd.0[d],
-                            in_place.hierarchy[d],
-                            group_bytes,
-                        );
-                }
-                total
+        PhysKernel::ShardSend { spec } => {
+            if spec.src_dev == spec.dst_dev {
+                0.0
             } else {
-                let eff = |nd: &crate::sbp::NdSbp| {
-                    nd.0.iter()
-                        .find(|s| s.is_partial())
-                        .or_else(|| nd.0.iter().find(|s| s.is_split()))
-                        .copied()
-                        .unwrap_or(crate::sbp::Sbp::Broadcast)
-                };
-                crate::boxing::cost::bytes_disjoint(
-                    eff(in_nd),
-                    eff(out_nd),
-                    in_place.len(),
-                    out_place.len(),
-                    *t_bytes,
-                )
+                cluster.network.xfer_secs(spec.bytes, spec.src_dev.node != spec.dst_dev.node)
             }
         }
-        _ => 0.0,
+        PhysKernel::ShardRecv { .. } => 0.0,
+        PhysKernel::Var { .. } => 0.0,
+        _ => cluster.device.kernel_secs(&node.cost, node.dtype),
     }
 }

@@ -3,7 +3,6 @@
 //! plan-parity tests use to prove distributed == single-device numerics.
 
 use super::Backend;
-use crate::boxing::apply_boxing;
 use crate::compiler::{PhysKernel, PhysNode};
 use crate::graph::{Activation, OpKind};
 use crate::tensor::ops as k;
@@ -16,9 +15,10 @@ pub struct NativeBackend;
 impl Backend for NativeBackend {
     fn execute(&self, node: &PhysNode, inputs: &[&Tensor]) -> Vec<Tensor> {
         match &node.kernel {
-            PhysKernel::Boxing { in_nd, in_place, out_nd, out_place, .. } => {
-                let owned: Vec<Tensor> = inputs.iter().map(|t| (*t).clone()).collect();
-                apply_boxing(&owned, in_nd, in_place, out_nd, out_place).shards
+            PhysKernel::CollectiveMember { .. }
+            | PhysKernel::ShardSend { .. }
+            | PhysKernel::ShardRecv { .. } => {
+                unreachable!("lowered transfer ops execute in the actor runtime, not a backend")
             }
             PhysKernel::Compute { op, shard } => {
                 let i = |n: usize| inputs[n];

@@ -1,6 +1,8 @@
 //! Failure injection: the runtime must *detect* pathological configurations
 //! rather than hang silently, and the compile-time planner must reject what
-//! cannot run (the Fig 2 class of failures).
+//! cannot run (the Fig 2 class of failures). ISSUE 4 adds the transfer
+//! plane: a lost point-to-point shard frame surfaces as a rank-tagged run
+//! error naming the route, within the comm deadline — never a hang.
 
 use oneflow::actor::{Engine, RunOptions};
 use oneflow::compiler::{compile, CompileOptions};
@@ -75,6 +77,107 @@ fn wedged_plan_trips_watchdog() {
     let res = engine.run_with(RunOptions { pieces: 4, timeout: Some(Duration::from_secs(2)) });
     let err = res.expect_err("cyclically-starved plan must time out");
     assert!(err.contains("timeout"), "diagnostic: {err}");
+}
+
+/// ISSUE 4 acceptance: drop one `ShardSend` frame of a routed transfer and
+/// assert the consumer rank aborts with a rank-tagged error naming the
+/// route (members and devices) — before the engine watchdog, never a hang.
+#[test]
+fn tcp_dropped_shard_frame_surfaces_named_route_error() {
+    use oneflow::actor::{DataSource, FnSource};
+    use oneflow::comm::{tcp_local_world, wire, Transport};
+    use oneflow::compiler::{InputBinding, PhysPlan};
+    use oneflow::data::SyntheticCorpus;
+    use oneflow::models::{gpt_pipeline_real, GptPipelineConfig};
+    use oneflow::runtime::NativeBackend;
+    use oneflow::tensor::Tensor;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    /// Transport wrapper that swallows the first routed shard frame.
+    struct DropFirstShard {
+        inner: Arc<dyn Transport>,
+        dropped: AtomicBool,
+    }
+
+    impl Transport for DropFirstShard {
+        fn name(&self) -> &'static str {
+            "dropping-tcp"
+        }
+        fn rank(&self) -> usize {
+            self.inner.rank()
+        }
+        fn world_size(&self) -> usize {
+            self.inner.world_size()
+        }
+        fn send(&self, dst: usize, frame: Vec<u8>) -> oneflow::Result<()> {
+            if wire::frame_is_shard(&frame) && !self.dropped.swap(true, Ordering::SeqCst) {
+                return Ok(()); // swallowed: the injected loss
+            }
+            self.inner.send(dst, frame)
+        }
+        fn recv_timeout(&self, timeout: Duration) -> oneflow::Result<Option<(usize, Vec<u8>)>> {
+            self.inner.recv_timeout(timeout)
+        }
+    }
+
+    fn cfg() -> GptPipelineConfig {
+        GptPipelineConfig {
+            stages: 2,
+            vocab: 32,
+            hidden: 16,
+            ff: 32,
+            blocks_per_stage: 1,
+            rows: 32,
+            lr: 0.2,
+        }
+    }
+    fn build() -> PhysPlan {
+        let (g, loss, upd) = gpt_pipeline_real(&cfg());
+        compile(&g, &[loss], &upd, &CompileOptions::default())
+    }
+    fn source() -> Arc<dyn DataSource> {
+        let c = cfg();
+        let corpus = Arc::new(SyntheticCorpus::new(2048, c.vocab, 17));
+        let rows = c.rows;
+        Arc::new(FnSource(move |b: &InputBinding, piece: usize| {
+            let (ids, labels) = corpus.batch(piece, 1, rows);
+            match b.name.as_str() {
+                "ids" => Tensor::new([rows], oneflow::tensor::DType::I32, ids.data),
+                "labels" => Tensor::new([rows], oneflow::tensor::DType::I32, labels.data),
+                _ => Tensor::full(b.shape.clone(), b.dtype, 1.0),
+            }
+        }))
+    }
+
+    let mut world = tcp_local_world(2).expect("rendezvous");
+    let t1: Arc<dyn Transport> = world.pop().unwrap();
+    let t0: Arc<dyn Transport> = world.pop().unwrap();
+    // rank 0 hosts stage 0 → its ShardSend ships the activation to rank 1
+    let t0: Arc<dyn Transport> =
+        Arc::new(DropFirstShard { inner: t0, dropped: AtomicBool::new(false) });
+
+    let spawn = |t: Arc<dyn Transport>| {
+        std::thread::spawn(move || {
+            Engine::new(build(), Arc::new(NativeBackend))
+                .with_source(source())
+                .with_transport(t)
+                .run_with(RunOptions { pieces: 3, timeout: Some(Duration::from_secs(16)) })
+        })
+    };
+    let h0 = spawn(t0);
+    let h1 = spawn(t1);
+    let r0 = h0.join().expect("rank 0 thread");
+    let r1 = h1.join().expect("rank 1 thread");
+
+    // the consumer rank reports a named route error, not a hang
+    let err = r1.expect_err("rank 1 must fail — its shard frame was dropped");
+    assert!(err.contains("rank 1"), "error not rank-tagged: {err}");
+    assert!(err.contains("shard route"), "error does not name the route: {err}");
+    assert!(err.contains("m0"), "error does not identify the member: {err}");
+    assert!(err.contains("lost or late"), "error does not describe the failure: {err}");
+    // the producer rank cannot complete either (its consumers never ack);
+    // it must also surface an error rather than hang past its watchdog
+    assert!(r0.is_err(), "rank 0 unexpectedly succeeded after the fault");
 }
 
 /// Data-integrity guard: feeding a wrong-shaped batch panics loudly in the

@@ -99,6 +99,83 @@ fn random_dags_never_deadlock() {
     );
 }
 
+/// ISSUE 4: for random `(NdSbp, placement)` pairs that the compiler lowers
+/// to a *routed* sub-plan (cross-placement, or interacting hierarchy dims),
+/// executing the lowered routes rank-locally is **bitwise-equal** to the
+/// single-process `apply_boxing` path — shard for shard. (Aligned
+/// same-placement pairs lower onto the ring collectives instead, whose
+/// bitwise parity `tests/collective.rs` pins.)
+#[test]
+fn routed_lowering_bitwise_equals_apply_boxing() {
+    use oneflow::boxing::{apply_boxing, apply_hops, dims_interact, plan_transfer};
+    use oneflow::placement::DeviceId;
+    prop::check_res(
+        "routed lowering == apply_boxing (bitwise)",
+        80,
+        |r| {
+            let m = r.range(2, 10);
+            let n = r.range(2, 10);
+            let sigs = [s(0), s(1), B, P];
+            let t = Tensor::randn([m, n], DType::F32, 1.0, r);
+            if r.chance(0.5) {
+                // 1-D: same or disjoint flat placements
+                let p1 = r.range(1, 5);
+                let in_pl = Placement::node(0, p1);
+                let out_pl = if r.chance(0.5) {
+                    in_pl.clone()
+                } else {
+                    Placement::node(1, r.range(1, 5))
+                };
+                (t, NdSbp::d1(*r.choose(&sigs)), NdSbp::d1(*r.choose(&sigs)), in_pl, out_pl)
+            } else {
+                // 2-D grids: same grid (interacting dims show up here) or a
+                // disjoint grid on other nodes
+                let in_pl = Placement::grid(2, 2);
+                let out_pl = if r.chance(0.5) {
+                    in_pl.clone()
+                } else {
+                    Placement::new(
+                        vec![2, 2],
+                        (0..4).map(|i| DeviceId::new(4 + i / 2, i % 2)).collect(),
+                    )
+                };
+                let nd = |r: &mut Rng| NdSbp::d2(*r.choose(&sigs), *r.choose(&sigs));
+                let a = nd(r);
+                let b = nd(r);
+                (t, a, b, in_pl, out_pl)
+            }
+        },
+        |(t, in_nd, out_nd, in_pl, out_pl)| {
+            let same =
+                in_pl.same_devices(out_pl) && in_pl.hierarchy == out_pl.hierarchy;
+            if same && (in_nd == out_nd || !dims_interact(in_nd, out_nd)) {
+                return Ok(()); // lowers to the ring collectives, not routes
+            }
+            let shards = scatter(t, in_nd, &in_pl.hierarchy);
+            let hops = plan_transfer(in_nd, in_pl, out_nd, out_pl, &t.shape, 4.0);
+            let routed = apply_hops(&hops, &shards);
+            let legacy = apply_boxing(&shards, in_nd, in_pl, out_nd, out_pl);
+            if routed.len() != legacy.shards.len() {
+                return Err(format!(
+                    "{in_nd} -> {out_nd}: {} routed shards vs {} legacy",
+                    routed.len(),
+                    legacy.shards.len()
+                ));
+            }
+            for (i, (x, y)) in routed.iter().zip(&legacy.shards).enumerate() {
+                if x.shape != y.shape {
+                    return Err(format!("{in_nd} -> {out_nd}: shard {i} shape differs"));
+                }
+                let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+                if bits(&x.data) != bits(&y.data) {
+                    return Err(format!("{in_nd} -> {out_nd}: shard {i} bits differ"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn random_sbp_chains_preserve_value() {
     // scatter -> boxing -> boxing -> gather == identity for random chains
