@@ -1,21 +1,28 @@
 //! Actor-runtime microbenchmarks (§Perf): message throughput, per-action
-//! scheduling overhead, and compile latency for a paper-scale plan. These
-//! are the numbers behind the `dispatch_overhead` the baseline profiles use.
+//! scheduling overhead, compile latency for a paper-scale plan, and the
+//! static-memory-plan contrast — steady-state ns/step and allocations/step
+//! for the pooled (arena-backed) vs allocating execution paths on a real
+//! training loop. Results are printed as tables **and** written to
+//! `BENCH_actor_micro.json` so the perf trajectory accumulates machine-
+//! readably; `--quick` shrinks the workload to a CI smoke check.
 
-use oneflow::actor::Engine;
+use oneflow::actor::{DataSource, Engine, FnSource, RunOptions, RunReport};
 use oneflow::bench::{time_n, Table};
-use oneflow::compiler::{compile, CompileOptions};
+use oneflow::compiler::{compile, CompileOptions, InputBinding, PhysPlan};
+use oneflow::config::Args;
+use oneflow::data::SyntheticCorpus;
 use oneflow::graph::{LogicalGraph, OpKind};
-use oneflow::models::{gpt_sim, GptSimConfig};
+use oneflow::models::{gpt_pipeline_real, gpt_sim, GptPipelineConfig, GptSimConfig};
 use oneflow::placement::Placement;
-use oneflow::runtime::SimBackend;
+use oneflow::runtime::{AllocatingBackend, Backend, NativeBackend, SimBackend};
 use oneflow::sbp::{s, NdSbp};
-use oneflow::tensor::DType;
+use oneflow::tensor::{DType, Tensor};
 use oneflow::util::fmt;
 use std::collections::HashMap;
 use std::sync::Arc;
+use std::time::Duration;
 
-fn chain_plan(len: usize, ndev: usize) -> oneflow::compiler::PhysPlan {
+fn chain_plan(len: usize, ndev: usize) -> PhysPlan {
     let p = Placement::node(0, ndev);
     let mut g = LogicalGraph::new();
     let mut t = g.add1("x", OpKind::Input { shape: [ndev, 4].into(), dtype: DType::F32 }, &[], p.clone());
@@ -26,43 +33,173 @@ fn chain_plan(len: usize, ndev: usize) -> oneflow::compiler::PhysPlan {
     compile(&g, &[t], &HashMap::new(), &CompileOptions { fuse: false, ..Default::default() })
 }
 
+/// A 1-stage real-numerics GPT training loop (input, var, compute and
+/// update actors; no transfers) — the steady-state workload.
+fn train_plan() -> PhysPlan {
+    let cfg = GptPipelineConfig {
+        stages: 1,
+        vocab: 32,
+        hidden: 16,
+        ff: 32,
+        blocks_per_stage: 1,
+        rows: 32,
+        lr: 0.2,
+    };
+    let (g, loss, upd) = gpt_pipeline_real(&cfg);
+    compile(&g, &[loss], &upd, &CompileOptions::default())
+}
+
+fn train_source() -> Arc<dyn DataSource> {
+    let corpus = Arc::new(SyntheticCorpus::new(2048, 32, 29));
+    Arc::new(FnSource(move |b: &InputBinding, piece: usize| {
+        let (ids, labels) = corpus.batch(piece, 1, 32);
+        match b.name.as_str() {
+            "ids" => Tensor::new([32], DType::I32, ids.data),
+            "labels" => Tensor::new([32], DType::I32, labels.data),
+            _ => Tensor::full(b.shape.clone(), b.dtype, 1.0),
+        }
+    }))
+}
+
+fn timed_run(plan: &PhysPlan, backend: &Arc<dyn Backend>, pieces: usize) -> f64 {
+    time_n(1, 3, || {
+        let r = Engine::new(plan.clone(), backend.clone())
+            .with_source(train_source())
+            .run_with(RunOptions { pieces, timeout: Some(Duration::from_secs(300)) })
+            .expect("bench run failed");
+        assert_eq!(r.pieces, pieces);
+    })
+    .mean_secs
+}
+
+/// Marginal cost of one additional steady-state step: timing a long and a
+/// short run and taking the slope cancels the per-run fixed costs (engine
+/// construction, queue-thread spawn/join, warm-up, teardown) that a naive
+/// wall/pieces division would smear into the step time.
+fn steady_state(plan: &PhysPlan, backend: Arc<dyn Backend>, pieces: usize) -> (f64, RunReport) {
+    let short = (pieces / 4).max(1);
+    let t_long = timed_run(plan, &backend, pieces);
+    let t_short = timed_run(plan, &backend, short);
+    let per_step = ((t_long - t_short) / (pieces - short) as f64).max(0.0);
+    let report = Engine::new(plan.clone(), backend)
+        .with_source(train_source())
+        .run_with(RunOptions { pieces, timeout: Some(Duration::from_secs(300)) })
+        .expect("bench report run failed");
+    (per_step, report)
+}
+
 fn main() {
+    let args = Args::from_env();
+    let quick = args.flag("quick");
+    let pieces = if quick { 40 } else { 200 };
+    let mut json = String::from("{\n  \"bench\": \"actor_micro\",\n");
+    json.push_str(&format!("  \"quick\": {quick},\n"));
+
     let mut tab = Table::new("Actor runtime microbenchmarks", &["metric", "value"]);
 
-    // 1. end-to-end actions/second through the full protocol (1 queue thread)
-    let pieces = 200;
-    let plan = chain_plan(64, 1);
-    let timing = time_n(1, 5, || {
-        let engine = Engine::new(plan.clone(), Arc::new(SimBackend));
-        let r = engine.run(pieces);
-        assert_eq!(r.pieces, pieces);
+    // 1. steady-state training step: pooled (arena-backed) vs allocating.
+    // Identical plan, identical data, bitwise-identical losses — only the
+    // buffer strategy differs (Backend::execute_into vs the fallback).
+    let plan = train_plan();
+    let (pooled_step, pooled_rep) = steady_state(&plan, Arc::new(NativeBackend), pieces);
+    let (alloc_step, alloc_rep) =
+        steady_state(&plan, Arc::new(AllocatingBackend(NativeBackend)), pieces);
+    let per_step_allocs = |r: &RunReport| r.buffer_allocs as f64 / r.pieces as f64;
+    tab.row(&["steady-state step (pooled)".into(), fmt::secs(pooled_step)]);
+    tab.row(&["steady-state step (allocating)".into(), fmt::secs(alloc_step)]);
+    tab.row(&[
+        "allocations/step (pooled, incl. warm-up)".into(),
+        format!("{:.2}", per_step_allocs(&pooled_rep)),
+    ]);
+    tab.row(&[
+        "allocations/step (allocating)".into(),
+        format!("{:.2}", per_step_allocs(&alloc_rep)),
+    ]);
+    json.push_str(&format!(
+        "  \"steady_state\": {{\n    \"pieces\": {pieces},\n    \
+         \"pooled\": {{\"ns_per_step\": {:.0}, \"allocs_total\": {}, \"allocs_per_step\": {:.4}}},\n    \
+         \"allocating\": {{\"ns_per_step\": {:.0}, \"allocs_total\": {}, \"allocs_per_step\": {:.4}}}\n  }},\n",
+        pooled_step * 1e9,
+        pooled_rep.buffer_allocs,
+        per_step_allocs(&pooled_rep),
+        alloc_step * 1e9,
+        alloc_rep.buffer_allocs,
+        per_step_allocs(&alloc_rep),
+    ));
+
+    // 2. end-to-end actions/second through the full protocol (1 queue thread)
+    let chain_pieces = if quick { 50 } else { 200 };
+    let plan1 = chain_plan(64, 1);
+    let timing = time_n(1, if quick { 2 } else { 5 }, || {
+        let engine = Engine::new(plan1.clone(), Arc::new(SimBackend));
+        let r = engine.run(chain_pieces);
+        assert_eq!(r.pieces, chain_pieces);
     });
-    let actions = (64 + 2) * pieces; // +input +fetch
+    let actions = (64 + 2) * chain_pieces; // +input +fetch
     let per_action = timing.mean_secs / actions as f64;
     tab.row(&["chain actions/s (1 thread)".into(), fmt::rate(1.0 / per_action)]);
     tab.row(&["per-action overhead".into(), fmt::secs(per_action)]);
 
-    // 2. cross-thread message cost: same chain split over 4 devices
+    // 3. cross-thread message cost: same chain split over 4 devices
     let plan4 = chain_plan(64, 4);
-    let t4 = time_n(1, 5, || {
+    let t4 = time_n(1, if quick { 2 } else { 5 }, || {
         let engine = Engine::new(plan4.clone(), Arc::new(SimBackend));
-        engine.run(pieces);
+        engine.run(chain_pieces);
     });
-    let actions4 = (64 + 2) * pieces * 4;
-    tab.row(&["per-action overhead (4 queue threads)".into(), fmt::secs(t4.mean_secs / actions4 as f64)]);
+    let actions4 = (64 + 2) * chain_pieces * 4;
+    let per_action4 = t4.mean_secs / actions4 as f64;
+    tab.row(&["per-action overhead (4 queue threads)".into(), fmt::secs(per_action4)]);
+    json.push_str(&format!(
+        "  \"protocol\": {{\"per_action_ns\": {:.0}, \"per_action_ns_4threads\": {:.0}}},\n",
+        per_action * 1e9,
+        per_action4 * 1e9
+    ));
 
-    // 3. compiler latency on a paper-scale plan (GPT 2x8x2 hybrid = 32 dev)
-    let mut cfg = GptSimConfig::new(2, 8, 2, 64, 2304, 24);
-    cfg.devs_per_node = 8;
-    let tc = time_n(1, 3, || {
+    // 4. compiler latency on a paper-scale plan (GPT 2x8x2 hybrid = 32 dev);
+    // skipped under --quick — it dominates the smoke-check budget
+    if quick {
+        json.push_str("  \"compile\": null\n}\n");
+    } else {
+        let mut cfg = GptSimConfig::new(2, 8, 2, 64, 2304, 24);
+        cfg.devs_per_node = 8;
+        let tc = time_n(1, 3, || {
+            let (g, loss, upd) = gpt_sim(&cfg);
+            let plan = compile(&g, &[loss], &upd, &CompileOptions::default());
+            assert!(plan.nodes.len() > 500);
+        });
         let (g, loss, upd) = gpt_sim(&cfg);
         let plan = compile(&g, &[loss], &upd, &CompileOptions::default());
-        assert!(plan.nodes.len() > 500);
-    });
-    let (g, loss, upd) = gpt_sim(&cfg);
-    let plan = compile(&g, &[loss], &upd, &CompileOptions::default());
-    tab.row(&["GPT 32-dev compile latency".into(), fmt::secs(tc.mean_secs)]);
-    tab.row(&["  physical ops".into(), plan.nodes.len().to_string()]);
-    tab.row(&["  boxing ops".into(), plan.boxing_count().to_string()]);
+        tab.row(&["GPT 32-dev compile latency".into(), fmt::secs(tc.mean_secs)]);
+        tab.row(&["  physical ops".into(), plan.nodes.len().to_string()]);
+        tab.row(&["  boxing ops".into(), plan.boxing_count().to_string()]);
+        tab.row(&["  arena reuse ratio".into(), format!("{:.2}x", plan.mem.reuse_ratio())]);
+        json.push_str(&format!(
+            "  \"compile\": {{\"secs\": {:.4}, \"phys_ops\": {}, \"transfer_edges\": {}, \"arena_reuse_ratio\": {:.3}}}\n}}\n",
+            tc.mean_secs,
+            plan.nodes.len(),
+            plan.boxing_count(),
+            plan.mem.reuse_ratio()
+        ));
+    }
     tab.print();
+
+    // CI smoke assertions: the pooled path pays only warm-up (a fixed
+    // count, amortized to ~0 per step) while the allocating path pays per
+    // compute action per step.
+    assert!(
+        pooled_rep.buffer_allocs < alloc_rep.buffer_allocs / 2,
+        "pooled {} allocs vs allocating {} — pooling is not working",
+        pooled_rep.buffer_allocs,
+        alloc_rep.buffer_allocs
+    );
+    if !quick {
+        assert!(
+            per_step_allocs(&pooled_rep) < 1.0,
+            "pooled path allocates per step: {:.2}/step",
+            per_step_allocs(&pooled_rep)
+        );
+    }
+
+    std::fs::write("BENCH_actor_micro.json", &json).expect("write BENCH_actor_micro.json");
+    println!("\nwrote BENCH_actor_micro.json");
 }

@@ -118,16 +118,19 @@ impl CommRt {
                             self.my_rank, spec.src, spec.dst
                         )
                     })?;
-                    t.send(
-                        dst_rank,
-                        wire::encode_shard(
+                    // encode into the sending lane thread's egress scratch:
+                    // no per-frame allocation, no cross-lane serialization
+                    wire::with_scratch(|scratch| {
+                        wire::encode_shard_into(
                             spec.chan as u64,
                             piece as u64,
                             spec.src as u32,
                             spec.dst as u32,
                             &payload.data,
-                        ),
-                    )
+                            scratch,
+                        );
+                        t.send_frame(dst_rank, scratch)
+                    })
                     .map_err(|e| {
                         format!(
                             "rank {}: shard send m{}({}) -> m{}({}) piece {piece} failed: {e}",

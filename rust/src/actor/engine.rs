@@ -77,6 +77,14 @@ pub struct RunReport {
     /// Payload bytes moved across devices by lowered transfer ops (ring
     /// chunks + routed shard frames; Table 2 accounting).
     pub comm_bytes: f64,
+    /// Actions whose output buffers were freshly heap-allocated instead of
+    /// recycled from the register pool (DESIGN.md invariant 9): warm-up
+    /// pieces fill the pools, then steady state adds zero. Fetch sinks are
+    /// excluded (the driver retains their pieces).
+    pub buffer_allocs: u64,
+    /// Peak entry count of the shared input scatter cache — bounded by
+    /// inputs × in-flight pieces, flat in the number of steps.
+    pub scatter_cache_peak: usize,
     /// Virtual busy-seconds per hardware-queue thread.
     pub queue_busy: HashMap<ThreadKey, f64>,
     /// Gathered logical value per fetched tensor, indexed by piece
@@ -110,6 +118,7 @@ enum Control {
         remote: u64,
         cross: u64,
         bytes: f64,
+        allocs: u64,
         last_ts: f64,
     },
     /// A peer rank finished all its actors with the given local makespan.
@@ -289,10 +298,24 @@ impl Engine {
         let shutdown = Arc::new(AtomicBool::new(false));
 
         // ---- shared input scatter cache ----
+        // One entry per (input, piece), dropped as soon as the last local
+        // shard consumed it: long runs hold at most inputs × in-flight
+        // pieces entries (the unbounded growth of the unevicted cache was
+        // ISSUE 5's leak).
         let input_bindings: Arc<HashMap<NodeId, InputBinding>> =
             Arc::new(plan.inputs.iter().map(|b| (b.node, b.clone())).collect());
-        let scatter_cache: Arc<Mutex<HashMap<(usize, usize), Vec<Tensor>>>> =
+        let scatter_cache: Arc<Mutex<HashMap<(usize, usize), (Vec<Tensor>, usize)>>> =
             Arc::new(Mutex::new(HashMap::new()));
+        let cache_peak = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        // how many local input actors will consume each (input, piece) entry
+        let local_input_shards: Arc<HashMap<usize, usize>> = Arc::new(
+            plan.inputs
+                .iter()
+                .map(|b| {
+                    (b.node.0, b.phys.iter().filter(|p| is_local(&addrs[p.0])).count())
+                })
+                .collect(),
+        );
 
         let started = Instant::now();
         let n_actors: usize = per_thread.iter().map(Vec::len).sum();
@@ -331,13 +354,15 @@ impl Engine {
             let bindings = input_bindings.clone();
             let router = router.clone();
             let comm_rt = comm_rt.clone();
+            let peak = cache_peak.clone();
+            let shard_counts = local_input_shards.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("of-{:?}-n{}d{}", key.queue, key.node, key.device))
                     .spawn(move || {
                         thread_main(
                             actors, rx, senders, tindex, ctl, stop, backend, plan, key, cache,
-                            src, bindings, router, comm_rt,
+                            peak, shard_counts, src, bindings, router, comm_rt,
                         )
                     })
                     .expect("spawn queue thread"),
@@ -493,7 +518,7 @@ impl Engine {
                 Control::Fetched(t, piece, data) => {
                     fetched_raw.entry(t).or_default().push((piece, data));
                 }
-                Control::Stats { busy, actions, local, remote, cross, bytes, last_ts } => {
+                Control::Stats { busy, actions, local, remote, cross, bytes, allocs, last_ts } => {
                     for (k, v) in busy {
                         *report.queue_busy.entry(k).or_default() += v;
                     }
@@ -502,6 +527,7 @@ impl Engine {
                     report.remote_msgs += remote;
                     report.cross_node_msgs += cross;
                     report.comm_bytes += bytes;
+                    report.buffer_allocs += allocs;
                     report.makespan = report.makespan.max(last_ts);
                     stats_seen += 1;
                 }
@@ -554,6 +580,7 @@ impl Engine {
             let _ = h.join();
         }
         report.wall = started.elapsed();
+        report.scatter_cache_peak = cache_peak.load(Ordering::SeqCst);
 
         // gather fetched shards back to logical values; a diverged-broadcast
         // gather is reported as a run error, not silently-wrong data
@@ -590,26 +617,41 @@ fn thread_main(
     backend: Arc<dyn Backend>,
     plan: Arc<PhysPlan>,
     key: ThreadKey,
-    cache: Arc<Mutex<HashMap<(usize, usize), Vec<Tensor>>>>,
+    cache: Arc<Mutex<HashMap<(usize, usize), (Vec<Tensor>, usize)>>>,
+    cache_peak: Arc<std::sync::atomic::AtomicUsize>,
+    shard_counts: Arc<HashMap<usize, usize>>,
     src: Option<Arc<dyn DataSource>>,
     bindings: Arc<HashMap<NodeId, InputBinding>>,
     router: Option<Arc<comm::Router>>,
     comm_rt: Arc<CommRt>,
 ) {
-    let feeder = move |nid: NodeId, shard: usize, piece: usize| -> Vec<Tensor> {
-        let Some(src) = &src else { return vec![] };
+    let feeder = move |nid: NodeId, shard: usize, piece: usize, outs: &mut Vec<Tensor>| {
+        let Some(src) = &src else {
+            outs.clear();
+            return;
+        };
         let binding = &bindings[&nid];
         let mut cache = cache.lock().unwrap();
-        let shards = cache.entry((nid.0, piece)).or_insert_with(|| {
+        let (shards, remaining) = cache.entry((nid.0, piece)).or_insert_with(|| {
             let logical = src.logical(binding, piece);
             assert_eq!(
                 logical.shape, binding.shape,
                 "data source fed input `{}` a wrong-shaped batch",
                 binding.name
             );
-            crate::sbp::scatter(&logical, &binding.nd_sbp, &binding.placement.hierarchy)
+            let shards =
+                crate::sbp::scatter(&logical, &binding.nd_sbp, &binding.placement.hierarchy);
+            // every local shard actor reads the entry exactly once
+            (shards, shard_counts.get(&nid.0).copied().unwrap_or(1))
         });
-        vec![shards[shard].clone()]
+        cache_peak.fetch_max(cache.len(), Ordering::SeqCst);
+        // copy the shard into the actor's recycled buffer
+        crate::tensor::ops::fit(outs, 1);
+        crate::tensor::ops::copy_into(&shards[shard], &mut outs[0]);
+        *remaining -= 1;
+        if *remaining == 0 {
+            cache.remove(&(nid.0, piece));
+        }
     };
     let mut ctx = Ctx {
         backend: backend.as_ref(),
@@ -694,6 +736,7 @@ fn thread_main(
     }
     let mut busy = HashMap::new();
     busy.insert(key, busy_secs);
+    let allocs: u64 = actors.iter().map(|a| a.buffer_allocs).sum();
     let _ = ctl.send(Control::Stats {
         busy,
         actions,
@@ -701,6 +744,7 @@ fn thread_main(
         remote: n_remote,
         cross: n_cross,
         bytes,
+        allocs,
         last_ts,
     });
 }

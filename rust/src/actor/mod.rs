@@ -63,6 +63,16 @@ pub struct Actor {
     free_slots: VecDeque<f64>,
     /// Outstanding acks per in-flight piece, with the max ack ts seen.
     pending_acks: HashMap<usize, (usize, f64)>,
+    /// Published pieces retained until their final ack: once every consumer
+    /// released a piece, its buffers return to `pool` — the register slots
+    /// the compile-time memory plan sized, recycled instead of dropped.
+    in_flight: HashMap<usize, Piece>,
+    /// Fully-acked pieces something still references (e.g. a Var's current
+    /// value): swept back into `pool` once the last reference drops.
+    retired: Vec<Piece>,
+    /// Recycled slot buffers, reused by the next action (allocation-free
+    /// steady state; bounded by the register's slot quota).
+    pool: Vec<Vec<Tensor>>,
     /// Next piece index to produce.
     next_piece: usize,
     /// Total pieces to process.
@@ -73,6 +83,10 @@ pub struct Actor {
     var_value: Option<Piece>,
     /// Actions executed (metrics).
     pub actions: u64,
+    /// Actions whose output buffers came from a fresh heap allocation
+    /// instead of the pool (warm-up pieces, allocating backends). Fetch
+    /// sinks are excluded: the driver retains their pieces past the step.
+    pub buffer_allocs: u64,
 }
 
 /// What an actor wants the engine to do after handling a message.
@@ -132,11 +146,72 @@ impl Actor {
             consumers,
             free_slots: (0..slots).map(|_| 0.0).collect(),
             pending_acks: HashMap::new(),
+            in_flight: HashMap::new(),
+            retired: Vec::new(),
+            pool: Vec::new(),
             next_piece: 0,
             total_pieces,
             last_ts: 0.0,
             var_value: None,
             actions: 0,
+            buffer_allocs: 0,
+        }
+    }
+
+    /// Whether this actor's slot buffers are recyclable at all: fetch sinks
+    /// hand their pieces to the driver (which retains them past the step),
+    /// and lowered transfer ops produce through the comm context, not the
+    /// pool — retaining either would only park dead buffers.
+    fn recycles(&self) -> bool {
+        !matches!(
+            self.node.kernel,
+            PhysKernel::Fetch { .. }
+                | PhysKernel::CollectiveMember { .. }
+                | PhysKernel::ShardSend { .. }
+                | PhysKernel::ShardRecv { .. }
+        )
+    }
+
+    /// A piece's final ack arrived: reclaim its buffers if every consumer
+    /// reference is gone, else park it for [`Self::sweep_retired`].
+    fn reclaim(&mut self, piece: usize) {
+        if let Some(p) = self.in_flight.remove(&piece) {
+            match Arc::try_unwrap(p) {
+                Ok(bufs) => self.pool.push(bufs),
+                Err(arc) => self.retired.push(arc),
+            }
+        }
+    }
+
+    /// Order-sensitive fingerprint of a buffer set's heap addresses: any
+    /// output buffer being freshly allocated (or the set changing shape)
+    /// changes the signature — the alloc-metric probe, blind to nothing.
+    fn buf_sig(bufs: &[Tensor]) -> u64 {
+        bufs.iter().fold(bufs.len() as u64, |h, t| {
+            h.wrapping_mul(0x100_0000_01B3).wrapping_add(t.data.as_ptr() as u64)
+        })
+    }
+
+    /// Return fully-released retired pieces to the pool. Bounded: anything
+    /// still referenced after the window is dropped (a later action then
+    /// allocates fresh — correct, just not recycled).
+    fn sweep_retired(&mut self) {
+        let mut i = 0;
+        while i < self.retired.len() {
+            if Arc::strong_count(&self.retired[i]) == 1 {
+                // we hold the only strong reference (and the crate never
+                // downgrades), so the unwrap cannot race; a failure would
+                // merely drop the buffers, which is still correct
+                if let Ok(bufs) = Arc::try_unwrap(self.retired.swap_remove(i)) {
+                    self.pool.push(bufs);
+                }
+            } else {
+                i += 1;
+            }
+        }
+        const RETIRED_WINDOW: usize = 8;
+        if self.retired.len() > RETIRED_WINDOW {
+            self.retired.drain(..self.retired.len() - RETIRED_WINDOW);
         }
     }
 
@@ -168,6 +243,9 @@ impl Actor {
                     let (_, t) = self.pending_acks.remove(&piece).unwrap();
                     // out counter increment: the slot is recyclable from `t`
                     self.free_slots.push_back(t);
+                    // ... and so are its buffers (the static memory plan's
+                    // runtime half: release returns bytes to the pool)
+                    self.reclaim(piece);
                 }
             }
             Msg::Kick => {}
@@ -209,6 +287,7 @@ impl Actor {
             taken.insert(ir.reg, (data, ts));
         }
         let slot_free = self.free_slots.pop_front().unwrap();
+        self.sweep_retired();
 
         // Execute.
         let (outputs, dur, moved): (Piece, f64, f64) = match &self.node.kernel {
@@ -218,7 +297,19 @@ impl Actor {
                 } else if let Some((ureg, elem)) = self.node.update_from {
                     let (data, _) = &taken[&ureg];
                     match data {
-                        Some(d) => Arc::new(vec![d[elem].clone()]),
+                        Some(d) => {
+                            // copy the fed-back update into a recycled slot
+                            // buffer instead of cloning a fresh one
+                            let src = &d[elem];
+                            let mut bufs = self.pool.pop().unwrap_or_default();
+                            let before = Self::buf_sig(&bufs);
+                            crate::tensor::ops::fit(&mut bufs, 1);
+                            crate::tensor::ops::copy_into(src, &mut bufs[0]);
+                            if before != Self::buf_sig(&bufs) {
+                                self.buffer_allocs += 1;
+                            }
+                            Arc::new(bufs)
+                        }
                         None => Arc::new(vec![]),
                     }
                 } else {
@@ -228,9 +319,14 @@ impl Actor {
                 (value, 0.0, 0.0)
             }
             PhysKernel::Input { input, shard_idx } => {
-                let data = ctx.feed(*input, *shard_idx, piece);
+                let mut bufs = self.pool.pop().unwrap_or_default();
+                let before = Self::buf_sig(&bufs);
+                ctx.feed(*input, *shard_idx, piece, &mut bufs);
+                if !bufs.is_empty() && before != Self::buf_sig(&bufs) {
+                    self.buffer_allocs += 1;
+                }
                 let dur = action_secs(&self.node, ctx.cluster());
-                (Arc::new(data), dur, 0.0)
+                (Arc::new(bufs), dur, 0.0)
             }
             _ => {
                 // resolve element refs in declared order
@@ -265,7 +361,16 @@ impl Actor {
                         }
                     }
                 } else {
-                    (ctx.execute(&self.node, &resolved), 0.0)
+                    // recycled slot buffers in, results out — the
+                    // allocation-free steady-state path (the backend falls
+                    // back to allocating when it cannot write in place)
+                    let mut bufs = self.pool.pop().unwrap_or_default();
+                    let before = Self::buf_sig(&bufs);
+                    ctx.execute_into(&self.node, &resolved, &mut bufs);
+                    if !bufs.is_empty() && before != Self::buf_sig(&bufs) && self.recycles() {
+                        self.buffer_allocs += 1;
+                    }
+                    (bufs, 0.0)
                 };
                 let dur = action_secs(&self.node, ctx.cluster());
                 (Arc::new(out), dur, moved)
@@ -297,9 +402,23 @@ impl Actor {
         }
         if self.consumers.is_empty() {
             self.free_slots.push_back(end);
+            if ctx.has_data() && self.recycles() {
+                // childless producer: the piece dies here — recycle now
+                if let Ok(bufs) = Arc::try_unwrap(outputs) {
+                    self.pool.push(bufs);
+                }
+            }
         } else {
             self.pending_acks.insert(piece, (self.consumers.len(), 0.0));
-            let data = if ctx.has_data() { Some(outputs) } else { None };
+            let data = if ctx.has_data() {
+                if self.recycles() {
+                    // retain until the final ack, then reclaim the buffers
+                    self.in_flight.insert(piece, outputs.clone());
+                }
+                Some(outputs)
+            } else {
+                None
+            };
             for &c in &self.consumers {
                 fx.outgoing.push(Envelope {
                     to: c,
@@ -328,8 +447,10 @@ fn node_slots(_node: &PhysNode) -> usize {
 
 /// Engine-side services an actor needs during an action.
 pub trait CtxOps {
-    fn execute(&mut self, node: &PhysNode, inputs: &[&Tensor]) -> Vec<Tensor>;
-    fn feed(&mut self, input: crate::graph::NodeId, shard: usize, piece: usize) -> Vec<Tensor>;
+    /// Execute into recycled slot buffers (see [`Backend::execute_into`]).
+    fn execute_into(&mut self, node: &PhysNode, inputs: &[&Tensor], outs: &mut Vec<Tensor>);
+    /// Fill `outs` with one input shard's batch data (recycled buffers).
+    fn feed(&mut self, input: crate::graph::NodeId, shard: usize, piece: usize, outs: &mut Vec<Tensor>);
     fn queue_free(&self) -> f64;
     fn set_queue_free(&mut self, t: f64);
     fn cluster(&self) -> &crate::exec::ClusterModel;
@@ -341,7 +462,7 @@ pub struct Ctx<'a> {
     pub backend: &'a dyn Backend,
     pub plan: &'a PhysPlan,
     pub queue_free: f64,
-    pub feeder: &'a dyn Fn(crate::graph::NodeId, usize, usize) -> Vec<Tensor>,
+    pub feeder: &'a dyn Fn(crate::graph::NodeId, usize, usize, &mut Vec<Tensor>),
     pub data: bool,
     /// Comm context for lowered transfer ops (always present; degenerate
     /// single-process worlds simply never cross the transport).
@@ -355,15 +476,15 @@ fn trace_enabled() -> bool {
 }
 
 impl Ctx<'_> {
-    fn execute(&mut self, node: &PhysNode, inputs: &[&Tensor]) -> Vec<Tensor> {
+    fn execute_into(&mut self, node: &PhysNode, inputs: &[&Tensor], outs: &mut Vec<Tensor>) {
         if trace_enabled() {
             let shapes: Vec<String> = inputs.iter().map(|t| t.shape.to_string()).collect();
             eprintln!("exec {} ({})", node.name, shapes.join(", "));
         }
-        self.backend.execute(node, inputs)
+        self.backend.execute_into(node, inputs, outs)
     }
-    fn feed(&mut self, input: crate::graph::NodeId, shard: usize, piece: usize) -> Vec<Tensor> {
-        (self.feeder)(input, shard, piece)
+    fn feed(&mut self, input: crate::graph::NodeId, shard: usize, piece: usize, outs: &mut Vec<Tensor>) {
+        (self.feeder)(input, shard, piece, outs)
     }
     fn queue_free(&self) -> f64 {
         self.queue_free

@@ -169,10 +169,12 @@ impl<'a> GroupComm<'a> {
                 self.member_rank[dst]
             )
         })?;
-        t.send(
-            self.member_rank[dst],
-            wire::encode_collective(self.key, src as u32, dst as u32, &data),
-        )
+        // the member thread's egress scratch persists across collectives,
+        // so steady-state ring chunks encode without allocating
+        wire::with_scratch(|scratch| {
+            wire::encode_collective_into(self.key, src as u32, dst as u32, &data, scratch);
+            t.send_frame(self.member_rank[dst], scratch)
+        })
     }
 
     /// Blocking receive of the next chunk from `src` addressed to owned

@@ -100,6 +100,15 @@ pub trait Transport: Send + Sync {
     /// pipe, unknown peer), never flow control.
     fn send(&self, dst: usize, frame: Vec<u8>) -> crate::Result<()>;
 
+    /// Ship one *borrowed* frame: the allocation-free egress used with
+    /// per-connection scratch buffers ([`wire`]'s `encode_*_into`). Wire
+    /// transports write the bytes straight to the socket; the default
+    /// copies into an owned frame for transports that must queue it
+    /// (loopback).
+    fn send_frame(&self, dst: usize, frame: &[u8]) -> crate::Result<()> {
+        self.send(dst, frame.to_vec())
+    }
+
     /// Next frame from any peer, or `None` if `timeout` elapses first.
     fn recv_timeout(&self, timeout: Duration) -> crate::Result<Option<(usize, Vec<u8>)>>;
 }
@@ -117,16 +126,22 @@ impl Router {
         Router { transport, node_rank }
     }
 
-    /// Encode and ship `env` to the rank owning its destination node.
-    /// Transport failures are reported on stderr rather than unwinding a
-    /// queue thread: the run then trips the engine watchdog, which is the
-    /// diagnosable failure mode.
+    /// Encode into the sender thread's egress scratch and ship `env` to the
+    /// rank owning its destination node — no allocation per frame, and
+    /// senders on different queue threads don't contend (only the per-peer
+    /// socket lock serializes). Transport failures are reported on stderr
+    /// rather than unwinding a queue thread: the run then trips the engine
+    /// watchdog, which is the diagnosable failure mode.
     pub fn send(&self, env: &Envelope) {
         let Some(&dst) = self.node_rank.get(&env.to.node()) else {
             eprintln!("comm: no rank owns node {} (dropping message for {})", env.to.node(), env.to);
             return;
         };
-        if let Err(e) = self.transport.send(dst, wire::encode_envelope(env)) {
+        let sent = wire::with_scratch(|scratch| {
+            wire::encode_envelope_into(env, scratch);
+            self.transport.send_frame(dst, scratch)
+        });
+        if let Err(e) = sent {
             eprintln!("comm: send to rank {dst} failed: {e}");
         }
     }

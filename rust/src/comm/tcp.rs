@@ -235,6 +235,12 @@ impl Transport for TcpTransport {
     }
 
     fn send(&self, dst: usize, frame: Vec<u8>) -> crate::Result<()> {
+        self.send_frame(dst, &frame)
+    }
+
+    fn send_frame(&self, dst: usize, frame: &[u8]) -> crate::Result<()> {
+        // borrowed frames write straight to the socket: the steady-state
+        // egress allocates nothing (callers reuse per-connection scratch)
         anyhow::ensure!(frame.len() <= MAX_FRAME, "frame exceeds MAX_FRAME");
         let Some(writer) = self.writers.get(dst).and_then(|w| w.as_ref()) else {
             anyhow::bail!("rank {}: no connection to rank {dst}", self.rank)
@@ -244,7 +250,7 @@ impl Transport for TcpTransport {
             s.write_all(&(frame.len() as u32).to_le_bytes())?;
             s.write_all(frame)
         };
-        write(&mut s, &frame).map_err(|e| {
+        write(&mut s, frame).map_err(|e| {
             anyhow::anyhow!("rank {}: send to rank {dst} failed: {e}", self.rank)
         })
     }

@@ -15,6 +15,22 @@ use crate::compiler::RegId;
 use crate::tensor::{DType, Tensor};
 use std::sync::Arc;
 
+thread_local! {
+    /// Per-thread egress scratch: frames encode here and ship borrowed
+    /// ([`crate::comm::Transport::send_frame`]), so steady-state sends
+    /// allocate nothing *and* senders on different threads never serialize
+    /// on a shared buffer (the per-peer socket locks stay the only
+    /// contention point).
+    static EGRESS: std::cell::RefCell<Vec<u8>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Run `f` with this thread's reusable egress scratch buffer. Do not nest
+/// (the scratch is a single per-thread `RefCell`); encode one frame and
+/// send it before returning.
+pub fn with_scratch<R>(f: impl FnOnce(&mut Vec<u8>) -> R) -> R {
+    EGRESS.with(|s| f(&mut s.borrow_mut()))
+}
+
 /// Frame tags (first byte of every frame).
 const TAG_ENVELOPE: u8 = 0;
 const TAG_FINALIZE: u8 = 1;
@@ -66,6 +82,15 @@ pub fn frame_is_shard(frame: &[u8]) -> bool {
 /// Encode an envelope frame without cloning the envelope.
 pub fn encode_envelope(env: &Envelope) -> Vec<u8> {
     let mut out = Vec::with_capacity(64);
+    encode_envelope_into(env, &mut out);
+    out
+}
+
+/// Encode an envelope frame into `out` (cleared first): the
+/// per-connection-scratch form — steady-state egress reuses one buffer per
+/// sender instead of allocating a fresh `Vec` per frame.
+pub fn encode_envelope_into(env: &Envelope, out: &mut Vec<u8>) {
+    out.clear();
     out.push(TAG_ENVELOPE);
     put_u64(&mut out, env.to.0);
     match &env.msg {
@@ -93,7 +118,6 @@ pub fn encode_envelope(env: &Envelope) -> Vec<u8> {
         }
         Msg::Kick => out.push(MSG_KICK),
     }
-    out
 }
 
 /// Encode a finalize frame.
@@ -109,30 +133,51 @@ pub fn encode_finalize(rank: u32, makespan: f64) -> Vec<u8> {
 /// reductions are bit-for-bit reproducible).
 pub fn encode_collective(key: u64, src: u32, dst: u32, data: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(21 + data.len() * 4);
-    out.push(TAG_COLLECTIVE);
-    put_u64(&mut out, key);
-    put_u32(&mut out, src);
-    put_u32(&mut out, dst);
-    put_u32(&mut out, data.len() as u32);
-    for &x in data {
-        put_u32(&mut out, x.to_bits());
-    }
+    encode_collective_into(key, src, dst, data, &mut out);
     out
+}
+
+/// Scratch-buffer form of [`encode_collective`] (cleared first).
+pub fn encode_collective_into(key: u64, src: u32, dst: u32, data: &[f32], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(21 + data.len() * 4);
+    out.push(TAG_COLLECTIVE);
+    put_u64(out, key);
+    put_u32(out, src);
+    put_u32(out, dst);
+    put_u32(out, data.len() as u32);
+    for &x in data {
+        put_u32(out, x.to_bits());
+    }
 }
 
 /// Encode a shard frame (see [`Frame::Shard`]).
 pub fn encode_shard(chan: u64, piece: u64, src: u32, dst: u32, data: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(29 + data.len() * 4);
-    out.push(TAG_SHARD);
-    put_u64(&mut out, chan);
-    put_u64(&mut out, piece);
-    put_u32(&mut out, src);
-    put_u32(&mut out, dst);
-    put_u32(&mut out, data.len() as u32);
-    for &x in data {
-        put_u32(&mut out, x.to_bits());
-    }
+    encode_shard_into(chan, piece, src, dst, data, &mut out);
     out
+}
+
+/// Scratch-buffer form of [`encode_shard`] (cleared first).
+pub fn encode_shard_into(
+    chan: u64,
+    piece: u64,
+    src: u32,
+    dst: u32,
+    data: &[f32],
+    out: &mut Vec<u8>,
+) {
+    out.clear();
+    out.reserve(29 + data.len() * 4);
+    out.push(TAG_SHARD);
+    put_u64(out, chan);
+    put_u64(out, piece);
+    put_u32(out, src);
+    put_u32(out, dst);
+    put_u32(out, data.len() as u32);
+    for &x in data {
+        put_u32(out, x.to_bits());
+    }
 }
 
 /// Decode a frame; rejects truncated, oversized-field, or trailing bytes.
@@ -373,6 +418,27 @@ mod tests {
         // keys (channel < 2^15 in the top field) can never collide
         assert!(shard_key(42, 7) >> 63 == 1);
         assert!(!frame_is_shard(&encode_finalize(0, 1.0)));
+    }
+
+    #[test]
+    fn scratch_encoders_match_allocating_encoders() {
+        let env = Envelope {
+            to: ActorAddr::new(1, QueueKind::Compute, 0, 9),
+            msg: Msg::Req {
+                reg: RegId(3),
+                piece: 5,
+                data: Some(Arc::new(vec![Tensor::f32([2], vec![1.5, -0.0])])),
+                ts: 0.125,
+            },
+        };
+        // a dirty, oversized scratch must end up byte-identical
+        let mut scratch = vec![0xAAu8; 512];
+        encode_envelope_into(&env, &mut scratch);
+        assert_eq!(scratch, encode_envelope(&env));
+        encode_collective_into(7, 1, 2, &[0.5, -2.0], &mut scratch);
+        assert_eq!(scratch, encode_collective(7, 1, 2, &[0.5, -2.0]));
+        encode_shard_into(42, 7, 3, 1, &[1.0], &mut scratch);
+        assert_eq!(scratch, encode_shard(42, 7, 3, 1, &[1.0]));
     }
 
     #[test]

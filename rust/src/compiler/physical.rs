@@ -240,6 +240,10 @@ pub struct PhysPlan {
     pub fetches: Vec<FetchBinding>,
     /// Lowered transfer edges (the boxing-lowering pass's record).
     pub transfers: Vec<TransferDesc>,
+    /// Compile-time arena plan: per-device register lifetime packing with
+    /// offsets ([`crate::memory::plan_memory`]) — §2.3's resource planning
+    /// made concrete.
+    pub mem: crate::memory::MemoryPlan,
     pub signatures: HashMap<NodeId, Signature>,
     pub options: CompileOptions,
     /// The (possibly fusion-rewritten) logical graph this plan realizes.
@@ -697,6 +701,10 @@ pub fn compile(
         });
     }
 
+    // Pass 4: the arena plan — register lifetimes over the finished node
+    // set, packed into one arena per device.
+    let mem = crate::memory::plan_memory(&b.nodes, &b.regs);
+
     PhysPlan {
         nodes: b.nodes,
         regs: b.regs,
@@ -704,6 +712,7 @@ pub fn compile(
         inputs,
         fetches: fetch_bindings,
         transfers,
+        mem,
         signatures,
         options: opts.clone(),
         graph: g,

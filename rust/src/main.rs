@@ -22,6 +22,9 @@ use std::sync::Arc;
 
 fn main() {
     let args = Args::from_env();
+    // intra-op parallelism is a process-wide runtime choice (row-chunked
+    // matmuls over the fixed pool; bitwise-deterministic for every N)
+    oneflow::tensor::ops::set_intraop(args.usize("intraop", 1));
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => train(&args),
         Some("simulate") => simulate(&args),
@@ -32,7 +35,8 @@ fn main() {
                  train:    --steps N --artifacts DIR --lr F  (needs a build with --features pjrt)\n\
                  simulate: --model gpt|resnet --dp N --mp N --pp N --batch N --hidden N --layers N --pieces N [--devs-per-node N] [--zero] [--checkpoint] [--backend {}]\n\
                  \x20          [--transport {}] [--rank R --peers h:p,h:p,...]  (multi-process: one worker per rank)\n\
-                 plan:     same flags as simulate [--world N]; prints the physical plan (+ per-rank partition)",
+                 \x20          [--intraop N]  (row-parallel matmul threads, default 1, bitwise-deterministic)\n\
+                 plan:     same flags as simulate [--world N]; prints the physical plan, per-device arena map (+ per-rank partition)",
                 backend_names().join("|"),
                 comm::transport_names().join("|")
             );
@@ -180,9 +184,14 @@ fn simulate(args: &Args) {
     ]);
     t.row(&["compute busy (max dev)".into(), fmt::secs(report.busy(QueueKind::Compute))]);
     match mem {
-        Ok(m) => t.row(&["peak device memory".into(), fmt::bytes(m.peak())]),
+        Ok(m) => {
+            t.row(&["peak device memory (quota)".into(), fmt::bytes(m.peak())]);
+            t.row(&["peak device arena (packed)".into(), fmt::bytes(m.arena_peak())]);
+            t.row(&["register reuse ratio".into(), format!("{:.2}x", m.reuse_ratio)]);
+        }
         Err(e) => t.row(&["memory".into(), format!("OOM: {e}")]),
     }
+    t.row(&["buffer allocs (pool misses)".into(), report.buffer_allocs.to_string()]);
     t.print();
 }
 
@@ -199,9 +208,13 @@ fn plan(args: &Args) {
     if world > 1 {
         println!("\npartition over {world} worker ranks:\n{}", comm::launch::dump(&plan, world));
     }
+    let arena = plan.mem.arena_by_device();
     let mut devs: Vec<_> = plan.memory_by_device().into_iter().collect();
     devs.sort_by_key(|(d, _)| *d);
+    println!("\nper-device register quota (slots×bytes) vs packed arena:");
     for (dev, bytes) in devs {
-        println!("  {dev}: {}", fmt::bytes(bytes));
+        let packed = arena.get(&dev).copied().unwrap_or(0.0);
+        println!("  {dev}: quota {}, arena {}", fmt::bytes(bytes), fmt::bytes(packed));
     }
+    println!("\ncompile-time arena map (register-lifetime packing):\n{}", plan.mem.dump());
 }

@@ -1,7 +1,11 @@
 //! Memory planning and model-state accounting (paper §2.3 "resource
 //! planning at compile-time", §6.3.2 / §6.4 memory results).
 //!
-//! Two layers:
+//! Three layers:
+//! * [`plan`] — register-lifetime analysis and greedy interval packing of
+//!   registers into one arena per device (the compile-time memory plan the
+//!   runtime's buffer pools realize; `compile()` stores the result in the
+//!   physical plan).
 //! * [`check_plan`] — validate a physical plan's register footprint against
 //!   device capacity (the compile-time OOM check that replaces the runtime
 //!   OOM of Fig 2's eager schedulers).
@@ -10,21 +14,37 @@
 //!   ZeRO's §2 tabulates), under replicated vs sharded layouts and fp32 vs
 //!   mixed precision.
 
+pub mod plan;
+
+pub use plan::{plan_memory, ArenaBlock, DeviceArena, MemoryPlan};
+
 use crate::compiler::PhysPlan;
 use crate::exec::DeviceModel;
 use crate::placement::DeviceId;
 use std::collections::HashMap;
 
-/// Per-device planned footprint vs capacity.
+/// Per-device planned footprint vs capacity: the naive register quota
+/// (slots × bytes — what the runtime's per-register pools are bounded by)
+/// next to the packed-arena peak (the serialized working-set floor lifetime
+/// packing reaches; always ≤ the quota).
 #[derive(Debug)]
 pub struct MemReport {
     pub per_device: HashMap<DeviceId, f64>,
+    /// Packed arena bytes per device ([`plan_memory`]).
+    pub arena_per_device: HashMap<DeviceId, f64>,
+    /// Naive Σ / packed Σ (≥ 1.0).
+    pub reuse_ratio: f64,
     pub capacity: f64,
 }
 
 impl MemReport {
     pub fn peak(&self) -> f64 {
         self.per_device.values().cloned().fold(0.0, f64::max)
+    }
+
+    /// Largest packed per-device arena.
+    pub fn arena_peak(&self) -> f64 {
+        self.arena_per_device.values().cloned().fold(0.0, f64::max)
     }
 
     pub fn fits(&self) -> bool {
@@ -44,7 +64,12 @@ pub fn check_plan(plan: &PhysPlan, device: &DeviceModel) -> Result<MemReport, St
         .map(|(d, b)| format!("{d}: {:.2} GiB > {:.2} GiB", b / (1 << 30) as f64, capacity / (1 << 30) as f64))
         .collect();
     if over.is_empty() {
-        Ok(MemReport { per_device, capacity })
+        Ok(MemReport {
+            per_device,
+            arena_per_device: plan.mem.arena_by_device(),
+            reuse_ratio: plan.mem.reuse_ratio(),
+            capacity,
+        })
     } else {
         Err(format!("compile-time OOM: {}", over.join(", ")))
     }

@@ -1,0 +1,316 @@
+//! Compile-time **arena planning**: register-lifetime analysis over a
+//! physical plan and greedy interval packing of register blocks into one
+//! arena per device (paper §2.3/§3.4 — all resources are planned before the
+//! first piece runs; the steady-state loop never consults an allocator).
+//!
+//! The analysis works in plan-node order, which is a topological order of
+//! the dataflow: a register is *live* from its producer's node index to its
+//! last consumer's node index (control and update-back-edge consumers
+//! included). Two registers whose live intervals are disjoint can occupy
+//! the same arena bytes **in a serialized single-piece execution** — the
+//! packed arena peak is therefore the per-device working-set floor a
+//! perfectly-reusing allocator could reach, reported next to the pipelined
+//! register quota (slots × bytes, what the runtime's per-register pools are
+//! bounded by; [`crate::memory::check_plan`] rejects on that quota). The
+//! gap between the two is the reuse ratio `oneflow plan` prints.
+//!
+//! Registers with an indefinite lifetime — parameter (`Var`) slots and the
+//! update registers fed back across pieces — are pinned live for the whole
+//! plan, so they always get dedicated bytes.
+
+use crate::compiler::{PhysKernel, PhysNode, RegDesc, RegId};
+use crate::placement::DeviceId;
+use std::collections::HashMap;
+
+/// Arena blocks are aligned to this many bytes (one cache line).
+pub const ALIGN: usize = 64;
+
+/// One register's reservation inside its device arena.
+#[derive(Clone, Debug)]
+pub struct ArenaBlock {
+    pub reg: RegId,
+    /// Byte offset within the device arena.
+    pub offset: usize,
+    /// Block size: slots × bytes-per-slot, [`ALIGN`]-rounded.
+    pub bytes: usize,
+    /// Live interval in plan-node order, inclusive on both ends.
+    pub live: (usize, usize),
+}
+
+impl ArenaBlock {
+    /// Two blocks are simultaneously live in serialized execution iff their
+    /// node-order intervals intersect.
+    pub fn lives_with(&self, other: &ArenaBlock) -> bool {
+        self.live.0 <= other.live.1 && other.live.0 <= self.live.1
+    }
+
+    /// Two blocks share at least one arena byte.
+    pub fn bytes_overlap(&self, other: &ArenaBlock) -> bool {
+        self.offset < other.offset + other.bytes && other.offset < self.offset + self.bytes
+    }
+}
+
+/// All register blocks packed into one device's arena.
+#[derive(Clone, Debug)]
+pub struct DeviceArena {
+    pub device: DeviceId,
+    pub blocks: Vec<ArenaBlock>,
+    /// Packed arena size (max offset + size over blocks).
+    pub arena_bytes: usize,
+    /// Naive sum of the same blocks without reuse (Σ slots × bytes).
+    pub naive_bytes: usize,
+}
+
+/// The compile-time memory plan: one packed arena per device.
+#[derive(Clone, Debug, Default)]
+pub struct MemoryPlan {
+    /// Sorted by device.
+    pub arenas: Vec<DeviceArena>,
+}
+
+impl MemoryPlan {
+    /// Packed arena bytes per device.
+    pub fn arena_by_device(&self) -> HashMap<DeviceId, f64> {
+        self.arenas.iter().map(|a| (a.device, a.arena_bytes as f64)).collect()
+    }
+
+    /// Largest packed arena over devices.
+    pub fn arena_peak(&self) -> f64 {
+        self.arenas.iter().map(|a| a.arena_bytes as f64).fold(0.0, f64::max)
+    }
+
+    /// Naive Σ slots×bytes over all devices / packed Σ arena bytes — how
+    /// much register memory lifetime packing reclaims (≥ 1.0).
+    pub fn reuse_ratio(&self) -> f64 {
+        let naive: usize = self.arenas.iter().map(|a| a.naive_bytes).sum();
+        let packed: usize = self.arenas.iter().map(|a| a.arena_bytes).sum();
+        if packed == 0 {
+            1.0
+        } else {
+            naive as f64 / packed as f64
+        }
+    }
+
+    /// Human-readable per-device arena map (the `oneflow plan` view).
+    pub fn dump(&self) -> String {
+        use crate::util::fmt;
+        let mut s = String::new();
+        for a in &self.arenas {
+            s.push_str(&format!(
+                "{}: arena {} (naive {}, {} registers)\n",
+                a.device,
+                fmt::bytes(a.arena_bytes as f64),
+                fmt::bytes(a.naive_bytes as f64),
+                a.blocks.len()
+            ));
+            for b in &a.blocks {
+                s.push_str(&format!(
+                    "  r{:<4} @ {:>10} + {:<10} live n{}..n{}\n",
+                    b.reg.0, b.offset, b.bytes, b.live.0, b.live.1
+                ));
+            }
+        }
+        s.push_str(&format!("reuse ratio: {:.2}x\n", self.reuse_ratio()));
+        s
+    }
+}
+
+/// Compute per-register live intervals and pack each device's registers
+/// into one arena (first-fit by interval, largest-first among ties).
+pub fn plan_memory(nodes: &[PhysNode], regs: &[RegDesc]) -> MemoryPlan {
+    let horizon = nodes.len().saturating_sub(1);
+    // last consumer per register (data inputs, control deps, back edges)
+    let mut last_use: HashMap<RegId, usize> = HashMap::new();
+    let mut pinned: Vec<bool> = vec![false; regs.len()];
+    for n in nodes {
+        for reg in n.inputs.iter().map(|&(r, _)| r).chain(n.controls.iter().copied()) {
+            let e = last_use.entry(reg).or_insert(n.id.0);
+            *e = (*e).max(n.id.0);
+        }
+        if let Some((ureg, _)) = n.update_from {
+            // the training back edge holds piece k's update across pieces
+            pinned[ureg.0] = true;
+        }
+        if matches!(n.kernel, PhysKernel::Var { .. }) {
+            // a parameter slot is rewritten, never retired
+            pinned[n.out_reg.0] = true;
+        }
+    }
+
+    let mut per_device: HashMap<DeviceId, Vec<ArenaBlock>> = HashMap::new();
+    for r in regs {
+        let bytes = (r.bytes_per_slot.ceil() as usize).saturating_mul(r.slots);
+        let bytes = bytes.div_ceil(ALIGN) * ALIGN;
+        let live = if pinned[r.id.0] {
+            (0, horizon)
+        } else {
+            let start = r.producer.0;
+            (start, last_use.get(&r.id).copied().unwrap_or(start).max(start))
+        };
+        per_device
+            .entry(r.device)
+            .or_default()
+            .push(ArenaBlock { reg: r.id, offset: 0, bytes, live });
+    }
+
+    let mut arenas: Vec<DeviceArena> = per_device
+        .into_iter()
+        .map(|(device, mut blocks)| {
+            let naive_bytes = blocks.iter().map(|b| b.bytes).sum();
+            // earliest-def first, larger blocks first among equals: the
+            // classic greedy that keeps long-lived big tensors low in the
+            // arena where short-lived successors can slot above them
+            blocks.sort_by(|a, b| a.live.0.cmp(&b.live.0).then(b.bytes.cmp(&a.bytes)));
+            let mut placed: Vec<ArenaBlock> = Vec::with_capacity(blocks.len());
+            for mut blk in blocks {
+                blk.offset = first_fit(&placed, &blk);
+                placed.push(blk);
+            }
+            let arena_bytes =
+                placed.iter().map(|b| b.offset + b.bytes).max().unwrap_or(0);
+            placed.sort_by_key(|b| (b.offset, b.reg));
+            DeviceArena { device, blocks: placed, arena_bytes, naive_bytes }
+        })
+        .collect();
+    arenas.sort_by_key(|a| a.device);
+    MemoryPlan { arenas }
+}
+
+/// Lowest offset where `blk` fits without sharing bytes with any
+/// already-placed block whose live interval overlaps its own.
+fn first_fit(placed: &[ArenaBlock], blk: &ArenaBlock) -> usize {
+    // conflicting blocks sorted by offset; scan the gaps between them
+    let mut conflicts: Vec<&ArenaBlock> =
+        placed.iter().filter(|p| p.lives_with(blk)).collect();
+    conflicts.sort_by_key(|p| p.offset);
+    let mut offset = 0usize;
+    for c in conflicts {
+        if offset + blk.bytes <= c.offset {
+            break; // fits in the gap below `c`
+        }
+        offset = offset.max(c.offset + c.bytes);
+    }
+    offset
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOptions};
+    use crate::graph::{LogicalGraph, OpKind};
+    use crate::placement::Placement;
+    use crate::sbp::{s, NdSbp};
+    use crate::tensor::DType;
+    use std::collections::HashMap;
+
+    /// Hand-rolled packing check: disjoint intervals share bytes, live
+    /// overlaps never do.
+    fn assert_sound(plan: &MemoryPlan) {
+        for a in &plan.arenas {
+            assert!(a.arena_bytes <= a.naive_bytes, "arena exceeds naive quota");
+            for (i, x) in a.blocks.iter().enumerate() {
+                for y in &a.blocks[i + 1..] {
+                    assert!(
+                        !(x.lives_with(y) && x.bytes_overlap(y)),
+                        "live registers r{} and r{} share bytes on {}",
+                        x.reg.0,
+                        y.reg.0,
+                        a.device
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chain_packs_soundly_and_reuses_disjoint_lifetimes() {
+        // x -> relu -> gelu -> relu2 ... a chain long enough that early
+        // activations die before late ones are produced
+        let p = Placement::node(0, 1);
+        let mut g = LogicalGraph::new();
+        let mut t = g.add1(
+            "x",
+            OpKind::Input { shape: [64, 64].into(), dtype: DType::F32 },
+            &[],
+            p.clone(),
+        );
+        g.hint_tensor(t, NdSbp::d1(s(0)));
+        for i in 0..8 {
+            t = g.add1(format!("a{i}"), OpKind::Relu, &[t], p.clone());
+        }
+        let plan = compile(&g, &[t], &HashMap::new(), &CompileOptions::default());
+        assert_sound(&plan.mem);
+        // a serialized single-piece pass of a chain needs ~2 live
+        // activations at a time: packing must beat the naive sum
+        assert!(
+            plan.mem.reuse_ratio() > 1.5,
+            "chain reuse ratio {:.2}",
+            plan.mem.reuse_ratio()
+        );
+        assert!(plan.mem.arena_peak() <= plan.peak_device_memory());
+    }
+
+    #[test]
+    fn var_registers_are_pinned_for_the_whole_plan() {
+        use crate::graph::autograd;
+        let p = Placement::node(0, 1);
+        let mut g = LogicalGraph::new();
+        let x = g.add1(
+            "x",
+            OpKind::Input { shape: [8, 4].into(), dtype: DType::F32 },
+            &[],
+            p.clone(),
+        );
+        g.hint_tensor(x, NdSbp::d1(s(0)));
+        let w = g.add1(
+            "w",
+            OpKind::Variable { shape: [4, 3].into(), dtype: DType::F32, init_std: 0.1 },
+            &[],
+            p.clone(),
+        );
+        let labels = g.add1(
+            "labels",
+            OpKind::Input { shape: [8].into(), dtype: DType::I32 },
+            &[],
+            p.clone(),
+        );
+        let h = g.add1("h", OpKind::MatMul { ta: false, tb: false }, &[x, w], p.clone());
+        let outs = g.add("loss", OpKind::SparseXent, &[h, labels], p.clone());
+        let bw = autograd::build_backward(&mut g, outs[0]);
+        let updates = autograd::append_sgd(&mut g, &bw, 0.1);
+        let plan = compile(&g, &[outs[0]], &updates, &CompileOptions::default());
+        assert_sound(&plan.mem);
+        let horizon = plan.nodes.len() - 1;
+        for v in &plan.vars {
+            for &pid in &v.phys {
+                let reg = plan.nodes[pid.0].out_reg;
+                let blk = plan
+                    .mem
+                    .arenas
+                    .iter()
+                    .flat_map(|a| &a.blocks)
+                    .find(|b| b.reg == reg)
+                    .expect("var register missing from the arena plan");
+                assert_eq!(blk.live, (0, horizon), "var {} not pinned", v.name);
+            }
+        }
+    }
+
+    #[test]
+    fn dump_lists_every_device() {
+        let p = Placement::node(0, 2);
+        let mut g = LogicalGraph::new();
+        let x = g.add1(
+            "x",
+            OpKind::Input { shape: [8, 8].into(), dtype: DType::F32 },
+            &[],
+            p.clone(),
+        );
+        g.hint_tensor(x, NdSbp::d1(s(0)));
+        let y = g.add1("y", OpKind::Relu, &[x], p);
+        let plan = compile(&g, &[y], &HashMap::new(), &CompileOptions::default());
+        let dump = plan.mem.dump();
+        assert!(dump.contains("n0d0") && dump.contains("n0d1"), "{dump}");
+        assert!(dump.contains("reuse ratio"), "{dump}");
+    }
+}

@@ -41,6 +41,17 @@ pub trait Backend: Send + Sync {
     /// tensor per output; boxing returns one tensor per consumer shard).
     fn execute(&self, node: &PhysNode, inputs: &[&Tensor]) -> Vec<Tensor>;
 
+    /// Execute one action of `node`, writing the outputs into `outs` —
+    /// recycled register buffers from the actor's pool (possibly empty on
+    /// the warm-up pieces). Implementations that overwrite in place make
+    /// the steady-state step allocation-free; the default falls back to
+    /// [`Backend::execute`] and replaces `outs` (the allocating path —
+    /// `sim` and `pjrt` are untouched by the arena machinery). Either way
+    /// the results must be **bitwise-identical** to `execute`.
+    fn execute_into(&self, node: &PhysNode, inputs: &[&Tensor], outs: &mut Vec<Tensor>) {
+        *outs = self.execute(node, inputs);
+    }
+
     /// Whether this backend materializes tensors (false for [`SimBackend`]).
     fn has_data(&self) -> bool {
         true
@@ -51,6 +62,30 @@ pub trait Backend: Send + Sync {
     /// after construction; backends without artifact support reject.
     fn load_artifact(&self, name: &str, path: &str) -> crate::Result<()> {
         anyhow::bail!("backend cannot load AOT artifact `{name}` from {path}: not a PJRT backend")
+    }
+}
+
+/// Wraps a backend and suppresses its [`Backend::execute_into`] override:
+/// every action takes the allocating fallback path. Benches and parity
+/// tests use it to pit the pooled (arena-backed) execution against the
+/// pre-arena allocating path on the same plan — losses must be
+/// bitwise-equal (DESIGN.md invariant 9).
+pub struct AllocatingBackend<B: Backend>(pub B);
+
+impl<B: Backend> Backend for AllocatingBackend<B> {
+    fn execute(&self, node: &PhysNode, inputs: &[&Tensor]) -> Vec<Tensor> {
+        self.0.execute(node, inputs)
+    }
+
+    // `execute_into` deliberately NOT forwarded: the trait default
+    // allocates via `execute`.
+
+    fn has_data(&self) -> bool {
+        self.0.has_data()
+    }
+
+    fn load_artifact(&self, name: &str, path: &str) -> crate::Result<()> {
+        self.0.load_artifact(name, path)
     }
 }
 

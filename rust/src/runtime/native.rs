@@ -1,6 +1,13 @@
 //! Native CPU backend: dispatches each physical kernel to the hand-written
 //! kernels in [`crate::tensor::ops`]. This is the reference executor the
 //! plan-parity tests use to prove distributed == single-device numerics.
+//!
+//! [`Backend::execute_into`] is overridden to write every compute kernel's
+//! outputs into the actor's recycled register buffers through the `*_into`
+//! kernel variants — the allocation-free steady-state path of the static
+//! memory plan. The `*_into` forms run the identical arithmetic in the
+//! identical order as the allocating forms, so both paths are
+//! bitwise-equal (pinned by `tests/arena.rs`).
 
 use super::Backend;
 use crate::compiler::{PhysKernel, PhysNode};
@@ -11,6 +18,8 @@ use crate::tensor::Tensor;
 /// See module docs.
 #[derive(Default)]
 pub struct NativeBackend;
+
+use crate::tensor::ops::fit;
 
 impl Backend for NativeBackend {
     fn execute(&self, node: &PhysNode, inputs: &[&Tensor]) -> Vec<Tensor> {
@@ -111,6 +120,178 @@ impl Backend for NativeBackend {
             PhysKernel::Fetch { .. } => inputs.iter().map(|t| (*t).clone()).collect(),
             PhysKernel::Var { .. } | PhysKernel::Input { .. } => {
                 unreachable!("sources are handled by the actor itself")
+            }
+        }
+    }
+
+    fn execute_into(&self, node: &PhysNode, inputs: &[&Tensor], outs: &mut Vec<Tensor>) {
+        let PhysKernel::Compute { op, shard } = &node.kernel else {
+            // Fetch hands its clones to the driver, which retains them past
+            // the step — recycling is impossible by construction, so the
+            // allocating path is the honest one. Everything else is either
+            // a source (actor-handled) or a transfer op (CommRt-handled).
+            *outs = self.execute(node, inputs);
+            return;
+        };
+        let i = |n: usize| inputs[n];
+        match op {
+            OpKind::MatMul { ta, tb } => {
+                fit(outs, 1);
+                k::matmul_into(i(0), i(1), *ta, *tb, &mut outs[0]);
+            }
+            OpKind::FusedMatMulBias { act } => {
+                fit(outs, 1);
+                let out = &mut outs[0];
+                k::matmul_into(i(0), i(1), false, false, out);
+                // bias then activation in place: the same `+=`/`f(x)` the
+                // allocating bias_add/map chain performs
+                let (m, n) = (out.shape.dim(0), out.shape.dim(1));
+                let b = i(2);
+                for r in 0..m {
+                    for c in 0..n {
+                        out.data[r * n + c] += b.data[c];
+                    }
+                }
+                match act {
+                    Activation::None => {}
+                    Activation::Relu => out.data.iter_mut().for_each(|v| *v = v.max(0.0)),
+                    Activation::Gelu => out.data.iter_mut().for_each(|v| *v = k::gelu_scalar(*v)),
+                }
+            }
+            OpKind::BiasAdd => {
+                fit(outs, 1);
+                k::bias_add_into(i(0), i(1), &mut outs[0]);
+            }
+            OpKind::Add => {
+                fit(outs, 1);
+                k::zip_into(i(0), i(1), |x, y| x + y, &mut outs[0]);
+            }
+            OpKind::Sub => {
+                fit(outs, 1);
+                k::zip_into(i(0), i(1), |x, y| x - y, &mut outs[0]);
+            }
+            OpKind::Mul => {
+                fit(outs, 1);
+                k::zip_into(i(0), i(1), |x, y| x * y, &mut outs[0]);
+            }
+            OpKind::Scale(s) => {
+                fit(outs, 1);
+                let s = *s;
+                k::map_into(i(0), |x| x * s, &mut outs[0]);
+            }
+            OpKind::Relu => {
+                fit(outs, 1);
+                k::map_into(i(0), |v| v.max(0.0), &mut outs[0]);
+            }
+            OpKind::Gelu => {
+                fit(outs, 1);
+                k::map_into(i(0), k::gelu_scalar, &mut outs[0]);
+            }
+            OpKind::Exp => {
+                fit(outs, 1);
+                k::map_into(i(0), f32::exp, &mut outs[0]);
+            }
+            OpKind::ReluGrad => {
+                fit(outs, 1);
+                k::zip_into(i(0), i(1), |g, v| if v > 0.0 { g } else { 0.0 }, &mut outs[0]);
+            }
+            OpKind::GeluGrad => {
+                fit(outs, 1);
+                k::zip_into(i(0), i(1), k::gelu_grad_scalar, &mut outs[0]);
+            }
+            OpKind::Softmax => {
+                fit(outs, 1);
+                k::softmax_into(i(0), &mut outs[0]);
+            }
+            OpKind::LayerNorm { eps } => {
+                fit(outs, 1);
+                k::layernorm_into(i(0), *eps, &mut outs[0]);
+            }
+            OpKind::ReduceSum { axis, keepdim } => {
+                fit(outs, 1);
+                k::reduce2_into(i(0), *axis, *keepdim, 0.0, |a, b| a + b, &mut outs[0]);
+            }
+            OpKind::ReduceMax { axis, keepdim } => {
+                fit(outs, 1);
+                k::reduce2_into(i(0), *axis, *keepdim, f32::NEG_INFINITY, f32::max, &mut outs[0]);
+            }
+            OpKind::ColSub => {
+                fit(outs, 1);
+                k::broadcast_col_into(i(0), i(1), |a, b| a - b, &mut outs[0]);
+            }
+            OpKind::ColDiv => {
+                fit(outs, 1);
+                k::broadcast_col_into(i(0), i(1), |a, b| a / b, &mut outs[0]);
+            }
+            OpKind::ColBcast { .. } => {
+                fit(outs, 1);
+                let n = node.out_shapes[0].dim(1);
+                let col = i(0);
+                let m = col.shape.dim(0);
+                let out = &mut outs[0];
+                k::set_meta(out, &node.out_shapes[0], col.dtype);
+                for r in 0..m {
+                    for c in 0..n {
+                        out.data[r * n + c] = col.data[r];
+                    }
+                }
+            }
+            OpKind::Transpose => {
+                fit(outs, 1);
+                k::transpose2_into(i(0), &mut outs[0]);
+            }
+            OpKind::Cast { to } => {
+                fit(outs, 1);
+                k::cast_into(i(0), *to, &mut outs[0]);
+            }
+            OpKind::Embedding => {
+                fit(outs, 1);
+                k::embedding_shard_into(i(0), i(1), shard.vocab_offset, &mut outs[0]);
+            }
+            OpKind::EmbeddingGrad { .. } => {
+                fit(outs, 1);
+                let v = node.out_shapes[0].dim(0);
+                k::embedding_grad_shard_into(i(0), i(1), v, shard.vocab_offset, &mut outs[0]);
+            }
+            OpKind::SparseXent => {
+                fit(outs, 2);
+                let (loss, probs) = outs.split_at_mut(1);
+                k::sparse_softmax_xent_into(i(0), i(1), &mut loss[0], &mut probs[0]);
+            }
+            OpKind::SparseXentGrad => {
+                fit(outs, 1);
+                k::sparse_softmax_xent_grad_into(i(0), i(1), i(2), &mut outs[0]);
+            }
+            OpKind::SgdUpdate { lr } => {
+                fit(outs, 1);
+                let lr = *lr;
+                k::zip_into(i(0), i(1), |p, g| p - lr * g, &mut outs[0]);
+            }
+            OpKind::AdamUpdate { lr, b1, b2, eps } => {
+                fit(outs, 3);
+                let (p, g, m, v) = (i(0), i(1), i(2), i(3));
+                let (b1, b2) = (*b1, *b2);
+                let (head, tail) = outs.split_at_mut(1);
+                let (m2, v2) = tail.split_at_mut(1);
+                k::zip_into(m, g, |m, g| b1 * m + (1.0 - b1) * g, &mut m2[0]);
+                k::zip_into(v, g, |v, g| b2 * v + (1.0 - b2) * g * g, &mut v2[0]);
+                k::copy_into(p, &mut head[0]);
+                for idx in 0..head[0].data.len() {
+                    head[0].data[idx] -= lr * m2[0].data[idx] / (v2[0].data[idx].sqrt() + eps);
+                }
+            }
+            OpKind::Identity | OpKind::StopGrad => {
+                fit(outs, 1);
+                k::copy_into(i(0), &mut outs[0]);
+            }
+            OpKind::Flops { dtype, .. } => {
+                fit(outs, 1);
+                k::set_meta(&mut outs[0], &node.out_shapes[0], *dtype);
+                outs[0].data.fill(0.0);
+            }
+            // AOT/external ops reject identically to `execute`
+            OpKind::External { .. } | OpKind::Input { .. } | OpKind::Variable { .. } => {
+                *outs = self.execute(node, inputs);
             }
         }
     }

@@ -1,63 +1,180 @@
 //! Native CPU kernels. These are the "device" compute used by the real
 //! execution mode of the actor runtime (and by tests as the ground truth for
-//! distributed-vs-single-device parity). Hot kernels (matmul) are written
-//! with blocked loops so the end-to-end examples are not pointlessly slow.
+//! distributed-vs-single-device parity).
+//!
+//! Every hot kernel has an **out-param `*_into` variant** that writes into a
+//! caller-provided tensor, fully overwriting it — the allocation-free path
+//! the actor runtime's pooled register buffers use
+//! ([`crate::runtime::Backend::execute_into`]). The allocating functions are
+//! thin wrappers over the `*_into` forms, so both paths run the identical
+//! arithmetic in the identical order and are **bitwise-equal** by
+//! construction.
+//!
+//! `matmul` additionally supports intra-op parallelism: rows of `C` are
+//! chunked across a small fixed thread pool ([`crate::util::pool`],
+//! `--intraop N`, default 1). Each row is computed by the same sequential
+//! loop regardless of the chunking, so results are bitwise-identical for
+//! every `N`.
 
-use super::{Shape, Tensor};
-#[cfg(test)]
-use super::DType;
+use super::{DType, Shape, Tensor};
+use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// `C = A @ B` for 2-D tensors, optionally transposing either input.
-pub fn matmul(a: &Tensor, b: &Tensor, trans_a: bool, trans_b: bool) -> Tensor {
+/// Intra-op parallelism degree (rows of one matmul spread over the fixed
+/// pool). Process-wide, set once at startup from `--intraop`.
+static INTRAOP: AtomicUsize = AtomicUsize::new(1);
+
+/// Set the intra-op parallelism degree (clamped to ≥ 1).
+pub fn set_intraop(n: usize) {
+    INTRAOP.store(n.max(1), Ordering::SeqCst);
+}
+
+/// Current intra-op parallelism degree.
+pub fn intraop() -> usize {
+    INTRAOP.load(Ordering::Relaxed)
+}
+
+/// Point `out` at `shape`/`dtype` and give it `shape.elems()` writable
+/// elements, reusing its existing buffer when the capacity already matches
+/// (the steady-state case for pooled register buffers — no allocation).
+pub fn set_meta(out: &mut Tensor, shape: &Shape, dtype: DType) {
+    if out.shape != *shape {
+        out.shape = shape.clone();
+    }
+    out.dtype = dtype;
+    let n = out.shape.elems();
+    if out.data.len() != n {
+        out.data.resize(n, 0.0);
+    }
+}
+
+fn set_meta_dims2(out: &mut Tensor, m: usize, n: usize, dtype: DType) {
+    if out.shape.rank() != 2 || out.shape.dim(0) != m || out.shape.dim(1) != n {
+        out.shape = [m, n].into();
+    }
+    out.dtype = dtype;
+    if out.data.len() != m * n {
+        out.data.resize(m * n, 0.0);
+    }
+}
+
+/// Logical `(m, k, n)` of `A@B` under the transpose flags.
+fn mm_dims(a: &Tensor, b: &Tensor, trans_a: bool, trans_b: bool) -> (usize, usize, usize) {
     let (am, ak) = dims2(a);
     let (bk, bn) = dims2(b);
     let (m, k) = if trans_a { (ak, am) } else { (am, ak) };
     let (k2, n) = if trans_b { (bn, bk) } else { (bk, bn) };
     assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
-    // Normalize to row-major A (m,k) and B (k,n) views to keep the hot loop
-    // cache-friendly regardless of transposition flags.
-    let a_rm;
-    let a_view: &[f32] = if trans_a {
-        a_rm = transpose2(a).data;
-        &a_rm
-    } else {
-        &a.data
-    };
-    let b_rm;
-    let b_view: &[f32] = if trans_b {
-        b_rm = transpose2(b).data;
-        &b_rm
-    } else {
-        &b.data
-    };
-    let mut c = vec![0.0f32; m * n];
-    // i-k-j loop order: unit-stride access to B row and C row.
-    for i in 0..m {
-        let crow = &mut c[i * n..(i + 1) * n];
-        for kk in 0..k {
-            let aik = a_view[i * k + kk];
-            if aik == 0.0 {
-                continue;
-            }
-            let brow = &b_view[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                crow[j] += aik * brow[j];
-            }
+    (m, k, n)
+}
+
+/// `C = A @ B` for 2-D tensors, optionally transposing either input.
+pub fn matmul(a: &Tensor, b: &Tensor, trans_a: bool, trans_b: bool) -> Tensor {
+    let mut out = Tensor::new([0], a.dtype, vec![]);
+    matmul_into(a, b, trans_a, trans_b, &mut out);
+    out
+}
+
+thread_local! {
+    /// Per-thread transpose-normalization scratch for [`matmul_into`]: the
+    /// `(Aᵀ, Bᵀ)` views materialize here once per call and the buffers are
+    /// reused across calls, so the unit-stride hot loop costs no
+    /// steady-state allocation.
+    static MM_NORM: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
+        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// Transpose `(rows, cols)`-shaped `src` into `dst` (resized in place).
+fn transpose_into_buf(src: &[f32], rows: usize, cols: usize, dst: &mut Vec<f32>) {
+    if dst.len() != src.len() {
+        dst.resize(src.len(), 0.0);
+    }
+    for i in 0..rows {
+        for j in 0..cols {
+            dst[j * rows + i] = src[i * cols + j];
         }
     }
-    Tensor::new([m, n], a.dtype, c)
+}
+
+/// Out-param matmul: fully overwrites `out` (zero then accumulate).
+/// Transposed operands are normalized into per-thread scratch (reused
+/// across calls — no steady-state allocation) so the hot loop always runs
+/// the unit-stride `i → k → j` order; normalization changes only *where*
+/// an element is read, never the accumulation order, so all four flag
+/// combinations are bitwise-equal to an explicit-transpose reference. No
+/// zero-skip on `aik`: 0·NaN and 0·Inf must propagate NaN (IEEE), and a
+/// skip would hide them. Rows are chunked over the intra-op pool when
+/// [`intraop`] > 1 (bitwise-identical: each row's loop is the same
+/// sequential code on every chunking).
+pub fn matmul_into(a: &Tensor, b: &Tensor, trans_a: bool, trans_b: bool, out: &mut Tensor) {
+    let (m, k, n) = mm_dims(a, b, trans_a, trans_b);
+    let (am, ak) = dims2(a);
+    let (bk, bn) = dims2(b);
+    set_meta_dims2(out, m, n, a.dtype);
+    MM_NORM.with(|cell| {
+        let norm = &mut *cell.borrow_mut();
+        let a_view: &[f32] = if trans_a {
+            transpose_into_buf(&a.data, am, ak, &mut norm.0);
+            &norm.0
+        } else {
+            &a.data
+        };
+        let b_view: &[f32] = if trans_b {
+            transpose_into_buf(&b.data, bk, bn, &mut norm.1);
+            &norm.1
+        } else {
+            &b.data
+        };
+        // one row of C, identical for every chunking
+        let compute_row = |i: usize, crow: &mut [f32]| {
+            crow.fill(0.0);
+            for kk in 0..k {
+                let aik = a_view[i * k + kk];
+                let brow = &b_view[kk * n..(kk + 1) * n];
+                for (c, &bv) in crow.iter_mut().zip(brow) {
+                    *c += aik * bv;
+                }
+            }
+        };
+        let chunks = intraop().min(m).max(1);
+        if chunks == 1 {
+            for i in 0..m {
+                compute_row(i, &mut out.data[i * n..(i + 1) * n]);
+            }
+        } else {
+            let out_ptr = out.data.as_mut_ptr() as usize;
+            crate::util::pool::run_chunks(chunks, &|c| {
+                // chunk c owns rows [lo, hi): disjoint output regions
+                let lo = c * m / chunks;
+                let hi = (c + 1) * m / chunks;
+                for i in lo..hi {
+                    // SAFETY: row ranges of distinct chunks never overlap,
+                    // and run_chunks blocks until every chunk completed.
+                    let crow = unsafe {
+                        std::slice::from_raw_parts_mut((out_ptr as *mut f32).add(i * n), n)
+                    };
+                    compute_row(i, crow);
+                }
+            });
+        }
+    });
 }
 
 /// 2-D transpose.
 pub fn transpose2(t: &Tensor) -> Tensor {
+    let mut out = Tensor::new([0], t.dtype, vec![]);
+    transpose2_into(t, &mut out);
+    out
+}
+
+/// Out-param 2-D transpose.
+pub fn transpose2_into(t: &Tensor, out: &mut Tensor) {
     let (m, n) = dims2(t);
-    let mut out = vec![0.0f32; m * n];
+    set_meta_dims2(out, n, m, t.dtype);
     for i in 0..m {
         for j in 0..n {
-            out[j * m + i] = t.data[i * n + j];
+            out.data[j * m + i] = t.data[i * n + j];
         }
     }
-    Tensor::new([n, m], t.dtype, out)
 }
 
 fn dims2(t: &Tensor) -> (usize, usize) {
@@ -67,14 +184,33 @@ fn dims2(t: &Tensor) -> (usize, usize) {
 
 /// Element-wise binary op on same-shape tensors.
 pub fn zip(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    let mut out = Tensor::new([0], a.dtype, vec![]);
+    zip_into(a, b, f, &mut out);
+    out
+}
+
+/// Out-param element-wise binary op (fully overwrites `out`).
+pub fn zip_into(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32, out: &mut Tensor) {
     assert_eq!(a.shape, b.shape, "zip shape {} vs {}", a.shape, b.shape);
-    let data = a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)).collect();
-    Tensor::new(a.shape.clone(), a.dtype, data)
+    set_meta(out, &a.shape, a.dtype);
+    for ((o, &x), &y) in out.data.iter_mut().zip(&a.data).zip(&b.data) {
+        *o = f(x, y);
+    }
 }
 
 /// Element-wise unary op.
 pub fn map(a: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
-    Tensor::new(a.shape.clone(), a.dtype, a.data.iter().map(|&x| f(x)).collect())
+    let mut out = Tensor::new([0], a.dtype, vec![]);
+    map_into(a, f, &mut out);
+    out
+}
+
+/// Out-param element-wise unary op (fully overwrites `out`).
+pub fn map_into(a: &Tensor, f: impl Fn(f32) -> f32, out: &mut Tensor) {
+    set_meta(out, &a.shape, a.dtype);
+    for (o, &x) in out.data.iter_mut().zip(&a.data) {
+        *o = f(x);
+    }
 }
 
 pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
@@ -118,15 +254,22 @@ pub fn max_n(ts: &[&Tensor]) -> Tensor {
 
 /// `(M, N) + (N,)` broadcast bias add.
 pub fn bias_add(x: &Tensor, b: &Tensor) -> Tensor {
+    let mut out = Tensor::new([0], x.dtype, vec![]);
+    bias_add_into(x, b, &mut out);
+    out
+}
+
+/// Out-param broadcast bias add (fully overwrites `out`).
+pub fn bias_add_into(x: &Tensor, b: &Tensor, out: &mut Tensor) {
     let (m, n) = dims2(x);
     assert_eq!(b.shape.0, vec![n], "bias shape {}", b.shape);
-    let mut out = x.data.clone();
+    set_meta(out, &x.shape, x.dtype);
+    out.data.copy_from_slice(&x.data);
     for i in 0..m {
         for j in 0..n {
-            out[i * n + j] += b.data[j];
+            out.data[i * n + j] += b.data[j];
         }
     }
-    Tensor::new([m, n], x.dtype, out)
 }
 
 pub fn relu(x: &Tensor) -> Tensor {
@@ -148,61 +291,84 @@ pub fn gelu_scalar(v: f32) -> f32 {
     0.5 * v * (1.0 + (C * (v + 0.044715 * v * v * v)).tanh())
 }
 
+pub fn gelu_grad_scalar(g: f32, v: f32) -> f32 {
+    const C: f32 = 0.7978845608;
+    let u = C * (v + 0.044715 * v * v * v);
+    let t = u.tanh();
+    let du = C * (1.0 + 3.0 * 0.044715 * v * v);
+    g * (0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * du)
+}
+
 /// d/dx gelu (tanh approximation), given upstream grad and forward input.
 pub fn gelu_grad(dy: &Tensor, x: &Tensor) -> Tensor {
-    const C: f32 = 0.7978845608;
-    zip(dy, x, |g, v| {
-        let u = C * (v + 0.044715 * v * v * v);
-        let t = u.tanh();
-        let du = C * (1.0 + 3.0 * 0.044715 * v * v);
-        g * (0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * du)
-    })
+    zip(dy, x, gelu_grad_scalar)
 }
 
 /// Row-wise softmax over the last axis of a 2-D tensor.
 pub fn softmax(x: &Tensor) -> Tensor {
+    let mut out = Tensor::new([0], x.dtype, vec![]);
+    softmax_into(x, &mut out);
+    out
+}
+
+/// Out-param row-wise softmax (fully overwrites `out`).
+pub fn softmax_into(x: &Tensor, out: &mut Tensor) {
     let (m, n) = dims2(x);
-    let mut out = vec![0.0f32; m * n];
+    set_meta(out, &x.shape, x.dtype);
     for i in 0..m {
         let row = &x.data[i * n..(i + 1) * n];
+        let orow = &mut out.data[i * n..(i + 1) * n];
         let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut s = 0.0;
         for j in 0..n {
             let e = (row[j] - mx).exp();
-            out[i * n + j] = e;
+            orow[j] = e;
             s += e;
         }
-        for j in 0..n {
-            out[i * n + j] /= s;
+        for o in orow.iter_mut() {
+            *o /= s;
         }
     }
-    Tensor::new([m, n], x.dtype, out)
 }
 
 /// Reduce over `axis` of a 2-D tensor with `f`, starting from `init`.
 /// `keepdim` keeps a size-1 axis so SBP bookkeeping stays rank-stable.
 pub fn reduce2(x: &Tensor, axis: usize, keepdim: bool, init: f32, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    let mut out = Tensor::new([0], x.dtype, vec![]);
+    reduce2_into(x, axis, keepdim, init, f, &mut out);
+    out
+}
+
+/// Out-param 2-D reduction (fully overwrites `out`, starting from `init`).
+pub fn reduce2_into(
+    x: &Tensor,
+    axis: usize,
+    keepdim: bool,
+    init: f32,
+    f: impl Fn(f32, f32) -> f32,
+    out: &mut Tensor,
+) {
     let (m, n) = dims2(x);
     match axis {
         0 => {
-            let mut out = vec![init; n];
+            let shape: Shape = if keepdim { [1, n].into() } else { [n].into() };
+            set_meta(out, &shape, x.dtype);
+            out.data.fill(init);
             for i in 0..m {
                 for j in 0..n {
-                    out[j] = f(out[j], x.data[i * n + j]);
+                    out.data[j] = f(out.data[j], x.data[i * n + j]);
                 }
             }
-            let shape: Shape = if keepdim { [1, n].into() } else { [n].into() };
-            Tensor::new(shape, x.dtype, out)
         }
         1 => {
-            let mut out = vec![init; m];
+            let shape: Shape = if keepdim { [m, 1].into() } else { [m].into() };
+            set_meta(out, &shape, x.dtype);
+            out.data.fill(init);
             for i in 0..m {
                 for j in 0..n {
-                    out[i] = f(out[i], x.data[i * n + j]);
+                    out.data[i] = f(out.data[i], x.data[i * n + j]);
                 }
             }
-            let shape: Shape = if keepdim { [m, 1].into() } else { [m].into() };
-            Tensor::new(shape, x.dtype, out)
         }
         _ => panic!("reduce2 axis {axis}"),
     }
@@ -218,15 +384,26 @@ pub fn reduce_max(x: &Tensor, axis: usize, keepdim: bool) -> Tensor {
 
 /// Broadcast a `(M,1)` column over `(M,N)` with `f`.
 pub fn broadcast_col(x: &Tensor, col: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    let mut out = Tensor::new([0], x.dtype, vec![]);
+    broadcast_col_into(x, col, f, &mut out);
+    out
+}
+
+/// Out-param column broadcast (fully overwrites `out`).
+pub fn broadcast_col_into(
+    x: &Tensor,
+    col: &Tensor,
+    f: impl Fn(f32, f32) -> f32,
+    out: &mut Tensor,
+) {
     let (m, n) = dims2(x);
     assert_eq!(col.shape.0, vec![m, 1], "col shape {}", col.shape);
-    let mut out = vec![0.0f32; m * n];
+    set_meta(out, &x.shape, x.dtype);
     for i in 0..m {
         for j in 0..n {
-            out[i * n + j] = f(x.data[i * n + j], col.data[i]);
+            out.data[i * n + j] = f(x.data[i * n + j], col.data[i]);
         }
     }
-    Tensor::new([m, n], x.dtype, out)
 }
 
 /// Slice `count` indices starting at `start` along `axis`.
@@ -276,81 +453,162 @@ pub fn concat_axis(ts: &[&Tensor], axis: usize) -> Tensor {
 /// vocabulary-shard semantics: a shard owns `[lo, hi)` and produces a
 /// partial-sum result — paper §6.3.2).
 pub fn embedding_shard(table: &Tensor, ids: &Tensor, vocab_offset: usize) -> Tensor {
+    let mut out = Tensor::new([0], table.dtype, vec![]);
+    embedding_shard_into(table, ids, vocab_offset, &mut out);
+    out
+}
+
+/// Out-param embedding lookup (fully overwrites `out`, zeros included).
+pub fn embedding_shard_into(table: &Tensor, ids: &Tensor, vocab_offset: usize, out: &mut Tensor) {
     let (v, e) = dims2(table);
     let b = ids.elems();
-    let mut out = vec![0.0f32; b * e];
+    set_meta_dims2(out, b, e, table.dtype);
+    out.data.fill(0.0);
     for (i, &idf) in ids.data.iter().enumerate() {
         let id = idf as i64 - vocab_offset as i64;
         if id >= 0 && (id as usize) < v {
             let row = &table.data[id as usize * e..(id as usize + 1) * e];
-            out[i * e..(i + 1) * e].copy_from_slice(row);
+            out.data[i * e..(i + 1) * e].copy_from_slice(row);
         }
     }
-    Tensor::new([b, e], table.dtype, out)
 }
 
 /// Gradient of embedding lookup: scatter-add rows of `dy (B,E)` into a
 /// zero table `(V, E)` at `ids - vocab_offset`.
 pub fn embedding_grad_shard(dy: &Tensor, ids: &Tensor, v: usize, vocab_offset: usize) -> Tensor {
+    let mut out = Tensor::new([0], dy.dtype, vec![]);
+    embedding_grad_shard_into(dy, ids, v, vocab_offset, &mut out);
+    out
+}
+
+/// Out-param embedding gradient (fully overwrites `out`).
+pub fn embedding_grad_shard_into(
+    dy: &Tensor,
+    ids: &Tensor,
+    v: usize,
+    vocab_offset: usize,
+    out: &mut Tensor,
+) {
     let (b, e) = dims2(dy);
     assert_eq!(ids.elems(), b);
-    let mut out = vec![0.0f32; v * e];
+    set_meta_dims2(out, v, e, dy.dtype);
+    out.data.fill(0.0);
     for (i, &idf) in ids.data.iter().enumerate() {
         let id = idf as i64 - vocab_offset as i64;
         if id >= 0 && (id as usize) < v {
             for j in 0..e {
-                out[id as usize * e + j] += dy.data[i * e + j];
+                out.data[id as usize * e + j] += dy.data[i * e + j];
             }
         }
     }
-    Tensor::new([v, e], dy.dtype, out)
 }
 
 /// Sparse softmax cross-entropy forward: `logits (B, C)`, `labels (B,)` →
 /// (per-example loss `(B,)`, softmax probs `(B, C)` for backward).
 pub fn sparse_softmax_xent(logits: &Tensor, labels: &Tensor) -> (Tensor, Tensor) {
+    let mut loss = Tensor::new([0], logits.dtype, vec![]);
+    let mut probs = Tensor::new([0], logits.dtype, vec![]);
+    sparse_softmax_xent_into(logits, labels, &mut loss, &mut probs);
+    (loss, probs)
+}
+
+/// Out-param sparse softmax cross-entropy (fully overwrites both outputs).
+pub fn sparse_softmax_xent_into(
+    logits: &Tensor,
+    labels: &Tensor,
+    loss: &mut Tensor,
+    probs: &mut Tensor,
+) {
     let (b, c) = dims2(logits);
     assert_eq!(labels.elems(), b);
-    let probs = softmax(logits);
-    let mut loss = vec![0.0f32; b];
+    softmax_into(logits, probs);
+    let shape: Shape = [b].into();
+    set_meta(loss, &shape, logits.dtype);
     for i in 0..b {
         let y = labels.data[i] as usize;
         assert!(y < c, "label {y} out of range {c}");
-        loss[i] = -(probs.data[i * c + y].max(1e-30)).ln();
+        loss.data[i] = -(probs.data[i * c + y].max(1e-30)).ln();
     }
-    (Tensor::new([b], logits.dtype, loss), probs)
 }
 
 /// Backward of sparse softmax cross-entropy w.r.t. logits:
 /// `(probs - onehot(labels)) * dloss/B-broadcast`.
 pub fn sparse_softmax_xent_grad(probs: &Tensor, labels: &Tensor, dloss: &Tensor) -> Tensor {
+    let mut out = Tensor::new([0], probs.dtype, vec![]);
+    sparse_softmax_xent_grad_into(probs, labels, dloss, &mut out);
+    out
+}
+
+/// Out-param cross-entropy backward (fully overwrites `out`).
+pub fn sparse_softmax_xent_grad_into(
+    probs: &Tensor,
+    labels: &Tensor,
+    dloss: &Tensor,
+    out: &mut Tensor,
+) {
     let (b, c) = dims2(probs);
-    let mut out = probs.data.clone();
+    set_meta(out, &probs.shape, probs.dtype);
+    out.data.copy_from_slice(&probs.data);
     for i in 0..b {
         let y = labels.data[i] as usize;
-        out[i * c + y] -= 1.0;
+        out.data[i * c + y] -= 1.0;
         let g = dloss.data[i];
         for j in 0..c {
-            out[i * c + j] *= g;
+            out.data[i * c + j] *= g;
         }
     }
-    Tensor::new([b, c], probs.dtype, out)
 }
 
 /// Layer normalization over the last axis of a 2-D tensor (no affine).
 pub fn layernorm(x: &Tensor, eps: f32) -> Tensor {
+    let mut out = Tensor::new([0], x.dtype, vec![]);
+    layernorm_into(x, eps, &mut out);
+    out
+}
+
+/// Out-param layer normalization (fully overwrites `out`).
+pub fn layernorm_into(x: &Tensor, eps: f32, out: &mut Tensor) {
     let (m, n) = dims2(x);
-    let mut out = vec![0.0f32; m * n];
+    set_meta(out, &x.shape, x.dtype);
     for i in 0..m {
         let row = &x.data[i * n..(i + 1) * n];
         let mean: f32 = row.iter().sum::<f32>() / n as f32;
         let var: f32 = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / n as f32;
         let inv = 1.0 / (var + eps).sqrt();
         for j in 0..n {
-            out[i * n + j] = (row[j] - mean) * inv;
+            out.data[i * n + j] = (row[j] - mean) * inv;
         }
     }
-    Tensor::new([m, n], x.dtype, out)
+}
+
+/// Re-tag `x`'s dtype into `out` (f16 simulates mantissa truncation, like
+/// [`Tensor::cast`]).
+pub fn cast_into(x: &Tensor, to: DType, out: &mut Tensor) {
+    set_meta(out, &x.shape, to);
+    if to == DType::F16 {
+        for (o, &v) in out.data.iter_mut().zip(&x.data) {
+            *o = super::f16_round(v);
+        }
+    } else {
+        out.data.copy_from_slice(&x.data);
+    }
+}
+
+/// Plain element copy of `x` into `out` (Identity / StopGrad / Fetch).
+pub fn copy_into(x: &Tensor, out: &mut Tensor) {
+    set_meta(out, &x.shape, x.dtype);
+    out.data.copy_from_slice(&x.data);
+}
+
+/// Grow/shrink a recycled buffer set to exactly `n` writable tensors,
+/// keeping existing buffers (their capacity is what the pool recycles).
+/// The shared preparation step for every `*_into` caller that receives
+/// pooled `Vec<Tensor>` slots.
+pub fn fit(outs: &mut Vec<Tensor>, n: usize) {
+    outs.truncate(n);
+    while outs.len() < n {
+        outs.push(Tensor::new([0], DType::F32, vec![]));
+    }
 }
 
 #[cfg(test)]
@@ -378,6 +636,87 @@ mod tests {
         let expect2 = matmul(&transpose2(&a2), &transpose2(&b), false, false);
         let got2 = matmul(&a2, &b, true, true);
         assert!(got2.allclose(&expect2, 1e-5));
+    }
+
+    #[test]
+    fn matmul_transposed_reads_are_bitwise_equal_to_materialized_transpose() {
+        // scratch-normalized transposes must not just be close — the arena
+        // path depends on the *same arithmetic in the same order*
+        let mut r = Rng::new(11);
+        let a = Tensor::randn([7, 5], DType::F32, 1.0, &mut r);
+        let b = Tensor::randn([6, 5], DType::F32, 1.0, &mut r);
+        let bits = |t: &Tensor| t.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(
+            bits(&matmul(&a, &b, false, true)),
+            bits(&matmul(&a, &transpose2(&b), false, false))
+        );
+        let a2 = Tensor::randn([5, 7], DType::F32, 1.0, &mut r);
+        assert_eq!(
+            bits(&matmul(&a2, &b, true, true)),
+            bits(&matmul(&transpose2(&a2), &transpose2(&b), false, false))
+        );
+    }
+
+    #[test]
+    fn matmul_propagates_nan_and_inf_through_zero_rows() {
+        // ISSUE 5 satellite: the old `aik == 0.0` skip suppressed IEEE
+        // 0·NaN = NaN and 0·Inf = NaN propagation from B
+        let a = Tensor::f32([1, 2], vec![0.0, 1.0]);
+        let b = Tensor::f32([2, 1], vec![f32::NAN, 2.0]);
+        assert!(matmul(&a, &b, false, false).data[0].is_nan(), "0·NaN must be NaN");
+        let binf = Tensor::f32([2, 1], vec![f32::INFINITY, 2.0]);
+        assert!(matmul(&a, &binf, false, false).data[0].is_nan(), "0·Inf must be NaN");
+        // all-zero A row still yields a finite zero row against finite B
+        let bfin = Tensor::f32([2, 1], vec![3.0, 2.0]);
+        let z = Tensor::f32([1, 2], vec![0.0, 0.0]);
+        assert_eq!(matmul(&z, &bfin, false, false).data, vec![0.0]);
+    }
+
+    #[test]
+    fn matmul_intraop_is_bitwise_deterministic() {
+        let mut r = Rng::new(21);
+        let a = Tensor::randn([33, 17], DType::F32, 1.0, &mut r);
+        let b = Tensor::randn([17, 29], DType::F32, 1.0, &mut r);
+        let before = intraop();
+        set_intraop(1);
+        let seq = matmul(&a, &b, false, false);
+        for n in [2, 3, 8] {
+            set_intraop(n);
+            let par = matmul(&a, &b, false, false);
+            let bits = |t: &Tensor| t.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&seq), bits(&par), "intraop {n} changed bits");
+        }
+        set_intraop(before);
+    }
+
+    #[test]
+    fn into_variants_reuse_the_buffer_and_match_allocating_path() {
+        let mut r = Rng::new(31);
+        let x = Tensor::randn([6, 8], DType::F32, 1.0, &mut r);
+        let y = Tensor::randn([6, 8], DType::F32, 1.0, &mut r);
+        let bias = Tensor::randn([8], DType::F32, 1.0, &mut r);
+        let bits = |t: &Tensor| t.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+
+        let mut out = Tensor::zeros([6, 8], DType::F32);
+        let p0 = out.data.as_ptr();
+        softmax_into(&x, &mut out);
+        assert_eq!(bits(&out), bits(&softmax(&x)));
+        zip_into(&x, &y, |a, b| a + b, &mut out);
+        assert_eq!(bits(&out), bits(&add(&x, &y)));
+        bias_add_into(&x, &bias, &mut out);
+        assert_eq!(bits(&out), bits(&bias_add(&x, &bias)));
+        layernorm_into(&x, 1e-5, &mut out);
+        assert_eq!(bits(&out), bits(&layernorm(&x, 1e-5)));
+        map_into(&x, gelu_scalar, &mut out);
+        assert_eq!(bits(&out), bits(&gelu(&x)));
+        assert_eq!(out.data.as_ptr(), p0, "into-variants must not reallocate");
+
+        // reductions change the output shape: buffer shrinks in place
+        let mut red = Tensor::zeros([8], DType::F32);
+        reduce2_into(&x, 0, false, 0.0, |a, b| a + b, &mut red);
+        assert_eq!(bits(&red), bits(&reduce_sum(&x, 0, false)));
+        reduce2_into(&x, 1, true, f32::NEG_INFINITY, f32::max, &mut red);
+        assert_eq!(bits(&red), bits(&reduce_max(&x, 1, true)));
     }
 
     #[test]

@@ -6,5 +6,6 @@
 pub mod rng;
 pub mod prop;
 pub mod fmt;
+pub mod pool;
 
 pub use rng::Rng;

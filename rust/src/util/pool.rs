@@ -1,0 +1,242 @@
+//! A small **fixed thread pool** for intra-op parallelism (std only; the
+//! vendored registry has no `rayon`). Workers are spawned lazily on first
+//! use and live for the process; [`run_chunks`] fans a closure over chunk
+//! indices and blocks until every chunk ran.
+//!
+//! Determinism: the pool assigns *which thread* runs a chunk, never *what*
+//! a chunk computes — callers partition their output into disjoint regions
+//! per chunk (e.g. matmul row ranges), each computed by the identical
+//! sequential loop, so results are bitwise-equal to the single-threaded
+//! path by construction.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Pool {
+    inject: Mutex<Sender<Job>>,
+    workers: usize,
+}
+
+/// Completion latch: `run_chunks` blocks until every submitted job called
+/// [`Gate::done`]. Tracks whether any job panicked so the caller can
+/// re-raise instead of silently swallowing (or worse, hanging on) it.
+struct Gate {
+    left: Mutex<(usize, bool)>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new(n: usize) -> Self {
+        Gate { left: Mutex::new((n, false)), cv: Condvar::new() }
+    }
+
+    fn done(&self, panicked: bool) {
+        let mut left = self.left.lock().unwrap();
+        left.0 -= 1;
+        left.1 |= panicked;
+        if left.0 == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Returns true if any job panicked.
+    fn wait(&self) -> bool {
+        let mut left = self.left.lock().unwrap();
+        while left.0 > 0 {
+            left = self.cv.wait(left).unwrap();
+        }
+        left.1
+    }
+}
+
+/// How many worker threads the shared pool keeps (callers may use fewer).
+/// Bounded so `--intraop 64` on a 4-core box doesn't oversubscribe wildly.
+const MAX_WORKERS: usize = 16;
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let (tx, rx) = channel::<Job>();
+        let rx = std::sync::Arc::new(Mutex::new(rx));
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(MAX_WORKERS);
+        for i in 0..workers {
+            let rx = rx.clone();
+            std::thread::Builder::new()
+                .name(format!("of-intraop-{i}"))
+                .spawn(move || {
+                    IN_POOL.with(|p| p.set(true));
+                    loop {
+                        // hold the receiver lock only while dequeuing
+                        let job = match rx.lock().unwrap().recv() {
+                            Ok(j) => j,
+                            Err(_) => break,
+                        };
+                        job();
+                    }
+                })
+                .expect("spawn intraop worker");
+        }
+        Pool { inject: Mutex::new(tx), workers }
+    })
+}
+
+/// Covariant raw-pointer wrapper that lets a job reach its disjoint output
+/// region. Safety rests on [`run_chunks`]' contract, not on this type.
+struct SendConst<T>(*const T);
+unsafe impl<T> Send for SendConst<T> {}
+
+thread_local! {
+    /// True on pool worker threads: a nested [`run_chunks`] from inside a
+    /// job runs inline — workers blocking on inner gates while the inner
+    /// jobs sit queued behind them would deadlock the fixed pool.
+    static IN_POOL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Run `f(chunk)` for every `chunk in 0..chunks`, spread over the shared
+/// pool; chunk 0 runs on the calling thread. Blocks until all chunks
+/// completed, so `f` may reference caller-stack data through disjoint
+/// interior mutability (each chunk must touch only its own output region —
+/// that disjointness is the caller's contract and what makes the pointer
+/// smuggling below sound: no job outlives this call, and no two jobs alias
+/// a writable byte).
+pub fn run_chunks(chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+    if chunks <= 1 || IN_POOL.with(|p| p.get()) {
+        for c in 0..chunks {
+            f(c);
+        }
+        return;
+    }
+    let p = pool();
+    let spread = chunks.min(p.workers + 1);
+    let gate = Gate::new(spread - 1);
+    // Smuggle unsized borrows as raw parts; jobs must not outlive this
+    // frame — the gate wait below guarantees that.
+    let f_ptr = SendConst(&f as *const &(dyn Fn(usize) + Sync) as *const ());
+    let gate_ptr = SendConst(&gate as *const Gate as *const ());
+    {
+        let inject = p.inject.lock().unwrap();
+        for c in 1..spread {
+            let f_ptr = SendConst(f_ptr.0);
+            let gate_ptr = SendConst(gate_ptr.0);
+            let job: Job = Box::new(move || {
+                // SAFETY: the submitting frame blocks on the gate until this
+                // job signals done, so both borrows are alive; distinct `c`
+                // values write disjoint regions per the caller contract.
+                let f = unsafe { *(f_ptr.0 as *const &(dyn Fn(usize) + Sync)) };
+                let gate = unsafe { &*(gate_ptr.0 as *const Gate) };
+                // Contain a panicking chunk: the gate must always be
+                // signalled (a lost `done` would hang the caller forever and
+                // kill the worker), then the caller re-raises.
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    for chunk in (c..chunks).step_by(spread) {
+                        f(chunk);
+                    }
+                }));
+                gate.done(r.is_err());
+            });
+            inject.send(job).expect("intraop pool died");
+        }
+    }
+    // The caller's own chunks are also contained: unwinding out of this
+    // frame before the gate closes would leave worker jobs holding dangling
+    // pointers to `f` and `gate`. Wait first, then re-raise.
+    let mine = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        for chunk in (0..chunks).step_by(spread) {
+            f(chunk);
+        }
+    }));
+    let worker_panicked = gate.wait();
+    if let Err(payload) = mine {
+        std::panic::resume_unwind(payload);
+    }
+    if worker_panicked {
+        panic!("intraop pool: a parallel chunk panicked (see worker output above)");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn every_chunk_runs_exactly_once() {
+        for chunks in [1usize, 2, 3, 7, 32, 100] {
+            let hits: Vec<AtomicUsize> = (0..chunks).map(|_| AtomicUsize::new(0)).collect();
+            run_chunks(chunks, &|c| {
+                hits[c].fetch_add(1, Ordering::SeqCst);
+            });
+            for (c, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "chunk {c} of {chunks}");
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_writes_land() {
+        let mut out = vec![0usize; 64];
+        let ptr = out.as_mut_ptr() as usize;
+        run_chunks(8, &|c| {
+            // each chunk owns rows [c*8, c*8+8)
+            for i in c * 8..c * 8 + 8 {
+                unsafe { *(ptr as *mut usize).add(i) = i * 3 };
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 3);
+        }
+    }
+
+    #[test]
+    fn nested_calls_do_not_deadlock() {
+        // a chunk that itself calls run_chunks runs the inner chunks inline
+        // on whichever thread it landed on — never re-entering the queue
+        let n = AtomicUsize::new(0);
+        run_chunks(4, &|_| {
+            run_chunks(4, &|_| {
+                n.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn panicking_chunk_propagates_instead_of_hanging() {
+        // chunk 0 always runs on the caller, so the panic (re-raised after
+        // the gate closes) is deterministic regardless of pool width
+        run_chunks(8, &|_| panic!("boom"));
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_job() {
+        // a prior panic must not shrink the pool or wedge the gate
+        let _ = std::panic::catch_unwind(|| run_chunks(8, &|_| panic!("boom")));
+        let hits: Vec<AtomicUsize> = (0..16).map(|_| AtomicUsize::new(0)).collect();
+        run_chunks(16, &|c| {
+            hits[c].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn concurrent_callers_share_the_pool() {
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    let hits: Vec<AtomicUsize> =
+                        (0..50).map(|_| AtomicUsize::new(0)).collect();
+                    run_chunks(50, &|c| {
+                        hits[c].fetch_add(1, Ordering::SeqCst);
+                    });
+                    assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+                });
+            }
+        });
+    }
+}

@@ -1,0 +1,238 @@
+//! The static-memory-plan test contract (DESIGN.md invariant 9): the
+//! steady-state training step on the native backend performs no
+//! tensor-buffer allocation — compute/input/var actors recycle their slot
+//! buffers from pools bounded by the compile-time register quota — while
+//! staying **bitwise-equal** to the allocating path; the compile-time arena
+//! plan packs registers so that live intervals never share bytes and the
+//! arena peak never exceeds the naive slots×bytes quota.
+
+use oneflow::actor::{DataSource, Engine, FnSource, RunOptions};
+use oneflow::compiler::{compile, CompileOptions, PhysNode, PhysPlan};
+use oneflow::data::SyntheticCorpus;
+use oneflow::graph::{autograd, LogicalGraph, OpKind};
+use oneflow::models::{gpt_hybrid_real, GptHybridConfig};
+use oneflow::placement::Placement;
+use oneflow::runtime::{AllocatingBackend, Backend, NativeBackend};
+use oneflow::sbp::{s, NdSbp, B};
+use oneflow::tensor::{DType, Tensor};
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A small real training graph: x@w through gelu into a cross-entropy-free
+/// scalar-ish loss with an SGD back edge — enough to exercise input, var,
+/// compute and update actors.
+fn small_train_plan() -> PhysPlan {
+    let p = Placement::node(0, 1);
+    let mut g = LogicalGraph::new();
+    let x = g.add1("x", OpKind::Input { shape: [16, 8].into(), dtype: DType::F32 }, &[], p.clone());
+    g.hint_tensor(x, NdSbp::d1(s(0)));
+    let w = g.add1(
+        "w",
+        OpKind::Variable { shape: [8, 6].into(), dtype: DType::F32, init_std: 0.1 },
+        &[],
+        p.clone(),
+    );
+    g.hint_tensor(w, NdSbp::d1(B));
+    let labels =
+        g.add1("labels", OpKind::Input { shape: [16].into(), dtype: DType::I32 }, &[], p.clone());
+    g.hint_tensor(labels, NdSbp::d1(s(0)));
+    let h = g.add1("h", OpKind::MatMul { ta: false, tb: false }, &[x, w], p.clone());
+    let act = g.add1("act", OpKind::Gelu, &[h], p.clone());
+    let outs = g.add("loss", OpKind::SparseXent, &[act, labels], p.clone());
+    let bw = autograd::build_backward(&mut g, outs[0]);
+    let upd = autograd::append_sgd(&mut g, &bw, 0.1);
+    compile(&g, &[outs[0]], &upd, &CompileOptions::default())
+}
+
+fn source() -> Arc<dyn DataSource> {
+    Arc::new(FnSource(|b: &oneflow::compiler::InputBinding, piece: usize| {
+        let mut r = oneflow::util::Rng::new(0x5EED ^ piece as u64);
+        match b.name.as_str() {
+            "labels" => {
+                Tensor::new([16], DType::I32, (0..16).map(|_| r.below(6) as f32).collect())
+            }
+            "x" => Tensor::randn(b.shape.clone(), b.dtype, 1.0, &mut r),
+            _ => Tensor::full(b.shape.clone(), b.dtype, 1.0), // autograd dloss seed
+        }
+    }))
+}
+
+fn run(plan: &PhysPlan, backend: Arc<dyn Backend>, pieces: usize) -> oneflow::actor::RunReport {
+    Engine::new(plan.clone(), backend)
+        .with_source(source())
+        .run_with(RunOptions { pieces, timeout: Some(Duration::from_secs(120)) })
+        .expect("run failed")
+}
+
+/// Records every distinct output-buffer address per plan node as the
+/// engine executes — the pointer-stability probe.
+struct PtrSpy {
+    inner: NativeBackend,
+    ptrs: Mutex<HashMap<usize, HashSet<usize>>>,
+}
+
+impl Backend for PtrSpy {
+    fn execute(&self, node: &PhysNode, inputs: &[&Tensor]) -> Vec<Tensor> {
+        self.inner.execute(node, inputs)
+    }
+
+    fn execute_into(&self, node: &PhysNode, inputs: &[&Tensor], outs: &mut Vec<Tensor>) {
+        self.inner.execute_into(node, inputs, outs);
+        if let Some(t) = outs.first() {
+            self.ptrs
+                .lock()
+                .unwrap()
+                .entry(node.id.0)
+                .or_default()
+                .insert(t.data.as_ptr() as usize);
+        }
+    }
+}
+
+/// ISSUE 5 acceptance: compute-actor output buffers are **reused** across
+/// steps — over many pieces, each compute node cycles through at most its
+/// register's slot quota of distinct buffer addresses.
+#[test]
+fn compute_actor_buffers_are_pointer_stable_across_steps() {
+    let plan = small_train_plan();
+    let spy = Arc::new(PtrSpy { inner: NativeBackend, ptrs: Mutex::new(HashMap::new()) });
+    let pieces = 24;
+    let report = run(&plan, spy.clone(), pieces);
+    assert_eq!(report.pieces, pieces);
+    let ptrs = spy.ptrs.lock().unwrap();
+    let mut checked = 0;
+    for node in &plan.nodes {
+        use oneflow::compiler::PhysKernel;
+        if !matches!(node.kernel, PhysKernel::Compute { .. }) {
+            continue; // fetch clones for the driver; sources bypass the backend
+        }
+        let distinct = ptrs.get(&node.id.0).map(|s| s.len()).unwrap_or(0);
+        let slots = plan.regs[node.out_reg.0].slots;
+        assert!(
+            distinct >= 1 && distinct <= slots,
+            "node `{}` used {distinct} distinct buffers over {pieces} pieces (quota {slots})",
+            node.name
+        );
+        checked += 1;
+    }
+    assert!(checked >= 5, "probe saw only {checked} compute nodes");
+}
+
+/// Zero steady-state allocations: the engine's pool-miss count is identical
+/// for a short and a long run — every allocation happens during warm-up,
+/// none per additional step. The input scatter cache stays flat too.
+#[test]
+fn buffer_allocs_and_scatter_cache_stay_flat_across_steps() {
+    let plan = small_train_plan();
+    let short = run(&plan, Arc::new(NativeBackend), 6);
+    let long = run(&plan, Arc::new(NativeBackend), 48);
+    assert!(short.buffer_allocs > 0, "warm-up must allocate the pools");
+    assert_eq!(
+        short.buffer_allocs, long.buffer_allocs,
+        "steady state must not allocate: 6 pieces cost {} allocs, 48 pieces {}",
+        short.buffer_allocs, long.buffer_allocs
+    );
+    assert!(short.scatter_cache_peak > 0);
+    assert_eq!(
+        short.scatter_cache_peak, long.scatter_cache_peak,
+        "scatter cache must not grow with the step count"
+    );
+    let n_inputs = plan.inputs.len();
+    assert!(
+        long.scatter_cache_peak <= n_inputs * 4,
+        "cache peak {} vs {} inputs",
+        long.scatter_cache_peak,
+        n_inputs
+    );
+    // the allocating wrapper pays per step instead — the contrast the
+    // benches record
+    let alloc_long = run(&plan, Arc::new(AllocatingBackend(NativeBackend)), 48);
+    assert!(
+        alloc_long.buffer_allocs > long.buffer_allocs * 4,
+        "allocating path should dwarf pooled warm-up: {} vs {}",
+        alloc_long.buffer_allocs,
+        long.buffer_allocs
+    );
+}
+
+fn loss_bits(report: &oneflow::actor::RunReport, loss: oneflow::graph::TensorId) -> Vec<Vec<u32>> {
+    report.fetched[&loss]
+        .iter()
+        .map(|t| t.data.iter().map(|x| x.to_bits()).collect())
+        .collect()
+}
+
+/// ISSUE 5 satellite: arena-backed (pooled) execution is bitwise-equal to
+/// the allocating path on `gpt_hybrid_real` — the full DP×TP×PP training
+/// graph with ring collectives and routed stage transfers.
+#[test]
+fn pooled_execution_bitwise_equals_allocating_on_gpt_hybrid() {
+    let cfg = GptHybridConfig {
+        stages: 2,
+        dp: 2,
+        tp: 2,
+        vocab: 32,
+        hidden: 16,
+        ff: 32,
+        blocks_per_stage: 1,
+        rows: 32,
+        lr: 0.2,
+    };
+    let (g, loss, upd) = gpt_hybrid_real(&cfg);
+    let plan = compile(&g, &[loss], &upd, &CompileOptions::default());
+    let corpus = Arc::new(SyntheticCorpus::new(2048, cfg.vocab, 29));
+    let rows = cfg.rows;
+    let src = move || {
+        let corpus = corpus.clone();
+        Arc::new(FnSource(move |b: &oneflow::compiler::InputBinding, piece: usize| {
+            let (ids, labels) = corpus.batch(piece, 1, rows);
+            match b.name.as_str() {
+                "ids" => Tensor::new([rows], DType::I32, ids.data),
+                "labels" => Tensor::new([rows], DType::I32, labels.data),
+                _ => Tensor::full(b.shape.clone(), b.dtype, 1.0),
+            }
+        })) as Arc<dyn DataSource>
+    };
+    let pieces = 5;
+    let pooled = Engine::new(plan.clone(), Arc::new(NativeBackend))
+        .with_source(src())
+        .run_with(RunOptions { pieces, timeout: Some(Duration::from_secs(120)) })
+        .expect("pooled run");
+    let alloc = Engine::new(plan.clone(), Arc::new(AllocatingBackend(NativeBackend)))
+        .with_source(src())
+        .run_with(RunOptions { pieces, timeout: Some(Duration::from_secs(120)) })
+        .expect("allocating run");
+    assert_eq!(
+        loss_bits(&pooled, loss),
+        loss_bits(&alloc, loss),
+        "pooled vs allocating losses diverged"
+    );
+}
+
+/// The compile-time side of the acceptance criterion: the packed arena
+/// never exceeds the naive slots×bytes quota, per device and in peak.
+#[test]
+fn arena_peak_never_exceeds_register_quota() {
+    let cfg = GptHybridConfig::default();
+    let (g, loss, upd) = gpt_hybrid_real(&cfg);
+    let plan = compile(&g, &[loss], &upd, &CompileOptions::default());
+    let quota = plan.memory_by_device();
+    for arena in &plan.mem.arenas {
+        // quota maps spread boxing spans; arena packing is per register
+        // device — compare against the same-device register sum
+        assert!(
+            arena.arena_bytes <= arena.naive_bytes,
+            "{}: arena {} > naive {}",
+            arena.device,
+            arena.arena_bytes,
+            arena.naive_bytes
+        );
+    }
+    // cross-check against the f64 quota, with slack for the arena's
+    // per-block cache-line rounding
+    let align_slack = 64.0 * plan.regs.len() as f64;
+    assert!(plan.mem.arena_peak() <= plan.peak_device_memory() + align_slack);
+    assert!(plan.mem.reuse_ratio() >= 1.0);
+    assert!(!quota.is_empty());
+}

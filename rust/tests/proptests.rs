@@ -239,6 +239,45 @@ fn virtual_makespan_at_least_critical_path() {
     );
 }
 
+/// ISSUE 5: the compile-time arena packer must never place two registers
+/// with overlapping live intervals on the same bytes, and the packed arena
+/// must never exceed the naive slots×bytes quota — over random DAGs,
+/// random queues and random pipeline depths.
+#[test]
+fn packed_registers_with_overlapping_lifetimes_never_share_bytes() {
+    prop::check_res(
+        "arena packing soundness",
+        40,
+        |r| {
+            let (g, leaves, depth) = random_dag(r);
+            (g, leaves, depth)
+        },
+        |(g, leaves, depth)| {
+            let opts = CompileOptions { pipeline_depth: *depth, fuse: false, ..Default::default() };
+            let plan = compile(g, leaves, &HashMap::new(), &opts);
+            for arena in &plan.mem.arenas {
+                if arena.arena_bytes > arena.naive_bytes {
+                    return Err(format!(
+                        "{}: arena {} exceeds naive {}",
+                        arena.device, arena.arena_bytes, arena.naive_bytes
+                    ));
+                }
+                for (i, a) in arena.blocks.iter().enumerate() {
+                    for b in &arena.blocks[i + 1..] {
+                        if a.lives_with(b) && a.bytes_overlap(b) {
+                            return Err(format!(
+                                "{}: registers r{} (live {:?}) and r{} (live {:?}) share bytes",
+                                arena.device, a.reg.0, a.live, b.reg.0, b.live
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn memory_plan_is_monotone_in_depth() {
     // more register slots => more planned memory, never less
