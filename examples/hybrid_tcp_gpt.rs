@@ -22,7 +22,7 @@
 //! Worker mode (`--rank` present) is exactly what you would run by hand on
 //! four real machines.
 
-use oneflow::actor::{DataSource, Engine, FnSource, RunOptions, RunReport};
+use oneflow::actor::{DataSource, Engine, FnSource, RunOptions, RunReport, DEFAULT_TIMEOUT_SECS};
 use oneflow::comm::{free_local_ports, transport_from_args, Loopback, Transport};
 use oneflow::compiler::{compile, CompileOptions, InputBinding};
 use oneflow::config::Args;
@@ -78,7 +78,7 @@ fn run(transport: Arc<dyn Transport>) -> (RunReport, TensorId) {
     let report = Engine::new(plan, Arc::new(NativeBackend))
         .with_source(source(&cfg))
         .with_transport(transport)
-        .run_with(RunOptions { pieces: PIECES, timeout: Some(Duration::from_secs(120)) })
+        .run_with(RunOptions { pieces: PIECES, timeout: Some(Duration::from_secs(DEFAULT_TIMEOUT_SECS)) })
         .unwrap_or_else(|e| {
             eprintln!("run failed: {e}");
             std::process::exit(1);

@@ -15,7 +15,7 @@
 //! bits and the virtual makespan across the two runs. Worker mode (`--rank`
 //! present) is exactly what you would run by hand on two real machines.
 
-use oneflow::actor::{DataSource, Engine, FnSource, RunOptions, RunReport};
+use oneflow::actor::{DataSource, Engine, FnSource, RunOptions, RunReport, DEFAULT_TIMEOUT_SECS};
 use oneflow::comm::{free_local_ports, transport_from_args, Loopback, Transport};
 use oneflow::compiler::{compile, CompileOptions, InputBinding};
 use oneflow::config::Args;
@@ -39,6 +39,7 @@ fn config() -> GptPipelineConfig {
         blocks_per_stage: 1,
         rows: 64,
         lr: 0.2,
+        microbatches: 1,
     }
 }
 
@@ -66,7 +67,7 @@ fn run(transport: Arc<dyn Transport>) -> (RunReport, TensorId) {
     let report = Engine::new(plan, Arc::new(NativeBackend))
         .with_source(source(&cfg))
         .with_transport(transport)
-        .run_with(RunOptions { pieces: PIECES, timeout: Some(Duration::from_secs(120)) })
+        .run_with(RunOptions { pieces: PIECES, timeout: Some(Duration::from_secs(DEFAULT_TIMEOUT_SECS)) })
         .unwrap_or_else(|e| {
             eprintln!("run failed: {e}");
             std::process::exit(1);

@@ -6,7 +6,7 @@
 
 use oneflow::actor::Engine;
 use oneflow::bench::{time_n, Table};
-use oneflow::compiler::{compile, plan_cost, select_sbp, CompileOptions, SelectStrategy};
+use oneflow::compiler::{compile, plan_cost, select_sbp, CompileOptions, ScheduleMode, SelectStrategy};
 use oneflow::models::resnet::{resnet50, Loader, ResnetConfig};
 use oneflow::models::{gpt_sim, GptSimConfig};
 use oneflow::placement::Placement;
@@ -35,16 +35,21 @@ fn main() {
     }
     tab.print();
 
-    // --- 3. register depth on the loader ---
-    let mut tab = Table::new("Ablation — register slots (pipelining depth), ResNet50 loader", &["slots", "images/s"]);
-    for depth in [1usize, 2, 3, 4] {
+    // --- 3. register schedule on the loader ---
+    // register depth is no longer a free knob: the scheduling pass derives
+    // slot quotas, so the ablation is single-slot vs scheduled registers
+    let mut tab = Table::new("Ablation — register schedule (loader pipelining), ResNet50", &["schedule", "images/s"]);
+    for (name, schedule) in [
+        ("unoverlapped (1 slot)", ScheduleMode::Unoverlapped),
+        ("1f1b (scheduled quotas)", ScheduleMode::OneFOneB),
+    ] {
         let cfgr = ResnetConfig { batch_per_dev: 192, loader: Loader::OneFlow, ..Default::default() };
         let pl = Placement::node(0, 1);
         let (g, loss, upd) = resnet50(&cfgr, &pl);
-        let opts = CompileOptions { pipeline_depth: depth, ..Default::default() };
+        let opts = CompileOptions { schedule, ..Default::default() };
         let plan = compile(&g, &[loss], &upd, &opts);
         let report = Engine::new(plan, Arc::new(SimBackend)).run(8);
-        tab.row(&[depth.to_string(), format!("{:.0}", report.throughput() * 192.0)]);
+        tab.row(&[name.into(), format!("{:.0}", report.throughput() * 192.0)]);
     }
     tab.print();
 

@@ -44,6 +44,7 @@ fn train_plan() -> PhysPlan {
         blocks_per_stage: 1,
         rows: 32,
         lr: 0.2,
+        microbatches: 1,
     };
     let (g, loss, upd) = gpt_pipeline_real(&cfg);
     compile(&g, &[loss], &upd, &CompileOptions::default())

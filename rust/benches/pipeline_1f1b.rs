@@ -1,0 +1,121 @@
+//! Pipeline-schedule bench (paper §4.3 / §6.5): virtual-time makespan of a
+//! balanced p-stage pipeline under the compiled 1F1B register quotas vs the
+//! single-slot unoverlapped baseline, across stage counts. Asserts the
+//! measured 1F1B bubble matches the ideal `(p-1)/(m+p-1)` and writes
+//! `BENCH_pipeline_1f1b.json`; `--quick` shrinks the sweep for CI.
+
+use oneflow::actor::Engine;
+use oneflow::bench::Table;
+use oneflow::compiler::{compile, CompileOptions, PhysPlan, ScheduleMode};
+use oneflow::config::Args;
+use oneflow::exec::{CostSpec, QueueKind};
+use oneflow::graph::{LogicalGraph, OpKind, TensorId};
+use oneflow::pipeline::bubble_fraction;
+use oneflow::placement::Placement;
+use oneflow::runtime::SimBackend;
+use oneflow::tensor::DType;
+use oneflow::util::fmt;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// A balanced `p`-stage chain of equal-flops ops, one stage per node, fed
+/// by a free host-side source (same shape as `tests/schedule.rs`).
+fn stage_chain(p: usize, flops: f64) -> (LogicalGraph, TensorId) {
+    let mut g = LogicalGraph::new();
+    let mut t = g.add1(
+        "src",
+        OpKind::Flops {
+            name: "src".into(),
+            out: [4, 4].into(),
+            dtype: DType::F32,
+            cost: CostSpec { flops: 0.0, read_bytes: 0.0, write_bytes: 0.0, queue: QueueKind::HostCpu },
+            split_axes: vec![0],
+            param_bytes: 0.0,
+        },
+        &[],
+        Placement::node(0, 1),
+    );
+    for s in 0..p {
+        t = g.add1(
+            format!("stage{s}"),
+            OpKind::Flops {
+                name: format!("stage{s}"),
+                out: [4, 4].into(),
+                dtype: DType::F32,
+                cost: CostSpec::compute(flops, 0.0, 0.0),
+                split_axes: vec![0],
+                param_bytes: 0.0,
+            },
+            &[t],
+            Placement::node(s, 1),
+        );
+    }
+    (g, t)
+}
+
+fn build(p: usize, m: usize, schedule: ScheduleMode) -> PhysPlan {
+    let (g, y) = stage_chain(p, 2e10);
+    let opts = CompileOptions { microbatches: m, fuse: false, schedule, ..Default::default() };
+    compile(&g, &[y], &HashMap::new(), &opts)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.flag("quick");
+    let m = 8usize;
+    let stage_counts: &[usize] = if quick { &[2, 4] } else { &[2, 4, 8] };
+
+    let mut tab = Table::new(
+        "Pipeline schedule — makespan vs stage count (balanced chain, M=8 microbatches)",
+        &["stages", "unoverlapped", "1f1b", "speedup", "bubble (measured)", "bubble (ideal)"],
+    );
+    let mut rows = Vec::new();
+    for &p in stage_counts {
+        let serial = Engine::new(build(p, m, ScheduleMode::Unoverlapped), Arc::new(SimBackend)).run(m);
+        let overlapped = Engine::new(build(p, m, ScheduleMode::OneFOneB), Arc::new(SimBackend)).run(m);
+        let busy: f64 = overlapped
+            .queue_busy
+            .iter()
+            .filter(|(k, _)| k.queue == QueueKind::Compute)
+            .map(|(_, v)| *v)
+            .sum();
+        let measured = 1.0 - busy / (p as f64 * overlapped.makespan);
+        let ideal = bubble_fraction(p, m);
+        let speedup = serial.makespan / overlapped.makespan;
+        tab.row(&[
+            p.to_string(),
+            fmt::secs(serial.makespan),
+            fmt::secs(overlapped.makespan),
+            format!("{speedup:.2}x"),
+            format!("{measured:.4}"),
+            format!("{ideal:.4}"),
+        ]);
+        rows.push(format!(
+            "    {{\"stages\": {p}, \"microbatches\": {m}, \
+             \"makespan_unoverlapped\": {:.6e}, \"makespan_1f1b\": {:.6e}, \
+             \"speedup\": {speedup:.4}, \"bubble_measured\": {measured:.4}, \"bubble_ideal\": {ideal:.4}}}",
+            serial.makespan, overlapped.makespan,
+        ));
+
+        // acceptance: 1F1B overlaps (strictly beats single-slot) and its
+        // bubble sits on the analytic (p-1)/(m+p-1) curve
+        assert!(
+            overlapped.makespan < serial.makespan,
+            "p={p}: 1f1b {} did not beat unoverlapped {}",
+            overlapped.makespan,
+            serial.makespan
+        );
+        assert!(
+            (measured - ideal).abs() < 0.05,
+            "p={p}: measured bubble {measured:.4} off the ideal {ideal:.4}"
+        );
+    }
+    tab.print();
+
+    let json = format!(
+        "{{\n  \"bench\": \"pipeline_1f1b\",\n  \"quick\": {quick},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    std::fs::write("BENCH_pipeline_1f1b.json", &json).expect("write BENCH_pipeline_1f1b.json");
+    println!("\nwrote BENCH_pipeline_1f1b.json");
+}

@@ -22,7 +22,7 @@
 use super::addr::{ActorAddr, ThreadKey};
 use super::comm::CommRt;
 use super::msg::{Envelope, Msg};
-use super::{set_slots, Actor, Ctx};
+use super::{Actor, Ctx};
 use crate::comm::{self, collective::CollectiveHub, wire, Transport};
 use crate::compiler::{InputBinding, PhysKernel, PhysNode, PhysPlan, RegId};
 use crate::exec::QueueKind;
@@ -48,6 +48,10 @@ impl<F: Fn(&InputBinding, usize) -> Tensor + Send + Sync> DataSource for FnSourc
         (self.0)(input, piece)
     }
 }
+
+/// Default wall-clock budget of [`Engine::run`] (seconds); override with
+/// [`RunOptions::timeout`] (the `--timeout-secs` flag in the CLI).
+pub const DEFAULT_TIMEOUT_SECS: u64 = 120;
 
 /// Run options.
 #[derive(Clone, Debug)]
@@ -165,8 +169,11 @@ impl Engine {
 
     /// Run `pieces` mini-batches to completion.
     pub fn run(&self, pieces: usize) -> RunReport {
-        self.run_with(RunOptions { pieces, timeout: Some(Duration::from_secs(120)) })
-            .expect("runtime deadlock or timeout")
+        self.run_with(RunOptions {
+            pieces,
+            timeout: Some(Duration::from_secs(DEFAULT_TIMEOUT_SECS)),
+        })
+        .expect("runtime deadlock or timeout")
     }
 
     /// Run with explicit options; `Err` on timeout or transfer failure.
@@ -176,6 +183,16 @@ impl Engine {
             return Ok(RunReport::default());
         }
         let plan = self.plan.clone();
+        // Round-domain actors act once per M pieces; a ragged final round
+        // would leave them starved of their last inputs and hang the run —
+        // reject it up front with a named error.
+        let m = plan.schedule.microbatches.max(1);
+        if plan.has_accumulation() && pieces % m != 0 {
+            return Err(format!(
+                "pieces ({pieces}) must be a multiple of microbatches (M={m}) \
+                 when the plan accumulates gradients"
+            ));
+        }
 
         // ---- launch partition: which plan nodes does this rank own? ----
         let world = self.transport.as_ref().map(|t| t.world_size()).unwrap_or(1);
@@ -277,8 +294,11 @@ impl Engine {
                 continue;
             }
             let consumers = consumers_of.get(&node.out_reg).cloned().unwrap_or_default();
-            let mut actor = Actor::new(node.clone(), addr, &producer_of, consumers, pieces);
-            set_slots(&mut actor, plan.regs[node.out_reg.0].slots);
+            // round-domain actors (optimizer updates behind an accumulator)
+            // act once per round: pieces/M actions total
+            let total = pieces / node.period.max(1);
+            let mut actor =
+                Actor::new(node.clone(), addr, &plan, &producer_of, consumers, total);
             if let Some(v) = init_values.remove(&node.id.0) {
                 actor.set_var_value(v);
             }

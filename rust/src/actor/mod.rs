@@ -27,7 +27,7 @@ pub mod msg;
 pub mod engine;
 
 pub use addr::{ActorAddr, ThreadKey};
-pub use engine::{DataSource, Engine, FnSource, RunOptions, RunReport};
+pub use engine::{DataSource, Engine, FnSource, RunOptions, RunReport, DEFAULT_TIMEOUT_SECS};
 pub use msg::{Envelope, Msg};
 
 use crate::compiler::{PhysKernel, PhysNode, PhysPlan, RegId};
@@ -40,16 +40,52 @@ use std::sync::Arc;
 /// the zero-copy mechanism §4.2's mutual exclusion makes safe).
 pub type Piece = Arc<Vec<Tensor>>;
 
+/// Piece-rate conversion on one in edge. The scheduling pass places
+/// producers and consumers in different index domains (every micro-batch
+/// piece vs once per accumulation round); the rate says how a consumer
+/// action index maps onto producer piece indices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rate {
+    /// Producer and consumer tick in the same domain: action `k` consumes
+    /// producer piece `k`.
+    Same,
+    /// Piece-rate consumer of a slower producer (the variable-update back
+    /// edge): action `k` demands producer piece `k/factor - 1`, and only at
+    /// round boundaries (`k % factor == 0 && k >= factor`) — in between the
+    /// edge makes no demand and the consumer re-uses its previous value.
+    /// `factor == 1` is the classic "piece k+1 consumes update k" back edge.
+    Upsample { factor: usize },
+    /// Round-rate consumer of a piece-rate producer (an optimizer update
+    /// reading the parameter register): round `r` samples producer piece
+    /// `(r+1)*factor - 1`, and *every* arriving piece is acked on arrival —
+    /// holding acks until the round boundary would wedge the producer's
+    /// single-slot register mid-round.
+    Downsample { factor: usize },
+}
+
 /// One in-register view: pieces received from a producer's out register.
 struct InReg {
     reg: RegId,
-    /// Pieces arrive tagged; consumed strictly in piece order.
+    /// Pieces received, keyed in the *consumer's* index domain (Downsample
+    /// regs re-key producer pieces to rounds on arrival).
     ready: HashMap<usize, (Option<Piece>, f64)>,
-    /// Piece offset: a value tagged `k` satisfies demand for piece
-    /// `k + offset` (1 for the variable-update back edge).
-    offset: usize,
+    /// Producer→consumer index-domain conversion.
+    rate: Rate,
     /// Producer actor (ack destination).
     producer: ActorAddr,
+}
+
+impl InReg {
+    /// The ready-map key action `k` demands, or `None` when this edge makes
+    /// no demand for `k` (mid-round piece on an Upsample back edge).
+    fn demand(&self, k: usize) -> Option<usize> {
+        match self.rate {
+            Rate::Same | Rate::Downsample { .. } => Some(k),
+            Rate::Upsample { factor } => {
+                (k >= factor && k % factor == 0).then(|| k / factor - 1)
+            }
+        }
+    }
 }
 
 /// Runtime state of one actor.
@@ -73,6 +109,10 @@ pub struct Actor {
     /// Recycled slot buffers, reused by the next action (allocation-free
     /// steady state; bounded by the register's slot quota).
     pool: Vec<Vec<Tensor>>,
+    /// Partial gradient sums of the current accumulation round (GradAcc
+    /// actors only): filled at the round's first piece, added into on every
+    /// later piece, drained into the published mean at the round boundary.
+    acc_buf: Option<Vec<Tensor>>,
     /// Next piece index to produce.
     next_piece: usize,
     /// Total pieces to process.
@@ -107,10 +147,17 @@ impl Actor {
     pub fn new(
         node: PhysNode,
         addr: ActorAddr,
+        plan: &PhysPlan,
         producers: &HashMap<RegId, ActorAddr>,
         consumers: Vec<ActorAddr>,
         total_pieces: usize,
     ) -> Self {
+        // The compile-time schedule decides everything rate-related: the
+        // out register's slot quota, which regs are round-indexed, and the
+        // effective micro-batch count M.
+        let slots = plan.regs[node.out_reg.0].slots;
+        let m = plan.schedule.microbatches.max(1);
+        let cons_round = node.period > 1;
         let mut in_regs: Vec<InReg> = Vec::new();
         let mut seen: Vec<RegId> = Vec::new();
         for reg in node
@@ -121,24 +168,31 @@ impl Actor {
         {
             if !seen.contains(&reg) {
                 seen.push(reg);
+                let rate = match (plan.reg_is_round(reg), cons_round) {
+                    (false, false) | (true, true) => Rate::Same,
+                    (false, true) => Rate::Downsample { factor: m },
+                    (true, false) => Rate::Upsample { factor: m },
+                };
                 in_regs.push(InReg {
                     reg,
                     ready: HashMap::new(),
-                    offset: 0,
+                    rate,
                     producer: producers[&reg],
                 });
             }
         }
         if let Some((ureg, _)) = node.update_from {
-            // the training back edge: piece k+1 consumes update k
+            // the training back edge: a round-boundary piece consumes the
+            // update published for the previous round ("piece k+1 consumes
+            // update k" when nothing accumulates and factor == 1)
+            let factor = if plan.reg_is_round(ureg) { m } else { 1 };
             in_regs.push(InReg {
                 reg: ureg,
                 ready: HashMap::new(),
-                offset: 1,
+                rate: Rate::Upsample { factor },
                 producer: producers[&ureg],
             });
         }
-        let slots = node_slots(&node);
         Actor {
             addr,
             node,
@@ -149,12 +203,25 @@ impl Actor {
             in_flight: HashMap::new(),
             retired: Vec::new(),
             pool: Vec::new(),
+            acc_buf: None,
             next_piece: 0,
             total_pieces,
             last_ts: 0.0,
             var_value: None,
             actions: 0,
             buffer_allocs: 0,
+        }
+    }
+
+    /// Accumulation interception: `Some(steps)` when this actor is a
+    /// [`crate::graph::OpKind::GradAcc`] — it then acts every piece but
+    /// publishes (and occupies an output slot) only once per round.
+    fn acc_steps(&self) -> Option<usize> {
+        match &self.node.kernel {
+            PhysKernel::Compute { op: crate::graph::OpKind::GradAcc { steps }, .. } => {
+                Some(*steps)
+            }
+            _ => None,
         }
     }
 
@@ -231,8 +298,25 @@ impl Actor {
                     .iter_mut()
                     .find(|r| r.reg == reg)
                     .expect("req for unknown in register");
-                // in counter increment (§4.2 protocol step 2)
-                ir.ready.insert(piece, (data, ts));
+                match ir.rate {
+                    Rate::Downsample { factor } => {
+                        // ack on arrival — the piece-rate producer must not
+                        // wait for this round-rate consumer's next action —
+                        // and keep only the round's last piece, re-keyed to
+                        // the round index
+                        fx.outgoing.push(Envelope {
+                            to: ir.producer,
+                            msg: Msg::Ack { reg, piece, ts },
+                        });
+                        if (piece + 1) % factor == 0 {
+                            ir.ready.insert(piece / factor, (data, ts));
+                        }
+                    }
+                    _ => {
+                        // in counter increment (§4.2 protocol step 2)
+                        ir.ready.insert(piece, (data, ts));
+                    }
+                }
             }
             Msg::Ack { piece, ts, .. } => {
                 // reference counter decrement (§4.2 protocol step 4)
@@ -261,62 +345,123 @@ impl Actor {
             return false;
         }
         let piece = self.next_piece;
+        let acc = self.acc_steps();
+        // a GradAcc actor occupies an output slot only when it publishes
+        // (the round's last piece); mid-round actions add into `acc_buf`
+        let publishes = match acc {
+            Some(steps) => (piece + 1) % steps == 0,
+            None => true,
+        };
         // out counter must be non-zero
-        if self.free_slots.is_empty() {
+        if publishes && self.free_slots.is_empty() {
             return false;
         }
-        // every in register must hold the needed piece
+        // every in register must hold the piece it demands
         for ir in &self.in_regs {
-            if piece < ir.offset {
-                continue; // back edge: piece 0 needs no update
-            }
-            if !ir.ready.contains_key(&(piece - ir.offset)) {
-                return false;
+            if let Some(idx) = ir.demand(piece) {
+                if !ir.ready.contains_key(&idx) {
+                    return false;
+                }
             }
         }
 
         // Collect inputs and their max timestamp.
         let mut in_ts: f64 = 0.0;
         let mut taken: HashMap<RegId, (Option<Piece>, f64)> = HashMap::new();
+        let mut acks: Vec<(ActorAddr, RegId, usize)> = Vec::new();
         for ir in &mut self.in_regs {
-            if piece < ir.offset {
-                continue;
-            }
-            let (data, ts) = ir.ready.remove(&(piece - ir.offset)).unwrap();
+            let Some(idx) = ir.demand(piece) else { continue };
+            let (data, ts) = ir.ready.remove(&idx).unwrap();
             in_ts = in_ts.max(ts);
             taken.insert(ir.reg, (data, ts));
+            // Downsample regs were acked when the piece arrived
+            if !matches!(ir.rate, Rate::Downsample { .. }) {
+                acks.push((ir.producer, ir.reg, idx));
+            }
         }
-        let slot_free = self.free_slots.pop_front().unwrap();
+        let slot_free = if publishes { self.free_slots.pop_front().unwrap() } else { 0.0 };
         self.sweep_retired();
 
         // Execute.
         let (outputs, dur, moved): (Piece, f64, f64) = match &self.node.kernel {
             PhysKernel::Var { .. } => {
-                let value = if piece == 0 {
-                    self.var_value.clone().unwrap_or_else(|| Arc::new(vec![]))
-                } else if let Some((ureg, elem)) = self.node.update_from {
-                    let (data, _) = &taken[&ureg];
-                    match data {
-                        Some(d) => {
-                            // copy the fed-back update into a recycled slot
-                            // buffer instead of cloning a fresh one
-                            let src = &d[elem];
-                            let mut bufs = self.pool.pop().unwrap_or_default();
-                            let before = Self::buf_sig(&bufs);
-                            crate::tensor::ops::fit(&mut bufs, 1);
-                            crate::tensor::ops::copy_into(src, &mut bufs[0]);
-                            if before != Self::buf_sig(&bufs) {
-                                self.buffer_allocs += 1;
-                            }
-                            Arc::new(bufs)
+                // the back edge demanded an update this action only at its
+                // cadence (every piece when factor == 1, accumulation-round
+                // boundaries otherwise); in between, re-emit the held value
+                let fed = self
+                    .node
+                    .update_from
+                    .and_then(|(ureg, elem)| taken.get(&ureg).map(|(d, _)| (d.clone(), elem)));
+                let value = match fed {
+                    Some((Some(d), elem)) => {
+                        // copy the fed-back update into a recycled slot
+                        // buffer instead of cloning a fresh one
+                        let src = &d[elem];
+                        let mut bufs = self.pool.pop().unwrap_or_default();
+                        let before = Self::buf_sig(&bufs);
+                        crate::tensor::ops::fit(&mut bufs, 1);
+                        crate::tensor::ops::copy_into(src, &mut bufs[0]);
+                        if before != Self::buf_sig(&bufs) {
+                            self.buffer_allocs += 1;
                         }
-                        None => Arc::new(vec![]),
+                        Arc::new(bufs)
                     }
-                } else {
-                    self.var_value.clone().unwrap_or_else(|| Arc::new(vec![]))
+                    Some((None, _)) => Arc::new(vec![]),
+                    None => self.var_value.clone().unwrap_or_else(|| Arc::new(vec![])),
                 };
                 self.var_value = Some(value.clone());
                 (value, 0.0, 0.0)
+            }
+            PhysKernel::Compute { op: crate::graph::OpKind::GradAcc { steps }, .. } => {
+                let steps = *steps;
+                if ctx.has_data() {
+                    let ins: Vec<&Tensor> = self
+                        .node
+                        .inputs
+                        .iter()
+                        .map(|(reg, elem)| {
+                            let (data, _) = &taken[reg];
+                            &data.as_ref().expect("missing data in real mode")[*elem]
+                        })
+                        .collect();
+                    if piece % steps == 0 {
+                        // round start: (re)fill the accumulator from a
+                        // recycled buffer
+                        let mut bufs =
+                            self.acc_buf.take().or_else(|| self.pool.pop()).unwrap_or_default();
+                        let before = Self::buf_sig(&bufs);
+                        crate::tensor::ops::fit(&mut bufs, ins.len());
+                        for (b, t) in bufs.iter_mut().zip(&ins) {
+                            crate::tensor::ops::copy_into(t, b);
+                        }
+                        if before != Self::buf_sig(&bufs) {
+                            self.buffer_allocs += 1;
+                        }
+                        self.acc_buf = Some(bufs);
+                    } else {
+                        let bufs = self.acc_buf.as_mut().expect("accumulator fed out of order");
+                        for (b, t) in bufs.iter_mut().zip(&ins) {
+                            for (d, s) in b.data.iter_mut().zip(t.data.iter()) {
+                                *d += *s;
+                            }
+                        }
+                    }
+                }
+                let dur = action_secs(&self.node, ctx.cluster());
+                if publishes {
+                    // the round's mean gradient, published under the round
+                    // index (the out register is round-domain)
+                    let mut bufs = self.acc_buf.take().unwrap_or_default();
+                    let inv = 1.0 / steps as f32;
+                    for b in bufs.iter_mut() {
+                        for d in b.data.iter_mut() {
+                            *d *= inv;
+                        }
+                    }
+                    (Arc::new(bufs), dur, 0.0)
+                } else {
+                    (Arc::new(vec![]), dur, 0.0)
+                }
             }
             PhysKernel::Input { input, shard_idx } => {
                 let mut bufs = self.pool.pop().unwrap_or_default();
@@ -386,44 +531,50 @@ impl Actor {
         fx.executed.push((dur, moved));
 
         // Send acks upstream (the consumer side of the protocol).
-        for ir in &self.in_regs {
-            if piece < ir.offset {
-                continue;
-            }
-            fx.outgoing.push(Envelope {
-                to: ir.producer,
-                msg: Msg::Ack { reg: ir.reg, piece: piece - ir.offset, ts: end },
-            });
+        for (to, reg, idx) in acks {
+            fx.outgoing.push(Envelope { to, msg: Msg::Ack { reg, piece: idx, ts: end } });
         }
 
-        // Publish downstream or recycle immediately.
-        if matches!(self.node.kernel, PhysKernel::Fetch { .. }) {
-            fx.fetched.push((piece, outputs.clone()));
-        }
-        if self.consumers.is_empty() {
-            self.free_slots.push_back(end);
-            if ctx.has_data() && self.recycles() {
-                // childless producer: the piece dies here — recycle now
-                if let Ok(bufs) = Arc::try_unwrap(outputs) {
-                    self.pool.push(bufs);
-                }
+        // Publish downstream or recycle immediately. Accumulators publish
+        // once per round, under the round index.
+        let pub_idx = match acc {
+            Some(steps) => piece / steps,
+            None => piece,
+        };
+        if publishes {
+            if matches!(self.node.kernel, PhysKernel::Fetch { .. }) {
+                fx.fetched.push((pub_idx, outputs.clone()));
             }
-        } else {
-            self.pending_acks.insert(piece, (self.consumers.len(), 0.0));
-            let data = if ctx.has_data() {
-                if self.recycles() {
-                    // retain until the final ack, then reclaim the buffers
-                    self.in_flight.insert(piece, outputs.clone());
+            if self.consumers.is_empty() {
+                self.free_slots.push_back(end);
+                if ctx.has_data() && self.recycles() {
+                    // childless producer: the piece dies here — recycle now
+                    if let Ok(bufs) = Arc::try_unwrap(outputs) {
+                        self.pool.push(bufs);
+                    }
                 }
-                Some(outputs)
             } else {
-                None
-            };
-            for &c in &self.consumers {
-                fx.outgoing.push(Envelope {
-                    to: c,
-                    msg: Msg::Req { reg: self.node.out_reg, piece, data: data.clone(), ts: end },
-                });
+                self.pending_acks.insert(pub_idx, (self.consumers.len(), 0.0));
+                let data = if ctx.has_data() {
+                    if self.recycles() {
+                        // retain until the final ack, then reclaim the buffers
+                        self.in_flight.insert(pub_idx, outputs.clone());
+                    }
+                    Some(outputs)
+                } else {
+                    None
+                };
+                for &c in &self.consumers {
+                    fx.outgoing.push(Envelope {
+                        to: c,
+                        msg: Msg::Req {
+                            reg: self.node.out_reg,
+                            piece: pub_idx,
+                            data: data.clone(),
+                            ts: end,
+                        },
+                    });
+                }
             }
         }
         self.next_piece += 1;
@@ -437,12 +588,6 @@ impl Actor {
     pub fn set_var_value(&mut self, v: Piece) {
         self.var_value = Some(v);
     }
-}
-
-/// Placeholder slot count; the engine replaces it with the compile-time
-/// register quota from the plan's `RegDesc`.
-fn node_slots(_node: &PhysNode) -> usize {
-    1
 }
 
 /// Engine-side services an actor needs during an action.
@@ -500,7 +645,3 @@ impl Ctx<'_> {
     }
 }
 
-/// Replace the placeholder slot count with the compile-time register quota.
-pub(crate) fn set_slots(actor: &mut Actor, slots: usize) {
-    actor.free_slots = (0..slots).map(|_| 0.0).collect();
-}

@@ -123,7 +123,9 @@ impl Framework {
     pub fn compile_options(&self) -> CompileOptions {
         let mut opts = CompileOptions {
             fuse: self.fuses(),
-            pipeline_depth: self.pipeline_depth(),
+            // double-buffered loaders ⇒ M=2 in-flight pieces: the scheduling
+            // pass then grants every register the classic depth-2 quota
+            microbatches: self.pipeline_depth(),
             serialize_comm: !self.overlaps_comm(),
             ..Default::default()
         };

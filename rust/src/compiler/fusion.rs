@@ -92,7 +92,9 @@ pub fn fuse(
                 &ins,
                 node.placement.clone(),
             );
-            nmap.insert(nid, out.tensor(new_out).producer);
+            let fused_id = out.tensor(new_out).producer;
+            out.nodes[fused_id.0].backward = node.backward;
+            nmap.insert(nid, fused_id);
             // the chain's final tensor maps to the fused output
             let final_t = act.map(|a| g.node(a).outputs[0]).unwrap_or(bias.outputs[0]);
             tmap.insert(final_t, new_out);
@@ -105,6 +107,7 @@ pub fn fuse(
         let ins: Vec<TensorId> = node.inputs.iter().map(|t| tmap[t]).collect();
         let outs = out.add(node.name.clone(), node.op.clone(), &ins, node.placement.clone());
         let new_id = out.tensor(outs[0]).producer;
+        out.nodes[new_id.0].backward = node.backward;
         nmap.insert(nid, new_id);
         if let Some(h) = &node.sbp_hint {
             out.hint(new_id, h.clone());

@@ -11,8 +11,10 @@
 //! 3. [`physical`] — expand each logical op into per-device physical ops,
 //!    inserting *boxing* ops where the producer's signature differs from the
 //!    consumer's expectation (Fig 5), a consumer-side `Pull` for cross-node
-//!    edges (§5), register descriptors with slot counts (pipelining, Fig 6)
-//!    and the compile-time memory plan (§2.3's resource planning).
+//!    edges (§5), and the compile-time memory plan (§2.3's resource planning).
+//! 4. the **scheduling pass** (physical::schedule) — derive per-register
+//!    slot quotas from pipeline stage depth (the 1F1B rule, §4.3/Fig 6) and
+//!    micro-batch accumulation periods, recording a [`ScheduleDesc`].
 
 pub mod select;
 pub mod physical;
@@ -20,19 +22,36 @@ pub mod fusion;
 
 pub use physical::{
     compile, CollectiveSpec, FetchBinding, InputBinding, PhysKernel, PhysNode, PhysOpId,
-    PhysPlan, RecvOpSpec, RegDesc, RegId, SendSpec, ShardInfo, TransferDesc, TransferKind,
-    VarBinding,
+    PhysPlan, RecvOpSpec, RegDesc, RegId, ScheduleDesc, SendSpec, ShardInfo, StageSched,
+    TransferDesc, TransferKind, VarBinding,
 };
 pub use select::{boxing_secs, plan_cost, select_sbp, SelectStrategy, Signature};
 
 use crate::exec::ClusterModel;
 
+/// How the scheduling pass sets register slot quotas (paper §4.3: quotas +
+/// actor back-pressure *are* the pipeline schedule — no special engine).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleMode {
+    /// Every register gets a single slot: at most one piece in flight per
+    /// edge, stages hand off with no double buffering. The O(p)-bubble
+    /// baseline the 1F1B schedule is measured against.
+    Unoverlapped,
+    /// Per-register 1F1B quotas: a forward register on stage `s` of a
+    /// `p`-stage pipeline may hold `min(p - s, M)` in-flight pieces (M =
+    /// micro-batches per logical batch), backward registers drain promptly.
+    OneFOneB,
+}
+
 /// Compiler options.
 #[derive(Clone, Debug)]
 pub struct CompileOptions {
-    /// Out-register slots for activation registers: 1 = no pipelining,
-    /// 2 = the paper's double-buffering generalization (Fig 6 / §6.1).
-    pub pipeline_depth: usize,
+    /// Slot-quota policy for the scheduling pass.
+    pub schedule: ScheduleMode,
+    /// Micro-batches per logical batch: the in-flight cap M of the 1F1B
+    /// rule. Graphs that accumulate gradients (`OpKind::GradAcc`) raise the
+    /// effective M to their accumulation step count.
+    pub microbatches: usize,
     /// Run the kernel-fusion pass.
     pub fuse: bool,
     /// SBP selection strategy.
@@ -50,7 +69,8 @@ pub struct CompileOptions {
 impl Default for CompileOptions {
     fn default() -> Self {
         CompileOptions {
-            pipeline_depth: 2,
+            schedule: ScheduleMode::OneFOneB,
+            microbatches: 2,
             fuse: true,
             strategy: SelectStrategy::Greedy,
             cluster: ClusterModel::paper_testbed(),

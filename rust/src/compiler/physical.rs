@@ -12,7 +12,7 @@
 //! are emitted alongside.
 
 use super::select::{select_sbp, Signature};
-use super::{fusion, CompileOptions};
+use super::{fusion, CompileOptions, ScheduleMode};
 use crate::boxing::route::{Assemble, BoxSpec, RecvSpec, RoutedTransfer};
 use crate::exec::{CostSpec, QueueKind};
 use crate::graph::{LogicalGraph, NodeId, OpKind, TensorId};
@@ -179,6 +179,14 @@ pub struct PhysNode {
     /// Var nodes: where next piece's parameter value comes from (the
     /// train-loop back edge: forward of piece k+1 waits on update of k).
     pub update_from: Option<(RegId, usize)>,
+    /// Action period in pieces: 1 = fires every piece, M = once per
+    /// accumulation round (nodes downstream of a [`OpKind::GradAcc`]).
+    /// Set by the scheduling pass.
+    pub period: usize,
+    /// Backward-pass node (from the logical graph; the scheduling pass
+    /// propagates the flag onto lowered transfer ops). Backward registers
+    /// drain promptly under 1F1B and need no stage-depth widening.
+    pub backward: bool,
 }
 
 /// A register: fixed slot quota, each slot holding one piece's outputs.
@@ -230,6 +238,34 @@ pub struct FetchBinding {
     pub phys: PhysOpId,
 }
 
+/// One pipeline stage as seen by the scheduling pass.
+#[derive(Clone, Debug)]
+pub struct StageSched {
+    pub stage: usize,
+    pub devices: Vec<DeviceId>,
+    /// Largest non-Var register quota on this stage — the 1F1B in-flight
+    /// depth `min(stages - stage, M)`.
+    pub depth: usize,
+    /// Σ slots × bytes over this stage's registers: the compile-time bound
+    /// on in-flight activation memory.
+    pub in_flight_bytes: f64,
+}
+
+/// The compiled schedule (paper §4.3: register quotas + back-pressure *are*
+/// the pipeline schedule) — recorded in the plan for inspection and the
+/// `oneflow plan --schedule` report.
+#[derive(Clone, Debug)]
+pub struct ScheduleDesc {
+    pub mode: ScheduleMode,
+    /// Effective micro-batches per logical batch (max of the compile option
+    /// and any GradAcc step count in the graph).
+    pub microbatches: usize,
+    pub stages: Vec<StageSched>,
+    /// Ideal bubble fraction of this schedule at this stage count:
+    /// `(p-1)/(m+p-1)` for 1F1B, `(p-1)/p` for the unoverlapped baseline.
+    pub bubble_fraction: f64,
+}
+
 /// The physical execution plan — the compiler's product, the runtime's input.
 #[derive(Clone, Debug)]
 pub struct PhysPlan {
@@ -246,6 +282,8 @@ pub struct PhysPlan {
     pub mem: crate::memory::MemoryPlan,
     pub signatures: HashMap<NodeId, Signature>,
     pub options: CompileOptions,
+    /// The compiled schedule: stage depths, in-flight bytes, ideal bubble.
+    pub schedule: ScheduleDesc,
     /// The (possibly fusion-rewritten) logical graph this plan realizes.
     pub graph: LogicalGraph,
 }
@@ -273,6 +311,46 @@ impl PhysPlan {
     /// Largest per-device footprint.
     pub fn peak_device_memory(&self) -> f64 {
         self.memory_by_device().values().cloned().fold(0.0, f64::max)
+    }
+
+    /// Whether register `r` is indexed by accumulation *rounds* rather than
+    /// pieces: a GradAcc output, or the output of any once-per-round node.
+    pub fn reg_is_round(&self, r: RegId) -> bool {
+        let n = &self.nodes[self.regs[r.0].producer.0];
+        n.period > 1
+            || matches!(n.kernel, PhysKernel::Compute { op: OpKind::GradAcc { .. }, .. })
+    }
+
+    /// Whether the plan accumulates gradients (any node runs once per round).
+    pub fn has_accumulation(&self) -> bool {
+        self.nodes.iter().any(|n| n.period > 1)
+            || self
+                .nodes
+                .iter()
+                .any(|n| matches!(n.kernel, PhysKernel::Compute { op: OpKind::GradAcc { .. }, .. }))
+    }
+
+    /// Per-stage schedule view for `oneflow plan --schedule`.
+    pub fn schedule_report(&self) -> String {
+        let sc = &self.schedule;
+        let mut s = format!(
+            "schedule: {:?}, microbatches M={}, stages p={}, ideal bubble {:.4}\n",
+            sc.mode,
+            sc.microbatches,
+            sc.stages.len(),
+            sc.bubble_fraction
+        );
+        for st in &sc.stages {
+            let devs: Vec<String> = st.devices.iter().map(|d| d.to_string()).collect();
+            s.push_str(&format!(
+                "  stage {}: depth {}, in-flight {}, devices [{}]\n",
+                st.stage,
+                st.depth,
+                crate::util::fmt::bytes(st.in_flight_bytes),
+                devs.join(", ")
+            ));
+        }
+        s
     }
 
     pub fn dump(&self) -> String {
@@ -379,6 +457,7 @@ struct Builder {
 }
 
 impl Builder {
+    #[allow(clippy::too_many_arguments)]
     fn add_node(
         &mut self,
         name: String,
@@ -389,7 +468,7 @@ impl Builder {
         cost: CostSpec,
         dtype: DType,
         out_shapes: Vec<Shape>,
-        slots: usize,
+        backward: bool,
     ) -> (PhysOpId, RegId) {
         let id = PhysOpId(self.nodes.len());
         let rid = RegId(self.regs.len());
@@ -398,7 +477,9 @@ impl Builder {
         // lowered transfer ops buffer on their own device like any other
         // actor, so a register's span is always exactly its device
         let span = vec![device];
-        self.regs.push(RegDesc { id: rid, producer: id, slots, bytes_per_slot, device, span });
+        // slot quota is provisional: the scheduling pass assigns the real
+        // per-register quota over the finished node set
+        self.regs.push(RegDesc { id: rid, producer: id, slots: 1, bytes_per_slot, device, span });
         self.nodes.push(PhysNode {
             id,
             name,
@@ -412,6 +493,8 @@ impl Builder {
             dtype,
             out_shapes,
             update_from: None,
+            period: 1,
+            backward,
         });
         (id, rid)
     }
@@ -478,7 +561,7 @@ pub fn compile(
                         CostSpec::ZERO,
                         *dtype,
                         vec![sh],
-                        1, // parameters live in a single mutable slot
+                        node.backward,
                     );
                     phys.push(pid);
                 }
@@ -518,7 +601,7 @@ pub fn compile(
                         },
                         *dtype,
                         vec![sh],
-                        opts.pipeline_depth,
+                        node.backward,
                     );
                     phys.push(pid);
                 }
@@ -552,7 +635,6 @@ pub fn compile(
                         t,
                         &sig.ins[i],
                         &pl,
-                        opts,
                     );
                     for (shard, r) in routed.into_iter().enumerate() {
                         per_shard_inputs[shard].push(r);
@@ -600,7 +682,7 @@ pub fn compile(
                         cost,
                         dtype,
                         out_shards,
-                        opts.pipeline_depth,
+                        node.backward,
                     );
                     let _ = pid;
                     shard_regs.push((rid, 0));
@@ -634,7 +716,6 @@ pub fn compile(
             ut,
             &vb.nd_sbp.clone(),
             &vb.placement.clone(),
-            opts,
         );
         for (i, &pid) in var_phys[&vnode].iter().enumerate() {
             b.nodes[pid.0].update_from = Some(routed[i]);
@@ -690,7 +771,7 @@ pub fn compile(
             CostSpec { flops: 0.0, read_bytes: bytes, write_bytes: 0.0, queue: QueueKind::D2H },
             dtype,
             vec![g.tensor(t).shape.clone()],
-            opts.pipeline_depth,
+            false,
         );
         fetch_bindings.push(FetchBinding {
             tensor: orig,
@@ -701,7 +782,11 @@ pub fn compile(
         });
     }
 
-    // Pass 4: the arena plan — register lifetimes over the finished node
+    // Pass 4: the scheduling pass — per-register 1F1B slot quotas and
+    // per-node accumulation periods over the finished node set.
+    let schedule = schedule_pass(&mut b, &g, opts);
+
+    // Pass 5: the arena plan — register lifetimes over the finished node
     // set, packed into one arena per device.
     let mem = crate::memory::plan_memory(&b.nodes, &b.regs);
 
@@ -715,8 +800,142 @@ pub fn compile(
         mem,
         signatures,
         options: opts.clone(),
+        schedule,
         graph: g,
     }
+}
+
+/// The scheduling pass (paper §4.3 / Fig 6): turn stage structure and
+/// micro-batch count into per-register slot quotas and per-node action
+/// periods. Quotas + actor back-pressure then *are* the 1F1B schedule — the
+/// runtime needs no pipeline engine.
+///
+/// * Stages are derived from placement transitions along the forward
+///   dataflow: a node's devices join the stage of any device already seen,
+///   otherwise they open the next stage.
+/// * Round-domain propagation: a [`OpKind::GradAcc`] publishes once per
+///   `steps` pieces, so every node downstream of its register (except Var,
+///   which consumes the update through its back edge at the same cadence)
+///   runs once per round (`period = M`).
+/// * Quotas (OneFOneB): Var registers keep 1 mutable slot; round-domain
+///   registers double-buffer (2); backward registers drain promptly
+///   (`min(2, M)`); a forward register on stage `s` of `p` may hold
+///   `min(p - s, M)` in-flight pieces (floored at double-buffering) — the
+///   1F1B "limit in-flight activations to #stages" rule, per register.
+fn schedule_pass(b: &mut Builder, g: &LogicalGraph, opts: &CompileOptions) -> ScheduleDesc {
+    // Effective micro-batch count: graphs that accumulate gradients raise M.
+    let acc_steps = g
+        .nodes
+        .iter()
+        .filter_map(|n| match n.op {
+            OpKind::GradAcc { steps } => Some(steps),
+            _ => None,
+        })
+        .max()
+        .unwrap_or(1);
+    let m = opts.microbatches.max(acc_steps).max(1);
+
+    // ---- stage derivation (forward dataflow over logical placements) ----
+    let mut stage_of: HashMap<DeviceId, usize> = HashMap::new();
+    let mut n_stages = 0usize;
+    for nid in g.topo_order() {
+        let node = g.node(nid);
+        // Sources (Input/Var) join the stage of the compute that consumes
+        // them; visiting them here would number stages by toposort pop
+        // order, not pipeline order.
+        if node.inputs.is_empty() {
+            continue;
+        }
+        let stage = match node.placement.devices.iter().find_map(|d| stage_of.get(d).copied())
+        {
+            Some(s) => s,
+            None => {
+                let s = n_stages;
+                n_stages += 1;
+                s
+            }
+        };
+        for d in &node.placement.devices {
+            stage_of.entry(*d).or_insert(stage);
+        }
+    }
+    let p = n_stages.max(1);
+
+    // ---- round-domain + backward propagation (nodes are in topo order) ----
+    let nn = b.nodes.len();
+    let mut round_out = vec![false; b.regs.len()];
+    let mut bwd_out = vec![false; b.regs.len()];
+    for i in 0..nn {
+        let is_gradacc = matches!(
+            b.nodes[i].kernel,
+            PhysKernel::Compute { op: OpKind::GradAcc { .. }, .. }
+        );
+        let is_var = matches!(b.nodes[i].kernel, PhysKernel::Var { .. });
+        let reads_round = b.nodes[i].inputs.iter().any(|&(r, _)| round_out[r.0])
+            || b.nodes[i].controls.iter().any(|&r| round_out[r.0]);
+        // GradAcc itself consumes every piece; Var consumes the fed-back
+        // round value through its back edge but still emits every piece.
+        b.nodes[i].period = if reads_round && !is_gradacc && !is_var { m } else { 1 };
+        round_out[b.nodes[i].out_reg.0] = is_gradacc || b.nodes[i].period > 1;
+        let bwd = match b.nodes[i].kernel {
+            // lowered transfer ops inherit from the data they move
+            PhysKernel::CollectiveMember { .. }
+            | PhysKernel::ShardSend { .. }
+            | PhysKernel::ShardRecv { .. } => {
+                b.nodes[i].inputs.iter().any(|&(r, _)| bwd_out[r.0])
+                    || b.nodes[i].controls.iter().any(|&r| bwd_out[r.0])
+            }
+            _ => b.nodes[i].backward,
+        };
+        b.nodes[i].backward = bwd;
+        bwd_out[b.nodes[i].out_reg.0] = bwd;
+    }
+
+    // ---- per-register slot quotas ----
+    for r in 0..b.regs.len() {
+        let n = &b.nodes[b.regs[r].producer.0];
+        let slots = if matches!(n.kernel, PhysKernel::Var { .. }) {
+            1 // parameters live in a single mutable slot
+        } else {
+            match opts.schedule {
+                ScheduleMode::Unoverlapped => 1,
+                ScheduleMode::OneFOneB => {
+                    if round_out[r] {
+                        // once-per-round values: double-buffer across rounds
+                        2.min(m)
+                    } else if n.backward {
+                        2.min(m)
+                    } else {
+                        let s = stage_of.get(&n.device).copied().unwrap_or(0);
+                        p.saturating_sub(s).min(m).max(2.min(m)).max(1)
+                    }
+                }
+            }
+        };
+        b.regs[r].slots = slots;
+    }
+
+    // ---- the schedule record ----
+    let mut stages: Vec<StageSched> = (0..p)
+        .map(|s| StageSched { stage: s, devices: vec![], depth: 1, in_flight_bytes: 0.0 })
+        .collect();
+    let mut devs: Vec<(DeviceId, usize)> = stage_of.iter().map(|(d, s)| (*d, *s)).collect();
+    devs.sort();
+    for (d, s) in devs {
+        stages[s].devices.push(d);
+    }
+    for r in &b.regs {
+        let s = stage_of.get(&r.device).copied().unwrap_or(0);
+        stages[s].in_flight_bytes += r.bytes_per_slot * r.slots as f64;
+        if !matches!(b.nodes[r.producer.0].kernel, PhysKernel::Var { .. }) {
+            stages[s].depth = stages[s].depth.max(r.slots);
+        }
+    }
+    let bubble_fraction = match opts.schedule {
+        ScheduleMode::OneFOneB => crate::pipeline::bubble_fraction(p, m),
+        ScheduleMode::Unoverlapped => crate::pipeline::bubble_fraction(p, 1),
+    };
+    ScheduleDesc { mode: opts.schedule, microbatches: m, stages, bubble_fraction }
 }
 
 /// Resolve how each consumer shard of `t` (expected under `(want, want_pl)`)
@@ -734,7 +953,6 @@ fn route(
     t: TensorId,
     want: &NdSbp,
     want_pl: &Placement,
-    opts: &CompileOptions,
 ) -> Vec<(RegId, usize)> {
     let prod = produced.get(&t).unwrap_or_else(|| panic!("tensor t{} not produced", t.0));
     let same_pl =
@@ -791,7 +1009,7 @@ fn route(
                 },
                 dtype,
                 vec![sh],
-                opts.pipeline_depth,
+                false, // transfer backward-ness is propagated by the scheduling pass
             );
             ops.push(pid);
             regs.push((rid, 0));
@@ -816,7 +1034,7 @@ fn route(
         for hop in &hops {
             let chan = *chan_next;
             *chan_next += 1;
-            cur_regs = lower_hop(b, t, chan, hop, &cur_regs, dtype, opts, &mut ops);
+            cur_regs = lower_hop(b, t, chan, hop, &cur_regs, dtype, &mut ops);
         }
         (TransferKind::Routed { hops }, cur_regs)
     };
@@ -846,7 +1064,6 @@ fn lower_hop(
     hop: &Arc<RoutedTransfer>,
     in_regs: &[(RegId, usize)],
     dtype: DType,
-    opts: &CompileOptions,
     ops: &mut Vec<PhysOpId>,
 ) -> Vec<(RegId, usize)> {
     assert_eq!(in_regs.len(), hop.in_place.len(), "hop inputs vs placement");
@@ -883,7 +1100,7 @@ fn lower_hop(
                 },
                 dtype,
                 vec![],
-                opts.pipeline_depth,
+                false,
             );
             ops.push(pid);
             controls.push(rid);
@@ -911,7 +1128,7 @@ fn lower_hop(
             },
             dtype,
             vec![recv.out_shape.clone()],
-            opts.pipeline_depth,
+            false,
         );
         b.nodes[pid.0].controls = controls;
         ops.push(pid);
@@ -1104,8 +1321,8 @@ mod tests {
         let x = g.add1("x", OpKind::Input { shape: [8, 8].into(), dtype: DType::F32 }, &[], p.clone());
         g.hint_tensor(x, NdSbp::d1(s(0)));
         let y = g.add1("y", OpKind::Relu, &[x], p.clone());
-        let opts = CompileOptions { pipeline_depth: 2, ..Default::default() };
-        let plan = compile(&g, &[y], &HashMap::new(), &opts);
+        // default schedule: M=2 -> every non-Var register double-buffers
+        let plan = compile(&g, &[y], &HashMap::new(), &CompileOptions::default());
         let mem = plan.memory_by_device();
         // per device: input reg (4x8 f32 = 128B) * 2 + relu reg 128 * 2 ... fetch on dev0
         let d0 = mem[&DeviceId::new(0, 0)];

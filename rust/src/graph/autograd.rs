@@ -21,6 +21,7 @@ pub struct Backward {
 /// Supported op set covers everything the model zoo and examples emit;
 /// extending it is a matter of adding one match arm with the usual calculus.
 pub fn build_backward(g: &mut LogicalGraph, loss: TensorId) -> Backward {
+    let first_bwd = g.nodes.len();
     let order = g.topo_order();
     // grad accumulation per tensor
     let mut grads: HashMap<TensorId, TensorId> = HashMap::new();
@@ -263,6 +264,7 @@ pub fn build_backward(g: &mut LogicalGraph, loss: TensorId) -> Backward {
         }
     }
 
+    g.mark_backward_from(first_bwd);
     let mut var_grads = HashMap::new();
     for node in &g.nodes.clone() {
         if matches!(node.op, OpKind::Variable { .. }) {
@@ -274,9 +276,40 @@ pub fn build_backward(g: &mut LogicalGraph, loss: TensorId) -> Backward {
     Backward { var_grads, loss }
 }
 
+/// Insert a [`OpKind::GradAcc`] accumulator behind every variable gradient:
+/// `steps` micro-batch pieces are averaged into one logical-batch gradient,
+/// and the returned [`Backward`] points the optimizer at the accumulated
+/// tensors — so the Var update back edge fires once per round. Placing the
+/// accumulator on the gradient *producer's* placement keeps any grad-combine
+/// transfer downstream of it, i.e. comm also runs once per round. No-op for
+/// `steps <= 1`.
+pub fn accumulate_grads(g: &mut LogicalGraph, bw: &Backward, steps: usize) -> Backward {
+    if steps <= 1 {
+        return Backward { var_grads: bw.var_grads.clone(), loss: bw.loss };
+    }
+    let first = g.nodes.len();
+    let mut var_grads = HashMap::new();
+    let mut vars: Vec<NodeId> = bw.var_grads.keys().copied().collect();
+    vars.sort(); // deterministic node ids across builds
+    for var in vars {
+        let grad = bw.var_grads[&var];
+        let pl = g.node(g.tensor(grad).producer).placement.clone();
+        let acc = g.add1(
+            format!("{}_acc", g.node(var).name),
+            OpKind::GradAcc { steps },
+            &[grad],
+            pl,
+        );
+        var_grads.insert(var, acc);
+    }
+    g.mark_backward_from(first);
+    Backward { var_grads, loss: bw.loss }
+}
+
 /// Append an SGD update op per variable gradient. Returns the updated-param
 /// tensors (which the runtime feeds back into the variable actors).
 pub fn append_sgd(g: &mut LogicalGraph, bw: &Backward, lr: f32) -> HashMap<NodeId, TensorId> {
+    let first = g.nodes.len();
     let mut updated = HashMap::new();
     for (&var, &grad) in &bw.var_grads {
         let pl = g.node(var).placement.clone();
@@ -289,6 +322,7 @@ pub fn append_sgd(g: &mut LogicalGraph, bw: &Backward, lr: f32) -> HashMap<NodeI
         );
         updated.insert(var, new_param);
     }
+    g.mark_backward_from(first);
     updated
 }
 
@@ -298,6 +332,7 @@ pub fn append_adam(
     bw: &Backward,
     lr: f32,
 ) -> HashMap<NodeId, TensorId> {
+    let first = g.nodes.len();
     let mut updated = HashMap::new();
     for (&var, &grad) in &bw.var_grads {
         let pl = g.node(var).placement.clone();
@@ -323,6 +358,7 @@ pub fn append_adam(
         );
         updated.insert(var, outs[0]);
     }
+    g.mark_backward_from(first);
     updated
 }
 

@@ -42,6 +42,11 @@ pub struct Node {
     pub placement: Placement,
     /// User/compiler-pinned output signatures (None = compiler's choice).
     pub sbp_hint: Option<Vec<NdSbp>>,
+    /// True for nodes appended by the backward pass (and optimizer-side
+    /// helpers). The scheduling pass keys 1F1B register quotas off this:
+    /// forward registers hold up to `min(stages - stage, M)` pieces while
+    /// backward registers drain promptly.
+    pub backward: bool,
 }
 
 /// The logical graph.
@@ -84,8 +89,16 @@ impl LogicalGraph {
             outputs: outs.clone(),
             placement,
             sbp_hint: None,
+            backward: false,
         });
         outs
+    }
+
+    /// Flag every node appended at or after index `start` as backward-pass.
+    pub fn mark_backward_from(&mut self, start: usize) {
+        for n in &mut self.nodes[start..] {
+            n.backward = true;
+        }
     }
 
     /// Add with a single output (panics otherwise) — the common case.

@@ -82,6 +82,11 @@ pub enum OpKind {
     SgdUpdate { lr: f32 },
     /// `(param, grad, m, v) -> (param', m', v')`.
     AdamUpdate { lr: f32, b1: f32, b2: f32, eps: f32 },
+    /// Micro-batch gradient accumulator: consumes `steps` consecutive pieces
+    /// of its input and publishes their mean once per accumulation round, so
+    /// `steps` pieces form one logical batch. The runtime intercepts it like
+    /// Var/Input; everything downstream runs once per round.
+    GradAcc { steps: usize },
     /// Fusion-pass product: matmul + bias + activation in one kernel.
     FusedMatMulBias { act: Activation },
     /// No-op passthrough (used for graph plumbing and pull actors).
@@ -159,7 +164,7 @@ impl OpKind {
                 vec![ins[0].clone()]
             }
             Scale(_) | Relu | Gelu | Exp | Softmax | LayerNorm { .. } | Identity | StopGrad
-            | Cast { .. } => {
+            | Cast { .. } | GradAcc { .. } => {
                 vec![ins[0].clone()]
             }
             ReduceSum { axis, keepdim } | ReduceMax { axis, keepdim } => {
@@ -253,10 +258,10 @@ impl OpKind {
                 sig(&[s(1), s(1)], &[s(1)]),
                 sig(&[B, B], &[B]),
             ],
-            Scale(_) | Cast { .. } | Identity | StopGrad => vec![
+            Scale(_) | Cast { .. } | Identity | StopGrad | GradAcc { .. } => vec![
                 sig(&[s(0)], &[s(0)]),
                 sig(&[s(1)], &[s(1)]),
-                sig(&[P], &[P]), // linear
+                sig(&[P], &[P]), // linear (for GradAcc: sums of partials commute)
                 sig(&[B], &[B]),
             ],
             Relu | Gelu | Exp => vec![
@@ -423,6 +428,7 @@ impl OpKind {
             SparseXentGrad => "sparse_xent_grad".into(),
             SgdUpdate { .. } => "sgd_update".into(),
             AdamUpdate { .. } => "adam_update".into(),
+            GradAcc { .. } => "grad_acc".into(),
             Identity => "identity".into(),
             StopGrad => "stop_grad".into(),
             External { name, .. } => name.clone(),

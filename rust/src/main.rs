@@ -8,12 +8,12 @@
 use oneflow::actor::Engine;
 use oneflow::bench::Table;
 use oneflow::comm;
-use oneflow::compiler::{compile, CompileOptions};
+use oneflow::compiler::{compile, CompileOptions, ScheduleMode};
 use oneflow::config::Args;
 use oneflow::data::RandomSource;
 use oneflow::exec::QueueKind;
 use oneflow::memory;
-use oneflow::models::{gpt_sim, resnet50, GptSimConfig, ResnetConfig};
+use oneflow::models::{gpt_sim_checked, resnet50, GptSimConfig, ResnetConfig};
 use oneflow::placement::Placement;
 use oneflow::runtime::{backend_from_args, backend_names};
 use oneflow::util::fmt;
@@ -36,7 +36,10 @@ fn main() {
                  simulate: --model gpt|resnet --dp N --mp N --pp N --batch N --hidden N --layers N --pieces N [--devs-per-node N] [--zero] [--checkpoint] [--backend {}]\n\
                  \x20          [--transport {}] [--rank R --peers h:p,h:p,...]  (multi-process: one worker per rank)\n\
                  \x20          [--intraop N]  (row-parallel matmul threads, default 1, bitwise-deterministic)\n\
-                 plan:     same flags as simulate [--world N]; prints the physical plan, per-device arena map (+ per-rank partition)",
+                 \x20          [--microbatches M] [--unoverlapped]  (1F1B in-flight cap / single-slot baseline schedule)\n\
+                 \x20          [--timeout-secs N]  (wall-clock watchdog; 0 = none, the default)\n\
+                 plan:     same flags as simulate [--world N]; prints the physical plan, per-device arena map (+ per-rank partition)\n\
+                 \x20          [--schedule]  (print the compiled per-stage 1F1B schedule instead)",
                 backend_names().join("|"),
                 comm::transport_names().join("|")
             );
@@ -117,15 +120,31 @@ fn build_model(args: &Args) -> Built {
             cfg.checkpoint = args.flag("checkpoint");
             cfg.zero = args.flag("zero");
             let gb = cfg.global_batch;
-            let (g, loss, upd) = gpt_sim(&cfg);
+            let (g, loss, upd) = gpt_sim_checked(&cfg).unwrap_or_else(|e| {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            });
             (g, loss, upd, gb)
         }
     }
 }
 
+/// Compile options shared by `simulate` and `plan`: `--microbatches M` sets
+/// the 1F1B in-flight cap (and the accumulation round length of graphs that
+/// accumulate), `--unoverlapped` drops every register to one slot — the
+/// O(p)-bubble baseline schedule.
+fn compile_opts(args: &Args) -> CompileOptions {
+    let mut opts = CompileOptions::default();
+    opts.microbatches = args.usize("microbatches", opts.microbatches).max(1);
+    if args.flag("unoverlapped") {
+        opts.schedule = ScheduleMode::Unoverlapped;
+    }
+    opts
+}
+
 fn simulate(args: &Args) {
     let (g, loss, upd, batch) = build_model(args);
-    let opts = CompileOptions::default();
+    let opts = compile_opts(args);
     let plan = compile(&g, &[loss], &upd, &opts);
     let mem = memory::check_plan(&plan, &opts.cluster.device);
     let pieces = args.usize("pieces", 8);
@@ -163,10 +182,15 @@ fn simulate(args: &Args) {
         // paper scale — use small --hidden/--layers/--batch)
         engine = engine.with_source(Arc::new(RandomSource { seed: 7 }));
     }
-    // no watchdog for interactive runs: slow-but-progressing native math is
-    // not a deadlock (the 120 s default in Engine::run is for tests)
+    // no watchdog by default for interactive runs: slow-but-progressing
+    // native math is not a deadlock (Engine::run's DEFAULT_TIMEOUT_SECS is
+    // for tests); `--timeout-secs N` arms one
+    let timeout = match args.usize("timeout-secs", 0) {
+        0 => None,
+        secs => Some(std::time::Duration::from_secs(secs as u64)),
+    };
     let report = engine
-        .run_with(oneflow::actor::RunOptions { pieces, timeout: None })
+        .run_with(oneflow::actor::RunOptions { pieces, timeout })
         .unwrap_or_else(|e| {
             eprintln!("error: {e}");
             std::process::exit(1);
@@ -197,8 +221,14 @@ fn simulate(args: &Args) {
 
 fn plan(args: &Args) {
     let (g, loss, upd, _) = build_model(args);
-    let opts = CompileOptions::default();
+    let opts = compile_opts(args);
     let plan = compile(&g, &[loss], &upd, &opts);
+    if args.flag("schedule") {
+        // the compiled 1F1B schedule, per stage: slot depth, in-flight
+        // bytes, ideal bubble fraction
+        println!("{}", plan.schedule_report());
+        return;
+    }
     println!("{}", plan.dump());
     println!("nodes: {}  transfer edges: {}", plan.nodes.len(), plan.boxing_count());
     let world = args.usize("world", 1);

@@ -14,9 +14,10 @@
 //! bounded by; [`crate::memory::check_plan`] rejects on that quota). The
 //! gap between the two is the reuse ratio `oneflow plan` prints.
 //!
-//! Registers with an indefinite lifetime — parameter (`Var`) slots and the
-//! update registers fed back across pieces — are pinned live for the whole
-//! plan, so they always get dedicated bytes.
+//! Registers with an indefinite lifetime — parameter (`Var`) slots, the
+//! update registers fed back across pieces, and gradient-accumulator
+//! (`GradAcc`) registers that hold partial sums across a micro-batch round —
+//! are pinned live for the whole plan, so they always get dedicated bytes.
 
 use crate::compiler::{PhysKernel, PhysNode, RegDesc, RegId};
 use crate::placement::DeviceId;
@@ -133,6 +134,14 @@ pub fn plan_memory(nodes: &[PhysNode], regs: &[RegDesc]) -> MemoryPlan {
         }
         if matches!(n.kernel, PhysKernel::Var { .. }) {
             // a parameter slot is rewritten, never retired
+            pinned[n.out_reg.0] = true;
+        }
+        if matches!(
+            n.kernel,
+            PhysKernel::Compute { op: crate::graph::OpKind::GradAcc { .. }, .. }
+        ) {
+            // the accumulator holds a partial sum across the whole round —
+            // its bytes can never be recycled between pieces
             pinned[n.out_reg.0] = true;
         }
     }

@@ -61,8 +61,18 @@ impl GptSimConfig {
     }
 }
 
-/// Build the training graph. Returns (graph, loss, var-updates).
+/// Build the training graph. Returns (graph, loss, var-updates). Panics on
+/// an inconsistent stage/device config; [`gpt_sim_checked`] reports it as an
+/// error instead (the CLI path).
 pub fn gpt_sim(cfg: &GptSimConfig) -> (LogicalGraph, TensorId, HashMap<NodeId, TensorId>) {
+    gpt_sim_checked(cfg).expect("invalid pipeline configuration")
+}
+
+/// [`gpt_sim`] with configuration errors (devices not divisible into
+/// pipeline stages) surfaced as `Err` rather than a panic.
+pub fn gpt_sim_checked(
+    cfg: &GptSimConfig,
+) -> crate::Result<(LogicalGraph, TensorId, HashMap<NodeId, TensorId>)> {
     let total = cfg.n_devices();
     let nodes = total.div_ceil(cfg.devs_per_node);
     let devs = cfg.devs_per_node.min(total);
@@ -70,7 +80,7 @@ pub fn gpt_sim(cfg: &GptSimConfig) -> (LogicalGraph, TensorId, HashMap<NodeId, T
     let stages: Vec<Placement> = if cfg.pp == 1 {
         vec![stage_hierarchy(cfg, 0, nodes, devs)]
     } else {
-        let flat = stage_placements(cfg.pp, nodes, devs);
+        let flat = stage_placements(cfg.pp, nodes, devs)?;
         (0..cfg.pp).map(|i| regrid(cfg, &flat[i])).collect()
     };
     let dp_x = |pl: &Placement| dp_sbp(pl);
@@ -121,7 +131,7 @@ pub fn gpt_sim(cfg: &GptSimConfig) -> (LogicalGraph, TensorId, HashMap<NodeId, T
     let bw = autograd::build_backward(&mut g, loss);
     let sharding = if cfg.zero { Sharding::Zero } else { Sharding::Replicated };
     let updates = attach_sgd(&mut g, &bw, 1e-4, sharding);
-    (g, loss, updates)
+    Ok((g, loss, updates))
 }
 
 enum MpKind {
@@ -401,11 +411,24 @@ pub struct GptPipelineConfig {
     /// Tokens per piece (batch × seq, flattened).
     pub rows: usize,
     pub lr: f32,
+    /// Micro-batches per optimizer update: > 1 appends a gradient
+    /// accumulator per variable ([`autograd::accumulate_grads`]) so M
+    /// pieces form one logical batch and the SGD step fires once per round.
+    pub microbatches: usize,
 }
 
 impl Default for GptPipelineConfig {
     fn default() -> Self {
-        GptPipelineConfig { stages: 2, vocab: 64, hidden: 32, ff: 64, blocks_per_stage: 1, rows: 64, lr: 0.2 }
+        GptPipelineConfig {
+            stages: 2,
+            vocab: 64,
+            hidden: 32,
+            ff: 64,
+            blocks_per_stage: 1,
+            rows: 64,
+            lr: 0.2,
+            microbatches: 1,
+        }
     }
 }
 
@@ -479,6 +502,9 @@ pub fn gpt_pipeline_real(
     let loss = outs[0];
 
     let bw = autograd::build_backward(&mut g, loss);
+    // micro-batch accumulation: grads pool into a pinned accumulator and
+    // the optimizer (and the Var back edge) fires once per round
+    let bw = autograd::accumulate_grads(&mut g, &bw, cfg.microbatches);
     let updates = autograd::append_sgd(&mut g, &bw, cfg.lr);
     (g, loss, updates)
 }

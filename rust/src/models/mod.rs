@@ -14,7 +14,8 @@ pub mod insightface;
 pub mod wide_deep;
 
 pub use gpt::{
-    gpt_dataparallel_real, gpt_hybrid_real, gpt_pipeline_real, gpt_sim, GptDataParallelConfig,
+    gpt_dataparallel_real, gpt_hybrid_real, gpt_pipeline_real, gpt_sim, gpt_sim_checked,
+    GptDataParallelConfig,
     GptHybridConfig, GptPipelineConfig, GptSimConfig,
 };
 pub use resnet::{resnet50, ResnetConfig};

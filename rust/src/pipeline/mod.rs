@@ -9,15 +9,26 @@
 //! schedule-quality metrics (bubble fraction).
 
 use crate::placement::{DeviceId, Placement};
+use anyhow::{bail, Result};
 
 /// Assign `n_stages` consecutive stages over `nodes × devs_per_node`
 /// devices, filling whole nodes first (Megatron's canonical layout: tensor
-/// parallel within a node, pipeline across nodes).
-pub fn stage_placements(n_stages: usize, nodes: usize, devs_per_node: usize) -> Vec<Placement> {
+/// parallel within a node, pipeline across nodes). A cluster that does not
+/// divide evenly into the requested stages is a configuration error,
+/// reported as such (not a panic) so the CLI can surface it.
+pub fn stage_placements(n_stages: usize, nodes: usize, devs_per_node: usize) -> Result<Vec<Placement>> {
     let total = nodes * devs_per_node;
-    assert!(total % n_stages == 0, "{total} devices not divisible by {n_stages} stages");
+    if n_stages == 0 {
+        bail!("pipeline needs at least one stage");
+    }
+    if total % n_stages != 0 {
+        bail!(
+            "cluster of {total} devices ({nodes} nodes x {devs_per_node}) does not divide \
+             into {n_stages} pipeline stages"
+        );
+    }
     let per_stage = total / n_stages;
-    (0..n_stages)
+    let placements = (0..n_stages)
         .map(|s| {
             let devices: Vec<DeviceId> = (0..per_stage)
                 .map(|i| {
@@ -33,7 +44,8 @@ pub fn stage_placements(n_stages: usize, nodes: usize, devs_per_node: usize) -> 
                 Placement::new(vec![1], devices)
             }
         })
-        .collect()
+        .collect();
+    Ok(placements)
 }
 
 /// Ideal 1F1B bubble fraction: `(p-1) / (m + p - 1)` for `p` stages and `m`
@@ -55,7 +67,7 @@ mod tests {
 
     #[test]
     fn placements_partition_all_devices() {
-        let ps = stage_placements(4, 2, 4);
+        let ps = stage_placements(4, 2, 4).unwrap();
         assert_eq!(ps.len(), 4);
         let mut all: Vec<DeviceId> = ps.iter().flat_map(|p| p.devices.clone()).collect();
         all.sort();
@@ -67,6 +79,13 @@ mod tests {
         for (a, b) in ps.iter().zip(ps.iter().skip(1)) {
             assert!(a.disjoint(b));
         }
+    }
+
+    #[test]
+    fn indivisible_stages_is_a_named_error() {
+        let err = stage_placements(3, 2, 4).unwrap_err().to_string();
+        assert!(err.contains("does not divide"), "{err}");
+        assert!(stage_placements(0, 2, 4).is_err());
     }
 
     #[test]

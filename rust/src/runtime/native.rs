@@ -319,6 +319,8 @@ mod tests {
             dtype: DType::F32,
             out_shapes: vec![],
             update_from: None,
+            period: 1,
+            backward: false,
         }
     }
 

@@ -129,6 +129,7 @@ fn tcp_dropped_shard_frame_surfaces_named_route_error() {
             blocks_per_stage: 1,
             rows: 32,
             lr: 0.2,
+            microbatches: 1,
         }
     }
     fn build() -> PhysPlan {

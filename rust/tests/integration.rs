@@ -2,7 +2,7 @@
 //! small graphs (real numerics) and simulated clusters (virtual time).
 
 use oneflow::actor::{Engine, FnSource, RunOptions};
-use oneflow::compiler::{compile, CompileOptions, SelectStrategy};
+use oneflow::compiler::{compile, CompileOptions, ScheduleMode, SelectStrategy};
 use oneflow::exec::QueueKind;
 use oneflow::graph::{autograd, LogicalGraph, OpKind};
 use oneflow::placement::Placement;
@@ -183,19 +183,19 @@ fn flops_op(name: &str, flops: f64, bytes: f64, queue: QueueKind) -> OpKind {
 /// dominated by the bottleneck stage; with 1 slot everything serializes.
 #[test]
 fn fig6_pipelining_with_multi_slot_registers() {
-    let build = |depth: usize| {
+    let build = |schedule: ScheduleMode| {
         let p = Placement::node(0, 1);
         let mut g = LogicalGraph::new();
         let load = g.add1("load", flops_op("load", 0.0, 300.0e6, QueueKind::Disk), &[], p.clone());
         let decode = g.add1("decode", flops_op("decode", 0.0, 600.0e6, QueueKind::HostCpu), &[load], p.clone());
         let compute = g.add1("compute", flops_op("compute", 1.5e12, 0.0, QueueKind::Compute), &[decode], p.clone());
-        let opts = CompileOptions { pipeline_depth: depth, fuse: false, ..Default::default() };
+        let opts = CompileOptions { schedule, fuse: false, ..Default::default() };
         compile(&g, &[compute], &HashMap::new(), &opts)
     };
     let pieces = 16;
-    let run = |depth: usize| Engine::new(build(depth), Arc::new(SimBackend)).run(pieces);
-    let serial = run(1);
-    let pipelined = run(2);
+    let run = |s: ScheduleMode| Engine::new(build(s), Arc::new(SimBackend)).run(pieces);
+    let serial = run(ScheduleMode::Unoverlapped);
+    let pipelined = run(ScheduleMode::OneFOneB);
     // With 1 slot, a producer still refills once its consumer *reads* the
     // register, so the steady-state period is decode+compute; with 2 slots
     // (the paper's double-buffering generalization) only the bottleneck
@@ -227,7 +227,7 @@ fn back_pressure_limits_producer_lead() {
     let mut g = LogicalGraph::new();
     let fast = g.add1("fast", flops_op("fast", 0.0, 1.0e6, QueueKind::HostCpu), &[], p.clone());
     let slow = g.add1("slow", flops_op("slow", 1.0e12, 0.0, QueueKind::Compute), &[fast], p.clone());
-    let opts = CompileOptions { pipeline_depth: 2, fuse: false, ..Default::default() };
+    let opts = CompileOptions { fuse: false, ..Default::default() };
     let plan = compile(&g, &[slow], &HashMap::new(), &opts);
     let report = Engine::new(plan, Arc::new(SimBackend)).run(32);
     let slow_period = 1.0e12 / (15.7e12 * 0.75);
@@ -249,7 +249,7 @@ fn fig2_compile_time_memory_plan() {
     let big = g.add1("m1", OpKind::Input { shape: [1024, 1024].into(), dtype: DType::F32 }, &[], p.clone());
     let o1 = g.add1("o1", OpKind::Relu, &[big], p.clone());
     let o2 = g.add1("o2", OpKind::Gelu, &[o1], p.clone());
-    let opts = CompileOptions { pipeline_depth: 2, ..Default::default() };
+    let opts = CompileOptions::default();
     let plan = compile(&g, &[o2], &HashMap::new(), &opts);
     let planned = plan.peak_device_memory();
     assert!(planned >= 6.0 * 4.0 * 1024.0 * 1024.0);

@@ -87,7 +87,7 @@ fn random_dags_never_deadlock() {
             (g.dump(), g, leaves, depth, r.range(1, 6))
         },
         |(_dump, g, leaves, depth, pieces)| {
-            let opts = CompileOptions { pipeline_depth: *depth, fuse: false, ..Default::default() };
+            let opts = CompileOptions { microbatches: *depth, fuse: false, ..Default::default() };
             let plan = compile(g, leaves, &HashMap::new(), &opts);
             let engine = Engine::new(plan, Arc::new(SimBackend));
             match engine.run_with(RunOptions { pieces: *pieces, timeout: Some(Duration::from_secs(30)) }) {
@@ -223,7 +223,7 @@ fn virtual_makespan_at_least_critical_path() {
             (g, leaves, depth)
         },
         |(g, leaves, depth)| {
-            let opts = CompileOptions { pipeline_depth: *depth, fuse: false, ..Default::default() };
+            let opts = CompileOptions { microbatches: *depth, fuse: false, ..Default::default() };
             let plan = compile(g, leaves, &HashMap::new(), &opts);
             let engine = Engine::new(plan, Arc::new(SimBackend));
             let rep = engine
@@ -253,7 +253,7 @@ fn packed_registers_with_overlapping_lifetimes_never_share_bytes() {
             (g, leaves, depth)
         },
         |(g, leaves, depth)| {
-            let opts = CompileOptions { pipeline_depth: *depth, fuse: false, ..Default::default() };
+            let opts = CompileOptions { microbatches: *depth, fuse: false, ..Default::default() };
             let plan = compile(g, leaves, &HashMap::new(), &opts);
             for arena in &plan.mem.arenas {
                 if arena.arena_bytes > arena.naive_bytes {
@@ -290,7 +290,7 @@ fn memory_plan_is_monotone_in_depth() {
         },
         |(g, leaves)| {
             let mem = |d: usize| {
-                let opts = CompileOptions { pipeline_depth: d, fuse: false, ..Default::default() };
+                let opts = CompileOptions { microbatches: d, fuse: false, ..Default::default() };
                 compile(g, leaves, &HashMap::new(), &opts).peak_device_memory()
             };
             mem(1) <= mem(2) && mem(2) <= mem(4)

@@ -1,0 +1,294 @@
+//! The compiled 1F1B schedule (DESIGN.md §3 scheduling pass, invariant 10):
+//! register quotas follow the `min(stages - stage, M)` rule, the overlapped
+//! schedule reaches the ideal `(p-1)/(m+p-1)` bubble in virtual time, a
+//! schedule never changes values (Unoverlapped vs 1F1B training losses are
+//! bitwise-equal, in-process and across a 2-worker TCP run), and widened
+//! quotas never break the compile-time memory invariant.
+
+use oneflow::actor::{DataSource, Engine, FnSource, RunOptions, RunReport};
+use oneflow::comm::{tcp_local_world, Transport};
+use oneflow::compiler::{compile, CompileOptions, InputBinding, PhysPlan, ScheduleMode};
+use oneflow::data::SyntheticCorpus;
+use oneflow::exec::{CostSpec, DeviceModel, QueueKind};
+use oneflow::graph::{LogicalGraph, OpKind, TensorId};
+use oneflow::memory;
+use oneflow::models::{gpt_pipeline_real, GptPipelineConfig};
+use oneflow::pipeline::bubble_fraction;
+use oneflow::placement::Placement;
+use oneflow::runtime::{NativeBackend, SimBackend};
+use oneflow::tensor::{DType, Tensor};
+use oneflow::util::prop;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+// ---- a balanced cost-only pipeline ---------------------------------------
+
+/// A `p`-stage chain of equal-cost compute ops, one stage per cluster node,
+/// fed by a free host-side source: the minimal graph whose placement
+/// transitions give the scheduling pass `p` real stages.
+fn stage_chain(p: usize, flops: f64) -> (LogicalGraph, TensorId) {
+    let mut g = LogicalGraph::new();
+    let mut t = g.add1(
+        "src",
+        OpKind::Flops {
+            name: "src".into(),
+            out: [4, 4].into(),
+            dtype: DType::F32,
+            cost: CostSpec { flops: 0.0, read_bytes: 0.0, write_bytes: 0.0, queue: QueueKind::HostCpu },
+            split_axes: vec![0],
+            param_bytes: 0.0,
+        },
+        &[],
+        Placement::node(0, 1),
+    );
+    for s in 0..p {
+        t = g.add1(
+            format!("stage{s}"),
+            OpKind::Flops {
+                name: format!("stage{s}"),
+                out: [4, 4].into(),
+                dtype: DType::F32,
+                cost: CostSpec::compute(flops, 0.0, 0.0),
+                split_axes: vec![0],
+                param_bytes: 0.0,
+            },
+            &[t],
+            Placement::node(s, 1),
+        );
+    }
+    (g, t)
+}
+
+// ---- quota shape ----------------------------------------------------------
+
+/// The scheduling pass grants stage `s` of `p` a forward depth of
+/// `min(p - s, M)` (floored at double-buffering), records the ideal bubble,
+/// and the unoverlapped baseline collapses every register to one slot.
+#[test]
+fn compiled_quotas_follow_the_1f1b_rule() {
+    let (g, y) = stage_chain(4, 1e9);
+    let opts = CompileOptions { microbatches: 8, fuse: false, ..Default::default() };
+    let plan = compile(&g, &[y], &HashMap::new(), &opts);
+    let sc = &plan.schedule;
+    assert_eq!(sc.mode, ScheduleMode::OneFOneB);
+    assert_eq!(sc.microbatches, 8);
+    assert_eq!(sc.stages.len(), 4);
+    let depths: Vec<usize> = sc.stages.iter().map(|s| s.depth).collect();
+    assert_eq!(depths, vec![4, 3, 2, 2], "1F1B depths min(p - s, M) floored at 2");
+    assert!((sc.bubble_fraction - bubble_fraction(4, 8)).abs() < 1e-12);
+    let report = plan.schedule_report();
+    for s in 0..4 {
+        assert!(report.contains(&format!("stage {s}")), "missing stage {s}:\n{report}");
+    }
+
+    let un = CompileOptions {
+        microbatches: 8,
+        fuse: false,
+        schedule: ScheduleMode::Unoverlapped,
+        ..Default::default()
+    };
+    let plan = compile(&g, &[y], &HashMap::new(), &un);
+    assert!(plan.regs.iter().all(|r| r.slots == 1), "unoverlapped must be single-slot");
+    assert!((plan.schedule.bubble_fraction - bubble_fraction(4, 1)).abs() < 1e-12);
+}
+
+// ---- virtual-time bubble --------------------------------------------------
+
+/// Sim-backend acceptance: on a balanced 4-stage pipeline the measured idle
+/// fraction of the stage devices matches the ideal 1F1B bubble
+/// `(p-1)/(m+p-1)`, and the single-slot baseline forfeits the overlap.
+#[test]
+fn overlapped_bubble_matches_the_ideal_fraction() {
+    let (p, m) = (4usize, 8usize);
+    // big flops, tiny tensors: compute dwarfs launch overhead and transfers
+    let (g, y) = stage_chain(p, 2e10);
+    let opts = CompileOptions { microbatches: m, fuse: false, ..Default::default() };
+    let plan = compile(&g, &[y], &HashMap::new(), &opts);
+    let report = Engine::new(plan, Arc::new(SimBackend)).run(m);
+    let busy: f64 = report
+        .queue_busy
+        .iter()
+        .filter(|(k, _)| k.queue == QueueKind::Compute)
+        .map(|(_, v)| *v)
+        .sum();
+    let measured = 1.0 - busy / (p as f64 * report.makespan);
+    let ideal = bubble_fraction(p, m);
+    assert!(
+        (measured - ideal).abs() < 0.03,
+        "measured bubble {measured:.4} vs ideal {ideal:.4} (makespan {})",
+        report.makespan
+    );
+
+    let un = CompileOptions {
+        microbatches: m,
+        fuse: false,
+        schedule: ScheduleMode::Unoverlapped,
+        ..Default::default()
+    };
+    let plan = compile(&g, &[y], &HashMap::new(), &un);
+    let serial = Engine::new(plan, Arc::new(SimBackend)).run(m);
+    assert!(
+        serial.makespan > report.makespan * 1.5,
+        "unoverlapped {} should trail 1f1b {}",
+        serial.makespan,
+        report.makespan
+    );
+}
+
+// ---- schedules never change values ---------------------------------------
+
+/// The accumulating 2-stage pipeline GPT every parity test below trains:
+/// M=2 pieces per optimizer update through a per-variable GradAcc.
+fn acc_cfg() -> GptPipelineConfig {
+    GptPipelineConfig {
+        stages: 2,
+        vocab: 32,
+        hidden: 16,
+        ff: 32,
+        blocks_per_stage: 1,
+        rows: 32,
+        lr: 0.2,
+        microbatches: 2,
+    }
+}
+
+fn acc_build(schedule: ScheduleMode) -> PhysPlan {
+    let (g, loss, upd) = gpt_pipeline_real(&acc_cfg());
+    let opts = CompileOptions { schedule, ..Default::default() };
+    compile(&g, &[loss], &upd, &opts)
+}
+
+fn acc_source() -> Arc<dyn DataSource> {
+    let cfg = acc_cfg();
+    let corpus = Arc::new(SyntheticCorpus::new(2048, cfg.vocab, 13));
+    let rows = cfg.rows;
+    Arc::new(FnSource(move |b: &InputBinding, piece: usize| {
+        let (ids, labels) = corpus.batch(piece, 1, rows);
+        match b.name.as_str() {
+            "ids" => Tensor::new([rows], DType::I32, ids.data),
+            "labels" => Tensor::new([rows], DType::I32, labels.data),
+            _ => Tensor::full(b.shape.clone(), b.dtype, 1.0),
+        }
+    }))
+}
+
+/// Loss tensor id — graph construction is deterministic, so every build
+/// (every schedule, every rank) assigns it the same id.
+fn acc_loss() -> TensorId {
+    gpt_pipeline_real(&acc_cfg()).1
+}
+
+fn loss_bits(r: &RunReport, loss: TensorId) -> Vec<Vec<u32>> {
+    r.fetched
+        .get(&loss)
+        .expect("loss not fetched")
+        .iter()
+        .map(|t| t.data.iter().map(|x| x.to_bits()).collect())
+        .collect()
+}
+
+/// Tentpole acceptance, single process: training the accumulating pipeline
+/// under the 1F1B quotas produces losses **bitwise equal** to the
+/// unoverlapped single-slot schedule — a schedule reorders work, never
+/// values — and the loss actually moves (the parity is not vacuous).
+#[test]
+fn schedules_are_value_transparent_in_process() {
+    let pieces = 6; // 3 accumulation rounds of M=2
+    let loss = acc_loss();
+    let run = |schedule| {
+        Engine::new(acc_build(schedule), Arc::new(NativeBackend))
+            .with_source(acc_source())
+            .run_with(RunOptions { pieces, timeout: Some(Duration::from_secs(60)) })
+            .expect("in-process run")
+    };
+    let serial = run(ScheduleMode::Unoverlapped);
+    let overlapped = run(ScheduleMode::OneFOneB);
+    let serial_bits = loss_bits(&serial, loss);
+    let overlapped_bits = loss_bits(&overlapped, loss);
+    assert_eq!(serial_bits.len(), pieces);
+    assert_eq!(serial_bits, overlapped_bits, "schedule changed training values");
+    let mean = |bits: &[u32]| bits.iter().map(|&b| f32::from_bits(b)).sum::<f32>() / bits.len() as f32;
+    assert!(
+        mean(&serial_bits[pieces - 1]) < mean(&serial_bits[0]),
+        "loss never moved: {} -> {}",
+        mean(&serial_bits[0]),
+        mean(&serial_bits[pieces - 1])
+    );
+}
+
+/// Two workers over TCP, one per pipeline stage, same schedule sweep.
+fn run_dist(schedule: ScheduleMode, pieces: usize) -> (RunReport, RunReport) {
+    let mut w = tcp_local_world(2).expect("rendezvous");
+    let t1 = w.pop().expect("rank 1");
+    let t0 = w.pop().expect("rank 0");
+    let spawn = |t: Arc<dyn Transport>| {
+        std::thread::spawn(move || {
+            Engine::new(acc_build(schedule), Arc::new(NativeBackend))
+                .with_source(acc_source())
+                .with_transport(t)
+                .run_with(RunOptions { pieces, timeout: Some(Duration::from_secs(60)) })
+                .expect("distributed run")
+        })
+    };
+    let h0 = spawn(t0);
+    let h1 = spawn(t1);
+    (h0.join().expect("rank 0"), h1.join().expect("rank 1"))
+}
+
+/// Tentpole acceptance, distributed: the same parity holds across a 2-worker
+/// TCP run (one rank per stage), and the distributed losses are bitwise
+/// equal to the in-process ones — schedule and transport both transparent.
+#[test]
+fn tcp_two_worker_schedules_are_value_transparent() {
+    let pieces = 4; // 2 accumulation rounds of M=2
+    let loss = acc_loss();
+    let base = Engine::new(acc_build(ScheduleMode::OneFOneB), Arc::new(NativeBackend))
+        .with_source(acc_source())
+        .run_with(RunOptions { pieces, timeout: Some(Duration::from_secs(60)) })
+        .expect("in-process run");
+    let base_bits = loss_bits(&base, loss);
+
+    let (r0_s, r1_s) = run_dist(ScheduleMode::Unoverlapped, pieces);
+    let (r0_o, r1_o) = run_dist(ScheduleMode::OneFOneB, pieces);
+    // the loss head lives on stage 1 => node 1 => rank 1
+    assert!(!r0_s.fetched.contains_key(&loss), "rank 0 unexpectedly hosts the fetch");
+    assert!(!r0_o.fetched.contains_key(&loss), "rank 0 unexpectedly hosts the fetch");
+    let serial_bits = loss_bits(&r1_s, loss);
+    let overlapped_bits = loss_bits(&r1_o, loss);
+    assert_eq!(serial_bits, overlapped_bits, "schedule changed values over TCP");
+    assert_eq!(overlapped_bits, base_bits, "TCP run diverged from the in-process run");
+}
+
+// ---- memory invariant under widened quotas --------------------------------
+
+/// Satellite invariant: whatever quotas the scheduling pass hands out —
+/// any stage count, any M, either schedule mode, cost-only chains and the
+/// real accumulating GPT alike — every register keeps >= 1 slot and the
+/// packed arena never exceeds the slots-x-bytes bound the compile-time
+/// capacity check enforces.
+#[test]
+fn quota_widening_preserves_the_memory_invariant() {
+    prop::check(
+        "packed arena <= register quota bound under scheduled slots",
+        40,
+        |r| (r.range(1, 4), r.range(1, 4), r.chance(0.7), r.chance(0.3)),
+        |(p, m, overlapped, use_gpt)| {
+            let schedule =
+                if *overlapped { ScheduleMode::OneFOneB } else { ScheduleMode::Unoverlapped };
+            let opts =
+                CompileOptions { microbatches: *m, fuse: false, schedule, ..Default::default() };
+            let plan = if *use_gpt {
+                let cfg = GptPipelineConfig { microbatches: *m, ..acc_cfg() };
+                let (g, loss, upd) = gpt_pipeline_real(&cfg);
+                compile(&g, &[loss], &upd, &opts)
+            } else {
+                let (g, y) = stage_chain(*p, 1e9);
+                compile(&g, &[y], &HashMap::new(), &opts)
+            };
+            plan.regs.iter().all(|rg| rg.slots >= 1)
+                && plan.mem.arena_peak() <= plan.peak_device_memory() + 1e-6
+                && memory::check_plan(&plan, &DeviceModel::v100()).is_ok()
+        },
+    );
+}

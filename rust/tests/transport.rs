@@ -191,6 +191,7 @@ fn pipeline_cfg() -> GptPipelineConfig {
         blocks_per_stage: 1,
         rows: 32,
         lr: 0.2,
+        microbatches: 1,
     }
 }
 
