@@ -3,6 +3,12 @@
 //! single-slot unoverlapped baseline, across stage counts. Asserts the
 //! measured 1F1B bubble matches the ideal `(p-1)/(m+p-1)` and writes
 //! `BENCH_pipeline_1f1b.json`; `--quick` shrinks the sweep for CI.
+//!
+//! Each point also reruns 1F1B with the actor-event recorder on: the traced
+//! makespan must equal the untraced one bit for bit (DESIGN.md invariant
+//! 11), and the bubble derived from the merged timeline
+//! ([`oneflow::metrics::trace_summary`]) must sit on the same analytic
+//! curve. The last point's summary is written to `TRACE_summary.json`.
 
 use oneflow::actor::Engine;
 use oneflow::bench::Table;
@@ -10,6 +16,7 @@ use oneflow::compiler::{compile, CompileOptions, PhysPlan, ScheduleMode};
 use oneflow::config::Args;
 use oneflow::exec::{CostSpec, QueueKind};
 use oneflow::graph::{LogicalGraph, OpKind, TensorId};
+use oneflow::metrics;
 use oneflow::pipeline::bubble_fraction;
 use oneflow::placement::Placement;
 use oneflow::runtime::SimBackend;
@@ -67,12 +74,24 @@ fn main() {
 
     let mut tab = Table::new(
         "Pipeline schedule — makespan vs stage count (balanced chain, M=8 microbatches)",
-        &["stages", "unoverlapped", "1f1b", "speedup", "bubble (measured)", "bubble (ideal)"],
+        &[
+            "stages",
+            "unoverlapped",
+            "1f1b",
+            "speedup",
+            "bubble (measured)",
+            "bubble (trace)",
+            "bubble (ideal)",
+        ],
     );
     let mut rows = Vec::new();
+    let mut last_summary = None;
     for &p in stage_counts {
         let serial = Engine::new(build(p, m, ScheduleMode::Unoverlapped), Arc::new(SimBackend)).run(m);
         let overlapped = Engine::new(build(p, m, ScheduleMode::OneFOneB), Arc::new(SimBackend)).run(m);
+        let teng =
+            Engine::new(build(p, m, ScheduleMode::OneFOneB), Arc::new(SimBackend)).with_trace();
+        let traced = teng.run(m);
         let busy: f64 = overlapped
             .queue_busy
             .iter()
@@ -82,20 +101,40 @@ fn main() {
         let measured = 1.0 - busy / (p as f64 * overlapped.makespan);
         let ideal = bubble_fraction(p, m);
         let speedup = serial.makespan / overlapped.makespan;
+
+        // invariant 11: tracing is schedule-transparent — the traced run's
+        // virtual makespan equals the untraced one bit for bit
+        assert_eq!(
+            traced.makespan.to_bits(),
+            overlapped.makespan.to_bits(),
+            "p={p}: tracing perturbed the makespan"
+        );
+        let trace = traced.trace.as_ref().expect("traced run carries a timeline");
+        let summary = metrics::trace_summary(trace, teng.plan());
+        assert!(
+            (summary.bubble_measured - ideal).abs() < 0.05,
+            "p={p}: trace-derived bubble {:.4} off the ideal {ideal:.4}",
+            summary.bubble_measured
+        );
+        let bubble_trace = summary.bubble_measured;
+
         tab.row(&[
             p.to_string(),
             fmt::secs(serial.makespan),
             fmt::secs(overlapped.makespan),
             format!("{speedup:.2}x"),
             format!("{measured:.4}"),
+            format!("{bubble_trace:.4}"),
             format!("{ideal:.4}"),
         ]);
         rows.push(format!(
             "    {{\"stages\": {p}, \"microbatches\": {m}, \
              \"makespan_unoverlapped\": {:.6e}, \"makespan_1f1b\": {:.6e}, \
-             \"speedup\": {speedup:.4}, \"bubble_measured\": {measured:.4}, \"bubble_ideal\": {ideal:.4}}}",
+             \"speedup\": {speedup:.4}, \"bubble_measured\": {measured:.4}, \
+             \"bubble_trace\": {bubble_trace:.4}, \"bubble_ideal\": {ideal:.4}}}",
             serial.makespan, overlapped.makespan,
         ));
+        last_summary = Some(summary);
 
         // acceptance: 1F1B overlaps (strictly beats single-slot) and its
         // bubble sits on the analytic (p-1)/(m+p-1) curve
@@ -118,4 +157,11 @@ fn main() {
     );
     std::fs::write("BENCH_pipeline_1f1b.json", &json).expect("write BENCH_pipeline_1f1b.json");
     println!("\nwrote BENCH_pipeline_1f1b.json");
+
+    // the deepest traced point's timeline, reduced to the machine-readable
+    // schedule observability artifact CI checks for
+    if let Some(s) = last_summary {
+        s.write_json("TRACE_summary.json").expect("write TRACE_summary.json");
+        println!("wrote TRACE_summary.json");
+    }
 }

@@ -94,12 +94,26 @@ pub struct RunReport {
     /// Gathered logical value per fetched tensor, indexed by piece
     /// (real-execution mode only).
     pub fetched: HashMap<TensorId, Vec<Tensor>>,
+    /// The merged event timeline ([`Engine::with_trace`]); on multi-rank
+    /// jobs only rank 0 carries it (peers ship their buffers to rank 0).
+    pub trace: Option<crate::trace::Trace>,
 }
 
 impl RunReport {
+    /// `x / makespan`, or `0.0` for an empty run (zero makespan) — the one
+    /// zero-guard every per-makespan ratio shares, so empty runs report a
+    /// clean zero instead of a garbage ratio from an epsilon divisor.
+    pub fn per_makespan(&self, x: f64) -> f64 {
+        if self.makespan > 0.0 {
+            x / self.makespan
+        } else {
+            0.0
+        }
+    }
+
     /// Pieces per virtual second — the simulated-cluster throughput.
     pub fn throughput(&self) -> f64 {
-        self.pieces as f64 / self.makespan.max(1e-30)
+        self.per_makespan(self.pieces as f64)
     }
 
     /// Max virtual busy-seconds over threads of one queue kind.
@@ -132,6 +146,12 @@ enum Control {
     /// A transfer action failed (lost shard frame, dead peer, misrouted
     /// chunk): abort the run and surface this rank-tagged error.
     Failed(String),
+    /// A queue (or ingress) thread's recorded trace events, flushed at
+    /// thread exit when tracing is on.
+    Trace(Vec<crate::trace::Event>),
+    /// A peer rank's full event buffer (decoded from a
+    /// [`wire::Frame::Trace`] frame after the peer's barrier completed).
+    PeerTrace { rank: usize, events: Vec<crate::trace::Event> },
 }
 
 /// The runtime engine (see module docs).
@@ -140,11 +160,12 @@ pub struct Engine {
     backend: Arc<dyn Backend>,
     source: Option<Arc<dyn DataSource>>,
     transport: Option<Arc<dyn Transport>>,
+    trace: bool,
 }
 
 impl Engine {
     pub fn new(plan: PhysPlan, backend: Arc<dyn Backend>) -> Self {
-        Engine { plan: Arc::new(plan), backend, source: None, transport: None }
+        Engine { plan: Arc::new(plan), backend, source: None, transport: None, trace: false }
     }
 
     /// Attach a data source (real-execution mode).
@@ -160,6 +181,17 @@ impl Engine {
     /// identical to no transport at all.
     pub fn with_transport(mut self, t: Arc<dyn Transport>) -> Self {
         self.transport = Some(t);
+        self
+    }
+
+    /// Record a per-actor event timeline during the run ([`crate::trace`]).
+    /// The merged [`crate::trace::Trace`] lands in [`RunReport::trace`] on
+    /// rank 0 (peers ship their buffers over the wire at finalize).
+    /// Tracing is value- and schedule-transparent (DESIGN.md invariant 11):
+    /// recording happens outside the virtual-time algebra, so losses are
+    /// bitwise-equal and the virtual makespan identical with it on or off.
+    pub fn with_trace(mut self) -> Self {
+        self.trace = true;
         self
     }
 
@@ -338,6 +370,9 @@ impl Engine {
         );
 
         let started = Instant::now();
+        // When tracing, every queue thread gets a thread-local recorder
+        // stamped with the shared run-start instant (wall offsets align)
+        let trace_start: Option<Instant> = self.trace.then_some(started);
         let n_actors: usize = per_thread.iter().map(Vec::len).sum();
         let router: Option<Arc<comm::Router>> = match &self.transport {
             Some(t) if world > 1 => {
@@ -382,7 +417,7 @@ impl Engine {
                     .spawn(move || {
                         thread_main(
                             actors, rx, senders, tindex, ctl, stop, backend, plan, key, cache,
-                            peak, shard_counts, src, bindings, router, comm_rt,
+                            peak, shard_counts, src, bindings, router, comm_rt, trace_start,
                         )
                     })
                     .expect("spawn queue thread"),
@@ -403,55 +438,80 @@ impl Engine {
                 ingress = Some(
                     std::thread::Builder::new()
                         .name("of-comm-ingress".into())
-                        .spawn(move || loop {
-                            if stop.load(Ordering::SeqCst) {
-                                break;
-                            }
-                            // recv returns as soon as a frame arrives; the
-                            // timeout only paces the stop-flag re-check
-                            match t.recv_timeout(Duration::from_millis(25)) {
-                                Ok(Some((src_rank, frame))) => match wire::decode(&frame) {
-                                    Ok(wire::Frame::Envelope(env)) => {
-                                        match tindex.get(&env.to.thread()) {
-                                            Some(&ti) => {
-                                                let _ = senders[ti].send(env);
-                                            }
-                                            None => eprintln!(
-                                                "comm: rank {src_rank} sent a message for non-local actor {}",
-                                                env.to
-                                            ),
-                                        }
-                                    }
-                                    Ok(wire::Frame::Finalize { rank, makespan }) => {
-                                        let _ = ctl.send(Control::PeerDone {
-                                            rank: rank as usize,
-                                            makespan,
-                                        });
-                                    }
-                                    Ok(wire::Frame::Collective { key, src, dst, data }) => {
-                                        // a peer member's ring chunk: park it
-                                        // where the blocked member waits
-                                        hub.push(key, src, dst, data);
-                                    }
-                                    Ok(wire::Frame::Shard { chan, piece, src, dst, data }) => {
-                                        // a routed-transfer payload: the
-                                        // ShardRecv actor collects it by key
-                                        hub.push(wire::shard_key(chan, piece), src, dst, data);
-                                    }
-                                    Err(e) => eprintln!(
-                                        "comm: undecodable frame from rank {src_rank}: {e}"
-                                    ),
-                                },
-                                Ok(None) => {}
-                                Err(e) => {
-                                    // The main loop can tell a graceful
-                                    // end-of-job (peers done, sockets
-                                    // closed) from a mid-run loss — report
-                                    // there instead of alarming stderr on
-                                    // every successful run.
-                                    let _ = ctl.send(Control::CommLost(e.to_string()));
+                        .spawn(move || {
+                            // the ingress thread records Recv endpoints of
+                            // cross-rank envelopes on its own sentinel track
+                            let tbuf = trace_start.map(|t0| {
+                                crate::trace::TraceBuf::new(
+                                    my_rank,
+                                    crate::trace::ingress_track(my_rank),
+                                    t0,
+                                )
+                            });
+                            loop {
+                                if stop.load(Ordering::SeqCst) {
                                     break;
                                 }
+                                // recv returns as soon as a frame arrives; the
+                                // timeout only paces the stop-flag re-check
+                                match t.recv_timeout(Duration::from_millis(25)) {
+                                    Ok(Some((src_rank, frame))) => match wire::decode(&frame) {
+                                        Ok(wire::Frame::Envelope(env)) => {
+                                            if let Some(tb) = &tbuf {
+                                                tb.recv(&env);
+                                            }
+                                            match tindex.get(&env.to.thread()) {
+                                                Some(&ti) => {
+                                                    let _ = senders[ti].send(env);
+                                                }
+                                                None => eprintln!(
+                                                    "comm: rank {src_rank} sent a message for non-local actor {}",
+                                                    env.to
+                                                ),
+                                            }
+                                        }
+                                        Ok(wire::Frame::Finalize { rank, makespan }) => {
+                                            let _ = ctl.send(Control::PeerDone {
+                                                rank: rank as usize,
+                                                makespan,
+                                            });
+                                        }
+                                        Ok(wire::Frame::Collective { key, src, dst, data }) => {
+                                            // a peer member's ring chunk: park it
+                                            // where the blocked member waits
+                                            hub.push(key, src, dst, data);
+                                        }
+                                        Ok(wire::Frame::Shard { chan, piece, src, dst, data }) => {
+                                            // a routed-transfer payload: the
+                                            // ShardRecv actor collects it by key
+                                            hub.push(wire::shard_key(chan, piece), src, dst, data);
+                                        }
+                                        Ok(wire::Frame::Trace { rank, events }) => {
+                                            // a peer's end-of-run event buffer
+                                            // for the rank-0 timeline merge
+                                            let _ = ctl.send(Control::PeerTrace {
+                                                rank: rank as usize,
+                                                events,
+                                            });
+                                        }
+                                        Err(e) => eprintln!(
+                                            "comm: undecodable frame from rank {src_rank}: {e}"
+                                        ),
+                                    },
+                                    Ok(None) => {}
+                                    Err(e) => {
+                                        // The main loop can tell a graceful
+                                        // end-of-job (peers done, sockets
+                                        // closed) from a mid-run loss — report
+                                        // there instead of alarming stderr on
+                                        // every successful run.
+                                        let _ = ctl.send(Control::CommLost(e.to_string()));
+                                        break;
+                                    }
+                                }
+                            }
+                            if let Some(tb) = &tbuf {
+                                let _ = ctl.send(Control::Trace(tb.take()));
                             }
                         })
                         .expect("spawn comm ingress"),
@@ -470,6 +530,8 @@ impl Engine {
         let mut peer_done = vec![false; world];
         let mut peers_done = 0usize;
         let mut finalize_sent = false;
+        let mut trace_parts: Vec<Vec<crate::trace::Event>> = Vec::new();
+        let mut peer_traces: Vec<(usize, Vec<crate::trace::Event>)> = Vec::new();
         if n_actors == 0 {
             // this rank hosts no plan node (world > node count): nothing to
             // run, but it still joins the finalize barrier below
@@ -559,6 +621,12 @@ impl Engine {
                         report.makespan = report.makespan.max(makespan);
                     }
                 }
+                Control::Trace(events) => trace_parts.push(events),
+                Control::PeerTrace { rank, events } => {
+                    if !peer_traces.iter().any(|(r, _)| *r == rank) {
+                        peer_traces.push((rank, events));
+                    }
+                }
                 Control::Failed(why) => {
                     // a transfer action errored: tear the run down promptly
                     // (blocked exchanges wake through the hub abort) and
@@ -595,9 +663,56 @@ impl Engine {
                 }
             }
         }
+        if self.trace && my_rank == 0 && world > 1 {
+            // Every peer ships its event buffer right after its finalize
+            // barrier completes — ours already has, so the frames are in
+            // flight; wait for stragglers before stopping ingress. Tracing
+            // is observability: on timeout we warn and keep a partial
+            // timeline rather than failing a successful run.
+            let wait_until = Instant::now() + Duration::from_secs(30);
+            while peer_traces.len() < world - 1 && Instant::now() < wait_until {
+                match ctl_rx.recv_timeout(Duration::from_millis(25)) {
+                    Ok(Control::PeerTrace { rank, events }) => {
+                        if !peer_traces.iter().any(|(r, _)| *r == rank) {
+                            peer_traces.push((rank, events));
+                        }
+                    }
+                    Ok(Control::Trace(events)) => trace_parts.push(events),
+                    Ok(_) => {}
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            if peer_traces.len() < world - 1 {
+                eprintln!(
+                    "trace: only {}/{} peer event buffers arrived before the deadline",
+                    peer_traces.len(),
+                    world - 1
+                );
+            }
+        }
         comm_stop.store(true, Ordering::SeqCst);
         if let Some(h) = ingress.take() {
             let _ = h.join();
+        }
+        if self.trace {
+            // the joined ingress thread flushed its Recv events last
+            while let Ok(m) = ctl_rx.try_recv() {
+                if let Control::Trace(events) = m {
+                    trace_parts.push(events);
+                }
+            }
+            if my_rank == 0 {
+                trace_parts.extend(peer_traces.into_iter().map(|(_, events)| events));
+                report.trace = Some(crate::trace::Trace::merge(trace_parts));
+            } else if let Some(t) = &self.transport {
+                // ship every local event to rank 0, which owns the merge
+                let events: Vec<crate::trace::Event> =
+                    trace_parts.into_iter().flatten().collect();
+                if let Err(e) = t.send(0, wire::encode_trace(my_rank as u32, &events)) {
+                    eprintln!("trace: shipping {} events to rank 0 failed: {e}", events.len());
+                }
+            }
         }
         report.wall = started.elapsed();
         report.scatter_cache_peak = cache_peak.load(Ordering::SeqCst);
@@ -644,6 +759,7 @@ fn thread_main(
     bindings: Arc<HashMap<NodeId, InputBinding>>,
     router: Option<Arc<comm::Router>>,
     comm_rt: Arc<CommRt>,
+    trace_start: Option<Instant>,
 ) {
     let feeder = move |nid: NodeId, shard: usize, piece: usize, outs: &mut Vec<Tensor>| {
         let Some(src) = &src else {
@@ -673,6 +789,8 @@ fn thread_main(
             cache.remove(&(nid.0, piece));
         }
     };
+    // thread-owned, lock-free event recorder; `None` ⇒ tracing compiled out
+    let tbuf = trace_start.map(|t0| crate::trace::TraceBuf::new(comm_rt.my_rank, key, t0));
     let mut ctx = Ctx {
         backend: backend.as_ref(),
         plan: &plan,
@@ -680,6 +798,7 @@ fn thread_main(
         feeder: &feeder,
         data: backend.has_data(),
         comm: comm_rt.as_ref(),
+        trace: tbuf.as_ref(),
     };
     let local_index: HashMap<ActorAddr, usize> =
         actors.iter().enumerate().map(|(i, a)| (a.addr, i)).collect();
@@ -742,6 +861,9 @@ fn thread_main(
                 // foreign rank: the CommNet path (Fig 7 cases ⑤–⑦) — same
                 // envelope, different fabric
                 n_cross += 1;
+                if let Some(tb) = &tbuf {
+                    tb.send(&out);
+                }
                 r.send(&out);
             } else {
                 panic!("thread {key:?} produced a message for unknown thread {tkey:?}");
@@ -749,10 +871,24 @@ fn thread_main(
         }
         if let Some(e) = fx.failed {
             // a transfer action failed: report and stop this queue thread —
-            // the engine aborts the whole run
-            let _ = ctl.send(Control::Failed(e));
+            // the engine aborts the whole run. The report says *when* the
+            // actor failed (its virtual clock) and *what* this queue thread
+            // last recorded, so a lost route is attributable in time.
+            let last = tbuf
+                .as_ref()
+                .and_then(|t| t.last_desc())
+                .unwrap_or_else(|| "none (tracing off)".into());
+            let _ = ctl.send(Control::Failed(format!(
+                "{e} [{}; last trace event: {last}]",
+                actors[ai].failure_context()
+            )));
             break;
         }
+    }
+    if let Some(tb) = &tbuf {
+        // flushed before Stats: per-sender channel order guarantees the
+        // engine holds every buffer once all stats are in
+        let _ = ctl.send(Control::Trace(tb.take()));
     }
     let mut busy = HashMap::new();
     busy.insert(key, busy_secs);

@@ -523,15 +523,32 @@ impl Actor {
         };
 
         // Virtual-time bookkeeping: (max, +) algebra over the dependencies.
-        let start = in_ts.max(slot_free).max(ctx.queue_free());
+        let queue_free = ctx.queue_free();
+        let start = in_ts.max(slot_free).max(queue_free);
         let end = start + dur;
         ctx.set_queue_free(end);
         self.last_ts = end;
         self.actions += 1;
         fx.executed.push((dur, moved));
 
+        // Observational only — values and virtual times above are final
+        // before any recording happens (DESIGN.md invariant 11).
+        if let Some(tb) = ctx.trace {
+            let ready = in_ts.max(queue_free);
+            if publishes && slot_free > ready {
+                // the action was held up by back-pressure: inputs and queue
+                // were ready, the output slot freed later
+                let (node, reg) = (self.node.id.0, self.node.out_reg.0);
+                tb.slot_wait(self.addr, node, reg, piece, ready, slot_free);
+            }
+            tb.action(self.addr, self.node.id.0, self.node.out_reg.0, piece, start, end, moved);
+        }
+
         // Send acks upstream (the consumer side of the protocol).
         for (to, reg, idx) in acks {
+            if let Some(tb) = ctx.trace {
+                tb.ack(self.addr, self.node.id.0, reg.0, idx, end);
+            }
             fx.outgoing.push(Envelope { to, msg: Msg::Ack { reg, piece: idx, ts: end } });
         }
 
@@ -588,6 +605,17 @@ impl Actor {
     pub fn set_var_value(&mut self, v: Piece) {
         self.var_value = Some(v);
     }
+
+    /// One-line context for failure reports: which actor failed, how far
+    /// through its piece stream it was, and the virtual end time of its
+    /// last completed action — the *when* of the failure. The engine
+    /// appends the queue thread's last trace event as the *what*.
+    pub fn failure_context(&self) -> String {
+        format!(
+            "actor `{}` at piece {}/{}, last action ended at virtual t={:.6e}s",
+            self.node.name, self.next_piece, self.total_pieces, self.last_ts
+        )
+    }
 }
 
 /// Engine-side services an actor needs during an action.
@@ -612,6 +640,10 @@ pub struct Ctx<'a> {
     /// Comm context for lowered transfer ops (always present; degenerate
     /// single-process worlds simply never cross the transport).
     pub(crate) comm: &'a comm::CommRt,
+    /// Event recorder of the owning queue thread, `None` when tracing is
+    /// off — the hooks then compile to a branch on a copied `Option`, so
+    /// an untraced run does no trace work at all ([`crate::trace`]).
+    pub(crate) trace: Option<&'a crate::trace::TraceBuf>,
 }
 
 /// `OF_TRACE=1` prints every action with its input shapes (debug aid).

@@ -36,6 +36,10 @@ const TAG_ENVELOPE: u8 = 0;
 const TAG_FINALIZE: u8 = 1;
 const TAG_COLLECTIVE: u8 = 2;
 const TAG_SHARD: u8 = 3;
+const TAG_TRACE: u8 = 4;
+
+/// Encoded size of one trace event (see [`encode_trace`]).
+const TRACE_EVENT_BYTES: usize = 73;
 
 /// Message tags within an envelope frame.
 const MSG_REQ: u8 = 0;
@@ -64,6 +68,11 @@ pub enum Frame {
     /// they tag the route so a lost or late frame is attributable. Payload
     /// is raw f32 bits, so routed re-layouts are bit-exact.
     Shard { chan: u64, piece: u64, src: u32, dst: u32, data: Vec<f32> },
+    /// End-of-run event-buffer handoff ([`crate::trace`]): after its
+    /// finalize barrier completes, every non-zero rank ships its recorded
+    /// trace events to rank 0, which merges the global timeline. Virtual
+    /// timestamps travel as raw f64 bits so the merged timeline is exact.
+    Trace { rank: u32, events: Vec<crate::trace::Event> },
 }
 
 /// Hub mailbox key of a shard frame: bit 63 marks the shard namespace so
@@ -180,6 +189,30 @@ pub fn encode_shard_into(
     }
 }
 
+/// Encode a trace frame (see [`Frame::Trace`]). The per-event `rank` field
+/// is frame-level (every event in a buffer was recorded by one rank) and
+/// re-stamped at decode.
+pub fn encode_trace(rank: u32, events: &[crate::trace::Event]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(9 + events.len() * TRACE_EVENT_BYTES);
+    out.push(TAG_TRACE);
+    put_u32(&mut out, rank);
+    put_u32(&mut out, events.len() as u32);
+    for e in events {
+        out.push(crate::trace::kind_code(e.kind));
+        put_u64(&mut out, crate::trace::track_code(&e.track));
+        put_u64(&mut out, e.actor.0);
+        put_u32(&mut out, e.node);
+        put_u32(&mut out, e.reg);
+        put_u64(&mut out, e.piece);
+        put_u64(&mut out, e.t0.to_bits());
+        put_u64(&mut out, e.t1.to_bits());
+        put_u64(&mut out, e.wall_ns);
+        put_u64(&mut out, e.bytes.to_bits());
+        put_u64(&mut out, e.flow);
+    }
+    out
+}
+
 /// Decode a frame; rejects truncated, oversized-field, or trailing bytes.
 pub fn decode(bytes: &[u8]) -> crate::Result<Frame> {
     let mut c = Cursor { buf: bytes, pos: 0 };
@@ -242,6 +275,36 @@ pub fn decode(bytes: &[u8]) -> crate::Result<Frame> {
                 data.push(f32::from_bits(c.u32()?));
             }
             Frame::Shard { chan, piece, src, dst, data }
+        }
+        TAG_TRACE => {
+            let rank = c.u32()?;
+            let n = c.u32()? as usize;
+            anyhow::ensure!(
+                c.remaining() >= n * TRACE_EVENT_BYTES,
+                "trace payload truncated"
+            );
+            let mut events = Vec::with_capacity(n);
+            for _ in 0..n {
+                let kind = crate::trace::kind_from_code(c.u8()?)
+                    .ok_or_else(|| anyhow::anyhow!("bad trace event kind"))?;
+                let track = crate::trace::track_from_code(c.u64()?)
+                    .ok_or_else(|| anyhow::anyhow!("bad trace track code"))?;
+                events.push(crate::trace::Event {
+                    kind,
+                    rank,
+                    track,
+                    actor: ActorAddr(c.u64()?),
+                    node: c.u32()?,
+                    reg: c.u32()?,
+                    piece: c.u64()?,
+                    t0: f64::from_bits(c.u64()?),
+                    t1: f64::from_bits(c.u64()?),
+                    wall_ns: c.u64()?,
+                    bytes: f64::from_bits(c.u64()?),
+                    flow: c.u64()?,
+                });
+            }
+            Frame::Trace { rank, events }
         }
         other => anyhow::bail!("bad frame tag {other}"),
     };
@@ -439,6 +502,63 @@ mod tests {
         assert_eq!(scratch, encode_collective(7, 1, 2, &[0.5, -2.0]));
         encode_shard_into(42, 7, 3, 1, &[1.0], &mut scratch);
         assert_eq!(scratch, encode_shard(42, 7, 3, 1, &[1.0]));
+    }
+
+    #[test]
+    fn trace_roundtrip_exact_bits() {
+        use crate::trace::{flow_id, ingress_track, Event, EventKind};
+        let to = ActorAddr::new(1, QueueKind::Compute, 0, 9);
+        let events = vec![
+            Event {
+                kind: EventKind::Action,
+                rank: 1,
+                track: to.thread(),
+                actor: to,
+                node: 9,
+                reg: 3,
+                piece: 5,
+                t0: 1.5e-3,
+                t1: 2.25e-3,
+                wall_ns: 12345,
+                bytes: 64.0,
+                flow: 0,
+            },
+            Event {
+                kind: EventKind::Recv,
+                rank: 1,
+                track: ingress_track(1),
+                actor: to,
+                node: 9,
+                reg: 3,
+                piece: 5,
+                t0: -0.0,
+                t1: -0.0,
+                wall_ns: 99,
+                bytes: 0.0,
+                flow: flow_id(to, 3, 5, 0),
+            },
+        ];
+        let b = encode_trace(1, &events);
+        match decode(&b).unwrap() {
+            Frame::Trace { rank, events: d } => {
+                assert_eq!(rank, 1);
+                assert_eq!(d.len(), events.len());
+                for (a, b) in events.iter().zip(&d) {
+                    assert_eq!(a.kind, b.kind);
+                    assert_eq!(a.rank, b.rank);
+                    assert_eq!(a.track, b.track);
+                    assert_eq!(a.actor, b.actor);
+                    assert_eq!((a.node, a.reg, a.piece), (b.node, b.reg, b.piece));
+                    assert_eq!(a.t0.to_bits(), b.t0.to_bits());
+                    assert_eq!(a.t1.to_bits(), b.t1.to_bits());
+                    assert_eq!((a.wall_ns, a.flow), (b.wall_ns, b.flow));
+                    assert_eq!(a.bytes.to_bits(), b.bytes.to_bits());
+                }
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+        assert!(decode(&b[..b.len() - 1]).is_err(), "truncated payload must reject");
+        assert!(!frame_is_shard(&b));
     }
 
     #[test]

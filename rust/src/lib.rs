@@ -78,6 +78,7 @@ pub mod models;
 pub mod data;
 pub mod baselines;
 pub mod metrics;
+pub mod trace;
 pub mod config;
 pub mod bench;
 

@@ -29,17 +29,20 @@ fn main() {
         Some("train") => train(&args),
         Some("simulate") => simulate(&args),
         Some("plan") => plan(&args),
+        Some("trace-validate") => trace_validate(&args),
         _ => {
             eprintln!(
-                "usage: oneflow <train|simulate|plan> [--flags]\n\
+                "usage: oneflow <train|simulate|plan|trace-validate> [--flags]\n\
                  train:    --steps N --artifacts DIR --lr F  (needs a build with --features pjrt)\n\
                  simulate: --model gpt|resnet --dp N --mp N --pp N --batch N --hidden N --layers N --pieces N [--devs-per-node N] [--zero] [--checkpoint] [--backend {}]\n\
                  \x20          [--transport {}] [--rank R --peers h:p,h:p,...]  (multi-process: one worker per rank)\n\
                  \x20          [--intraop N]  (row-parallel matmul threads, default 1, bitwise-deterministic)\n\
                  \x20          [--microbatches M] [--unoverlapped]  (1F1B in-flight cap / single-slot baseline schedule)\n\
                  \x20          [--timeout-secs N]  (wall-clock watchdog; 0 = none, the default)\n\
+                 \x20          [--trace FILE] [--trace-summary]  (actor-event timeline: Perfetto-loadable JSON / measured schedule metrics)\n\
                  plan:     same flags as simulate [--world N]; prints the physical plan, per-device arena map (+ per-rank partition)\n\
-                 \x20          [--schedule]  (print the compiled per-stage 1F1B schedule instead)",
+                 \x20          [--schedule]  (print the compiled per-stage 1F1B schedule instead)\n\
+                 trace-validate: FILE  (schema-check a Chrome trace-event JSON produced by --trace)",
                 backend_names().join("|"),
                 comm::transport_names().join("|")
             );
@@ -176,6 +179,11 @@ fn simulate(args: &Args) {
         );
     }
     engine = engine.with_transport(transport);
+    // `--trace FILE` / `--trace-summary` arm the per-actor event recorder;
+    // tracing is value- and schedule-transparent (DESIGN.md invariant 11)
+    if args.get("trace").is_some() || args.flag("trace-summary") {
+        engine = engine.with_trace();
+    }
     if needs_data {
         // real-numerics backends must be fed; synthetic batches keep every
         // advertised `--backend` choice runnable (native is CPU-slow at
@@ -217,6 +225,20 @@ fn simulate(args: &Args) {
     }
     t.row(&["buffer allocs (pool misses)".into(), report.buffer_allocs.to_string()]);
     t.print();
+    // only rank 0 of a traced run carries the merged timeline — the other
+    // ranks shipped their buffers there at finalize
+    if let Some(trace) = &report.trace {
+        if let Some(path) = args.get("trace") {
+            if let Err(e) = trace.write_chrome_json(path, engine.plan()) {
+                eprintln!("error: writing trace to {path}: {e}");
+                std::process::exit(1);
+            }
+            println!("\ntrace: {} events -> {path} (Perfetto-loadable)", trace.events.len());
+        }
+        if args.flag("trace-summary") {
+            oneflow::metrics::trace_summary(trace, engine.plan()).table().print();
+        }
+    }
 }
 
 fn plan(args: &Args) {
@@ -247,4 +269,73 @@ fn plan(args: &Args) {
         println!("  {dev}: quota {}, arena {}", fmt::bytes(bytes), fmt::bytes(packed));
     }
     println!("\ncompile-time arena map (register-lifetime packing):\n{}", plan.mem.dump());
+}
+
+/// `trace-validate FILE`: schema-check a Chrome trace-event JSON file the
+/// way Perfetto's importer would — every event needs `ph`; slices, instants
+/// and flow events need `ts`/`pid`/`tid`; `X` needs `dur` and `name`;
+/// metadata needs `name`; flow starts/ends need `id` and must pair up.
+fn trace_validate(args: &Args) {
+    let path = args
+        .positional
+        .get(1)
+        .cloned()
+        .unwrap_or_else(|| die("usage: oneflow trace-validate FILE".into()));
+    let root = oneflow::config::json::parse_file(&path)
+        .unwrap_or_else(|e| die(format!("{path}: not valid JSON: {e}")));
+    let events = root
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .unwrap_or_else(|| die(format!("{path}: missing top-level `traceEvents` array")));
+    let mut flow_starts = std::collections::HashSet::new();
+    let mut flow_ends = std::collections::HashSet::new();
+    for (i, e) in events.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(|v| v.as_str())
+            .unwrap_or_else(|| die(format!("event {i}: missing string `ph`")));
+        let need = |k: &str| {
+            if e.get(k).is_none() {
+                die(format!("event {i} (ph `{ph}`): missing `{k}`"));
+            }
+        };
+        match ph {
+            "M" => need("name"),
+            "X" => {
+                for k in ["ts", "dur", "pid", "tid", "name"] {
+                    need(k);
+                }
+            }
+            "i" => {
+                for k in ["ts", "pid", "tid"] {
+                    need(k);
+                }
+            }
+            "s" | "f" => {
+                for k in ["ts", "pid", "tid", "id"] {
+                    need(k);
+                }
+                let id = match e.get("id").and_then(|v| v.as_str()) {
+                    Some(s) => s.to_string(),
+                    None => die(format!("event {i}: flow `id` must be a string")),
+                };
+                if ph == "s" {
+                    flow_starts.insert(id);
+                } else {
+                    flow_ends.insert(id);
+                }
+            }
+            other => die(format!("event {i}: unknown phase `{other}`")),
+        }
+    }
+    if flow_starts != flow_ends {
+        let orphans = flow_starts.symmetric_difference(&flow_ends).count();
+        die(format!("{orphans} flow arrows lack a matching start/end"));
+    }
+    println!("{path}: valid — {} events, {} flow arrows", events.len(), flow_starts.len());
+}
+
+fn die(msg: String) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(1);
 }

@@ -1,7 +1,17 @@
-//! Derived experiment metrics on top of [`crate::actor::RunReport`]:
-//! throughput conversions and efficiency ratios used by the benches.
+//! Derived experiment metrics on top of [`crate::actor::RunReport`] and the
+//! merged event timeline ([`crate::trace::Trace`]): throughput conversions,
+//! efficiency ratios, and — from a traced run — *measured* schedule
+//! observability: per-stage pipeline bubble vs the analytic curve,
+//! comm/compute overlap, per-edge routed-transfer load, and per-rank
+//! straggler skew (`oneflow simulate --trace-summary`).
 
 use crate::actor::RunReport;
+use crate::bench::Table;
+use crate::compiler::PhysPlan;
+use crate::exec::QueueKind;
+use crate::placement::DeviceId;
+use crate::trace::{EventKind, Trace};
+use std::collections::HashMap;
 
 /// Samples/second given samples per piece (mini-batch size).
 pub fn samples_per_sec(report: &RunReport, samples_per_piece: usize) -> f64 {
@@ -14,9 +24,335 @@ pub fn scaling_efficiency(single_tput: f64, multi_tput: f64, n_devices: usize) -
 }
 
 /// Achieved fraction of the modeled compute roofline for one queue: virtual
-/// busy time / makespan.
+/// busy time / makespan (`0.0` for an empty run — see
+/// [`RunReport::per_makespan`], the shared zero-makespan guard).
 pub fn compute_utilization(report: &RunReport, queue: crate::exec::QueueKind) -> f64 {
-    report.busy(queue) / report.makespan.max(1e-30)
+    report.per_makespan(report.busy(queue))
+}
+
+/// Measured per-stage pipeline occupancy from the event timeline.
+#[derive(Clone, Debug)]
+pub struct StageObs {
+    pub stage: usize,
+    pub devices: usize,
+    /// Σ virtual compute-action seconds over the stage's devices.
+    pub busy_secs: f64,
+    /// `1 − busy/(devices × makespan)` — the stage's measured bubble.
+    pub bubble_measured: f64,
+}
+
+/// Measured per-transfer-edge load from the event timeline.
+#[derive(Clone, Debug)]
+pub struct EdgeObs {
+    /// Index into [`PhysPlan::transfers`].
+    pub transfer: usize,
+    /// Payload bytes the edge's lowered ops moved across devices.
+    pub bytes: f64,
+    /// Σ virtual seconds the edge's ops occupied their Net queues.
+    pub busy_secs: f64,
+    /// `busy_secs / makespan` — the link's timeline occupancy.
+    pub occupancy: f64,
+}
+
+/// Per-rank totals from the merged timeline.
+#[derive(Clone, Debug)]
+pub struct RankObs {
+    pub rank: u32,
+    pub events: usize,
+    pub busy_secs: f64,
+    /// Virtual end time of the rank's last action.
+    pub last_ts: f64,
+}
+
+/// Schedule observability derived from a merged [`Trace`]: what the
+/// analytic numbers in [`crate::compiler::physical::ScheduleDesc`] predict,
+/// *measured* from what the actors actually did.
+#[derive(Clone, Debug)]
+pub struct TraceSummary {
+    /// Virtual makespan of the timeline (= the run's makespan).
+    pub makespan: f64,
+    /// Total recorded events (all kinds, all ranks).
+    pub events: usize,
+    /// Σ virtual seconds of Compute-queue actions.
+    pub compute_busy_secs: f64,
+    /// Σ virtual seconds of Net-queue actions (transfers, ring members).
+    pub comm_busy_secs: f64,
+    /// Fraction of comm time hidden under concurrent compute, 0..=1.
+    pub overlap_ratio: f64,
+    /// The schedule's analytic bubble fraction (`(p−1)/(m+p−1)` for 1F1B).
+    pub bubble_ideal: f64,
+    /// Measured aggregate bubble: `1 − Σ stage busy/(Σ devices × makespan)`.
+    pub bubble_measured: f64,
+    pub stages: Vec<StageObs>,
+    pub edges: Vec<EdgeObs>,
+    /// Max [`EdgeObs::occupancy`] — how hot the busiest link runs.
+    pub busiest_link_occupancy: f64,
+    pub ranks: Vec<RankObs>,
+    /// Spread of per-rank finish times as a fraction of the makespan.
+    pub straggler_skew: f64,
+}
+
+/// Merge a sorted interval list in place and return total covered length.
+fn merge_intervals(iv: &mut Vec<(f64, f64)>) -> f64 {
+    iv.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut merged: Vec<(f64, f64)> = Vec::with_capacity(iv.len());
+    for &(s, e) in iv.iter() {
+        match merged.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => merged.push((s, e)),
+        }
+    }
+    let total = merged.iter().map(|(s, e)| e - s).sum();
+    *iv = merged;
+    total
+}
+
+/// Overlap length between `[s, e]` and a merged, sorted interval list.
+fn overlap_with(merged: &[(f64, f64)], s: f64, e: f64) -> f64 {
+    let mut acc = 0.0;
+    for &(ms, me) in merged {
+        if me <= s {
+            continue;
+        }
+        if ms >= e {
+            break;
+        }
+        acc += me.min(e) - ms.max(s);
+    }
+    acc
+}
+
+/// Reduce a merged timeline to schedule observability (see
+/// [`TraceSummary`]). `plan` supplies the analytic side: stage → device
+/// assignments, transfer-edge membership, and the ideal bubble fraction.
+pub fn trace_summary(trace: &Trace, plan: &PhysPlan) -> TraceSummary {
+    let makespan = trace.makespan();
+    let per_makespan = |x: f64| if makespan > 0.0 { x / makespan } else { 0.0 };
+
+    // --- compute/comm busy and the overlap ratio ---
+    let mut compute_iv: Vec<(f64, f64)> = Vec::new();
+    let mut comm_iv: Vec<(f64, f64)> = Vec::new();
+    let mut compute_busy = 0.0;
+    let mut comm_busy = 0.0;
+    for e in &trace.events {
+        if e.kind != EventKind::Action || e.dur() <= 0.0 {
+            continue;
+        }
+        match e.track.queue {
+            QueueKind::Compute => {
+                compute_busy += e.dur();
+                compute_iv.push((e.t0, e.t1));
+            }
+            QueueKind::Net => {
+                comm_busy += e.dur();
+                comm_iv.push((e.t0, e.t1));
+            }
+            _ => {}
+        }
+    }
+    merge_intervals(&mut compute_iv);
+    let hidden: f64 = comm_iv.iter().map(|&(s, e)| overlap_with(&compute_iv, s, e)).sum();
+    let overlap_ratio = if comm_busy > 0.0 { hidden / comm_busy } else { 0.0 };
+
+    // --- measured bubble per stage (vs the analytic curve) ---
+    let mut stage_of: HashMap<DeviceId, usize> = HashMap::new();
+    for s in &plan.schedule.stages {
+        for &d in &s.devices {
+            stage_of.insert(d, s.stage);
+        }
+    }
+    let mut stage_busy: HashMap<usize, f64> = HashMap::new();
+    for e in &trace.events {
+        if e.kind != EventKind::Action || e.track.queue != QueueKind::Compute {
+            continue;
+        }
+        let dev = DeviceId::new(e.track.node as usize, e.track.device as usize);
+        if let Some(&s) = stage_of.get(&dev) {
+            *stage_busy.entry(s).or_default() += e.dur();
+        }
+    }
+    let mut stages: Vec<StageObs> = plan
+        .schedule
+        .stages
+        .iter()
+        .map(|s| {
+            let busy = stage_busy.get(&s.stage).copied().unwrap_or(0.0);
+            let ndev = s.devices.len().max(1);
+            StageObs {
+                stage: s.stage,
+                devices: ndev,
+                busy_secs: busy,
+                bubble_measured: 1.0 - per_makespan(busy / ndev as f64),
+            }
+        })
+        .collect();
+    stages.sort_by_key(|s| s.stage);
+    let total_busy: f64 = stages.iter().map(|s| s.busy_secs).sum();
+    let total_dev: usize = stages.iter().map(|s| s.devices).sum();
+    let bubble_measured = if total_dev > 0 && makespan > 0.0 {
+        1.0 - total_busy / (total_dev as f64 * makespan)
+    } else {
+        0.0
+    };
+
+    // --- per-edge routed-transfer load ---
+    let mut edge_of: HashMap<usize, usize> = HashMap::new();
+    for (i, tr) in plan.transfers.iter().enumerate() {
+        for op in &tr.ops {
+            edge_of.insert(op.0, i);
+        }
+    }
+    let mut edge_bytes: HashMap<usize, (f64, f64)> = HashMap::new();
+    for e in &trace.events {
+        if e.kind != EventKind::Action {
+            continue;
+        }
+        if let Some(&i) = edge_of.get(&(e.node as usize)) {
+            let entry = edge_bytes.entry(i).or_default();
+            entry.0 += e.bytes;
+            entry.1 += e.dur();
+        }
+    }
+    let mut edges: Vec<EdgeObs> = edge_bytes
+        .into_iter()
+        .map(|(i, (bytes, busy))| EdgeObs {
+            transfer: i,
+            bytes,
+            busy_secs: busy,
+            occupancy: per_makespan(busy),
+        })
+        .collect();
+    edges.sort_by_key(|e| e.transfer);
+    let busiest = edges.iter().map(|e| e.occupancy).fold(0.0, f64::max);
+
+    // --- per-rank totals and straggler skew ---
+    let mut by_rank: HashMap<u32, RankObs> = HashMap::new();
+    for e in &trace.events {
+        let r = by_rank
+            .entry(e.rank)
+            .or_insert(RankObs { rank: e.rank, events: 0, busy_secs: 0.0, last_ts: 0.0 });
+        r.events += 1;
+        if e.kind == EventKind::Action {
+            r.busy_secs += e.dur();
+            r.last_ts = r.last_ts.max(e.t1);
+        }
+    }
+    let mut ranks: Vec<RankObs> = by_rank.into_values().collect();
+    ranks.sort_by_key(|r| r.rank);
+    let skew = if ranks.len() > 1 {
+        let last_max = ranks.iter().map(|r| r.last_ts).fold(f64::MIN, f64::max);
+        let last_min = ranks.iter().map(|r| r.last_ts).fold(f64::MAX, f64::min);
+        per_makespan(last_max - last_min)
+    } else {
+        0.0
+    };
+
+    TraceSummary {
+        makespan,
+        events: trace.events.len(),
+        compute_busy_secs: compute_busy,
+        comm_busy_secs: comm_busy,
+        overlap_ratio,
+        bubble_ideal: plan.schedule.bubble_fraction,
+        bubble_measured,
+        stages,
+        edges,
+        busiest_link_occupancy: busiest,
+        ranks,
+        straggler_skew: skew,
+    }
+}
+
+impl TraceSummary {
+    /// Render as the `--trace-summary` table.
+    pub fn table(&self) -> Table {
+        let mut t =
+            Table::new("trace summary (measured from the event timeline)", &["metric", "value"]);
+        let mut kv = |k: &str, v: String| {
+            t.row(&[k.to_string(), v]);
+        };
+        kv("virtual makespan (s)", format!("{:.6e}", self.makespan));
+        kv("events", self.events.to_string());
+        kv("compute busy (s)", format!("{:.6e}", self.compute_busy_secs));
+        kv("comm busy (s)", format!("{:.6e}", self.comm_busy_secs));
+        kv("comm/compute overlap", format!("{:.3}", self.overlap_ratio));
+        kv("bubble (analytic)", format!("{:.4}", self.bubble_ideal));
+        kv("bubble (measured)", format!("{:.4}", self.bubble_measured));
+        for s in &self.stages {
+            kv(
+                &format!("stage {} bubble ({} dev)", s.stage, s.devices),
+                format!("{:.4}", s.bubble_measured),
+            );
+        }
+        for e in &self.edges {
+            kv(
+                &format!("edge t{} bytes/occupancy", e.transfer),
+                format!("{:.3e} / {:.4}", e.bytes, e.occupancy),
+            );
+        }
+        kv("busiest link occupancy", format!("{:.4}", self.busiest_link_occupancy));
+        for r in &self.ranks {
+            kv(
+                &format!("rank {} events/busy/finish", r.rank),
+                format!("{} / {:.3e} / {:.6e}", r.events, r.busy_secs, r.last_ts),
+            );
+        }
+        kv("straggler skew", format!("{:.4}", self.straggler_skew));
+        t
+    }
+
+    /// Machine-readable JSON (the `TRACE_summary.json` artifact).
+    pub fn json(&self) -> String {
+        let mut o = String::with_capacity(512);
+        o.push('{');
+        o.push_str(&format!("\"makespan\":{},", self.makespan));
+        o.push_str(&format!("\"events\":{},", self.events));
+        o.push_str(&format!("\"compute_busy_secs\":{},", self.compute_busy_secs));
+        o.push_str(&format!("\"comm_busy_secs\":{},", self.comm_busy_secs));
+        o.push_str(&format!("\"overlap_ratio\":{},", self.overlap_ratio));
+        o.push_str(&format!("\"bubble_ideal\":{},", self.bubble_ideal));
+        o.push_str(&format!("\"bubble_measured\":{},", self.bubble_measured));
+        o.push_str(&format!("\"busiest_link_occupancy\":{},", self.busiest_link_occupancy));
+        o.push_str(&format!("\"straggler_skew\":{},", self.straggler_skew));
+        o.push_str("\"stages\":[");
+        for (i, s) in self.stages.iter().enumerate() {
+            if i > 0 {
+                o.push(',');
+            }
+            o.push_str(&format!(
+                "{{\"stage\":{},\"devices\":{},\"busy_secs\":{},\"bubble_measured\":{}}}",
+                s.stage, s.devices, s.busy_secs, s.bubble_measured
+            ));
+        }
+        o.push_str("],\"edges\":[");
+        for (i, e) in self.edges.iter().enumerate() {
+            if i > 0 {
+                o.push(',');
+            }
+            o.push_str(&format!(
+                "{{\"transfer\":{},\"bytes\":{},\"busy_secs\":{},\"occupancy\":{}}}",
+                e.transfer, e.bytes, e.busy_secs, e.occupancy
+            ));
+        }
+        o.push_str("],\"ranks\":[");
+        for (i, r) in self.ranks.iter().enumerate() {
+            if i > 0 {
+                o.push(',');
+            }
+            o.push_str(&format!(
+                "{{\"rank\":{},\"events\":{},\"busy_secs\":{},\"last_ts\":{}}}",
+                r.rank, r.events, r.busy_secs, r.last_ts
+            ));
+        }
+        o.push_str("]}");
+        o
+    }
+
+    /// Write [`Self::json`] to `path`.
+    pub fn write_json(&self, path: &str) -> crate::Result<()> {
+        std::fs::write(path, self.json())?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -38,5 +374,27 @@ mod tests {
             1.5,
         );
         assert!((compute_utilization(&r, crate::exec::QueueKind::Compute) - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_run_ratios_are_zero_not_garbage() {
+        // the consolidated zero-makespan guard: an empty run reports clean
+        // zeros through every per-makespan ratio
+        let r = RunReport::default();
+        assert_eq!(r.makespan, 0.0);
+        assert_eq!(r.throughput(), 0.0);
+        assert_eq!(r.per_makespan(123.0), 0.0);
+        assert_eq!(samples_per_sec(&r, 32), 0.0);
+        assert_eq!(compute_utilization(&r, crate::exec::QueueKind::Compute), 0.0);
+    }
+
+    #[test]
+    fn interval_merge_and_overlap() {
+        let mut iv = vec![(1.0, 2.0), (1.5, 3.0), (5.0, 6.0)];
+        assert!((merge_intervals(&mut iv) - 3.0).abs() < 1e-12);
+        assert_eq!(iv.len(), 2);
+        // a comm interval half under compute, half in the gap
+        assert!((overlap_with(&iv, 2.5, 5.5) - 1.0).abs() < 1e-12);
+        assert_eq!(overlap_with(&iv, 3.5, 4.5), 0.0);
     }
 }

@@ -1,0 +1,584 @@
+//! Actor-event tracing: a distributed timeline profiler for the runtime.
+//!
+//! Every queue thread owns a [`TraceBuf`] — a lock-free, thread-local event
+//! recorder the actors append to through [`crate::actor::Ctx`]. An event
+//! carries the acting actor's identity (address, plan node, out register),
+//! the piece index, the **virtual** start/end timestamps of the (max, +)
+//! algebra, the wall-clock offset since run start (meaningful on the native
+//! backend), payload bytes moved, and — for cross-rank envelopes — a flow id
+//! computed identically on both ranks so the two endpoints pair up.
+//!
+//! Tracing is strictly *observational*: recording happens after the
+//! virtual-time bookkeeping with values already computed, so a traced run
+//! has bitwise-equal losses and an identical virtual makespan to an
+//! untraced one (DESIGN.md invariant 11). When tracing is off the `Ctx`
+//! hook is `None` and the runtime does no trace work at all, preserving the
+//! allocation-free steady state of the static memory plan.
+//!
+//! At end of run every non-zero rank ships its event buffer to rank 0 over
+//! a [`crate::comm::wire::Frame::Trace`] frame; rank 0 merges the global
+//! timeline into a [`Trace`], exportable as Chrome trace-event JSON
+//! ([`Trace::chrome_json`] — loads in Perfetto / `chrome://tracing`, one
+//! track per [`ThreadKey`], flow arrows for cross-rank envelopes) and
+//! reducible to schedule metrics ([`crate::metrics::trace_summary`]).
+
+use crate::actor::addr::{ActorAddr, ThreadKey};
+use crate::actor::msg::{Envelope, Msg};
+use crate::compiler::PhysPlan;
+use crate::exec::QueueKind;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// What one recorded event describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// An actor action fired: `[t0, t1]` is its virtual execution interval.
+    Action,
+    /// An otherwise-ready action waited for a free output slot (credit-based
+    /// back-pressure): `[t0, t1]` is the virtual wait interval.
+    SlotWait,
+    /// A cross-rank envelope left this rank (instant, `t0 == t1`).
+    Send,
+    /// A cross-rank envelope arrived from a peer (instant, `t0 == t1`).
+    Recv,
+    /// An ack was sent upstream releasing an input piece (instant).
+    Ack,
+}
+
+/// Wire code of an [`EventKind`] (used by `comm::wire`).
+pub fn kind_code(k: EventKind) -> u8 {
+    match k {
+        EventKind::Action => 0,
+        EventKind::SlotWait => 1,
+        EventKind::Send => 2,
+        EventKind::Recv => 3,
+        EventKind::Ack => 4,
+    }
+}
+
+/// Inverse of [`kind_code`]; `None` for a corrupt code.
+pub fn kind_from_code(c: u8) -> Option<EventKind> {
+    Some(match c {
+        0 => EventKind::Action,
+        1 => EventKind::SlotWait,
+        2 => EventKind::Send,
+        3 => EventKind::Recv,
+        4 => EventKind::Ack,
+        _ => return None,
+    })
+}
+
+/// One recorded runtime event.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub kind: EventKind,
+    /// Worker rank that recorded the event.
+    pub rank: u32,
+    /// OS thread (hardware queue / lane) the event was recorded on — the
+    /// Perfetto track. For `Send`/`Recv` this is the recording thread, not
+    /// the destination actor's thread.
+    pub track: ThreadKey,
+    /// Acting actor (`Action`/`SlotWait`/`Ack`) or the destination actor of
+    /// the envelope (`Send`/`Recv`).
+    pub actor: ActorAddr,
+    /// Plan-node id the event belongs to (name lookup in the export).
+    pub node: u32,
+    /// Register involved (the actor's out register, or the envelope's).
+    pub reg: u32,
+    /// Piece index in the acting domain (round index for round actors).
+    pub piece: u64,
+    /// Virtual start timestamp (seconds on the modeled cluster).
+    pub t0: f64,
+    /// Virtual end timestamp; `t0 == t1` for instant events.
+    pub t1: f64,
+    /// Wall-clock nanoseconds since run start when the event was recorded
+    /// (real elapsed time on the native backend; recording order on sim).
+    pub wall_ns: u64,
+    /// Payload bytes moved across devices by this action (transfer ops).
+    pub bytes: f64,
+    /// Cross-rank flow id pairing a `Send` with its `Recv`; 0 = none.
+    pub flow: u64,
+}
+
+impl Event {
+    /// Virtual duration of the event.
+    pub fn dur(&self) -> f64 {
+        self.t1 - self.t0
+    }
+
+    /// One-line human description (failure reports, debugging).
+    pub fn desc(&self) -> String {
+        format!(
+            "{:?} node {} reg {} piece {} @ [{:.6e}, {:.6e}]s",
+            self.kind, self.node, self.reg, self.piece, self.t0, self.t1
+        )
+    }
+}
+
+/// Flow id of a cross-rank envelope, computed identically on the sending
+/// and receiving rank from fields both can see: FNV-1a over (destination
+/// actor, register, piece, message tag), forced odd so 0 means "no flow".
+pub fn flow_id(to: ActorAddr, reg: usize, piece: usize, msg_tag: u8) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for v in [to.0, reg as u64, piece as u64, msg_tag as u64] {
+        h ^= v;
+        h = h.wrapping_mul(0x100_0000_01B3);
+    }
+    h | 1
+}
+
+fn msg_tag(msg: &Msg) -> Option<(u8, usize, usize, f64)> {
+    match msg {
+        Msg::Req { reg, piece, ts, .. } => Some((0, reg.0, *piece, *ts)),
+        Msg::Ack { reg, piece, ts } => Some((1, reg.0, *piece, *ts)),
+        Msg::Kick => None,
+    }
+}
+
+fn queue_code(q: QueueKind) -> u8 {
+    match q {
+        QueueKind::Compute => 0,
+        QueueKind::H2D => 1,
+        QueueKind::D2H => 2,
+        QueueKind::HostCpu => 3,
+        QueueKind::Disk => 4,
+        QueueKind::Net => 5,
+    }
+}
+
+/// Pack a [`ThreadKey`] into one u64 for the wire codec.
+pub fn track_code(k: &ThreadKey) -> u64 {
+    ((k.node as u64) << 48)
+        | ((queue_code(k.queue) as u64) << 40)
+        | ((k.device as u64) << 32)
+        | k.lane as u64
+}
+
+/// Inverse of [`track_code`]; `None` for a corrupt queue code.
+pub fn track_from_code(v: u64) -> Option<ThreadKey> {
+    let queue = match ((v >> 40) & 0xFF) as u8 {
+        0 => QueueKind::Compute,
+        1 => QueueKind::H2D,
+        2 => QueueKind::D2H,
+        3 => QueueKind::HostCpu,
+        4 => QueueKind::Disk,
+        5 => QueueKind::Net,
+        _ => return None,
+    };
+    Some(ThreadKey {
+        node: (v >> 48) as u16,
+        queue,
+        device: ((v >> 32) & 0xFF) as u8,
+        lane: v as u32,
+    })
+}
+
+/// Sentinel track of a rank's transport-ingress thread (it is not a
+/// hardware queue, but its `Recv` events need a Perfetto track too).
+pub fn ingress_track(rank: usize) -> ThreadKey {
+    ThreadKey { node: u16::MAX, queue: QueueKind::Net, device: 0, lane: rank as u32 }
+}
+
+/// Per-thread event recorder. Thread-owned (`RefCell`, no locks): each
+/// queue thread appends to its own buffer and the engine collects the
+/// buffers through the control channel at end of run.
+pub struct TraceBuf {
+    rank: u32,
+    track: ThreadKey,
+    start: Instant,
+    events: RefCell<Vec<Event>>,
+}
+
+impl TraceBuf {
+    pub fn new(rank: usize, track: ThreadKey, start: Instant) -> Self {
+        TraceBuf { rank: rank as u32, track, start, events: RefCell::new(Vec::new()) }
+    }
+
+    fn wall_ns(&self) -> u64 {
+        self.start.elapsed().as_nanos() as u64
+    }
+
+    fn push(&self, ev: Event) {
+        self.events.borrow_mut().push(ev);
+    }
+
+    /// Record one fired action with its virtual execution interval.
+    #[allow(clippy::too_many_arguments)]
+    pub fn action(
+        &self,
+        actor: ActorAddr,
+        node: usize,
+        reg: usize,
+        piece: usize,
+        t0: f64,
+        t1: f64,
+        bytes: f64,
+    ) {
+        self.push(Event {
+            kind: EventKind::Action,
+            rank: self.rank,
+            track: self.track,
+            actor,
+            node: node as u32,
+            reg: reg as u32,
+            piece: piece as u64,
+            t0,
+            t1,
+            wall_ns: self.wall_ns(),
+            bytes,
+            flow: 0,
+        });
+    }
+
+    /// Record a back-pressure stall: the action was ready at `t0` but its
+    /// output slot only freed at `t1`.
+    pub fn slot_wait(
+        &self,
+        actor: ActorAddr,
+        node: usize,
+        reg: usize,
+        piece: usize,
+        t0: f64,
+        t1: f64,
+    ) {
+        self.push(Event {
+            kind: EventKind::SlotWait,
+            rank: self.rank,
+            track: self.track,
+            actor,
+            node: node as u32,
+            reg: reg as u32,
+            piece: piece as u64,
+            t0,
+            t1,
+            wall_ns: self.wall_ns(),
+            bytes: 0.0,
+            flow: 0,
+        });
+    }
+
+    /// Record an ack released upstream at virtual time `ts`.
+    pub fn ack(&self, actor: ActorAddr, node: usize, reg: usize, piece: usize, ts: f64) {
+        self.push(Event {
+            kind: EventKind::Ack,
+            rank: self.rank,
+            track: self.track,
+            actor,
+            node: node as u32,
+            reg: reg as u32,
+            piece: piece as u64,
+            t0: ts,
+            t1: ts,
+            wall_ns: self.wall_ns(),
+            bytes: 0.0,
+            flow: 0,
+        });
+    }
+
+    /// Record a cross-rank envelope leaving this rank.
+    pub fn send(&self, env: &Envelope) {
+        self.endpoint(EventKind::Send, env);
+    }
+
+    /// Record a cross-rank envelope arriving from a peer.
+    pub fn recv(&self, env: &Envelope) {
+        self.endpoint(EventKind::Recv, env);
+    }
+
+    fn endpoint(&self, kind: EventKind, env: &Envelope) {
+        let Some((tag, reg, piece, ts)) = msg_tag(&env.msg) else {
+            return; // kicks carry no identity worth an arrow
+        };
+        self.push(Event {
+            kind,
+            rank: self.rank,
+            track: self.track,
+            actor: env.to,
+            node: env.to.local(),
+            reg: reg as u32,
+            piece: piece as u64,
+            t0: ts,
+            t1: ts,
+            wall_ns: self.wall_ns(),
+            bytes: 0.0,
+            flow: flow_id(env.to, reg, piece, tag),
+        });
+    }
+
+    /// Description of the most recent event (failure context), if any.
+    pub fn last_desc(&self) -> Option<String> {
+        self.events.borrow().last().map(|e| e.desc())
+    }
+
+    /// Drain the buffer (end of run).
+    pub fn take(&self) -> Vec<Event> {
+        std::mem::take(&mut *self.events.borrow_mut())
+    }
+}
+
+/// A merged (possibly multi-rank) event timeline.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    /// Events sorted by virtual start time.
+    pub events: Vec<Event>,
+}
+
+impl Trace {
+    /// Merge per-thread / per-rank buffers into one global timeline.
+    pub fn merge(parts: Vec<Vec<Event>>) -> Trace {
+        let mut events: Vec<Event> = parts.into_iter().flatten().collect();
+        events.sort_by(|a, b| {
+            a.t0.total_cmp(&b.t0).then(a.rank.cmp(&b.rank)).then(a.actor.0.cmp(&b.actor.0))
+        });
+        Trace { events }
+    }
+
+    /// Virtual end time of the last event (= run makespan: every action's
+    /// completion is recorded).
+    pub fn makespan(&self) -> f64 {
+        self.events.iter().map(|e| e.t1).fold(0.0, f64::max)
+    }
+
+    /// Ranks contributing events, ascending.
+    pub fn ranks(&self) -> Vec<u32> {
+        let mut r: Vec<u32> = self.events.iter().map(|e| e.rank).collect();
+        r.sort_unstable();
+        r.dedup();
+        r
+    }
+
+    /// Export as Chrome trace-event JSON (Perfetto / `chrome://tracing`).
+    ///
+    /// One process per rank, two tracks per [`ThreadKey`] (slices on the
+    /// even tid, waits/instants on the odd one), `X` complete events for
+    /// actions and slot waits, `i` instants for acks and envelope
+    /// endpoints, and `s`/`f` flow arrows pairing each cross-rank `Send`
+    /// with its `Recv`. Timestamps are virtual microseconds.
+    pub fn chrome_json(&self, plan: &PhysPlan) -> String {
+        let mut tracks: Vec<(u32, ThreadKey)> =
+            self.events.iter().map(|e| (e.rank, e.track)).collect();
+        tracks.sort_unstable();
+        tracks.dedup();
+        let tid_of: HashMap<(u32, ThreadKey), usize> =
+            tracks.iter().enumerate().map(|(i, k)| (*k, 2 * i)).collect();
+        let name_of = |node: u32| -> String {
+            plan.nodes
+                .get(node as usize)
+                .map(|n| esc(&n.name))
+                .unwrap_or_else(|| format!("node{node}"))
+        };
+        let mut out = String::with_capacity(64 + self.events.len() * 160);
+        out.push_str("{\"traceEvents\":[\n");
+        let mut first = true;
+        let mut push = |s: String, out: &mut String, first: &mut bool| {
+            if !*first {
+                out.push_str(",\n");
+            }
+            *first = false;
+            out.push_str(&s);
+        };
+        for rank in self.ranks() {
+            push(
+                format!(
+                    "{{\"ph\":\"M\",\"pid\":{rank},\"tid\":0,\"name\":\"process_name\",\
+                     \"args\":{{\"name\":\"rank {rank}\"}}}}"
+                ),
+                &mut out,
+                &mut first,
+            );
+        }
+        for (rank, key) in &tracks {
+            let tid = tid_of[&(*rank, *key)];
+            let label = track_label(key);
+            push(
+                format!(
+                    "{{\"ph\":\"M\",\"pid\":{rank},\"tid\":{tid},\"name\":\"thread_name\",\
+                     \"args\":{{\"name\":\"{label}\"}}}}"
+                ),
+                &mut out,
+                &mut first,
+            );
+            push(
+                format!(
+                    "{{\"ph\":\"M\",\"pid\":{rank},\"tid\":{},\"name\":\"thread_name\",\
+                     \"args\":{{\"name\":\"{label} (waits)\"}}}}",
+                    tid + 1
+                ),
+                &mut out,
+                &mut first,
+            );
+        }
+        for e in &self.events {
+            let tid = tid_of[&(e.rank, e.track)];
+            let ts = e.t0 * 1e6;
+            match e.kind {
+                EventKind::Action => push(
+                    format!(
+                        "{{\"name\":\"{}\",\"cat\":\"action\",\"ph\":\"X\",\"ts\":{ts},\
+                         \"dur\":{},\"pid\":{},\"tid\":{tid},\"args\":{{\"piece\":{},\
+                         \"reg\":{},\"bytes\":{},\"wall_ns\":{}}}}}",
+                        name_of(e.node),
+                        e.dur() * 1e6,
+                        e.rank,
+                        e.piece,
+                        e.reg,
+                        e.bytes,
+                        e.wall_ns
+                    ),
+                    &mut out,
+                    &mut first,
+                ),
+                EventKind::SlotWait => push(
+                    format!(
+                        "{{\"name\":\"wait slot r{}\",\"cat\":\"wait\",\"ph\":\"X\",\
+                         \"ts\":{ts},\"dur\":{},\"pid\":{},\"tid\":{},\
+                         \"args\":{{\"piece\":{}}}}}",
+                        e.reg,
+                        e.dur() * 1e6,
+                        e.rank,
+                        tid + 1,
+                        e.piece
+                    ),
+                    &mut out,
+                    &mut first,
+                ),
+                EventKind::Ack => push(
+                    format!(
+                        "{{\"name\":\"ack r{} p{}\",\"cat\":\"ack\",\"ph\":\"i\",\"s\":\"t\",\
+                         \"ts\":{ts},\"pid\":{},\"tid\":{}}}",
+                        e.reg,
+                        e.piece,
+                        e.rank,
+                        tid + 1
+                    ),
+                    &mut out,
+                    &mut first,
+                ),
+                EventKind::Send | EventKind::Recv => {
+                    let (ph, label) = match e.kind {
+                        EventKind::Send => ("s", "send"),
+                        _ => ("f", "recv"),
+                    };
+                    push(
+                        format!(
+                            "{{\"name\":\"{label} {} r{} p{}\",\"cat\":\"ack\",\"ph\":\"i\",\
+                             \"s\":\"t\",\"ts\":{ts},\"pid\":{},\"tid\":{}}}",
+                            name_of(e.node),
+                            e.reg,
+                            e.piece,
+                            e.rank,
+                            tid + 1
+                        ),
+                        &mut out,
+                        &mut first,
+                    );
+                    let bp = if e.kind == EventKind::Recv { ",\"bp\":\"e\"" } else { "" };
+                    push(
+                        format!(
+                            "{{\"name\":\"xrank\",\"cat\":\"flow\",\"ph\":\"{ph}\"{bp},\
+                             \"id\":\"0x{:x}\",\"ts\":{ts},\"pid\":{},\"tid\":{}}}",
+                            e.flow,
+                            e.rank,
+                            tid + 1
+                        ),
+                        &mut out,
+                        &mut first,
+                    );
+                }
+            }
+        }
+        out.push_str("\n]}\n");
+        out
+    }
+
+    /// Write [`Self::chrome_json`] to `path`.
+    pub fn write_chrome_json(&self, path: &str, plan: &PhysPlan) -> crate::Result<()> {
+        std::fs::write(path, self.chrome_json(plan))?;
+        Ok(())
+    }
+}
+
+fn track_label(k: &ThreadKey) -> String {
+    if k.node == u16::MAX {
+        return format!("comm-ingress (rank {})", k.lane);
+    }
+    let lane = if k.lane != 0 { format!(":lane{}", k.lane) } else { String::new() };
+    format!("n{}:{:?}:d{}{lane}", k.node, k.queue, k.device)
+}
+
+/// Minimal JSON string escaping for plan-node names.
+fn esc(s: &str) -> String {
+    let mut o = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => o.push_str("\\\""),
+            '\\' => o.push_str("\\\\"),
+            c if (c as u32) < 0x20 => o.push_str(&format!("\\u{:04x}", c as u32)),
+            c => o.push(c),
+        }
+    }
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn flow_id_is_deterministic_and_nonzero() {
+        let a = ActorAddr::new(1, QueueKind::Compute, 0, 7);
+        let x = flow_id(a, 3, 5, 0);
+        assert_eq!(x, flow_id(a, 3, 5, 0), "both ranks must derive the same id");
+        assert_ne!(x, 0);
+        assert_ne!(x, flow_id(a, 3, 6, 0), "pieces must not collide");
+        assert_ne!(x, flow_id(a, 3, 5, 1), "req and ack arrows must differ");
+    }
+
+    #[test]
+    fn track_code_roundtrip_property() {
+        prop::check(
+            "thread-key wire code roundtrip",
+            200,
+            |r| {
+                let q = *r.choose(&[
+                    QueueKind::Compute,
+                    QueueKind::H2D,
+                    QueueKind::D2H,
+                    QueueKind::HostCpu,
+                    QueueKind::Disk,
+                    QueueKind::Net,
+                ]);
+                ThreadKey {
+                    node: r.below(1 << 16) as u16,
+                    queue: q,
+                    device: r.below(1 << 8) as u8,
+                    lane: r.next_u64() as u32,
+                }
+            },
+            |k| track_from_code(track_code(k)) == Some(*k),
+        );
+    }
+
+    #[test]
+    fn merge_sorts_by_virtual_start() {
+        let t0 = Instant::now();
+        let a = TraceBuf::new(0, ingress_track(0), t0);
+        a.action(ActorAddr::new(0, QueueKind::Compute, 0, 1), 1, 1, 0, 2.0, 3.0, 0.0);
+        let b = TraceBuf::new(1, ingress_track(1), t0);
+        b.action(ActorAddr::new(1, QueueKind::Compute, 0, 2), 2, 2, 0, 0.5, 1.0, 0.0);
+        let tr = Trace::merge(vec![a.take(), b.take()]);
+        assert_eq!(tr.events.len(), 2);
+        assert!(tr.events[0].t0 <= tr.events[1].t0);
+        assert_eq!(tr.makespan(), 3.0);
+        assert_eq!(tr.ranks(), vec![0, 1]);
+    }
+
+    #[test]
+    fn json_escaping_is_safe() {
+        assert_eq!(esc("plain_name"), "plain_name");
+        assert_eq!(esc("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(esc("x\ny"), "x\\u000ay");
+    }
+}

@@ -2,7 +2,9 @@
 //! rather than hang silently, and the compile-time planner must reject what
 //! cannot run (the Fig 2 class of failures). ISSUE 4 adds the transfer
 //! plane: a lost point-to-point shard frame surfaces as a rank-tagged run
-//! error naming the route, within the comm deadline — never a hang.
+//! error naming the route, within the comm deadline — never a hang. ISSUE 7
+//! enriches every failure report with the failing actor's virtual clock,
+//! piece progress, and the queue thread's last recorded trace event.
 
 use oneflow::actor::{Engine, RunOptions};
 use oneflow::compiler::{compile, CompileOptions};
@@ -162,6 +164,7 @@ fn tcp_dropped_shard_frame_surfaces_named_route_error() {
             Engine::new(build(), Arc::new(NativeBackend))
                 .with_source(source())
                 .with_transport(t)
+                .with_trace()
                 .run_with(RunOptions { pieces: 3, timeout: Some(Duration::from_secs(16)) })
         })
     };
@@ -176,6 +179,11 @@ fn tcp_dropped_shard_frame_surfaces_named_route_error() {
     assert!(err.contains("shard route"), "error does not name the route: {err}");
     assert!(err.contains("m0"), "error does not identify the member: {err}");
     assert!(err.contains("lost or late"), "error does not describe the failure: {err}");
+    // ISSUE 7: failure reports carry the failing actor's virtual clock and
+    // piece progress, plus the queue thread's last recorded trace event
+    assert!(err.contains("at piece"), "error lacks the actor's piece progress: {err}");
+    assert!(err.contains("virtual t="), "error lacks the failing actor's virtual clock: {err}");
+    assert!(err.contains("last trace event:"), "error lacks the last trace event: {err}");
     // the producer rank cannot complete either (its consumers never ack);
     // it must also surface an error rather than hang past its watchdog
     assert!(r0.is_err(), "rank 0 unexpectedly succeeded after the fault");

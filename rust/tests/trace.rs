@@ -1,0 +1,304 @@
+//! Actor-event tracing (DESIGN.md §3 trace subsystem, invariant 11): the
+//! recorder is value- and schedule-transparent (bitwise-equal losses and
+//! makespans with tracing on/off, allocation-free steady state intact),
+//! per-track timelines are well nested and monotone, the trace-derived
+//! bubble sits on the analytic 1F1B curve, and a 2-rank TCP run merges
+//! both ranks' events on rank 0 with paired send/recv flow ids in a
+//! schema-valid Chrome trace export.
+
+use oneflow::actor::{DataSource, Engine, FnSource, RunOptions, RunReport, ThreadKey};
+use oneflow::comm::{tcp_local_world, Transport};
+use oneflow::compiler::{compile, CompileOptions, InputBinding, PhysPlan, ScheduleMode};
+use oneflow::data::SyntheticCorpus;
+use oneflow::exec::{CostSpec, QueueKind};
+use oneflow::graph::{LogicalGraph, OpKind, TensorId};
+use oneflow::metrics;
+use oneflow::models::{gpt_pipeline_real, GptPipelineConfig};
+use oneflow::pipeline::bubble_fraction;
+use oneflow::placement::Placement;
+use oneflow::runtime::{NativeBackend, SimBackend};
+use oneflow::tensor::{DType, Tensor};
+use oneflow::trace::EventKind;
+use oneflow::util::prop;
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+use std::time::Duration;
+
+// ---- the balanced cost-only pipeline (same shape as tests/schedule.rs) ----
+
+fn stage_chain(p: usize, flops: f64) -> (LogicalGraph, TensorId) {
+    let mut g = LogicalGraph::new();
+    let mut t = g.add1(
+        "src",
+        OpKind::Flops {
+            name: "src".into(),
+            out: [4, 4].into(),
+            dtype: DType::F32,
+            cost: CostSpec { flops: 0.0, read_bytes: 0.0, write_bytes: 0.0, queue: QueueKind::HostCpu },
+            split_axes: vec![0],
+            param_bytes: 0.0,
+        },
+        &[],
+        Placement::node(0, 1),
+    );
+    for s in 0..p {
+        t = g.add1(
+            format!("stage{s}"),
+            OpKind::Flops {
+                name: format!("stage{s}"),
+                out: [4, 4].into(),
+                dtype: DType::F32,
+                cost: CostSpec::compute(flops, 0.0, 0.0),
+                split_axes: vec![0],
+                param_bytes: 0.0,
+            },
+            &[t],
+            Placement::node(s, 1),
+        );
+    }
+    (g, t)
+}
+
+fn chain_build(p: usize, m: usize) -> PhysPlan {
+    let (g, y) = stage_chain(p, 2e10);
+    let opts = CompileOptions { microbatches: m, fuse: false, ..Default::default() };
+    compile(&g, &[y], &HashMap::new(), &opts)
+}
+
+// ---- the accumulating 2-stage GPT (same shape as tests/schedule.rs) -------
+
+fn acc_cfg() -> GptPipelineConfig {
+    GptPipelineConfig {
+        stages: 2,
+        vocab: 32,
+        hidden: 16,
+        ff: 32,
+        blocks_per_stage: 1,
+        rows: 32,
+        lr: 0.2,
+        microbatches: 2,
+    }
+}
+
+fn acc_build() -> PhysPlan {
+    let (g, loss, upd) = gpt_pipeline_real(&acc_cfg());
+    let opts = CompileOptions { schedule: ScheduleMode::OneFOneB, ..Default::default() };
+    compile(&g, &[loss], &upd, &opts)
+}
+
+fn acc_source() -> Arc<dyn DataSource> {
+    let cfg = acc_cfg();
+    let corpus = Arc::new(SyntheticCorpus::new(2048, cfg.vocab, 13));
+    let rows = cfg.rows;
+    Arc::new(FnSource(move |b: &InputBinding, piece: usize| {
+        let (ids, labels) = corpus.batch(piece, 1, rows);
+        match b.name.as_str() {
+            "ids" => Tensor::new([rows], DType::I32, ids.data),
+            "labels" => Tensor::new([rows], DType::I32, labels.data),
+            _ => Tensor::full(b.shape.clone(), b.dtype, 1.0),
+        }
+    }))
+}
+
+fn acc_loss() -> TensorId {
+    gpt_pipeline_real(&acc_cfg()).1
+}
+
+fn loss_bits(r: &RunReport, loss: TensorId) -> Vec<Vec<u32>> {
+    r.fetched
+        .get(&loss)
+        .expect("loss not fetched")
+        .iter()
+        .map(|t| t.data.iter().map(|x| x.to_bits()).collect())
+        .collect()
+}
+
+// ---- invariant 11: schedule transparency on the simulated chain -----------
+
+/// Tracing must not move virtual time: the traced 1F1B chain reproduces the
+/// untraced makespan bit for bit, the merged timeline spans the run, and
+/// the trace-derived bubble sits on the analytic `(p-1)/(m+p-1)` curve.
+#[test]
+fn tracing_is_schedule_transparent_on_the_sim_chain() {
+    let (p, m) = (4usize, 8usize);
+    let plain = Engine::new(chain_build(p, m), Arc::new(SimBackend)).run(m);
+    assert!(plain.trace.is_none(), "untraced run must not carry a timeline");
+
+    let eng = Engine::new(chain_build(p, m), Arc::new(SimBackend)).with_trace();
+    let traced = eng.run(m);
+    assert_eq!(
+        traced.makespan.to_bits(),
+        plain.makespan.to_bits(),
+        "tracing moved virtual time"
+    );
+    let trace = traced.trace.as_ref().expect("traced run carries a timeline");
+    assert_eq!(trace.makespan().to_bits(), traced.makespan.to_bits());
+    assert_eq!(trace.ranks(), vec![0]);
+
+    let summary = metrics::trace_summary(trace, eng.plan());
+    let ideal = bubble_fraction(p, m);
+    assert!(
+        (summary.bubble_measured - ideal).abs() < 0.05,
+        "trace-derived bubble {:.4} vs ideal {ideal:.4}",
+        summary.bubble_measured
+    );
+    assert!(summary.compute_busy_secs > 0.0);
+    assert!(summary.comm_busy_secs > 0.0, "inter-stage transfers must appear on Net tracks");
+    assert!(!summary.edges.is_empty(), "routed-transfer edges must be attributed");
+    assert!(summary.busiest_link_occupancy > 0.0);
+    assert_eq!(summary.stages.len(), p);
+    // quota-limited 1F1B must surface back-pressure as recorded slot waits
+    assert!(
+        trace.events.iter().any(|e| e.kind == EventKind::SlotWait),
+        "no SlotWait events in a quota-limited pipeline"
+    );
+}
+
+// ---- invariant 11: value transparency on the native GPT -------------------
+
+/// Tracing must not change values or break the allocation-free steady
+/// state: losses and pool-miss counts are identical with the recorder on.
+#[test]
+fn tracing_is_value_transparent_for_native_gpt() {
+    let pieces = 6; // 3 accumulation rounds of M=2
+    let loss = acc_loss();
+    let run = |trace_on: bool| {
+        let mut e = Engine::new(acc_build(), Arc::new(NativeBackend)).with_source(acc_source());
+        if trace_on {
+            e = e.with_trace();
+        }
+        e.run_with(RunOptions { pieces, timeout: Some(Duration::from_secs(60)) })
+            .expect("in-process run")
+    };
+    let plain = run(false);
+    let traced = run(true);
+    assert_eq!(
+        loss_bits(&plain, loss),
+        loss_bits(&traced, loss),
+        "tracing changed training values"
+    );
+    assert_eq!(
+        plain.buffer_allocs, traced.buffer_allocs,
+        "tracing perturbed the allocation-free steady state"
+    );
+    let trace = traced.trace.as_ref().expect("timeline");
+    assert!(trace.events.iter().any(|e| e.kind == EventKind::Action));
+    assert!(trace.events.iter().any(|e| e.kind == EventKind::Ack));
+    assert!(trace.makespan() > 0.0);
+}
+
+// ---- per-track structure --------------------------------------------------
+
+/// Property: on any chain the merged timeline is well formed — action
+/// slices on one (rank, track) never overlap (queue exclusivity) and each
+/// actor's pieces strictly increase in start order.
+#[test]
+fn trace_timelines_are_well_nested_and_monotone() {
+    prop::check(
+        "per-track action slices disjoint, per-actor pieces ordered",
+        12,
+        |r| (r.range(2, 5), r.range(1, 9)),
+        |(p, m)| {
+            let eng = Engine::new(chain_build(*p, *m), Arc::new(SimBackend)).with_trace();
+            let trace = eng.run(*m).trace.expect("timeline");
+            let mut last_end: HashMap<(u32, ThreadKey), f64> = HashMap::new();
+            let mut last_start: HashMap<u64, (f64, u64)> = HashMap::new();
+            let mut ok = true;
+            // merge() sorts by t0, so one pass checks both properties
+            for e in &trace.events {
+                if e.kind != EventKind::Action {
+                    continue;
+                }
+                ok &= e.t1 >= e.t0;
+                let le = last_end.entry((e.rank, e.track)).or_insert(f64::MIN);
+                ok &= e.t0 >= *le;
+                *le = le.max(e.t1);
+                let ap = last_start.entry(e.actor.0).or_insert((f64::MIN, 0));
+                ok &= e.t0 >= ap.0 && (ap.1 == 0 || e.piece + 1 > ap.1);
+                *ap = (e.t0, e.piece + 1);
+            }
+            ok && trace.events.iter().any(|e| e.kind == EventKind::Action)
+        },
+    );
+}
+
+// ---- distributed merge ----------------------------------------------------
+
+fn run_dist_traced(pieces: usize) -> (RunReport, RunReport) {
+    let mut w = tcp_local_world(2).expect("rendezvous");
+    let t1 = w.pop().expect("rank 1");
+    let t0 = w.pop().expect("rank 0");
+    let spawn = |t: Arc<dyn Transport>| {
+        std::thread::spawn(move || {
+            Engine::new(acc_build(), Arc::new(NativeBackend))
+                .with_source(acc_source())
+                .with_transport(t)
+                .with_trace()
+                .run_with(RunOptions { pieces, timeout: Some(Duration::from_secs(60)) })
+                .expect("distributed run")
+        })
+    };
+    let h0 = spawn(t0);
+    let h1 = spawn(t1);
+    (h0.join().expect("rank 0"), h1.join().expect("rank 1"))
+}
+
+/// A 2-rank TCP pipeline merges both ranks' buffers on rank 0 at finalize
+/// (rank 1 ships its events over `Frame::Trace`), every cross-rank envelope
+/// pairs its send with the peer's recv through a shared flow id, and the
+/// Chrome export is schema-valid with matching `s`/`f` arrow ids.
+#[test]
+fn tcp_two_rank_trace_merges_both_ranks_with_matching_flow_ids() {
+    let pieces = 4; // 2 accumulation rounds of M=2
+    let (r0, r1) = run_dist_traced(pieces);
+    assert!(r1.trace.is_none(), "only rank 0 holds the merged timeline");
+    let trace = r0.trace.as_ref().expect("rank 0 merged timeline");
+    assert_eq!(trace.ranks(), vec![0, 1], "merged trace must contain both ranks' events");
+
+    let flows = |kind: EventKind| -> HashSet<u64> {
+        trace.events.iter().filter(|e| e.kind == kind).map(|e| e.flow).collect()
+    };
+    let sends = flows(EventKind::Send);
+    let recvs = flows(EventKind::Recv);
+    assert!(!sends.is_empty(), "a 2-rank pipeline must cross the wire");
+    assert_eq!(sends, recvs, "every cross-rank envelope must pair send/recv flow ids");
+
+    // the export is Perfetto-loadable: required fields per phase, flow
+    // arrows pair up (plan construction is deterministic across ranks)
+    let plan = acc_build();
+    let json = trace.chrome_json(&plan);
+    let root = oneflow::config::json::parse(&json).expect("chrome trace parses");
+    let events = root.req("traceEvents").as_arr().expect("traceEvents array");
+    let mut s_ids = HashSet::new();
+    let mut f_ids = HashSet::new();
+    for e in events {
+        let ph = e.req("ph").as_str().expect("ph is a string");
+        match ph {
+            "M" => assert!(e.get("name").is_some(), "metadata event missing name"),
+            "X" => {
+                for k in ["ts", "dur", "pid", "tid", "name"] {
+                    assert!(e.get(k).is_some(), "X event missing {k}");
+                }
+            }
+            "i" => {
+                for k in ["ts", "pid", "tid"] {
+                    assert!(e.get(k).is_some(), "i event missing {k}");
+                }
+            }
+            "s" | "f" => {
+                for k in ["ts", "pid", "tid"] {
+                    assert!(e.get(k).is_some(), "flow event missing {k}");
+                }
+                let id = e.req("id").as_str().expect("flow id is a string").to_string();
+                if ph == "s" {
+                    s_ids.insert(id);
+                } else {
+                    f_ids.insert(id);
+                }
+            }
+            other => panic!("unknown phase `{other}` in export"),
+        }
+    }
+    assert!(!s_ids.is_empty(), "flow arrows must be exported");
+    assert_eq!(s_ids, f_ids, "flow starts and ends must pair up");
+}
