@@ -1,0 +1,174 @@
+//! Auto-parallelism bench (ISSUE 8): search the `stages × dp × tp` lattice
+//! of a device world for the hybrid GPT, then *simulate* every surviving
+//! candidate and compare the search's predicted ranking against the
+//! virtual-time measurement. Writes `BENCH_autoparallel.json` with the
+//! frontier size, search wall time, and the winner-vs-baseline makespan
+//! ratio (baseline = the hand-picked default grid of the same world).
+//! `--quick` shrinks the world for CI.
+
+use oneflow::actor::Engine;
+use oneflow::bench::Table;
+use oneflow::compiler::{
+    compile, search, CompileOptions, ParallelConfig, ScheduleMode, SearchSpace,
+};
+use oneflow::config::Args;
+use oneflow::exec::CostModel;
+use oneflow::models::{gpt_hybrid_auto, GptModelSpec};
+use oneflow::runtime::SimBackend;
+use oneflow::util::fmt;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Compile one config's plan and run it on the simulated cluster; returns
+/// the measured virtual makespan per piece.
+fn simulate(spec: &GptModelSpec, pc: &ParallelConfig, cost: &CostModel, pieces: usize) -> f64 {
+    let (g, loss, upd) = gpt_hybrid_auto(spec, pc).expect("feasible config");
+    let opts = CompileOptions {
+        schedule: pc.schedule,
+        microbatches: pc.microbatches,
+        cluster: cost.cluster,
+        parallel: Some(*pc),
+        ..Default::default()
+    };
+    let plan = compile(&g, &[loss], &upd, &opts);
+    let report = Engine::new(plan, Arc::new(SimBackend)).run(pieces);
+    report.makespan / pieces as f64
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.flag("quick");
+    let (nodes, dpn) = if quick { (2, 2) } else { (4, 2) };
+    let pieces = 8;
+    let space = SearchSpace {
+        nodes,
+        devs_per_node: dpn,
+        microbatches: 4,
+        schedule: ScheduleMode::OneFOneB,
+    };
+    let spec = GptModelSpec::default();
+    let cost = CostModel::paper_testbed();
+    let base = CompileOptions::default();
+
+    let t0 = Instant::now();
+    let frontier = search::search(&space, &cost, &base, |pc| gpt_hybrid_auto(&spec, pc));
+    let search_secs = t0.elapsed().as_secs_f64();
+
+    frontier.table().print();
+    println!();
+    let winner = frontier.winner().expect("search found no feasible config").clone();
+
+    // the grid a user would have hand-picked for this world: the default
+    // 2-stage dp×tp hybrid, sized to fill nodes×dpn devices
+    let world = space.world_devices();
+    let baseline = ParallelConfig {
+        stages: 2,
+        dp: world / 4,
+        tp: 2,
+        devs_per_node: dpn,
+        microbatches: space.microbatches,
+        schedule: space.schedule,
+    };
+    assert_eq!(baseline.n_devices(), world, "baseline must fill the world");
+    let baseline_pred = frontier
+        .candidates
+        .iter()
+        .find(|c| c.config == baseline)
+        .map(|c| c.predicted.makespan)
+        .expect("hand-picked baseline grid must be a legal candidate");
+
+    // measure every survivor on the simulated cluster and compare orderings
+    let mut tab = Table::new(
+        &format!("auto-parallel: predicted vs simulated ({world} devices)"),
+        &["config", "predicted/piece", "simulated/piece", "pred/sim"],
+    );
+    let mut measured: Vec<(ParallelConfig, f64, f64)> = Vec::new();
+    for c in &frontier.candidates {
+        let sim = simulate(&spec, &c.config, &cost, pieces);
+        tab.row(&[
+            c.config.label(),
+            fmt::secs(c.predicted.makespan),
+            fmt::secs(sim),
+            format!("{:.2}", c.predicted.makespan / sim),
+        ]);
+        measured.push((c.config, c.predicted.makespan, sim));
+    }
+    tab.print();
+
+    // rank agreement: fraction of candidate pairs the prediction orders the
+    // same way the simulation does (1.0 = identical ranking)
+    let mut concordant = 0usize;
+    let mut pairs = 0usize;
+    for i in 0..measured.len() {
+        for j in i + 1..measured.len() {
+            pairs += 1;
+            let pred = measured[i].1 <= measured[j].1;
+            let sim = measured[i].2 <= measured[j].2;
+            if pred == sim {
+                concordant += 1;
+            }
+        }
+    }
+    let rank_agreement = if pairs > 0 { concordant as f64 / pairs as f64 } else { 1.0 };
+
+    let winner_sim = measured[0].2;
+    let baseline_sim = measured
+        .iter()
+        .find(|(pc, _, _)| *pc == baseline)
+        .map(|(_, _, s)| *s)
+        .unwrap();
+    let ratio_pred = winner.predicted.makespan / baseline_pred;
+    let ratio_sim = winner_sim / baseline_sim;
+    println!(
+        "\nsearch: {} survivors, {} pruned, {:.3}s wall",
+        frontier.candidates.len(),
+        frontier.pruned.len(),
+        search_secs
+    );
+    println!(
+        "winner {} vs hand-picked {}: predicted {:.3}x, simulated {:.3}x, rank agreement {:.2}",
+        winner.config.label(),
+        baseline.label(),
+        ratio_pred,
+        ratio_sim,
+        rank_agreement
+    );
+
+    // acceptance: the searched winner is predicted no slower than the
+    // hand-picked baseline, and the simulation confirms it (5% tolerance
+    // for cost-model error)
+    assert!(
+        winner.predicted.makespan <= baseline_pred,
+        "winner predicted {} slower than baseline {}",
+        winner.predicted.makespan,
+        baseline_pred
+    );
+    assert!(
+        ratio_sim <= 1.05,
+        "searched winner simulated {:.3}x the hand-picked baseline",
+        ratio_sim
+    );
+    assert!(
+        rank_agreement >= 0.5,
+        "predicted ranking mostly disagrees with simulation ({rank_agreement:.2})"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"autoparallel\",\n  \"quick\": {quick},\n  \"world\": {world},\n  \
+         \"frontier_size\": {},\n  \"pruned\": {},\n  \"search_secs\": {search_secs:.6},\n  \
+         \"winner\": \"{}\",\n  \"baseline\": \"{}\",\n  \
+         \"winner_predicted_secs\": {:.6e},\n  \"winner_simulated_secs\": {winner_sim:.6e},\n  \
+         \"baseline_predicted_secs\": {baseline_pred:.6e},\n  \
+         \"baseline_simulated_secs\": {baseline_sim:.6e},\n  \
+         \"winner_vs_baseline_predicted\": {ratio_pred:.4},\n  \
+         \"winner_vs_baseline_simulated\": {ratio_sim:.4},\n  \
+         \"rank_agreement\": {rank_agreement:.4}\n}}\n",
+        frontier.candidates.len(),
+        frontier.pruned.len(),
+        winner.config.label(),
+        baseline.label(),
+        winner.predicted.makespan,
+    );
+    std::fs::write("BENCH_autoparallel.json", &json).expect("write BENCH_autoparallel.json");
+    println!("\nwrote BENCH_autoparallel.json");
+}

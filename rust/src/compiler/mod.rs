@@ -19,12 +19,16 @@
 pub mod select;
 pub mod physical;
 pub mod fusion;
+pub mod parallel;
+pub mod search;
 
+pub use parallel::{ParallelConfig, ParallelDesc};
 pub use physical::{
     compile, CollectiveSpec, FetchBinding, InputBinding, PhysKernel, PhysNode, PhysOpId,
     PhysPlan, RecvOpSpec, RegDesc, RegId, ScheduleDesc, SendSpec, ShardInfo, StageSched,
     TransferDesc, TransferKind, VarBinding,
 };
+pub use search::{search, Candidate, Frontier, Predicted, SearchSpace};
 pub use select::{boxing_secs, plan_cost, select_sbp, SelectStrategy, Signature};
 
 use crate::exec::ClusterModel;
@@ -64,6 +68,26 @@ pub struct CompileOptions {
     /// (unbucketed allreduce, TF1/parameter-server style) instead of
     /// overlapping per-tensor as the actor runtime naturally does.
     pub serialize_comm: bool,
+    /// SBP beam width (`--beam`): 1 keeps whatever `strategy` says (greedy
+    /// by default); > 1 widens selection to a beam of that width. The once
+    /// hard-coded width of `select::select_sbp`, surfaced.
+    pub beam_width: usize,
+    /// The parallelization the plan was compiled under, when it came from an
+    /// explicit [`ParallelConfig`] (the `--auto` search or a declared grid).
+    /// Recorded on the plan as its [`ParallelDesc`]; `None` derives the
+    /// descriptor from the graph's own placements.
+    pub parallel: Option<ParallelConfig>,
+}
+
+impl CompileOptions {
+    /// Strategy after applying `beam_width`: a width > 1 widens a greedy
+    /// request into a beam; an explicit `SelectStrategy::Beam` wins.
+    pub fn effective_strategy(&self) -> SelectStrategy {
+        match (self.beam_width, self.strategy) {
+            (w, SelectStrategy::Greedy) if w > 1 => SelectStrategy::Beam { width: w },
+            (_, s) => s,
+        }
+    }
 }
 
 impl Default for CompileOptions {
@@ -76,6 +100,8 @@ impl Default for CompileOptions {
             cluster: ClusterModel::paper_testbed(),
             seed: 0x0F10,
             serialize_comm: false,
+            beam_width: 1,
+            parallel: None,
         }
     }
 }

@@ -1,0 +1,330 @@
+//! Backend- and model-agnostic parallelization config (the searched
+//! artifact of `oneflow plan --auto`).
+//!
+//! Before this module every model hand-wired its own device grid:
+//! `GptSimConfig` regridded `pipeline::stage_placements` output into a
+//! `[dp, mp]` hierarchy, `GptHybridConfig` built per-stage `[dp, tp]`
+//! grids inline, and `GptPipelineConfig` pinned one node per stage. All
+//! three reduce to the same flat numbering, which lives here once:
+//!
+//! ```text
+//! stage s, member m of the row-major [dp, tp] grid
+//!   → flat = s·dp·tp + m
+//!   → DeviceId { node: flat / devs_per_node, dev: flat % devs_per_node }
+//! ```
+//!
+//! A [`ParallelConfig`] is what models *declare* (layer count + device
+//! world, not placements); [`ParallelDesc`] is what the compiler *records*
+//! on every [`super::PhysPlan`] — either copied from the config that was
+//! searched/requested, or derived from the plan's own placements so that
+//! hand-built graphs are described too.
+
+use crate::graph::LogicalGraph;
+use crate::placement::{DeviceId, Placement};
+use anyhow::bail;
+
+use super::physical::ScheduleDesc;
+use super::ScheduleMode;
+
+/// A complete parallelization decision: how many pipeline stages, the
+/// per-stage data×tensor grid, the machine shape, and the schedule that
+/// drives it. `stages · dp · tp` devices total.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelConfig {
+    /// Pipeline stages (p).
+    pub stages: usize,
+    /// Data-parallel width per stage (hierarchy dim 0).
+    pub dp: usize,
+    /// Tensor-parallel width per stage (hierarchy dim 1).
+    pub tp: usize,
+    /// Devices per node of the machine the grid is laid onto.
+    pub devs_per_node: usize,
+    /// Micro-batches per logical batch (the 1F1B in-flight cap M).
+    pub microbatches: usize,
+    /// Slot-quota policy for the scheduling pass.
+    pub schedule: ScheduleMode,
+}
+
+impl Default for ParallelConfig {
+    fn default() -> Self {
+        ParallelConfig {
+            stages: 1,
+            dp: 1,
+            tp: 1,
+            devs_per_node: 1,
+            microbatches: 2,
+            schedule: ScheduleMode::OneFOneB,
+        }
+    }
+}
+
+impl ParallelConfig {
+    /// Total devices the grid occupies.
+    pub fn n_devices(&self) -> usize {
+        self.stages * self.dp * self.tp
+    }
+
+    /// Nodes spanned (ceiling division: the last node may be partial).
+    pub fn n_nodes(&self) -> usize {
+        let d = self.devs_per_node.max(1);
+        self.n_devices().div_ceil(d)
+    }
+
+    /// Short grid label, e.g. `p2·dp2·tp1`.
+    pub fn label(&self) -> String {
+        format!("p{}·dp{}·tp{}", self.stages, self.dp, self.tp)
+    }
+
+    /// Named errors for degenerate grids (satellite of ISSUE 8: panics on
+    /// invalid world/grid combinations become `Err`s the CLI can surface).
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.stages == 0 || self.dp == 0 || self.tp == 0 {
+            bail!(
+                "degenerate parallel config {}: every factor must be >= 1",
+                self.label()
+            );
+        }
+        if self.devs_per_node == 0 {
+            bail!("degenerate parallel config: devs_per_node must be >= 1");
+        }
+        if self.microbatches == 0 {
+            bail!("degenerate parallel config: microbatches must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Named error unless the grid exactly fills a `nodes × devs_per_node`
+    /// world. This is the "non-divisible dp·tp vs devs" failure mode that
+    /// used to panic deep inside `regrid`.
+    pub fn fit_world(&self, nodes: usize, devs_per_node: usize) -> crate::Result<()> {
+        self.validate()?;
+        let world = nodes * devs_per_node;
+        if self.devs_per_node != devs_per_node {
+            bail!(
+                "parallel config {} assumes {} devs/node but the world has {}",
+                self.label(),
+                self.devs_per_node,
+                devs_per_node
+            );
+        }
+        if self.n_devices() != world {
+            bail!(
+                "parallel config {} needs {} devices but the world {}x{} has {}",
+                self.label(),
+                self.n_devices(),
+                nodes,
+                devs_per_node,
+                world
+            );
+        }
+        Ok(())
+    }
+
+    /// One per-stage placement with the rank-2 `[dp, tp]` hierarchy NdSbp
+    /// hints are written against (kept rank 2 even at dp = tp = 1 — 2-D
+    /// signatures assert their hierarchy rank).
+    pub fn stage_grids(&self) -> crate::Result<Vec<Placement>> {
+        self.validate()?;
+        let per_stage = self.dp * self.tp;
+        Ok((0..self.stages)
+            .map(|s| {
+                Placement::new(
+                    vec![self.dp, self.tp],
+                    stage_devices(s, per_stage, self.devs_per_node),
+                )
+            })
+            .collect())
+    }
+}
+
+impl std::fmt::Display for ParallelConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} ({} devs over {} node(s) × {}/node, M={}, {:?})",
+            self.label(),
+            self.n_devices(),
+            self.n_nodes(),
+            self.devs_per_node,
+            self.microbatches,
+            self.schedule
+        )
+    }
+}
+
+/// The one shared placement constructor: devices of stage `stage` when
+/// every stage owns `per_stage` consecutive flat slots packed onto nodes
+/// of `devs_per_node` devices. Stages may share a node or span several —
+/// both were legal in the builders this replaces.
+pub fn stage_devices(stage: usize, per_stage: usize, devs_per_node: usize) -> Vec<DeviceId> {
+    let d = devs_per_node.max(1);
+    (0..per_stage)
+        .map(|i| {
+            let flat = stage * per_stage + i;
+            DeviceId::new(flat / d, flat % d)
+        })
+        .collect()
+}
+
+/// How a compiled plan was parallelized — recorded on every
+/// [`super::PhysPlan`], whether the grid was searched, hand-picked, or
+/// implicit in a hand-built graph.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParallelDesc {
+    pub stages: usize,
+    pub dp: usize,
+    pub tp: usize,
+    pub devs_per_node: usize,
+    pub n_devices: usize,
+    pub n_nodes: usize,
+    /// True when the grid came out of `compiler::search` rather than a
+    /// hand-picked model config.
+    pub searched: bool,
+}
+
+impl ParallelDesc {
+    /// Describe an explicit config (the searched / hand-requested path).
+    pub fn from_config(cfg: &ParallelConfig, searched: bool) -> Self {
+        ParallelDesc {
+            stages: cfg.stages,
+            dp: cfg.dp,
+            tp: cfg.tp,
+            devs_per_node: cfg.devs_per_node,
+            n_devices: cfg.n_devices(),
+            n_nodes: cfg.n_nodes(),
+            searched,
+        }
+    }
+
+    /// Derive a descriptor from a hand-built logical graph: stage count
+    /// from the scheduling pass, `[dp, tp]` from the first rank-2 compute
+    /// placement (rank-1 placements read as `dp` wide, `tp = 1`), machine
+    /// shape from the device set actually used.
+    pub fn derive(g: &LogicalGraph, schedule: &ScheduleDesc) -> Self {
+        let mut dp = 1;
+        let mut tp = 1;
+        for n in &g.nodes {
+            if n.inputs.is_empty() {
+                continue; // sources join their consumer's grid
+            }
+            match n.placement.hierarchy.as_slice() {
+                [a, b] => {
+                    dp = *a;
+                    tp = *b;
+                    break;
+                }
+                [a] if *a > 1 => {
+                    dp = *a;
+                    tp = 1;
+                    break;
+                }
+                _ => {}
+            }
+        }
+        let mut devices: Vec<DeviceId> = g
+            .nodes
+            .iter()
+            .flat_map(|n| n.placement.devices.iter().copied())
+            .collect();
+        devices.sort();
+        devices.dedup();
+        let mut nodes: Vec<usize> = devices.iter().map(|d| d.node).collect();
+        nodes.sort();
+        nodes.dedup();
+        let devs_per_node = devices.iter().map(|d| d.dev + 1).max().unwrap_or(1);
+        ParallelDesc {
+            stages: schedule.stages.len().max(1),
+            dp,
+            tp,
+            devs_per_node,
+            n_devices: devices.len().max(1),
+            n_nodes: nodes.len().max(1),
+            searched: false,
+        }
+    }
+}
+
+impl std::fmt::Display for ParallelDesc {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "p{}·dp{}·tp{} ({} devs, {} node(s) × {}/node{})",
+            self.stages,
+            self.dp,
+            self.tp,
+            self.n_devices,
+            self.n_nodes,
+            self.devs_per_node,
+            if self.searched { ", searched" } else { "" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_grids_match_legacy_hybrid_numbering() {
+        // gpt_hybrid_real's old inline builder: member m of stage s lands on
+        // DeviceId(stage*dp + m/tp, m%tp) when devs_per_node == tp.
+        let cfg =
+            ParallelConfig { stages: 2, dp: 2, tp: 2, devs_per_node: 2, ..Default::default() };
+        let grids = cfg.stage_grids().unwrap();
+        assert_eq!(grids.len(), 2);
+        for (s, g) in grids.iter().enumerate() {
+            assert_eq!(g.hierarchy, vec![2, 2]);
+            for (m, d) in g.devices.iter().enumerate() {
+                assert_eq!(*d, DeviceId::new(s * 2 + m / 2, m % 2));
+            }
+        }
+    }
+
+    #[test]
+    fn stage_grids_keep_rank_two_at_unit_widths() {
+        let cfg = ParallelConfig { stages: 2, dp: 1, tp: 1, ..Default::default() };
+        let grids = cfg.stage_grids().unwrap();
+        assert_eq!(grids[0].hierarchy, vec![1, 1]);
+        assert_eq!(grids[1].devices, vec![DeviceId::new(1, 0)]);
+    }
+
+    #[test]
+    fn stages_may_straddle_nodes() {
+        // dp1·tp3 over 4-device nodes: stage 1 spans nodes 0 and 1. The old
+        // regrid path panicked on exactly this shape.
+        let cfg =
+            ParallelConfig { stages: 2, dp: 1, tp: 3, devs_per_node: 4, ..Default::default() };
+        let grids = cfg.stage_grids().unwrap();
+        assert_eq!(
+            grids[1].devices,
+            vec![DeviceId::new(0, 3), DeviceId::new(1, 0), DeviceId::new(1, 1)]
+        );
+    }
+
+    #[test]
+    fn degenerate_and_misfit_configs_err_by_name() {
+        let zero = ParallelConfig { dp: 0, ..Default::default() };
+        let e = zero.validate().unwrap_err().to_string();
+        assert!(e.contains("degenerate parallel config"), "{e}");
+
+        let cfg =
+            ParallelConfig { stages: 3, dp: 1, tp: 1, devs_per_node: 2, ..Default::default() };
+        let e = cfg.fit_world(2, 2).unwrap_err().to_string();
+        assert!(e.contains("needs 3 devices"), "{e}");
+        assert!(ParallelConfig { stages: 4, dp: 1, tp: 1, devs_per_node: 1, ..Default::default() }
+            .fit_world(4, 1)
+            .is_ok());
+    }
+
+    #[test]
+    fn desc_roundtrip_and_display() {
+        let cfg =
+            ParallelConfig { stages: 2, dp: 2, tp: 1, devs_per_node: 1, ..Default::default() };
+        let d = ParallelDesc::from_config(&cfg, true);
+        assert_eq!(d.n_devices, 4);
+        assert_eq!(d.n_nodes, 4);
+        assert!(d.searched);
+        assert!(d.to_string().contains("searched"));
+        assert_eq!(cfg.label(), "p2·dp2·tp1");
+    }
+}

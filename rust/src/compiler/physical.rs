@@ -284,6 +284,10 @@ pub struct PhysPlan {
     pub options: CompileOptions,
     /// The compiled schedule: stage depths, in-flight bytes, ideal bubble.
     pub schedule: ScheduleDesc,
+    /// How the plan was parallelized: the searched/declared
+    /// [`super::ParallelConfig`] when one was given, otherwise derived from
+    /// the graph's own placements — every plan carries its grid.
+    pub parallel: super::parallel::ParallelDesc,
     /// The (possibly fusion-rewritten) logical graph this plan realizes.
     pub graph: LogicalGraph,
 }
@@ -354,7 +358,7 @@ impl PhysPlan {
     }
 
     pub fn dump(&self) -> String {
-        let mut s = String::new();
+        let mut s = format!("parallel: {}\n", self.parallel);
         for n in &self.nodes {
             let ins: Vec<String> =
                 n.inputs.iter().map(|(r, i)| format!("r{}[{}]", r.0, i)).collect();
@@ -526,8 +530,8 @@ pub fn compile(
     let var_updates: HashMap<NodeId, TensorId> =
         var_updates.iter().map(|(&n, &t)| (remap_n(n), remap_t(t))).collect();
 
-    // Pass 2: SBP selection.
-    let signatures = select_sbp(&g, opts.strategy, &opts.cluster);
+    // Pass 2: SBP selection (`beam_width > 1` widens greedy into a beam).
+    let signatures = select_sbp(&g, opts.effective_strategy(), &opts.cluster);
 
     // Pass 3: expansion + boxing lowering.
     let mut b = Builder { nodes: vec![], regs: vec![] };
@@ -790,6 +794,13 @@ pub fn compile(
     // set, packed into one arena per device.
     let mem = crate::memory::plan_memory(&b.nodes, &b.regs);
 
+    // Record how this plan was parallelized: a declared/searched config is
+    // authoritative; otherwise describe the graph's own placements.
+    let parallel = match &opts.parallel {
+        Some(pc) => super::parallel::ParallelDesc::from_config(pc, true),
+        None => super::parallel::ParallelDesc::derive(&g, &schedule),
+    };
+
     PhysPlan {
         nodes: b.nodes,
         regs: b.regs,
@@ -801,6 +812,7 @@ pub fn compile(
         signatures,
         options: opts.clone(),
         schedule,
+        parallel,
         graph: g,
     }
 }

@@ -1,0 +1,324 @@
+//! Auto-parallelism: FlexFlow-style search over the legal `stages × dp × tp`
+//! lattice of a device world (ISSUE 8, "Beyond Data and Model Parallelism
+//! for Deep Neural Networks").
+//!
+//! The execution simulator already exists: the sim backend's virtual
+//! makespan is deterministic, `select::boxing_secs` prices every lowered
+//! transfer route, and the scheduling pass records the pipeline bubble. So
+//! the search is plain: enumerate every grid that exactly fills
+//! `--world N × devs-per-node D`, build + compile the model under each
+//! (builders reject infeasible shapes with named errors — those prune),
+//! drop candidates the compile-time memory check rejects (arena-capacity
+//! pruning), predict each survivor's per-piece makespan from the *compiled
+//! plan* — compute from the cost-model roofline, comms from `boxing_secs`
+//! over the lowered routes, bubble amplification from the [`ScheduleDesc`]
+//! — and rank. Everything accumulates in plan order and sorts with
+//! `total_cmp`, so the same world produces a bitwise-identical ranking.
+
+use std::collections::HashMap;
+
+use crate::exec::CostModel;
+use crate::graph::{LogicalGraph, NodeId, TensorId};
+use crate::placement::DeviceId;
+
+use super::parallel::ParallelConfig;
+use super::physical::{PhysKernel, PhysPlan};
+use super::select::boxing_secs;
+use super::{compile, CompileOptions, ScheduleMode};
+
+/// The world a search runs over: the machine shape plus the schedule knobs
+/// held fixed across candidates (so candidates differ only in their grid).
+#[derive(Clone, Copy, Debug)]
+pub struct SearchSpace {
+    /// Nodes in the device world.
+    pub nodes: usize,
+    /// Devices per node.
+    pub devs_per_node: usize,
+    /// Micro-batches per logical batch for every candidate.
+    pub microbatches: usize,
+    /// Schedule for every candidate.
+    pub schedule: ScheduleMode,
+}
+
+impl SearchSpace {
+    pub fn world_devices(&self) -> usize {
+        self.nodes * self.devs_per_node
+    }
+}
+
+/// Predicted steady-state timing of one compiled plan, per piece.
+#[derive(Clone, Copy, Debug)]
+pub struct Predicted {
+    /// Virtual seconds per micro-batch piece, bubble included:
+    /// `max_stage(compute + comm) / (1 - bubble)`.
+    pub makespan: f64,
+    /// Busiest stage's per-piece compute (roofline over its busiest device).
+    pub compute_secs: f64,
+    /// Total per-piece communication over every lowered transfer edge.
+    pub comm_secs: f64,
+    /// The schedule's ideal bubble fraction.
+    pub bubble: f64,
+}
+
+/// One surviving candidate of the search.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub config: ParallelConfig,
+    pub predicted: Predicted,
+    /// Largest packed per-device arena of the candidate's plan, bytes.
+    pub arena_peak: f64,
+}
+
+/// The ranked search result: best candidate first, plus everything that was
+/// pruned and why (no silent drops — the CLI prints both).
+#[derive(Clone, Debug)]
+pub struct Frontier {
+    /// Total devices of the searched world.
+    pub world: usize,
+    /// Survivors, ranked by predicted makespan (NaN-last, ties broken by
+    /// ascending `stages`, `dp`, `tp` — deterministic).
+    pub candidates: Vec<Candidate>,
+    /// Rejected configs with their named reasons (builder errors and
+    /// compile-time OOM).
+    pub pruned: Vec<(ParallelConfig, String)>,
+}
+
+impl Frontier {
+    /// The top-ranked candidate, if any survived.
+    pub fn winner(&self) -> Option<&Candidate> {
+        self.candidates.first()
+    }
+
+    /// Render as the `oneflow plan --auto` frontier table.
+    pub fn table(&self) -> crate::bench::Table {
+        use crate::util::fmt;
+        let mut t = crate::bench::Table::new(
+            &format!("auto-parallel frontier ({} devices)", self.world),
+            &["config", "secs/piece", "compute", "comm", "bubble", "arena peak"],
+        );
+        for c in &self.candidates {
+            t.row(&[
+                c.config.label(),
+                fmt::secs(c.predicted.makespan),
+                fmt::secs(c.predicted.compute_secs),
+                fmt::secs(c.predicted.comm_secs),
+                format!("{:.4}", c.predicted.bubble),
+                fmt::bytes(c.arena_peak),
+            ]);
+        }
+        t
+    }
+}
+
+/// Every grid that exactly fills the world, in deterministic ascending
+/// `(stages, dp, tp)` order. Divisibility pruning happens here: a config is
+/// only emitted when `stages · dp · tp == nodes · devs_per_node`.
+pub fn enumerate(space: &SearchSpace) -> Vec<ParallelConfig> {
+    let world = space.world_devices();
+    let mut out = vec![];
+    if world == 0 {
+        return out;
+    }
+    for stages in 1..=world {
+        if world % stages != 0 {
+            continue;
+        }
+        let per_stage = world / stages;
+        for dp in 1..=per_stage {
+            if per_stage % dp != 0 {
+                continue;
+            }
+            out.push(ParallelConfig {
+                stages,
+                dp,
+                tp: per_stage / dp,
+                devs_per_node: space.devs_per_node,
+                microbatches: space.microbatches,
+                schedule: space.schedule,
+            });
+        }
+    }
+    out
+}
+
+/// Predict a compiled plan's steady-state per-piece makespan from the cost
+/// model — the same quantities the sim backend integrates, read off the
+/// plan in one pass:
+///
+/// * **compute**: roofline `kernel_secs` of every non-transfer node,
+///   accumulated per device in plan order (once-per-round nodes amortized
+///   by their period), then max-reduced per stage;
+/// * **comm**: [`boxing_secs`] of every lowered transfer edge — the exact
+///   cost of the routes the runtime executes — charged to the consuming
+///   stage and amortized by the edge's action period;
+/// * **bubble**: the schedule's ideal fraction amplifies the busiest
+///   stage's per-piece time (`(m + p - 1)/m` for 1F1B).
+pub fn predict(plan: &PhysPlan, cost: &CostModel) -> Predicted {
+    // Per-device per-piece compute, accumulated in plan-node order (never
+    // map iteration order) so the sum is bitwise-reproducible.
+    let mut per_dev: HashMap<DeviceId, f64> = HashMap::new();
+    for n in &plan.nodes {
+        match n.kernel {
+            // transfer ops are priced from the transfer edges below
+            PhysKernel::CollectiveMember { .. }
+            | PhysKernel::ShardSend { .. }
+            | PhysKernel::ShardRecv { .. } => continue,
+            // parameter re-emission is a slot publish, not work
+            PhysKernel::Var { .. } => continue,
+            _ => {}
+        }
+        let secs = cost.cluster.device.kernel_secs(&n.cost, n.dtype) / n.period.max(1) as f64;
+        *per_dev.entry(n.device).or_insert(0.0) += secs;
+    }
+
+    let p = plan.schedule.stages.len().max(1);
+    let mut stage_of: HashMap<DeviceId, usize> = HashMap::new();
+    for st in &plan.schedule.stages {
+        for d in &st.devices {
+            stage_of.insert(*d, st.stage);
+        }
+    }
+    let mut stage_compute = vec![0.0f64; p];
+    for st in &plan.schedule.stages {
+        let mut mx = 0.0f64;
+        for d in &st.devices {
+            mx = mx.max(per_dev.get(d).copied().unwrap_or(0.0));
+        }
+        stage_compute[st.stage] = mx;
+    }
+
+    let mut stage_comm = vec![0.0f64; p];
+    let mut comm_total = 0.0;
+    for tr in &plan.transfers {
+        let elems = tr.logical.elems();
+        let elem_bytes = if elems > 0 { tr.t_bytes / elems as f64 } else { 0.0 };
+        let secs = boxing_secs(
+            &tr.in_nd,
+            &tr.in_place,
+            &tr.out_nd,
+            &tr.out_place,
+            &tr.logical,
+            elem_bytes,
+            &cost.cluster.network,
+        );
+        // round-cadence edges (gradient combines of accumulating graphs)
+        // fire once per M pieces — amortize like compute does
+        let period = tr
+            .ops
+            .first()
+            .map(|op| plan.nodes[op.0].period.max(1))
+            .unwrap_or(1);
+        let per_piece = secs / period as f64;
+        comm_total += per_piece;
+        let anchor = tr
+            .out_place
+            .devices
+            .first()
+            .or_else(|| tr.in_place.devices.first());
+        let stage = anchor.and_then(|d| stage_of.get(d).copied()).unwrap_or(0);
+        stage_comm[stage] += per_piece;
+    }
+
+    let mut t_stage = 0.0f64;
+    let mut busiest_compute = 0.0f64;
+    for s in 0..p {
+        let t = stage_compute[s] + stage_comm[s];
+        if t > t_stage {
+            t_stage = t;
+            busiest_compute = stage_compute[s];
+        }
+    }
+    let bubble = plan.schedule.bubble_fraction;
+    let makespan = if bubble < 1.0 { t_stage / (1.0 - bubble) } else { f64::INFINITY };
+    Predicted { makespan, compute_secs: busiest_compute, comm_secs: comm_total, bubble }
+}
+
+/// Search the world's config lattice. `build` turns one [`ParallelConfig`]
+/// into a model graph (`Err` prunes the config with its named reason —
+/// that's where model-shape divisibility lives); each surviving config is
+/// compiled under `base` options (schedule/microbatches/cluster overridden
+/// from the config and cost model), memory-checked, predicted, and ranked.
+pub fn search<F>(
+    space: &SearchSpace,
+    cost: &CostModel,
+    base: &CompileOptions,
+    build: F,
+) -> Frontier
+where
+    F: Fn(&ParallelConfig) -> crate::Result<(LogicalGraph, TensorId, HashMap<NodeId, TensorId>)>,
+{
+    let mut candidates = vec![];
+    let mut pruned = vec![];
+    for pc in enumerate(space) {
+        let (g, loss, upd) = match build(&pc) {
+            Ok(built) => built,
+            Err(e) => {
+                pruned.push((pc, e.to_string()));
+                continue;
+            }
+        };
+        let opts = CompileOptions {
+            schedule: pc.schedule,
+            microbatches: pc.microbatches,
+            cluster: cost.cluster,
+            parallel: Some(pc),
+            ..base.clone()
+        };
+        let plan = compile(&g, &[loss], &upd, &opts);
+        let arena_peak = match crate::memory::check_plan(&plan, &cost.cluster.device) {
+            Ok(rep) => rep.arena_peak(),
+            Err(e) => {
+                pruned.push((pc, e));
+                continue;
+            }
+        };
+        let predicted = predict(&plan, cost);
+        candidates.push(Candidate { config: pc, predicted, arena_peak });
+    }
+    candidates.sort_by(|a, b| {
+        a.predicted
+            .makespan
+            .is_nan()
+            .cmp(&b.predicted.makespan.is_nan())
+            .then(a.predicted.makespan.total_cmp(&b.predicted.makespan))
+            .then(a.config.stages.cmp(&b.config.stages))
+            .then(a.config.dp.cmp(&b.config.dp))
+            .then(a.config.tp.cmp(&b.config.tp))
+    });
+    Frontier { world: space.world_devices(), candidates, pruned }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space(nodes: usize, devs: usize) -> SearchSpace {
+        SearchSpace {
+            nodes,
+            devs_per_node: devs,
+            microbatches: 2,
+            schedule: ScheduleMode::OneFOneB,
+        }
+    }
+
+    #[test]
+    fn enumerate_covers_exact_tilings_only() {
+        let cfgs = enumerate(&space(4, 1));
+        // 4 devices: (1,1,4),(1,2,2),(1,4,1),(2,1,2),(2,2,1),(4,1,1)
+        assert_eq!(cfgs.len(), 6);
+        assert!(cfgs.iter().all(|c| c.n_devices() == 4));
+        // deterministic ascending order
+        let labels: Vec<String> = cfgs.iter().map(|c| c.label()).collect();
+        assert_eq!(labels[0], "p1·dp1·tp4");
+        assert_eq!(labels[5], "p4·dp1·tp1");
+        assert!(enumerate(&space(0, 1)).is_empty());
+    }
+
+    #[test]
+    fn enumerate_world_6_has_every_divisor_split() {
+        let cfgs = enumerate(&space(3, 2));
+        // stages ∈ {1,2,3,6}; per-stage splits: 4 divisor pairs for 6, etc.
+        assert!(cfgs.iter().any(|c| c.stages == 3 && c.dp == 2 && c.tp == 1));
+        assert!(cfgs.iter().all(|c| c.n_devices() == 6));
+    }
+}

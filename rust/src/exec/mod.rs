@@ -161,6 +161,57 @@ impl ClusterModel {
     }
 }
 
+/// The cost basis of the auto-parallelism search (`compiler::search`): the
+/// bandwidth/latency constants `select::boxing_secs` and the sim backend
+/// price against, packaged with their provenance so a search can be
+/// **calibrated** from a measured run instead of trusting the paper-testbed
+/// defaults.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    pub cluster: ClusterModel,
+    /// Where the numbers came from: `"paper_testbed"` or the trace path.
+    pub source: String,
+}
+
+impl CostModel {
+    /// The uncalibrated default: the paper's testbed constants.
+    pub fn paper_testbed() -> Self {
+        CostModel { cluster: ClusterModel::paper_testbed(), source: "paper_testbed".into() }
+    }
+
+    /// Calibrate the network tier from a measured `TRACE_summary.json`
+    /// (`metrics::TraceSummary::write_json`): the observed effective link
+    /// bandwidth is `Σ bytes / Σ busy_secs` over the per-edge rows, and both
+    /// network bands are rescaled by measured/modeled so the intra/inter
+    /// asymmetry the search reasons about is preserved. A trace with no
+    /// communication edges calibrates nothing and keeps the defaults.
+    pub fn calibrated(path: &str) -> crate::Result<Self> {
+        let v = crate::config::json::parse_file(path)
+            .map_err(|e| anyhow::anyhow!("cost-model calibration: {e}"))?;
+        let edges = v.get("edges").and_then(|e| e.as_arr()).ok_or_else(|| {
+            anyhow::anyhow!("cost-model calibration: {path} has no `edges` array")
+        })?;
+        let mut bytes = 0.0;
+        let mut busy = 0.0;
+        for e in edges {
+            bytes += e.get("bytes").and_then(|x| x.as_f64()).unwrap_or(0.0);
+            busy += e.get("busy_secs").and_then(|x| x.as_f64()).unwrap_or(0.0);
+        }
+        let mut cluster = ClusterModel::paper_testbed();
+        let source;
+        if bytes > 0.0 && busy > 0.0 {
+            let measured_bps = bytes / busy;
+            let scale = measured_bps / cluster.network.inter_bps;
+            cluster.network.inter_bps = measured_bps;
+            cluster.network.intra_bps *= scale;
+            source = format!("{path} (measured {measured_bps:.3e} B/s effective)");
+        } else {
+            source = format!("{path} (no comm edges; paper-testbed bands kept)");
+        }
+        Ok(CostModel { cluster, source })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

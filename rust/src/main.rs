@@ -8,12 +8,14 @@
 use oneflow::actor::Engine;
 use oneflow::bench::Table;
 use oneflow::comm;
-use oneflow::compiler::{compile, CompileOptions, ScheduleMode};
+use oneflow::compiler::{compile, search, CompileOptions, Frontier, ScheduleMode, SearchSpace};
 use oneflow::config::Args;
 use oneflow::data::RandomSource;
-use oneflow::exec::QueueKind;
+use oneflow::exec::{CostModel, QueueKind};
 use oneflow::memory;
-use oneflow::models::{gpt_sim_checked, resnet50, GptSimConfig, ResnetConfig};
+use oneflow::models::{
+    gpt_hybrid_auto, gpt_sim_checked, resnet50, GptModelSpec, GptSimConfig, ResnetConfig,
+};
 use oneflow::placement::Placement;
 use oneflow::runtime::{backend_from_args, backend_names};
 use oneflow::util::fmt;
@@ -40,8 +42,12 @@ fn main() {
                  \x20          [--microbatches M] [--unoverlapped]  (1F1B in-flight cap / single-slot baseline schedule)\n\
                  \x20          [--timeout-secs N]  (wall-clock watchdog; 0 = none, the default)\n\
                  \x20          [--trace FILE] [--trace-summary]  (actor-event timeline: Perfetto-loadable JSON / measured schedule metrics)\n\
+                 \x20          [--beam W]  (SBP selection beam width; 1 = greedy, the default)\n\
+                 \x20          [--auto]  (search the stages x dp x tp lattice first, then simulate the winner)\n\
                  plan:     same flags as simulate [--world N]; prints the physical plan, per-device arena map (+ per-rank partition)\n\
                  \x20          [--schedule]  (print the compiled per-stage 1F1B schedule instead)\n\
+                 \x20          [--auto --world N --devs-per-node D]  (auto-parallelism: rank every legal grid of the world, plan the winner)\n\
+                 \x20          [--calibrate TRACE_summary.json]  (fit the cost model's bandwidths to a measured trace summary)\n\
                  trace-validate: FILE  (schema-check a Chrome trace-event JSON produced by --trace)",
                 backend_names().join("|"),
                 comm::transport_names().join("|")
@@ -142,13 +148,90 @@ fn compile_opts(args: &Args) -> CompileOptions {
     if args.flag("unoverlapped") {
         opts.schedule = ScheduleMode::Unoverlapped;
     }
+    opts.beam_width = args.usize("beam", 1).max(1);
     opts
 }
 
+/// The cost model the auto-parallel search prices candidates with: the
+/// paper-testbed constants, or — with `--calibrate TRACE_summary.json` —
+/// those constants rescaled to the bandwidth a measured run actually saw.
+fn cost_model(args: &Args) -> CostModel {
+    match args.get("calibrate") {
+        Some(path) => CostModel::calibrated(path).unwrap_or_else(|e| die(e.to_string())),
+        None => CostModel::paper_testbed(),
+    }
+}
+
+/// Run the `--auto` search over `--world N × --devs-per-node D` for the
+/// hybrid GPT declared by the model-dimension flags. Returns the ranked
+/// frontier plus the spec and cost model, so the caller can compile the
+/// winner.
+fn auto_search(args: &Args, opts: &CompileOptions) -> (Frontier, GptModelSpec, CostModel) {
+    let space = SearchSpace {
+        nodes: args.usize("world", 2).max(1),
+        devs_per_node: args.usize("devs-per-node", 1).max(1),
+        microbatches: opts.microbatches,
+        schedule: opts.schedule,
+    };
+    let cost = cost_model(args);
+    let spec = GptModelSpec {
+        vocab: args.usize("vocab", 64),
+        hidden: args.usize("hidden", 32),
+        ff: args.usize("ff", 64),
+        blocks: args.usize("layers", 4),
+        rows: args.usize("batch", 64),
+        ..Default::default()
+    };
+    let frontier = search(&space, &cost, opts, |pc| gpt_hybrid_auto(&spec, pc));
+    (frontier, spec, cost)
+}
+
+/// Print the frontier (ranked survivors + every pruned config with its
+/// named reason) and return the winner's config, or die if nothing fits.
+fn report_frontier(frontier: &Frontier) -> oneflow::compiler::ParallelConfig {
+    frontier.table().print();
+    if !frontier.pruned.is_empty() {
+        println!("\npruned configs:");
+        for (pc, why) in &frontier.pruned {
+            println!("  {}: {why}", pc.label());
+        }
+    }
+    match frontier.winner() {
+        Some(c) => {
+            println!(
+                "\nwinner: {} — predicted {}/piece ({} compute, {} comm, bubble {:.3})",
+                c.config.label(),
+                fmt::secs(c.predicted.makespan),
+                fmt::secs(c.predicted.compute_secs),
+                fmt::secs(c.predicted.comm_secs),
+                c.predicted.bubble,
+            );
+            c.config
+        }
+        None => die("auto search found no feasible parallelization for this world".into()),
+    }
+}
+
 fn simulate(args: &Args) {
-    let (g, loss, upd, batch) = build_model(args);
     let opts = compile_opts(args);
-    let plan = compile(&g, &[loss], &upd, &opts);
+    let (plan, batch) = if args.flag("auto") {
+        // search first, then simulate the winner under its own grid
+        let (frontier, spec, cost) = auto_search(args, &opts);
+        let wc = report_frontier(&frontier);
+        let (g, loss, upd) = gpt_hybrid_auto(&spec, &wc).unwrap_or_else(|e| die(e.to_string()));
+        let wopts = CompileOptions {
+            schedule: wc.schedule,
+            microbatches: wc.microbatches,
+            cluster: cost.cluster,
+            parallel: Some(wc),
+            ..opts.clone()
+        };
+        println!();
+        (compile(&g, &[loss], &upd, &wopts), spec.rows)
+    } else {
+        let (g, loss, upd, batch) = build_model(args);
+        (compile(&g, &[loss], &upd, &opts), batch)
+    };
     let mem = memory::check_plan(&plan, &opts.cluster.device);
     let pieces = args.usize("pieces", 8);
     // the backend is a runtime choice through the registry; `sim` (data-free)
@@ -242,9 +325,25 @@ fn simulate(args: &Args) {
 }
 
 fn plan(args: &Args) {
-    let (g, loss, upd, _) = build_model(args);
     let opts = compile_opts(args);
-    let plan = compile(&g, &[loss], &upd, &opts);
+    let plan = if args.flag("auto") {
+        // rank every legal grid of the world, then dump the winner's plan
+        let (frontier, spec, cost) = auto_search(args, &opts);
+        let wc = report_frontier(&frontier);
+        let (g, loss, upd) = gpt_hybrid_auto(&spec, &wc).unwrap_or_else(|e| die(e.to_string()));
+        let wopts = CompileOptions {
+            schedule: wc.schedule,
+            microbatches: wc.microbatches,
+            cluster: cost.cluster,
+            parallel: Some(wc),
+            ..opts.clone()
+        };
+        println!();
+        compile(&g, &[loss], &upd, &wopts)
+    } else {
+        let (g, loss, upd, _) = build_model(args);
+        compile(&g, &[loss], &upd, &opts)
+    };
     if args.flag("schedule") {
         // the compiled 1F1B schedule, per stage: slot depth, in-flight
         // bytes, ideal bubble fraction

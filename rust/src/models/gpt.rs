@@ -3,6 +3,7 @@
 //! alone — the Megatron comparison graph.
 
 use super::nn::{flops_op, linear, loss_head};
+use crate::compiler::parallel::{stage_devices, ParallelConfig};
 use crate::exec::QueueKind;
 use crate::graph::{autograd, LogicalGraph, NodeId, OpKind, TensorId};
 use crate::optimizer::{attach_sgd, Sharding};
@@ -10,6 +11,7 @@ use crate::pipeline::stage_placements;
 use crate::placement::Placement;
 use crate::sbp::{s, NdSbp, Sbp};
 use crate::tensor::DType;
+use anyhow::bail;
 use std::collections::HashMap;
 
 /// A Megatron-style run configuration (the tuples under Fig 16):
@@ -54,6 +56,18 @@ impl GptSimConfig {
         self.dp * self.mp * self.pp
     }
 
+    /// The [`ParallelConfig`] this hand-picked grid declares: `pp` stages
+    /// of `[dp, mp]` packed onto `devs_per_node`-device nodes.
+    pub fn parallel(&self) -> ParallelConfig {
+        ParallelConfig {
+            stages: self.pp,
+            dp: self.dp,
+            tp: self.mp,
+            devs_per_node: self.devs_per_node,
+            ..ParallelConfig::default()
+        }
+    }
+
     pub fn params(&self) -> f64 {
         // 12 d^2 per layer + embeddings
         12.0 * (self.hidden as f64).powi(2) * self.layers as f64
@@ -68,23 +82,18 @@ pub fn gpt_sim(cfg: &GptSimConfig) -> (LogicalGraph, TensorId, HashMap<NodeId, T
     gpt_sim_checked(cfg).expect("invalid pipeline configuration")
 }
 
-/// [`gpt_sim`] with configuration errors (devices not divisible into
-/// pipeline stages) surfaced as `Err` rather than a panic.
+/// [`gpt_sim`] with configuration errors (degenerate grids, layers that do
+/// not divide into stages) surfaced as named `Err`s rather than panics.
 pub fn gpt_sim_checked(
     cfg: &GptSimConfig,
 ) -> crate::Result<(LogicalGraph, TensorId, HashMap<NodeId, TensorId>)> {
-    let total = cfg.n_devices();
-    let nodes = total.div_ceil(cfg.devs_per_node);
-    let devs = cfg.devs_per_node.min(total);
-    // stage placements; within each stage a [dp, mp] hierarchy
-    let stages: Vec<Placement> = if cfg.pp == 1 {
-        vec![stage_hierarchy(cfg, 0, nodes, devs)]
-    } else {
-        let flat = stage_placements(cfg.pp, nodes, devs)?;
-        (0..cfg.pp).map(|i| regrid(cfg, &flat[i])).collect()
-    };
+    // per-stage [dp, mp] grids from the one shared placement constructor
+    let stages: Vec<Placement> = cfg.parallel().stage_grids()?;
+    if cfg.layers % cfg.pp.max(1) != 0 {
+        bail!("{} layers do not divide into {} pipeline stages", cfg.layers, cfg.pp);
+    }
     let dp_x = |pl: &Placement| dp_sbp(pl);
-    
+
     let mut g = LogicalGraph::new();
     let rows = cfg.global_batch * cfg.seq;
     let d = cfg.hidden;
@@ -199,23 +208,6 @@ fn dp_sbp(pl: &Placement) -> NdSbp {
         v[0] = s(0);
     }
     NdSbp(v)
-}
-
-/// [dp, mp] hierarchy over the config's device grid for a single stage.
-fn stage_hierarchy(cfg: &GptSimConfig, first_node: usize, _nodes: usize, devs: usize) -> Placement {
-    let total = cfg.dp * cfg.mp;
-    let devices = (0..total)
-        .map(|i| {
-            crate::placement::DeviceId::new(first_node + (i / devs), i % devs)
-        })
-        .collect();
-    Placement::new(vec![cfg.dp, cfg.mp], devices)
-}
-
-/// Re-grid a flat stage placement into the [dp, mp] hierarchy.
-fn regrid(cfg: &GptSimConfig, flat: &Placement) -> Placement {
-    assert_eq!(flat.len(), cfg.dp * cfg.mp, "stage devices vs dp*mp");
-    Placement::new(vec![cfg.dp, cfg.mp], flat.devices.clone())
 }
 
 /// Result of [`train_e2e`].
@@ -439,8 +431,17 @@ impl Default for GptPipelineConfig {
 pub fn gpt_pipeline_real(
     cfg: &GptPipelineConfig,
 ) -> (LogicalGraph, TensorId, HashMap<NodeId, TensorId>) {
-    assert!(cfg.stages >= 1, "need at least one stage");
-    let stages: Vec<Placement> = (0..cfg.stages).map(|s| Placement::node(s, 1)).collect();
+    gpt_pipeline_real_checked(cfg).expect("invalid pipeline configuration")
+}
+
+/// [`gpt_pipeline_real`] with configuration errors surfaced as named
+/// `Err`s instead of panics — the CLI/search path.
+pub fn gpt_pipeline_real_checked(
+    cfg: &GptPipelineConfig,
+) -> crate::Result<(LogicalGraph, TensorId, HashMap<NodeId, TensorId>)> {
+    // one node per stage, one device each: the shared constructor at
+    // devs_per_node = 1
+    let stages: Vec<Placement> = stage_placements(cfg.stages, cfg.stages, 1)?;
     let mut g = LogicalGraph::new();
 
     let p0 = stages[0].clone();
@@ -506,7 +507,7 @@ pub fn gpt_pipeline_real(
     // the optimizer (and the Var back edge) fires once per round
     let bw = autograd::accumulate_grads(&mut g, &bw, cfg.microbatches);
     let updates = autograd::append_sgd(&mut g, &bw, cfg.lr);
-    (g, loss, updates)
+    Ok((g, loss, updates))
 }
 
 /// A **real-numerics data-parallel** GPT-style byte LM for the distributed
@@ -550,13 +551,26 @@ impl Default for GptDataParallelConfig {
 pub fn gpt_dataparallel_real(
     cfg: &GptDataParallelConfig,
 ) -> (LogicalGraph, TensorId, HashMap<NodeId, TensorId>) {
-    use crate::placement::DeviceId;
-    assert!(cfg.replicas >= 1, "need at least one replica");
-    assert!(cfg.rows >= cfg.replicas, "each replica needs at least one row");
-    let pl = Placement::new(
-        vec![cfg.replicas],
-        (0..cfg.replicas).map(|n| DeviceId::new(n, 0)).collect(),
-    );
+    gpt_dataparallel_checked(cfg).expect("invalid data-parallel configuration")
+}
+
+/// [`gpt_dataparallel_real`] with configuration errors surfaced as named
+/// `Err`s instead of panics — the CLI/search path.
+pub fn gpt_dataparallel_checked(
+    cfg: &GptDataParallelConfig,
+) -> crate::Result<(LogicalGraph, TensorId, HashMap<NodeId, TensorId>)> {
+    if cfg.replicas == 0 {
+        bail!("data-parallel gpt needs at least one replica");
+    }
+    if cfg.rows < cfg.replicas {
+        bail!(
+            "data-parallel gpt: {} rows cannot feed {} replicas (each needs at least one row)",
+            cfg.rows,
+            cfg.replicas
+        );
+    }
+    // one replica per node: the shared constructor at devs_per_node = 1
+    let pl = Placement::new(vec![cfg.replicas], stage_devices(0, cfg.replicas, 1));
     let b = NdSbp::d1(Sbp::Broadcast);
     let mut g = LogicalGraph::new();
 
@@ -623,7 +637,7 @@ pub fn gpt_dataparallel_real(
     for &t in updates.values() {
         g.hint_tensor(t, b.clone());
     }
-    (g, loss, updates)
+    Ok((g, loss, updates))
 }
 
 /// A **real-numerics hybrid-parallel** GPT-style byte LM for the
@@ -679,6 +693,19 @@ impl GptHybridConfig {
     /// Plan nodes (= worker ranks of the intended launch).
     pub fn n_nodes(&self) -> usize {
         self.stages * self.dp
+    }
+
+    /// The [`ParallelConfig`] this hand-picked grid declares: `tp` devices
+    /// per node, so each stage's `[dp, tp]` grid is `dp` whole nodes — the
+    /// legacy one-replica-per-rank layout, now spelled as a config.
+    pub fn parallel(&self) -> ParallelConfig {
+        ParallelConfig {
+            stages: self.stages,
+            dp: self.dp,
+            tp: self.tp,
+            devs_per_node: self.tp.max(1),
+            ..ParallelConfig::default()
+        }
     }
 }
 
@@ -737,22 +764,141 @@ fn hybrid_linear(
 
 /// Build the training graph for [`GptHybridConfig`]. Returns
 /// `(graph, loss, var-updates)`; inputs are named `ids` / `labels` like the
-/// other real models, so the same data sources feed all three.
+/// other real models, so the same data sources feed all three. Panicking
+/// wrapper over [`gpt_hybrid_checked`] for call sites with static configs.
 pub fn gpt_hybrid_real(
     cfg: &GptHybridConfig,
 ) -> (LogicalGraph, TensorId, HashMap<NodeId, TensorId>) {
-    use crate::placement::DeviceId;
-    assert!(cfg.stages >= 1 && cfg.dp >= 1 && cfg.tp >= 1, "degenerate hybrid config");
-    assert!(cfg.rows >= cfg.dp, "each data-parallel replica needs at least one row");
-    let stage_pl = |stage: usize| {
-        Placement::new(
-            vec![cfg.dp, cfg.tp],
-            (0..cfg.dp * cfg.tp)
-                .map(|m| DeviceId::new(stage * cfg.dp + m / cfg.tp, m % cfg.tp))
-                .collect(),
-        )
-    };
-    let stages: Vec<Placement> = (0..cfg.stages).map(stage_pl).collect();
+    gpt_hybrid_checked(cfg).expect("invalid hybrid configuration")
+}
+
+/// [`gpt_hybrid_real`] with configuration validation: degenerate grids and
+/// batch shapes that cannot feed the grid are named errors, not panics.
+pub fn gpt_hybrid_checked(
+    cfg: &GptHybridConfig,
+) -> crate::Result<(LogicalGraph, TensorId, HashMap<NodeId, TensorId>)> {
+    let pc = cfg.parallel();
+    pc.validate()?;
+    if cfg.rows < cfg.dp {
+        bail!(
+            "hybrid gpt: {} rows cannot feed {} data-parallel replicas \
+             (each needs at least one row)",
+            cfg.rows,
+            cfg.dp
+        );
+    }
+    let stages = pc.stage_grids()?;
+    Ok(gpt_hybrid_graph(
+        &stages,
+        cfg.tp,
+        cfg.vocab,
+        cfg.hidden,
+        cfg.ff,
+        cfg.blocks_per_stage,
+        cfg.rows,
+        cfg.lr,
+    ))
+}
+
+/// Model dimensions without a parallelization: what a model *declares* when
+/// the grid comes from the `--auto` search instead of a hand-picked config.
+/// `blocks` is the total transformer block count; the search splits it over
+/// whatever stage count each candidate proposes.
+#[derive(Clone, Copy, Debug)]
+pub struct GptModelSpec {
+    pub vocab: usize,
+    pub hidden: usize,
+    /// MLP expansion width.
+    pub ff: usize,
+    /// Total transformer blocks across all stages.
+    pub blocks: usize,
+    /// Tokens per piece (global batch, split over dp).
+    pub rows: usize,
+    pub lr: f32,
+}
+
+impl Default for GptModelSpec {
+    fn default() -> Self {
+        // same dims as GptHybridConfig::default(); 4 total blocks so every
+        // stage count in {1, 2, 4} divides evenly during a search.
+        GptModelSpec { vocab: 64, hidden: 32, ff: 64, blocks: 4, rows: 64, lr: 0.2 }
+    }
+}
+
+impl GptModelSpec {
+    /// The hand-picked [`GptHybridConfig`] equivalent of this spec under an
+    /// explicit grid — the baseline the searched winner is compared against.
+    pub fn hybrid_config(&self, stages: usize, dp: usize, tp: usize) -> GptHybridConfig {
+        GptHybridConfig {
+            stages,
+            dp,
+            tp,
+            vocab: self.vocab,
+            hidden: self.hidden,
+            ff: self.ff,
+            blocks_per_stage: self.blocks / stages.max(1),
+            rows: self.rows,
+            lr: self.lr,
+        }
+    }
+}
+
+/// Build the hybrid GPT under a searched [`ParallelConfig`]: the model
+/// declares its dimensions ([`GptModelSpec`]) and the config supplies the
+/// grid. Shapes the grid cannot parallelize are named errors — exactly what
+/// the search prunes on.
+pub fn gpt_hybrid_auto(
+    spec: &GptModelSpec,
+    pc: &ParallelConfig,
+) -> crate::Result<(LogicalGraph, TensorId, HashMap<NodeId, TensorId>)> {
+    pc.validate()?;
+    if spec.blocks % pc.stages != 0 {
+        bail!("auto gpt: {} blocks do not divide into {} stages", spec.blocks, pc.stages);
+    }
+    if spec.rows < pc.dp {
+        bail!(
+            "auto gpt: {} rows cannot feed {} data-parallel replicas",
+            spec.rows,
+            pc.dp
+        );
+    }
+    if pc.tp > spec.ff || pc.tp > spec.hidden {
+        bail!(
+            "auto gpt: tp {} out-shards ff {} / hidden {}",
+            pc.tp,
+            spec.ff,
+            spec.hidden
+        );
+    }
+    let stages = pc.stage_grids()?;
+    Ok(gpt_hybrid_graph(
+        &stages,
+        pc.tp,
+        spec.vocab,
+        spec.hidden,
+        spec.ff,
+        spec.blocks / pc.stages,
+        spec.rows,
+        spec.lr,
+    ))
+}
+
+/// The shared hybrid graph body: one `[dp, tp]` placement per stage (built
+/// by [`ParallelConfig::stage_grids`] — the one placement constructor), the
+/// Megatron col/row block pattern within each, dp gradient rings on the
+/// update edges. Both the hand-picked and the searched entry points call
+/// this, so values are independent of how the grid was chosen.
+#[allow(clippy::too_many_arguments)]
+fn gpt_hybrid_graph(
+    stages: &[Placement],
+    tp: usize,
+    vocab: usize,
+    hidden: usize,
+    ff: usize,
+    blocks_per_stage: usize,
+    rows: usize,
+    lr: f32,
+) -> (LogicalGraph, TensorId, HashMap<NodeId, TensorId>) {
     let dp_b = NdSbp::d2(s(0), Sbp::Broadcast);
     let bb = NdSbp::d2(Sbp::Broadcast, Sbp::Broadcast);
 
@@ -760,7 +906,7 @@ pub fn gpt_hybrid_real(
     let p0 = stages[0].clone();
     let ids = g.add1(
         "ids",
-        OpKind::Input { shape: [cfg.rows].into(), dtype: DType::I32 },
+        OpKind::Input { shape: [rows].into(), dtype: DType::I32 },
         &[],
         p0.clone(),
     );
@@ -768,7 +914,7 @@ pub fn gpt_hybrid_real(
     let table = g.add1(
         "tok_embed",
         OpKind::Variable {
-            shape: [cfg.vocab, cfg.hidden].into(),
+            shape: [vocab, hidden].into(),
             dtype: DType::F32,
             init_std: 0.08,
         },
@@ -779,18 +925,17 @@ pub fn gpt_hybrid_real(
     let mut h = g.add1("embed", OpKind::Embedding, &[table, ids], p0);
 
     for (stage, pl) in stages.iter().enumerate() {
-        for blk in 0..cfg.blocks_per_stage {
+        for blk in 0..blocks_per_stage {
             let name = format!("s{stage}b{blk}");
-            let up =
-                hybrid_linear(&mut g, &format!("{name}_up"), h, cfg.ff, pl, cfg.tp, TpLinear::Col);
+            let up = hybrid_linear(&mut g, &format!("{name}_up"), h, ff, pl, tp, TpLinear::Col);
             let act = g.add1(format!("{name}_gelu"), OpKind::Gelu, &[up], pl.clone());
             let down = hybrid_linear(
                 &mut g,
                 &format!("{name}_down"),
                 act,
-                cfg.hidden,
+                hidden,
                 pl,
-                cfg.tp,
+                tp,
                 TpLinear::Row,
             );
             h = g.add1(format!("{name}_res"), OpKind::Add, &[h, down], pl.clone());
@@ -799,11 +944,11 @@ pub fn gpt_hybrid_real(
         }
     }
 
-    let last = stages[cfg.stages - 1].clone();
+    let last = stages[stages.len() - 1].clone();
     let head_w = g.add1(
         "head_w",
         OpKind::Variable {
-            shape: [cfg.hidden, cfg.vocab].into(),
+            shape: [hidden, vocab].into(),
             dtype: DType::F32,
             init_std: 0.02,
         },
@@ -815,7 +960,7 @@ pub fn gpt_hybrid_real(
         g.add1("head_mm", OpKind::MatMul { ta: false, tb: false }, &[h, head_w], last.clone());
     let labels = g.add1(
         "labels",
-        OpKind::Input { shape: [cfg.rows].into(), dtype: DType::I32 },
+        OpKind::Input { shape: [rows].into(), dtype: DType::I32 },
         &[],
         last.clone(),
     );
@@ -824,7 +969,7 @@ pub fn gpt_hybrid_real(
     let loss = outs[0];
 
     let bw = autograd::build_backward(&mut g, loss);
-    let updates = autograd::append_sgd(&mut g, &bw, cfg.lr);
+    let updates = autograd::append_sgd(&mut g, &bw, lr);
     // Every update must land back in its variable's layout: hint each update
     // with the variable's own signature, which inserts the dp gradient ring
     // all-reduce (dim 0, across nodes) and keeps tp shards sharded (dim 1).

@@ -14,9 +14,9 @@ pub mod insightface;
 pub mod wide_deep;
 
 pub use gpt::{
-    gpt_dataparallel_real, gpt_hybrid_real, gpt_pipeline_real, gpt_sim, gpt_sim_checked,
-    GptDataParallelConfig,
-    GptHybridConfig, GptPipelineConfig, GptSimConfig,
+    gpt_dataparallel_checked, gpt_dataparallel_real, gpt_hybrid_auto, gpt_hybrid_checked,
+    gpt_hybrid_real, gpt_pipeline_real, gpt_pipeline_real_checked, gpt_sim, gpt_sim_checked,
+    GptDataParallelConfig, GptHybridConfig, GptModelSpec, GptPipelineConfig, GptSimConfig,
 };
 pub use resnet::{resnet50, ResnetConfig};
 pub use bert::bert_base;

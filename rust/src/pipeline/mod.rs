@@ -8,14 +8,17 @@
 //! 1F1B. This module provides the stage-placement arithmetic and the
 //! schedule-quality metrics (bubble fraction).
 
-use crate::placement::{DeviceId, Placement};
+use crate::compiler::parallel::stage_devices;
+use crate::placement::Placement;
 use anyhow::{bail, Result};
 
 /// Assign `n_stages` consecutive stages over `nodes × devs_per_node`
 /// devices, filling whole nodes first (Megatron's canonical layout: tensor
 /// parallel within a node, pipeline across nodes). A cluster that does not
 /// divide evenly into the requested stages is a configuration error,
-/// reported as such (not a panic) so the CLI can surface it.
+/// reported as such (not a panic) so the CLI can surface it. The device
+/// numbering itself is the one shared placement constructor
+/// ([`crate::compiler::parallel::stage_devices`]) every grid builder uses.
 pub fn stage_placements(n_stages: usize, nodes: usize, devs_per_node: usize) -> Result<Vec<Placement>> {
     let total = nodes * devs_per_node;
     if n_stages == 0 {
@@ -30,12 +33,7 @@ pub fn stage_placements(n_stages: usize, nodes: usize, devs_per_node: usize) -> 
     let per_stage = total / n_stages;
     let placements = (0..n_stages)
         .map(|s| {
-            let devices: Vec<DeviceId> = (0..per_stage)
-                .map(|i| {
-                    let flat = s * per_stage + i;
-                    DeviceId::new(flat / devs_per_node, flat % devs_per_node)
-                })
-                .collect();
+            let devices = stage_devices(s, per_stage, devs_per_node);
             // 2-D hierarchy when a stage spans multiple devices: lets tensor
             // (model) parallelism nest inside the stage.
             if per_stage > 1 {
@@ -64,6 +62,7 @@ pub fn stage_register_slots(stages: usize, microbatches: usize) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::placement::DeviceId;
 
     #[test]
     fn placements_partition_all_devices() {

@@ -1,0 +1,207 @@
+//! Auto-parallelism invariants (DESIGN.md invariant 12 + the search
+//! contract): the searched winner is never predicted slower than any
+//! hand-picked grid of the same world, the search is bitwise-deterministic,
+//! beam width 1 compiles every model in the zoo, and a searched grid trains
+//! to bitwise-identical losses as the equal hand-picked grid.
+
+use oneflow::compiler::search::{enumerate, predict};
+use oneflow::compiler::{compile, search, CompileOptions, ScheduleMode, SearchSpace};
+use oneflow::exec::CostModel;
+use oneflow::models::{
+    gpt_dataparallel_real, gpt_hybrid_auto, gpt_hybrid_checked, gpt_hybrid_real,
+    gpt_pipeline_real, gpt_sim, resnet50, GptDataParallelConfig, GptHybridConfig,
+    GptModelSpec, GptPipelineConfig, GptSimConfig, ResnetConfig,
+};
+use oneflow::placement::Placement;
+use oneflow::util::prop;
+
+fn tiny_spec() -> GptModelSpec {
+    GptModelSpec { vocab: 32, hidden: 16, ff: 32, blocks: 4, rows: 32, lr: 0.2 }
+}
+
+fn space(nodes: usize, devs_per_node: usize) -> SearchSpace {
+    SearchSpace { nodes, devs_per_node, microbatches: 2, schedule: ScheduleMode::OneFOneB }
+}
+
+/// The searched winner's predicted makespan is <= every hand-picked grid of
+/// the same world: re-predict each legal config independently (as a user
+/// picking that grid by hand would get) and compare against the winner.
+#[test]
+fn winner_beats_every_hand_picked_grid() {
+    let spec = tiny_spec();
+    prop::check_res(
+        "winner_minimal",
+        8,
+        |r| (r.range(1, 4), r.range(1, 2)),
+        |&(nodes, dpn)| {
+            let sp = space(nodes, dpn);
+            let cost = CostModel::paper_testbed();
+            let base = CompileOptions::default();
+            let frontier = search::search(&sp, &cost, &base, |pc| gpt_hybrid_auto(&spec, pc));
+            let Some(win) = frontier.winner() else {
+                return Err(format!(
+                    "no winner for world {nodes}x{dpn}: pruned {:?}",
+                    frontier.pruned
+                ));
+            };
+            for pc in enumerate(&sp) {
+                // a user hand-picking this same grid gets this same plan
+                let Ok((g, loss, upd)) = gpt_hybrid_auto(&spec, &pc) else {
+                    continue; // infeasible by model shape — pruned for them too
+                };
+                let opts = CompileOptions {
+                    schedule: pc.schedule,
+                    microbatches: pc.microbatches,
+                    cluster: cost.cluster,
+                    parallel: Some(pc),
+                    ..base.clone()
+                };
+                let plan = compile(&g, &[loss], &upd, &opts);
+                if oneflow::memory::check_plan(&plan, &cost.cluster.device).is_err() {
+                    continue;
+                }
+                let p = predict(&plan, &cost);
+                if win.predicted.makespan > p.makespan {
+                    return Err(format!(
+                        "winner {} ({:.06e}s) slower than hand-picked {} ({:.06e}s)",
+                        win.config.label(),
+                        win.predicted.makespan,
+                        pc.label(),
+                        p.makespan
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Same world in, bitwise-same ranking out: configs, order, and the exact
+/// f64 bits of every predicted makespan.
+#[test]
+fn search_is_deterministic() {
+    let spec = tiny_spec();
+    for sp in [space(4, 1), space(2, 2), space(3, 2)] {
+        let cost = CostModel::paper_testbed();
+        let base = CompileOptions::default();
+        let a = search::search(&sp, &cost, &base, |pc| gpt_hybrid_auto(&spec, pc));
+        let b = search::search(&sp, &cost, &base, |pc| gpt_hybrid_auto(&spec, pc));
+        assert_eq!(a.candidates.len(), b.candidates.len());
+        for (x, y) in a.candidates.iter().zip(&b.candidates) {
+            assert_eq!(x.config, y.config, "ranking order changed between runs");
+            assert_eq!(
+                x.predicted.makespan.to_bits(),
+                y.predicted.makespan.to_bits(),
+                "predicted makespan of {} not bitwise-reproducible",
+                x.config.label()
+            );
+        }
+        assert_eq!(a.pruned.len(), b.pruned.len());
+    }
+}
+
+/// Beam width 1 (the default) compiles every model in the zoo — the
+/// once-hard-coded width of `select_sbp`, now a `CompileOptions` field,
+/// must remain a pure pass-through at 1.
+#[test]
+fn beam_width_one_compiles_every_model() {
+    let opts = CompileOptions { beam_width: 1, ..Default::default() };
+
+    let mut sim = GptSimConfig::new(2, 2, 1, 8, 128, 2);
+    sim.seq = 32;
+    sim.vocab = 256;
+    let (g, loss, upd) = gpt_sim(&sim);
+    assert!(!compile(&g, &[loss], &upd, &opts).nodes.is_empty());
+
+    let (g, loss, upd) = gpt_pipeline_real(&GptPipelineConfig::default());
+    assert!(!compile(&g, &[loss], &upd, &opts).nodes.is_empty());
+
+    let (g, loss, upd) = gpt_dataparallel_real(&GptDataParallelConfig::default());
+    assert!(!compile(&g, &[loss], &upd, &opts).nodes.is_empty());
+
+    let (g, loss, upd) = gpt_hybrid_real(&GptHybridConfig::default());
+    assert!(!compile(&g, &[loss], &upd, &opts).nodes.is_empty());
+
+    let cfg = ResnetConfig { batch_per_dev: 8, ..Default::default() };
+    let (g, loss, upd) = resnet50(&cfg, &Placement::flat(1, 2));
+    assert!(!compile(&g, &[loss], &upd, &opts).nodes.is_empty());
+
+    // width > 1 widens greedy into a beam and still compiles
+    let wide = CompileOptions { beam_width: 3, ..Default::default() };
+    let (g, loss, upd) = gpt_hybrid_real(&GptHybridConfig::default());
+    assert!(!compile(&g, &[loss], &upd, &wide).nodes.is_empty());
+}
+
+/// DESIGN.md invariant 12 (value transparency of the search): at equal
+/// `dp·tp·stages`, the searched artifact and the hand-picked grid train to
+/// bitwise-identical losses — the search chooses *where* ops run, never
+/// *what* they compute.
+#[test]
+fn searched_and_hand_picked_losses_bitwise_equal() {
+    use oneflow::actor::{Engine, FnSource, RunOptions};
+    use oneflow::compiler::InputBinding;
+    use oneflow::data::SyntheticCorpus;
+    use oneflow::runtime::NativeBackend;
+    use oneflow::tensor::{DType, Tensor};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let spec = GptModelSpec { vocab: 32, hidden: 16, ff: 32, blocks: 2, rows: 32, lr: 0.2 };
+    let hand_cfg = spec.hybrid_config(2, 2, 2);
+    let pc = hand_cfg.parallel(); // same 2×2×2 grid, same device packing
+
+    let run = |g, loss, upd: &std::collections::HashMap<_, _>| -> Vec<u32> {
+        let plan = compile(&g, &[loss], upd, &CompileOptions::default());
+        let corpus = Arc::new(SyntheticCorpus::new(1024, spec.vocab, 23));
+        let rows = spec.rows;
+        let source = FnSource(move |b: &InputBinding, piece: usize| {
+            let (ids, labels) = corpus.batch(piece, 1, rows);
+            match b.name.as_str() {
+                "ids" => Tensor::new([rows], DType::I32, ids.data),
+                "labels" => Tensor::new([rows], DType::I32, labels.data),
+                _ => Tensor::full(b.shape.clone(), b.dtype, 1.0),
+            }
+        });
+        let report = Engine::new(plan, Arc::new(NativeBackend))
+            .with_source(Arc::new(source))
+            .run_with(RunOptions { pieces: 3, timeout: Some(Duration::from_secs(120)) })
+            .expect("training run");
+        report.fetched[&loss]
+            .iter()
+            .map(|t| (t.data.iter().sum::<f32>() / t.elems() as f32).to_bits())
+            .collect()
+    };
+
+    let (hg, hloss, hupd) = gpt_hybrid_checked(&hand_cfg).expect("hand-picked grid");
+    let hand: Vec<u32> = run(hg, hloss, &hupd);
+
+    let (ag, aloss, aupd) = gpt_hybrid_auto(&spec, &pc).expect("searched grid");
+    let auto_: Vec<u32> = run(ag, aloss, &aupd);
+
+    assert_eq!(hand.len(), 3);
+    assert_eq!(
+        hand, auto_,
+        "searched vs hand-picked losses diverged at equal grid shape (invariant 12)"
+    );
+}
+
+/// Invalid worlds and grids come back as named errors through the search —
+/// never panics — and every pruned config carries its reason.
+#[test]
+fn infeasible_configs_are_pruned_with_reasons() {
+    let spec = GptModelSpec { rows: 2, ..tiny_spec() }; // dp > 2 can't be fed
+    let sp = space(4, 1);
+    let cost = CostModel::paper_testbed();
+    let frontier =
+        search::search(&sp, &cost, &CompileOptions::default(), |pc| gpt_hybrid_auto(&spec, pc));
+    assert!(
+        frontier.pruned.iter().any(|(pc, why)| pc.dp == 4 && why.contains("cannot feed")),
+        "dp=4 over 2 rows should be pruned with a named reason: {:?}",
+        frontier.pruned
+    );
+    for (_, why) in &frontier.pruned {
+        assert!(!why.is_empty());
+    }
+    // blocks=4 world=4: stages ∈ {1,2,4} all divide, so survivors exist
+    assert!(frontier.winner().is_some());
+}
