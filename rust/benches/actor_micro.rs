@@ -15,9 +15,10 @@ use oneflow::graph::{LogicalGraph, OpKind};
 use oneflow::models::{gpt_pipeline_real, gpt_sim, GptPipelineConfig, GptSimConfig};
 use oneflow::placement::Placement;
 use oneflow::runtime::{AllocatingBackend, Backend, NativeBackend, SimBackend};
+use oneflow::linalg::{self, MatRef};
 use oneflow::sbp::{s, NdSbp};
 use oneflow::tensor::{DType, Tensor};
-use oneflow::util::fmt;
+use oneflow::util::{fmt, Rng};
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Duration;
@@ -156,7 +157,37 @@ fn main() {
         per_action4 * 1e9
     ));
 
-    // 4. compiler latency on a paper-scale plan (GPT 2x8x2 hybrid = 32 dev);
+    // 4. blocked-GEMM throughput on one GPT-shaped matmul — the number
+    // `CostModel::calibrated` reads (`gemm.blocked_gflops`) to pin the
+    // simulated device's attainable compute rate to this machine; the full
+    // scalar-vs-blocked sweep lives in `benches/gemm.rs`.
+    let (gm, gk, gn) = if quick { (128, 256, 256) } else { (512, 768, 768) };
+    let ga = Rng::new(41).normal_vec(gm * gk, 1.0);
+    let gb = Rng::new(43).normal_vec(gk * gn, 1.0);
+    let mut gc = vec![0.0; gm * gn];
+    let tg = time_n(1, if quick { 2 } else { 5 }, || {
+        linalg::gemm(
+            gm,
+            gk,
+            gn,
+            MatRef::row_major(&ga, gk),
+            MatRef::row_major(&gb, gn),
+            &mut gc,
+            1,
+        )
+    });
+    let gemm_gflops = 2.0 * (gm * gk * gn) as f64 / tg.mean_secs / 1e9;
+    tab.row(&[
+        format!("GEMM {gm}x{gk}x{gn} ({}, 1 thread)", linalg::simd_path()),
+        format!("{gemm_gflops:.2} GFLOP/s"),
+    ]);
+    json.push_str(&format!(
+        "  \"gemm\": {{\"m\": {gm}, \"k\": {gk}, \"n\": {gn}, \"simd_path\": \"{}\", \
+         \"blocked_gflops\": {gemm_gflops:.3}}},\n",
+        linalg::simd_path()
+    ));
+
+    // 5. compiler latency on a paper-scale plan (GPT 2x8x2 hybrid = 32 dev);
     // skipped under --quick — it dominates the smoke-check budget
     if quick {
         json.push_str("  \"compile\": null\n}\n");

@@ -1,0 +1,116 @@
+//! GEMM throughput (§Perf): GFLOP/s for GPT-shaped matmuls through the
+//! scalar reference, the blocked/packed/SIMD kernel single-threaded, and
+//! the blocked kernel with `--intraop` fan-out — the before/after for the
+//! `linalg` layer (ROADMAP "[perf] Real GEMM"). Every timed pair is also
+//! checked **bitwise-equal** (DESIGN.md invariant 13) so the speed and the
+//! determinism claim are asserted by the same binary. Results go to
+//! `BENCH_gemm.json`; `--quick` shrinks shapes to a CI smoke check.
+
+use oneflow::bench::{time_n, Table};
+use oneflow::config::Args;
+use oneflow::linalg::{self, MatRef};
+use oneflow::util::Rng;
+
+struct Shape {
+    label: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+}
+
+/// GPT-small per-microbatch GEMMs (seq 512, hidden 768, ff 3072).
+const FULL: &[Shape] = &[
+    Shape { label: "attn qkv   512x768x2304", m: 512, k: 768, n: 2304 },
+    Shape { label: "attn out   512x768x768", m: 512, k: 768, n: 768 },
+    Shape { label: "ff up      512x768x3072", m: 512, k: 768, n: 3072 },
+    Shape { label: "ff down    512x3072x768", m: 512, k: 3072, n: 768 },
+];
+
+/// Same aspect ratios, shrunk for the CI smoke leg.
+const QUICK: &[Shape] = &[
+    Shape { label: "attn out   128x192x192", m: 128, k: 192, n: 192 },
+    Shape { label: "ff up      128x192x768", m: 128, k: 192, n: 768 },
+];
+
+fn gflops(m: usize, k: usize, n: usize, secs: f64) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64 / secs / 1e9
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.flag("quick");
+    let shapes = if quick { QUICK } else { FULL };
+    let iters = if quick { 2 } else { 3 };
+    let intraop = 4;
+
+    let mut tab = Table::new(
+        format!("GEMM GFLOP/s (micro-kernel path: {})", linalg::simd_path()),
+        &["shape", "scalar", "blocked x1", &format!("blocked x{intraop}")],
+    );
+    let mut json = String::from("{\n  \"bench\": \"gemm\",\n");
+    json.push_str(&format!(
+        "  \"quick\": {quick},\n  \"simd_path\": \"{}\",\n  \"intraop\": {intraop},\n  \"shapes\": [\n",
+        linalg::simd_path()
+    ));
+
+    let mut r = Rng::new(42);
+    let (mut speedup_min, mut blocked1_sum) = (f64::INFINITY, 0.0);
+    for (si, s) in shapes.iter().enumerate() {
+        let (m, k, n) = (s.m, s.k, s.n);
+        let a = r.normal_vec(m * k, 1.0);
+        let b = r.normal_vec(k * n, 1.0);
+        let (av, bv) = (MatRef::row_major(&a, k), MatRef::row_major(&b, n));
+        let mut want = vec![0.0; m * n];
+        let mut got = vec![0.0; m * n];
+
+        let t_ref = time_n(1, iters, || linalg::reference_gemm(m, k, n, av, bv, &mut want));
+        let t_blk = time_n(1, iters, || linalg::gemm(m, k, n, av, bv, &mut got, 1));
+        // invariant 13: the timed kernels must agree bitwise, every shape
+        assert_eq!(
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "blocked != reference bitwise on {}",
+            s.label
+        );
+        let t_par = time_n(1, iters, || linalg::gemm(m, k, n, av, bv, &mut got, intraop));
+
+        let (g_ref, g_blk, g_par) = (
+            gflops(m, k, n, t_ref.mean_secs),
+            gflops(m, k, n, t_blk.mean_secs),
+            gflops(m, k, n, t_par.mean_secs),
+        );
+        speedup_min = speedup_min.min(g_blk / g_ref);
+        blocked1_sum += g_blk;
+        tab.row(&[
+            s.label.into(),
+            format!("{g_ref:.2}"),
+            format!("{g_blk:.2}"),
+            format!("{g_par:.2}"),
+        ]);
+        json.push_str(&format!(
+            "    {{\"label\": \"{}\", \"m\": {m}, \"k\": {k}, \"n\": {n}, \
+             \"scalar_gflops\": {g_ref:.3}, \"blocked_gflops\": {g_blk:.3}, \
+             \"blocked_intraop_gflops\": {g_par:.3}}}{}\n",
+            s.label.trim_end(),
+            if si + 1 < shapes.len() { "," } else { "" }
+        ));
+    }
+    let blocked_mean = blocked1_sum / shapes.len() as f64;
+    json.push_str(&format!(
+        "  ],\n  \"min_speedup_vs_scalar\": {speedup_min:.3},\n  \
+         \"blocked_gflops_mean\": {blocked_mean:.3}\n}}\n"
+    ));
+    tab.print();
+    println!("\nmin blocked/scalar speedup: {speedup_min:.2}x");
+
+    // CI smoke: the blocked kernel must never lose to the scalar loop. The
+    // margin is generous (timer noise on shared runners), the real ≥4x
+    // single-thread claim is tracked by the committed full-run snapshot.
+    assert!(
+        speedup_min >= 0.9,
+        "blocked GEMM slower than the scalar reference: {speedup_min:.2}x"
+    );
+
+    std::fs::write("BENCH_gemm.json", &json).expect("write BENCH_gemm.json");
+    println!("wrote BENCH_gemm.json");
+}

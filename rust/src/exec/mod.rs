@@ -179,36 +179,63 @@ impl CostModel {
         CostModel { cluster: ClusterModel::paper_testbed(), source: "paper_testbed".into() }
     }
 
-    /// Calibrate the network tier from a measured `TRACE_summary.json`
-    /// (`metrics::TraceSummary::write_json`): the observed effective link
-    /// bandwidth is `Σ bytes / Σ busy_secs` over the per-edge rows, and both
-    /// network bands are rescaled by measured/modeled so the intra/inter
-    /// asymmetry the search reasons about is preserved. A trace with no
-    /// communication edges calibrates nothing and keeps the defaults.
+    /// Calibrate from a measured run. Two tiers, each optional in the file;
+    /// whichever is present is refit, the other keeps its defaults:
+    ///
+    /// * **network** — from a `TRACE_summary.json`
+    ///   (`metrics::TraceSummary::write_json`): the observed effective link
+    ///   bandwidth is `Σ bytes / Σ busy_secs` over the per-edge rows, and
+    ///   both network bands are rescaled by measured/modeled so the
+    ///   intra/inter asymmetry the search reasons about is preserved.
+    /// * **compute** — from a `BENCH_actor_micro.json` /
+    ///   `BENCH_gemm.json` `gemm.blocked_gflops` entry (`benches/gemm.rs`):
+    ///   the device's attainable GEMM throughput `peak_f32 · gemm_eff` is
+    ///   re-derived from the *measured* single-thread blocked-GEMM GFLOP/s,
+    ///   so the roofline compute term the auto-parallel search prices with
+    ///   reflects what the `linalg` kernels actually achieve.
+    ///
+    /// A file with neither (no comm edges, no gemm section) is an error —
+    /// it would calibrate nothing.
     pub fn calibrated(path: &str) -> crate::Result<Self> {
         let v = crate::config::json::parse_file(path)
             .map_err(|e| anyhow::anyhow!("cost-model calibration: {e}"))?;
-        let edges = v.get("edges").and_then(|e| e.as_arr()).ok_or_else(|| {
-            anyhow::anyhow!("cost-model calibration: {path} has no `edges` array")
-        })?;
-        let mut bytes = 0.0;
-        let mut busy = 0.0;
-        for e in edges {
-            bytes += e.get("bytes").and_then(|x| x.as_f64()).unwrap_or(0.0);
-            busy += e.get("busy_secs").and_then(|x| x.as_f64()).unwrap_or(0.0);
-        }
         let mut cluster = ClusterModel::paper_testbed();
-        let source;
-        if bytes > 0.0 && busy > 0.0 {
-            let measured_bps = bytes / busy;
-            let scale = measured_bps / cluster.network.inter_bps;
-            cluster.network.inter_bps = measured_bps;
-            cluster.network.intra_bps *= scale;
-            source = format!("{path} (measured {measured_bps:.3e} B/s effective)");
-        } else {
-            source = format!("{path} (no comm edges; paper-testbed bands kept)");
+        let mut fitted = Vec::new();
+        if let Some(edges) = v.get("edges").and_then(|e| e.as_arr()) {
+            let mut bytes = 0.0;
+            let mut busy = 0.0;
+            for e in edges {
+                bytes += e.get("bytes").and_then(|x| x.as_f64()).unwrap_or(0.0);
+                busy += e.get("busy_secs").and_then(|x| x.as_f64()).unwrap_or(0.0);
+            }
+            if bytes > 0.0 && busy > 0.0 {
+                let measured_bps = bytes / busy;
+                let scale = measured_bps / cluster.network.inter_bps;
+                cluster.network.inter_bps = measured_bps;
+                cluster.network.intra_bps *= scale;
+                fitted.push(format!("net {measured_bps:.3e} B/s effective"));
+            } else {
+                fitted.push("no comm edges; paper-testbed bands kept".into());
+            }
         }
-        Ok(CostModel { cluster, source })
+        let gflops = v
+            .get("gemm")
+            .and_then(|g| g.get("blocked_gflops"))
+            .and_then(|x| x.as_f64())
+            .filter(|g| *g > 0.0);
+        if let Some(g) = gflops {
+            // kernel_secs divides by peak·gemm_eff: make that product the
+            // measured attainable rate, keeping the published efficiency
+            cluster.device.peak_f32 = g * 1e9 / cluster.device.gemm_eff;
+            fitted.push(format!("gemm {g:.1} GFLOP/s measured"));
+        }
+        if fitted.is_empty() {
+            anyhow::bail!(
+                "cost-model calibration: {path} has neither an `edges` array \
+                 nor a `gemm.blocked_gflops` entry"
+            );
+        }
+        Ok(CostModel { cluster, source: format!("{path} ({})", fitted.join("; ")) })
     }
 }
 
@@ -240,5 +267,29 @@ mod tests {
     fn inter_node_slower_than_intra() {
         let n = NetworkModel::paper_testbed();
         assert!(n.xfer_secs(1e9, true) > n.xfer_secs(1e9, false));
+    }
+
+    #[test]
+    fn cost_model_calibrates_compute_tier_from_measured_gemm_gflops() {
+        let path = std::env::temp_dir().join("oneflow_cal_gemm_test.json");
+        std::fs::write(&path, r#"{"gemm": {"blocked_gflops": 12.5}}"#).unwrap();
+        let m = CostModel::calibrated(path.to_str().unwrap()).unwrap();
+        // the attainable rate the roofline divides by is the measured one
+        let attainable = m.cluster.device.peak_f32 * m.cluster.device.gemm_eff;
+        assert!((attainable - 12.5e9).abs() / 12.5e9 < 1e-9, "got {attainable}");
+        assert!(m.source.contains("gemm 12.5 GFLOP/s"), "source: {}", m.source);
+        // the network tier keeps its defaults when the file has no edges
+        let default_net = NetworkModel::paper_testbed();
+        assert_eq!(m.cluster.network.inter_bps, default_net.inter_bps);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn cost_model_calibration_rejects_a_file_with_nothing_to_fit() {
+        let path = std::env::temp_dir().join("oneflow_cal_empty_test.json");
+        std::fs::write(&path, "{}").unwrap();
+        let err = CostModel::calibrated(path.to_str().unwrap()).unwrap_err();
+        assert!(err.to_string().contains("neither"), "err: {err}");
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -61,6 +61,7 @@
 //! tour.
 
 pub mod util;
+pub mod linalg;
 pub mod tensor;
 pub mod sbp;
 pub mod placement;

@@ -1,0 +1,205 @@
+//! The `MR×NR` register-tiled micro-kernel and its SIMD dispatch.
+//!
+//! Two paths, one arithmetic:
+//!
+//! * **portable** — plain indexed `f32` loops over the packed panels with
+//!   an `[ [f32; NR]; MR ]` accumulator block; the `NR`-wide inner loop is
+//!   lane-parallel with no cross-lane dependency, so std autovectorizes it
+//!   on any target (and `-Ctarget-cpu=native` widens it).
+//! * **avx2** — explicit `std::arch` 256-bit version of the *same* loop
+//!   (one `__m256` accumulator per row), taken at runtime when
+//!   `is_x86_feature_detected!("avx2")` holds and the tile is full.
+//!
+//! Both use **separate multiply and add** — `_mm256_add_ps(acc,
+//! _mm256_mul_ps(a, b))`, never `_mm256_fmadd_ps`: an FMA rounds once
+//! where the canonical order rounds twice, which would break the bitwise
+//! invariant (DESIGN.md invariant 13). Rust performs no floating-point
+//! contraction, so the portable path cannot be silently fused either.
+//!
+//! Per output element both paths run: load partial `C` (or start `0.0` on
+//! the first k-panel), then `acc += a·b` for ascending `k`, then store —
+//! the exact element-wise sequence of [`super::reference_gemm`].
+
+use super::{MR, NR};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Test hook: force the portable kernel even where AVX2 is detected, so
+/// the two paths can be compared bitwise on the same machine.
+static FORCE_PORTABLE: AtomicBool = AtomicBool::new(false);
+
+pub fn set_force_portable(on: bool) {
+    FORCE_PORTABLE.store(on, Ordering::SeqCst);
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_detected() -> bool {
+    static AVX2: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *AVX2.get_or_init(|| std::is_x86_feature_detected!("avx2"))
+}
+
+/// Name of the micro-kernel path the dispatcher would take right now
+/// (reported by `benches/gemm.rs` and the docs).
+pub fn simd_path() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_detected() && !FORCE_PORTABLE.load(Ordering::Relaxed) {
+        return "avx2";
+    }
+    "portable"
+}
+
+/// One micro-tile: `C[0..mr][0..nr] (+)= pa · pb` over a `kc`-deep panel.
+///
+/// `pa`/`pb` are packed panels (`MR·kc` / `NR·kc`, zero-padded); `c` points
+/// at the tile's top-left element inside a row-major matrix with leading
+/// dimension `ldc`. `first` selects zero-init vs load-accumulate (the
+/// k-panel association that keeps blocking bitwise-exact).
+///
+/// # Safety
+/// `c` must be valid for reads and writes of the `mr × nr` tile at leading
+/// dimension `ldc`, and no other thread may alias it during the call.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn run(
+    kc: usize,
+    pa: &[f32],
+    pb: &[f32],
+    c: *mut f32,
+    ldc: usize,
+    first: bool,
+    mr: usize,
+    nr: usize,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if mr == MR && nr == NR && avx2_detected() && !FORCE_PORTABLE.load(Ordering::Relaxed) {
+        return x86::run_avx2(kc, pa, pb, c, ldc, first);
+    }
+    portable(kc, pa, pb, c, ldc, first, mr, nr);
+}
+
+/// Portable micro-kernel; see module docs. Safety contract as [`run`].
+#[allow(clippy::too_many_arguments)]
+unsafe fn portable(
+    kc: usize,
+    pa: &[f32],
+    pb: &[f32],
+    c: *mut f32,
+    ldc: usize,
+    first: bool,
+    mr: usize,
+    nr: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    if !first {
+        for (i, row) in acc.iter_mut().enumerate().take(mr) {
+            for (j, v) in row.iter_mut().enumerate().take(nr) {
+                *v = *c.add(i * ldc + j);
+            }
+        }
+    }
+    for kk in 0..kc {
+        let ak = &pa[kk * MR..kk * MR + MR];
+        let bk = &pb[kk * NR..kk * NR + NR];
+        for (row, &ai) in acc.iter_mut().zip(ak) {
+            for (v, &bj) in row.iter_mut().zip(bk) {
+                // separate mul and add — the canonical two-rounding step
+                *v += ai * bj;
+            }
+        }
+    }
+    for (i, row) in acc.iter().enumerate().take(mr) {
+        for (j, v) in row.iter().enumerate().take(nr) {
+            *c.add(i * ldc + j) = *v;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{MR, NR};
+    use std::arch::x86_64::*;
+
+    /// AVX2 micro-kernel for full `MR×NR` tiles. Safety contract as
+    /// [`super::run`], plus: caller checked `avx2` is available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn run_avx2(
+        kc: usize,
+        pa: &[f32],
+        pb: &[f32],
+        c: *mut f32,
+        ldc: usize,
+        first: bool,
+    ) {
+        debug_assert!(pa.len() >= MR * kc && pb.len() >= NR * kc);
+        let mut acc = [_mm256_setzero_ps(); MR];
+        if !first {
+            for (i, v) in acc.iter_mut().enumerate() {
+                *v = _mm256_loadu_ps(c.add(i * ldc));
+            }
+        }
+        let mut ap = pa.as_ptr();
+        let mut bp = pb.as_ptr();
+        for _ in 0..kc {
+            let bv = _mm256_loadu_ps(bp);
+            for (i, v) in acc.iter_mut().enumerate() {
+                let av = _mm256_set1_ps(*ap.add(i));
+                // mul + add, NOT fmadd: fused rounding would diverge from
+                // the scalar reference bitwise (invariant 13)
+                *v = _mm256_add_ps(*v, _mm256_mul_ps(av, bv));
+            }
+            ap = ap.add(MR);
+            bp = bp.add(NR);
+        }
+        for (i, v) in acc.iter().enumerate() {
+            _mm256_storeu_ps(c.add(i * ldc), *v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive one micro-tile through both paths and the element-wise
+    /// definition; everything must agree bitwise.
+    #[test]
+    fn kernel_paths_match_elementwise_definition() {
+        let kc = 13;
+        let pa: Vec<f32> = (0..MR * kc).map(|x| (x as f32 * 0.37).sin()).collect();
+        let pb: Vec<f32> = (0..NR * kc).map(|x| (x as f32 * 0.29).cos()).collect();
+        let prior: Vec<f32> = (0..MR * NR).map(|x| x as f32 * 0.01).collect();
+        let mut want = prior.clone();
+        for (i, row) in want.chunks_exact_mut(NR).enumerate() {
+            for (j, w) in row.iter_mut().enumerate() {
+                for kk in 0..kc {
+                    *w += pa[kk * MR + i] * pb[kk * NR + j];
+                }
+            }
+        }
+        for force in [false, true] {
+            set_force_portable(force);
+            let mut got = prior.clone();
+            unsafe { run(kc, &pa, &pb, got.as_mut_ptr(), NR, false, MR, NR) };
+            assert_eq!(
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "force_portable={force}"
+            );
+        }
+        set_force_portable(false);
+    }
+
+    #[test]
+    fn partial_tile_stores_only_its_elements() {
+        let kc = 3;
+        let pa = vec![1.0; MR * kc]; // padding rows are the caller's concern
+        let pb = vec![1.0; NR * kc];
+        let mut c = vec![-7.0; MR * NR];
+        unsafe { run(kc, &pa, &pb, c.as_mut_ptr(), NR, true, 2, 3) };
+        for i in 0..MR {
+            for j in 0..NR {
+                let want = if i < 2 && j < 3 { kc as f32 } else { -7.0 };
+                assert_eq!(c[i * NR + j], want, "i={i} j={j}");
+            }
+        }
+    }
+}

@@ -1,0 +1,272 @@
+//! Packed, cache-blocked, SIMD GEMM — the single matmul implementation
+//! behind [`crate::tensor::ops::matmul_into`] (ROADMAP "[perf] Real GEMM").
+//!
+//! Shapes are static at plan time, so all tiling decisions are compile-time
+//! constants and all scratch is per-thread and reused across calls: the
+//! steady-state training step stays allocation-free (DESIGN.md invariant 9).
+//!
+//! ## Structure
+//!
+//! * [`pack`] — copies `MC×KC` A blocks and `KC×NC` B panels into
+//!   per-thread scratch in micro-panel order (`MR`/`NR` interleaved,
+//!   zero-padded at the edges), so the micro-kernel reads unit-stride
+//!   regardless of the caller's transpose flags.
+//! * [`kernel`] — the `MR×NR` register-tiled micro-kernel: a portable
+//!   lane-chunked `f32` loop std autovectorizes, plus an explicit AVX2
+//!   `std::arch` path behind a runtime `is_x86_feature_detected!` check.
+//!   Both paths run **separate multiply and add** (never a fused
+//!   multiply-add) so they are bitwise-identical to each other and to the
+//!   scalar reference.
+//! * [`transpose_into`] — the one cache-blocked 2-D transpose, shared by
+//!   `tensor::ops::transpose2_into` (and anything else that needs one).
+//!
+//! ## The canonical accumulation order (DESIGN.md invariant 13)
+//!
+//! Every output element `C[i][j]` is the sequential sum over ascending `k`
+//! of `round(A[i][k] · B[k][j])`, one `f32` accumulator per element,
+//! starting from `0.0` — exactly the order of [`reference_gemm`], the
+//! retained scalar `i → k → j` triple loop. Blocking never changes it:
+//!
+//! * `KC` panels are visited in ascending `k` order and the micro-kernel
+//!   **loads the partial `C` tile, accumulates, stores** — an exact f32
+//!   round-trip, so the association `((C + p₀) + p₁) + …` is preserved
+//!   across panels.
+//! * `MC`/`NC`/`MR`/`NR` blocking only picks *which* elements are computed
+//!   when; each element's accumulator chain is untouched.
+//! * Intra-op chunks own disjoint row-tile ranges (`--intraop`, tile
+//!   granularity via [`crate::util::pool::split_granular`]), so thread
+//!   count never moves an element between accumulation chains.
+//! * Zero-padded pack edges multiply into padding lanes only, which are
+//!   never stored.
+//!
+//! Hence blocked = reference **bitwise**, for every shape, transpose-flag
+//! combination, `--intraop` width and SIMD feature path — checked by
+//! `tests/linalg.rs` and asserted by `benches/gemm.rs` in CI.
+
+pub mod kernel;
+pub mod pack;
+mod transpose;
+
+pub use kernel::{set_force_portable, simd_path};
+pub use transpose::transpose_into;
+
+/// Rows per micro-tile (register-blocked accumulator rows).
+pub const MR: usize = 8;
+/// Columns per micro-tile (one 8-lane f32 vector).
+pub const NR: usize = 8;
+/// Rows per packed A block (L2-resident, multiple of `MR`).
+pub const MC: usize = 64;
+/// Inner-dimension panel depth (A block `MC×KC` ≈ 64 KiB ~ L1/L2 boundary).
+pub const KC: usize = 256;
+/// Columns per packed B panel (B panel `KC×NC` ≈ 1 MiB, L2/L3-resident,
+/// multiple of `NR`).
+pub const NC: usize = 1024;
+
+const _: () = assert!(MC % MR == 0 && NC % NR == 0);
+
+/// A borrowed 2-D `f32` view with explicit strides — how the GEMM reads
+/// either a row-major operand or its transpose without materializing it.
+#[derive(Clone, Copy)]
+pub struct MatRef<'a> {
+    pub data: &'a [f32],
+    /// Element distance between logical rows.
+    pub rs: usize,
+    /// Element distance between logical columns.
+    pub cs: usize,
+}
+
+impl<'a> MatRef<'a> {
+    /// View a row-major `(rows, cols)` buffer as itself.
+    pub fn row_major(data: &'a [f32], cols: usize) -> Self {
+        MatRef { data, rs: cols, cs: 1 }
+    }
+
+    /// View a row-major `(rows, cols)` buffer as its `(cols, rows)`
+    /// transpose (reads are re-strided; nothing is copied).
+    pub fn transposed(data: &'a [f32], cols: usize) -> Self {
+        MatRef { data, rs: 1, cs: cols }
+    }
+
+    #[inline(always)]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.rs + j * self.cs]
+    }
+}
+
+/// Blocked GEMM: `C = A @ B` with `A` logically `(m, k)`, `B` logically
+/// `(k, n)` and `C` row-major `(m, n)`, fully overwritten. `chunks` is the
+/// intra-op width (`--intraop`): row tiles are split into at most `chunks`
+/// balanced contiguous ranges at `MR` granularity and fanned over the
+/// shared pool — bitwise-identical for every width by the canonical-order
+/// argument above.
+pub fn gemm(m: usize, k: usize, n: usize, a: MatRef, b: MatRef, c: &mut [f32], chunks: usize) {
+    assert_eq!(c.len(), m * n, "gemm: C is {} elems, want {m}x{n}", c.len());
+    if m == 0 || n == 0 {
+        return;
+    }
+    let ranges = crate::util::pool::split_granular(m, MR, chunks);
+    if ranges.len() <= 1 {
+        gemm_rows(0, m, k, n, a, b, c.as_mut_ptr());
+    } else {
+        let c_ptr = c.as_mut_ptr() as usize;
+        crate::util::pool::run_chunks(ranges.len(), &|ci| {
+            let (lo, hi) = ranges[ci];
+            // SAFETY: ranges are disjoint row spans of C and `run_chunks`
+            // blocks until every chunk completed.
+            gemm_rows(lo, hi, k, n, a, b, c_ptr as *mut f32);
+        });
+    }
+}
+
+thread_local! {
+    /// Per-thread packing scratch `(A block, B panel)`, grown on first use
+    /// and reused across calls (pool workers live for the process), so the
+    /// steady-state GEMM allocates nothing.
+    static PACK_SCRATCH: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
+        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// One chunk's share: rows `[lo, hi)` of `C`, all columns. `c` points at
+/// the full row-major `(_, n)` output; this writes only its own rows.
+fn gemm_rows(lo: usize, hi: usize, k: usize, n: usize, a: MatRef, b: MatRef, c: *mut f32) {
+    PACK_SCRATCH.with(|cell| {
+        let scratch = &mut *cell.borrow_mut();
+        let (pa, pb) = (&mut scratch.0, &mut scratch.1);
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            if k == 0 {
+                for i in lo..hi {
+                    // SAFETY: rows [lo, hi) belong to this chunk.
+                    unsafe { std::slice::from_raw_parts_mut(c.add(i * n + jc), nc) }.fill(0.0);
+                }
+                continue;
+            }
+            for (kp_idx, kp) in (0..k).step_by(KC).enumerate() {
+                let kc = KC.min(k - kp);
+                let first = kp_idx == 0;
+                pack::pack_b(b, kp, kc, jc, nc, pb);
+                for ic in (lo..hi).step_by(MC) {
+                    let mc = MC.min(hi - ic);
+                    pack::pack_a(a, ic, mc, kp, kc, pa);
+                    for jr in (0..nc).step_by(NR) {
+                        let nr = NR.min(nc - jr);
+                        let pb_panel = &pb[(jr / NR) * NR * kc..][..NR * kc];
+                        for ir in (0..mc).step_by(MR) {
+                            let mr = MR.min(mc - ir);
+                            let pa_panel = &pa[(ir / MR) * MR * kc..][..MR * kc];
+                            // SAFETY: the (mr × nr) tile at ((ic+ir), (jc+jr))
+                            // lies inside this chunk's rows of C.
+                            unsafe {
+                                kernel::run(
+                                    kc,
+                                    pa_panel,
+                                    pb_panel,
+                                    c.add((ic + ir) * n + jc + jr),
+                                    n,
+                                    first,
+                                    mr,
+                                    nr,
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// The retained scalar reference: the exact `i → k → j` triple loop that
+/// was `matmul_into`'s hot loop before the `linalg` layer. It *defines* the
+/// canonical accumulation order (ascending `k`, one `f32` accumulator per
+/// element, separate multiply and add, no zero-skip so `0·NaN`/`0·Inf`
+/// propagate). Test-and-bench baseline only — never dispatched.
+pub fn reference_gemm(m: usize, k: usize, n: usize, a: MatRef, b: MatRef, c: &mut [f32]) {
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        crow.fill(0.0);
+        for kk in 0..k {
+            let aik = a.at(i, kk);
+            if b.cs == 1 {
+                // unit-stride fast path: same arithmetic, vectorizable —
+                // keeps the bench baseline honest
+                let brow = &b.data[kk * b.rs..kk * b.rs + n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += aik * bv;
+                }
+            } else {
+                for (j, cv) in crow.iter_mut().enumerate() {
+                    *cv += aik * b.at(kk, j);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn bits(c: &[f32]) -> Vec<u32> {
+        c.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn randv(n: usize, r: &mut Rng) -> Vec<f32> {
+        r.normal_vec(n, 1.5)
+    }
+
+    #[test]
+    fn blocked_equals_reference_across_blocking_boundaries() {
+        // shapes straddling MR/NR/MC/KC edges, none a tile multiple
+        let mut r = Rng::new(9);
+        for (m, k, n) in
+            [(1, 1, 1), (3, 5, 2), (MR, KC, NR), (MR + 1, KC + 3, NR + 5), (MC + 3, 2 * KC + 7, 19)]
+        {
+            let a = randv(m * k, &mut r);
+            let b = randv(k * n, &mut r);
+            let mut want = vec![0.0; m * n];
+            let mut got = vec![0.0; m * n];
+            reference_gemm(m, k, n, MatRef::row_major(&a, k), MatRef::row_major(&b, n), &mut want);
+            gemm(m, k, n, MatRef::row_major(&a, k), MatRef::row_major(&b, n), &mut got, 1);
+            assert_eq!(bits(&want), bits(&got), "shape ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn k_zero_zeroes_the_output() {
+        let mut c = vec![7.0; 6];
+        gemm(2, 0, 3, MatRef::row_major(&[], 0), MatRef::row_major(&[], 3), &mut c, 2);
+        assert_eq!(c, vec![0.0; 6]);
+    }
+
+    #[test]
+    fn transposed_views_match_reference() {
+        let mut r = Rng::new(10);
+        let (m, k, n) = (13, 21, 11);
+        let a_t = randv(k * m, &mut r); // stored (k, m), read as Aᵀ
+        let b_t = randv(n * k, &mut r); // stored (n, k), read as Bᵀ
+        let mut want = vec![0.0; m * n];
+        let mut got = vec![0.0; m * n];
+        let (av, bv) = (MatRef::transposed(&a_t, m), MatRef::transposed(&b_t, k));
+        reference_gemm(m, k, n, av, bv, &mut want);
+        gemm(m, k, n, av, bv, &mut got, 3);
+        assert_eq!(bits(&want), bits(&got));
+    }
+
+    #[test]
+    fn transpose_into_matches_naive() {
+        let mut r = Rng::new(12);
+        for (rows, cols) in [(1, 1), (3, 7), (33, 65), (70, 31)] {
+            let src = randv(rows * cols, &mut r);
+            let mut got = vec![0.0; rows * cols];
+            transpose_into(&src, rows, cols, &mut got);
+            for i in 0..rows {
+                for j in 0..cols {
+                    assert_eq!(got[j * rows + i].to_bits(), src[i * cols + j].to_bits());
+                }
+            }
+        }
+    }
+}

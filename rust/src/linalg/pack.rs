@@ -1,0 +1,112 @@
+//! Panel packing: copy cache blocks of A and B into per-thread scratch in
+//! micro-panel order, so the micro-kernel reads both operands unit-stride
+//! no matter how the caller's tensors are laid out (transpose flags become
+//! strided *reads* here, never a separate materialized transpose).
+//!
+//! Layouts (k-major within a micro-panel):
+//!
+//! * **A block** `(mc × kc)` → `⌈mc/MR⌉` panels; panel `p`, offset
+//!   `p·MR·kc`, holds rows `[p·MR, p·MR+MR)` as `out[kk·MR + r] = A[r][kk]`.
+//! * **B panel** `(kc × nc)` → `⌈nc/NR⌉` panels; panel `p`, offset
+//!   `p·NR·kc`, holds cols `[p·NR, p·NR+NR)` as `out[kk·NR + j] = B[kk][j]`.
+//!
+//! Edge panels are **zero-padded** to full `MR`/`NR` width: padding only
+//! ever multiplies into accumulator lanes the kernel does not store, so it
+//! cannot perturb a real output element (DESIGN.md invariant 13).
+//!
+//! Packing copies values bit-for-bit and performs no arithmetic, so it is
+//! transparent to the canonical accumulation order.
+
+use super::{MatRef, MR, NR};
+
+/// Grow-only resize: scratch keeps its high-water capacity across calls so
+/// the steady state allocates nothing (invariant 9).
+fn fit(buf: &mut Vec<f32>, need: usize) {
+    if buf.len() < need {
+        buf.resize(need, 0.0);
+    }
+}
+
+/// Pack the `(mc × kc)` block of `a` at `(ic, kp)` into `out`.
+pub fn pack_a(a: MatRef, ic: usize, mc: usize, kp: usize, kc: usize, out: &mut Vec<f32>) {
+    let panels = mc.div_ceil(MR);
+    fit(out, panels * MR * kc);
+    for p in 0..panels {
+        let base = p * MR * kc;
+        let i0 = ic + p * MR;
+        let rows = MR.min(ic + mc - i0);
+        let dst = &mut out[base..base + MR * kc];
+        for r in 0..MR {
+            if r < rows {
+                for (kk, d) in dst[r..].iter_mut().step_by(MR).enumerate() {
+                    *d = a.at(i0 + r, kp + kk);
+                }
+            } else {
+                for d in dst[r..].iter_mut().step_by(MR) {
+                    *d = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Pack the `(kc × nc)` panel of `b` at `(kp, jc)` into `out`.
+pub fn pack_b(b: MatRef, kp: usize, kc: usize, jc: usize, nc: usize, out: &mut Vec<f32>) {
+    let panels = nc.div_ceil(NR);
+    fit(out, panels * NR * kc);
+    for p in 0..panels {
+        let base = p * NR * kc;
+        let j0 = jc + p * NR;
+        let cols = NR.min(jc + nc - j0);
+        let dst = &mut out[base..base + NR * kc];
+        for (kk, drow) in dst.chunks_exact_mut(NR).enumerate() {
+            if b.cs == 1 && cols == NR {
+                let srow = (kp + kk) * b.rs + j0;
+                drow.copy_from_slice(&b.data[srow..srow + NR]);
+            } else {
+                for (j, d) in drow.iter_mut().enumerate() {
+                    *d = if j < cols { b.at(kp + kk, j0 + j) } else { 0.0 };
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_a_is_k_major_with_zero_padded_edge() {
+        // a = 3x4 row-major; block covering everything, MR=8 pads rows 3..8
+        let a: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let mut out = Vec::new();
+        pack_a(MatRef::row_major(&a, 4), 0, 3, 0, 4, &mut out);
+        assert_eq!(out.len(), MR * 4);
+        for kk in 0..4 {
+            for r in 0..MR {
+                let want = if r < 3 { a[r * 4 + kk] } else { 0.0 };
+                assert_eq!(out[kk * MR + r], want, "kk={kk} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_b_strided_equals_contiguous() {
+        // the same logical (k x n) matrix packed from row-major B and from
+        // its transposed storage must produce identical bytes
+        let (k, n) = (5, 11);
+        let b: Vec<f32> = (0..k * n).map(|x| x as f32 * 0.5).collect();
+        let mut bt = vec![0.0; k * n]; // stored (n, k)
+        for i in 0..k {
+            for j in 0..n {
+                bt[j * k + i] = b[i * n + j];
+            }
+        }
+        let mut p1 = Vec::new();
+        let mut p2 = Vec::new();
+        pack_b(MatRef::row_major(&b, n), 0, k, 0, n, &mut p1);
+        pack_b(MatRef::transposed(&bt, k), 0, k, 0, n, &mut p2);
+        assert_eq!(p1, p2);
+    }
+}

@@ -1,0 +1,29 @@
+//! The one cache-blocked 2-D transpose (ISSUE 9 satellite: `tensor::ops`
+//! used to carry two copies of the naive loop — `transpose_into_buf` and
+//! `transpose2_into` — both now funnel here).
+//!
+//! A transpose is a pure permutation: it copies bits, performs no
+//! arithmetic, and so can be tiled freely without touching any bitwise
+//! invariant. Tiling bounds the working set to two `TB×TB` tiles so both
+//! the unit-stride reads and the strided writes stay cache-resident.
+
+/// `TB×TB` f32 tiles: 2 × 32² × 4 B = 8 KiB working set, comfortably L1.
+const TB: usize = 32;
+
+/// Transpose row-major `(rows, cols)` `src` into row-major `(cols, rows)`
+/// `dst`: `dst[j·rows + i] = src[i·cols + j]`.
+pub fn transpose_into(src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
+    assert_eq!(src.len(), rows * cols, "transpose src {} != {rows}x{cols}", src.len());
+    assert_eq!(dst.len(), rows * cols, "transpose dst {} != {rows}x{cols}", dst.len());
+    for ib in (0..rows).step_by(TB) {
+        let ihi = (ib + TB).min(rows);
+        for jb in (0..cols).step_by(TB) {
+            let jhi = (jb + TB).min(cols);
+            for i in ib..ihi {
+                for j in jb..jhi {
+                    dst[j * rows + i] = src[i * cols + j];
+                }
+            }
+        }
+    }
+}

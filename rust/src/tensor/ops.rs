@@ -10,13 +10,16 @@
 //! arithmetic in the identical order and are **bitwise-equal** by
 //! construction.
 //!
-//! `matmul` additionally supports intra-op parallelism: rows of `C` are
-//! chunked across a small fixed thread pool ([`crate::util::pool`],
-//! `--intraop N`, default 1). Each row is computed by the same sequential
-//! loop regardless of the chunking, so results are bitwise-identical for
-//! every `N`.
+//! `matmul` dispatches to the packed, cache-blocked, SIMD GEMM in
+//! [`crate::linalg`] — one canonical accumulation order per `(m, k, n)`
+//! shape, bitwise-equal to the retained scalar reference
+//! ([`crate::linalg::reference_gemm`]) for every transpose-flag
+//! combination, SIMD feature path and intra-op width (DESIGN.md invariant
+//! 13). Intra-op parallelism chunks row *tiles* of `C` across a small
+//! fixed thread pool ([`crate::util::pool`], `--intraop N`, default 1).
 
 use super::{DType, Shape, Tensor};
+use crate::linalg::{self, MatRef};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Intra-op parallelism degree (rows of one matmul spread over the fixed
@@ -74,89 +77,24 @@ pub fn matmul(a: &Tensor, b: &Tensor, trans_a: bool, trans_b: bool) -> Tensor {
     out
 }
 
-thread_local! {
-    /// Per-thread transpose-normalization scratch for [`matmul_into`]: the
-    /// `(Aᵀ, Bᵀ)` views materialize here once per call and the buffers are
-    /// reused across calls, so the unit-stride hot loop costs no
-    /// steady-state allocation.
-    static MM_NORM: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
-        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
-}
-
-/// Transpose `(rows, cols)`-shaped `src` into `dst` (resized in place).
-fn transpose_into_buf(src: &[f32], rows: usize, cols: usize, dst: &mut Vec<f32>) {
-    if dst.len() != src.len() {
-        dst.resize(src.len(), 0.0);
-    }
-    for i in 0..rows {
-        for j in 0..cols {
-            dst[j * rows + i] = src[i * cols + j];
-        }
-    }
-}
-
-/// Out-param matmul: fully overwrites `out` (zero then accumulate).
-/// Transposed operands are normalized into per-thread scratch (reused
-/// across calls — no steady-state allocation) so the hot loop always runs
-/// the unit-stride `i → k → j` order; normalization changes only *where*
-/// an element is read, never the accumulation order, so all four flag
+/// Out-param matmul: fully overwrites `out` via the blocked GEMM in
+/// [`crate::linalg`]. Transpose flags become strided *reads* in the
+/// packing step (nothing is materialized), which changes only *where* an
+/// element is read, never the accumulation order — all four flag
 /// combinations are bitwise-equal to an explicit-transpose reference. No
-/// zero-skip on `aik`: 0·NaN and 0·Inf must propagate NaN (IEEE), and a
-/// skip would hide them. Rows are chunked over the intra-op pool when
-/// [`intraop`] > 1 (bitwise-identical: each row's loop is the same
-/// sequential code on every chunking).
+/// zero-skip anywhere: 0·NaN and 0·Inf must propagate NaN (IEEE). Row
+/// tiles are chunked over the intra-op pool when [`intraop`] > 1
+/// (bitwise-identical for every width: chunks own disjoint output rows and
+/// every element keeps the one canonical accumulation order — DESIGN.md
+/// invariant 13).
 pub fn matmul_into(a: &Tensor, b: &Tensor, trans_a: bool, trans_b: bool, out: &mut Tensor) {
     let (m, k, n) = mm_dims(a, b, trans_a, trans_b);
-    let (am, ak) = dims2(a);
-    let (bk, bn) = dims2(b);
+    let (_, ak) = dims2(a);
+    let (_, bn) = dims2(b);
     set_meta_dims2(out, m, n, a.dtype);
-    MM_NORM.with(|cell| {
-        let norm = &mut *cell.borrow_mut();
-        let a_view: &[f32] = if trans_a {
-            transpose_into_buf(&a.data, am, ak, &mut norm.0);
-            &norm.0
-        } else {
-            &a.data
-        };
-        let b_view: &[f32] = if trans_b {
-            transpose_into_buf(&b.data, bk, bn, &mut norm.1);
-            &norm.1
-        } else {
-            &b.data
-        };
-        // one row of C, identical for every chunking
-        let compute_row = |i: usize, crow: &mut [f32]| {
-            crow.fill(0.0);
-            for kk in 0..k {
-                let aik = a_view[i * k + kk];
-                let brow = &b_view[kk * n..(kk + 1) * n];
-                for (c, &bv) in crow.iter_mut().zip(brow) {
-                    *c += aik * bv;
-                }
-            }
-        };
-        let chunks = intraop().min(m).max(1);
-        if chunks == 1 {
-            for i in 0..m {
-                compute_row(i, &mut out.data[i * n..(i + 1) * n]);
-            }
-        } else {
-            let out_ptr = out.data.as_mut_ptr() as usize;
-            crate::util::pool::run_chunks(chunks, &|c| {
-                // chunk c owns rows [lo, hi): disjoint output regions
-                let lo = c * m / chunks;
-                let hi = (c + 1) * m / chunks;
-                for i in lo..hi {
-                    // SAFETY: row ranges of distinct chunks never overlap,
-                    // and run_chunks blocks until every chunk completed.
-                    let crow = unsafe {
-                        std::slice::from_raw_parts_mut((out_ptr as *mut f32).add(i * n), n)
-                    };
-                    compute_row(i, crow);
-                }
-            });
-        }
-    });
+    let av = if trans_a { MatRef::transposed(&a.data, ak) } else { MatRef::row_major(&a.data, ak) };
+    let bv = if trans_b { MatRef::transposed(&b.data, bn) } else { MatRef::row_major(&b.data, bn) };
+    linalg::gemm(m, k, n, av, bv, &mut out.data, intraop());
 }
 
 /// 2-D transpose.
@@ -166,15 +104,12 @@ pub fn transpose2(t: &Tensor) -> Tensor {
     out
 }
 
-/// Out-param 2-D transpose.
+/// Out-param 2-D transpose (the shared cache-blocked implementation in
+/// [`crate::linalg::transpose_into`]).
 pub fn transpose2_into(t: &Tensor, out: &mut Tensor) {
     let (m, n) = dims2(t);
     set_meta_dims2(out, n, m, t.dtype);
-    for i in 0..m {
-        for j in 0..n {
-            out.data[j * m + i] = t.data[i * n + j];
-        }
-    }
+    linalg::transpose_into(&t.data, m, n, &mut out.data);
 }
 
 fn dims2(t: &Tensor) -> (usize, usize) {

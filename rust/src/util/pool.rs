@@ -97,6 +97,31 @@ thread_local! {
     static IN_POOL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
 }
 
+/// Split `items` work items into at most `chunks` contiguous, disjoint
+/// `[lo, hi)` ranges aligned to `granule` (the cache-tile size — callers
+/// chunk at tile granularity, not raw items). Whole granules are dealt out
+/// balanced: the first `granules % chunks` ranges take one extra granule,
+/// so range sizes never differ by more than one granule (ISSUE 9 satellite:
+/// the old `lo = c·m/chunks` row split is replaced by this single
+/// deterministic partition). Empty input yields no ranges.
+pub fn split_granular(items: usize, granule: usize, chunks: usize) -> Vec<(usize, usize)> {
+    assert!(granule > 0, "split_granular: zero granule");
+    if items == 0 {
+        return Vec::new();
+    }
+    let tiles = items.div_ceil(granule);
+    let chunks = chunks.clamp(1, tiles);
+    let (base, rem) = (tiles / chunks, tiles % chunks);
+    let mut ranges = Vec::with_capacity(chunks);
+    let mut tile = 0;
+    for c in 0..chunks {
+        let lo = tile * granule;
+        tile += base + usize::from(c < rem);
+        ranges.push((lo, (tile * granule).min(items)));
+    }
+    ranges
+}
+
 /// Run `f(chunk)` for every `chunk in 0..chunks`, spread over the shared
 /// pool; chunk 0 runs on the calling thread. Blocks until all chunks
 /// completed, so `f` may reference caller-stack data through disjoint
@@ -163,6 +188,35 @@ pub fn run_chunks(chunks: usize, f: &(dyn Fn(usize) + Sync)) {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn split_granular_is_balanced_aligned_and_exhaustive() {
+        for items in [0usize, 1, 7, 8, 9, 33, 64, 100, 1000] {
+            for granule in [1usize, 4, 8, 32] {
+                for chunks in [1usize, 2, 3, 4, 7, 16] {
+                    let r = split_granular(items, granule, chunks);
+                    if items == 0 {
+                        assert!(r.is_empty());
+                        continue;
+                    }
+                    // contiguous cover of [0, items), granule-aligned starts
+                    assert_eq!(r.first().unwrap().0, 0);
+                    assert_eq!(r.last().unwrap().1, items);
+                    for w in r.windows(2) {
+                        assert_eq!(w[0].1, w[1].0);
+                    }
+                    let tiles: Vec<usize> =
+                        r.iter().map(|(lo, hi)| (hi - lo).div_ceil(granule)).collect();
+                    assert!(r.iter().all(|(lo, _)| lo % granule == 0));
+                    assert!(tiles.iter().all(|t| *t > 0), "empty chunk: {r:?}");
+                    // balance: granule counts differ by at most one
+                    let (min, max) =
+                        (tiles.iter().min().unwrap(), tiles.iter().max().unwrap());
+                    assert!(max - min <= 1, "imbalanced {tiles:?} ({items},{granule},{chunks})");
+                }
+            }
+        }
+    }
 
     #[test]
     fn every_chunk_runs_exactly_once() {

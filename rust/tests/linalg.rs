@@ -1,0 +1,132 @@
+//! DESIGN.md §4 invariant 13: the packed/blocked/SIMD GEMM behind
+//! `tensor::ops::matmul_into` is **bitwise-equal** to the retained scalar
+//! reference (`linalg::reference_gemm` — the canonical `i → k → j`
+//! accumulation order) for every shape (tile multiples or not), all four
+//! transpose-flag combinations, every `--intraop` width, and both SIMD
+//! feature paths. Plus the NaN/Inf-propagation regression from ISSUE 5 on
+//! the blocked path.
+
+use oneflow::linalg::{self, MatRef, KC, MC, MR, NR};
+use oneflow::tensor::{ops, DType, Tensor};
+use oneflow::util::{prop, Rng};
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Reference result for `A@B` under the flags, reading the stored buffers
+/// through strided views exactly like the blocked path does.
+fn reference(a: &Tensor, b: &Tensor, ta: bool, tb: bool, m: usize, k: usize, n: usize) -> Vec<f32> {
+    let ak = a.shape.dim(1);
+    let bn = b.shape.dim(1);
+    let av = if ta { MatRef::transposed(&a.data, ak) } else { MatRef::row_major(&a.data, ak) };
+    let bv = if tb { MatRef::transposed(&b.data, bn) } else { MatRef::row_major(&b.data, bn) };
+    let mut c = vec![0.0; m * n];
+    linalg::reference_gemm(m, k, n, av, bv, &mut c);
+    c
+}
+
+#[test]
+fn blocked_gemm_bitwise_equals_scalar_reference_property() {
+    let before = ops::intraop();
+    prop::check(
+        "blocked GEMM == scalar reference (shapes x flags x intraop)",
+        60,
+        |r| {
+            // shapes deliberately off the MR/NR/KC grid, k crossing panels
+            let m = r.range(1, 3 * MR + 2);
+            let k = r.range(1, 2 * KC / 3);
+            let n = r.range(1, 3 * NR + 2);
+            let ta = r.chance(0.5);
+            let tb = r.chance(0.5);
+            let a_dims = if ta { [k, m] } else { [m, k] };
+            let b_dims = if tb { [n, k] } else { [k, n] };
+            let a = Tensor::randn(a_dims, DType::F32, 1.0, r);
+            let b = Tensor::randn(b_dims, DType::F32, 1.0, r);
+            let w = *r.choose(&[1usize, 2, 4, 7]);
+            (a, b, ta, tb, m, k, n, w)
+        },
+        |(a, b, ta, tb, m, k, n, w)| {
+            let want = reference(a, b, *ta, *tb, *m, *k, *n);
+            ops::set_intraop(*w);
+            let got = ops::matmul(a, b, *ta, *tb);
+            bits(&want) == bits(&got.data)
+        },
+    );
+    ops::set_intraop(before);
+}
+
+#[test]
+fn blocked_gemm_matches_reference_across_every_cache_block_boundary() {
+    // one big shape straddling MC, multiple KC panels and several NR panels
+    let mut r = Rng::new(77);
+    let (m, k, n) = (MC + 5, 2 * KC + 9, 4 * NR + 3);
+    let a = Tensor::randn([m, k], DType::F32, 1.0, &mut r);
+    let b = Tensor::randn([k, n], DType::F32, 1.0, &mut r);
+    let want = reference(&a, &b, false, false, m, k, n);
+    let before = ops::intraop();
+    for w in [1, 2, 4, 7] {
+        ops::set_intraop(w);
+        let got = ops::matmul(&a, &b, false, false);
+        assert_eq!(bits(&want), bits(&got.data), "intraop {w}");
+    }
+    ops::set_intraop(before);
+}
+
+#[test]
+fn simd_and_portable_paths_are_bitwise_identical() {
+    // on machines with AVX2 this pins dispatch-path equality; elsewhere it
+    // degenerates to portable == portable (still a valid regression guard)
+    let mut r = Rng::new(78);
+    let (m, k, n) = (MR + 3, KC + 11, 2 * NR + 5);
+    let a = Tensor::randn([m, k], DType::F32, 1.0, &mut r);
+    let b = Tensor::randn([k, n], DType::F32, 1.0, &mut r);
+    let dispatched = ops::matmul(&a, &b, false, false);
+    linalg::set_force_portable(true);
+    let portable = ops::matmul(&a, &b, false, false);
+    linalg::set_force_portable(false);
+    assert_eq!(
+        bits(&dispatched.data),
+        bits(&portable.data),
+        "dispatch path {} diverged from portable",
+        linalg::simd_path()
+    );
+}
+
+#[test]
+fn blocked_path_propagates_nan_and_inf_through_zero_rows() {
+    // ISSUE 5 regression, now on shapes large enough to take the blocked
+    // path through packing and edge tiles: 0·NaN and 0·Inf must be NaN
+    let (m, k, n) = (MR + 1, 2, NR + 3);
+    let mut a = Tensor::zeros([m, k], DType::F32);
+    for j in 0..n {
+        a.data[(m - 1) * k + 1] = 1.0; // last row reads b's finite row too
+        let mut b = Tensor::full([k, n], DType::F32, 2.0);
+        b.data[j] = f32::NAN;
+        let c = ops::matmul(&a, &b, false, false);
+        for i in 0..m {
+            assert!(c.data[i * n + j].is_nan(), "0·NaN at ({i},{j}) must be NaN");
+        }
+        b.data[j] = f32::INFINITY;
+        let c = ops::matmul(&a, &b, false, false);
+        assert!(c.data[j].is_nan(), "0·Inf at (0,{j}) must be NaN");
+    }
+}
+
+#[test]
+fn transpose_users_share_one_implementation_bitwise() {
+    // transpose2_into and a matmul transpose flag must agree exactly with
+    // the naive permutation — both now funnel through linalg::transpose_into
+    let mut r = Rng::new(79);
+    let t = Tensor::randn([37, 53], DType::F32, 1.0, &mut r);
+    let tt = ops::transpose2(&t);
+    for i in 0..37 {
+        for j in 0..53 {
+            assert_eq!(tt.data[j * 37 + i].to_bits(), t.data[i * 53 + j].to_bits());
+        }
+    }
+    let x = Tensor::randn([11, 37], DType::F32, 1.0, &mut r);
+    let via_flag = ops::matmul(&x, &t, false, true);
+    let via_materialized = ops::matmul(&x, &tt, false, false);
+    assert_eq!(bits(&via_flag.data), bits(&via_materialized.data));
+}
