@@ -121,7 +121,7 @@ fn orchestrate() {
     );
 
     // -- single process, loopback transport: same lowered plan, all local --
-    let (base, loss) = run(Arc::new(Loopback));
+    let (base, loss) = run(Arc::new(Loopback::default()));
     let base_losses = loss_lines(&base, loss);
     println!(
         "loopback (1 process): {} collective bytes (Table 2 accounting)",

@@ -128,7 +128,7 @@ fn orchestrate() {
     );
 
     // -- single process, loopback transport: same lowered plan, all local --
-    let (base, loss) = run(Arc::new(Loopback));
+    let (base, loss) = run(Arc::new(Loopback::default()));
     let base_losses = loss_lines(&base, loss);
     assert!(!base_losses.is_empty(), "single-process run fetched no losses");
     println!(

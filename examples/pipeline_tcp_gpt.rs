@@ -118,7 +118,7 @@ fn orchestrate() {
     );
 
     // -- single process, loopback transport --
-    let (base, loss) = run(Arc::new(Loopback));
+    let (base, loss) = run(Arc::new(Loopback::default()));
     let base_losses = loss_lines(&base, loss);
     println!("loopback (1 process): makespan {:.6e} s virtual", base.makespan);
     for l in &base_losses {

@@ -1,0 +1,177 @@
+//! Checkpoint-plane costs (§Fault): what a snapshot costs to take, write,
+//! and restore, and what the segmented session driver costs per step
+//! relative to a plain uninterrupted run. Two acceptance numbers ride
+//! along: steady-state training allocates **zero** buffers per step with
+//! checkpointing off (the pool claim survives the capture machinery), and
+//! re-running through the session driver stays bitwise-identical to the
+//! plain run (DESIGN.md invariant 14). Results go to
+//! `BENCH_checkpoint.json`; `--quick` shrinks the run for CI.
+
+use oneflow::actor::{DataSource, Engine, FnSource, RunOptions};
+use oneflow::bench::{time_n, Table};
+use oneflow::checkpoint::{restore, run_session, snapshot, SessionOptions, Snapshot};
+use oneflow::comm::{Loopback, Transport};
+use oneflow::compiler::{compile, CompileOptions, InputBinding, PhysPlan};
+use oneflow::config::Args;
+use oneflow::data::SyntheticCorpus;
+use oneflow::models::{gpt_pipeline_real, GptPipelineConfig};
+use oneflow::runtime::NativeBackend;
+use oneflow::tensor::Tensor;
+use oneflow::util::fmt;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn cfg(quick: bool) -> GptPipelineConfig {
+    GptPipelineConfig {
+        stages: 2,
+        vocab: 32,
+        hidden: if quick { 16 } else { 32 },
+        ff: if quick { 32 } else { 64 },
+        blocks_per_stage: 1,
+        rows: 32,
+        lr: 0.2,
+        microbatches: 1,
+    }
+}
+
+fn build(quick: bool) -> PhysPlan {
+    let (g, loss, upd) = gpt_pipeline_real(&cfg(quick));
+    compile(&g, &[loss], &upd, &CompileOptions::default())
+}
+
+fn source(quick: bool) -> Arc<dyn DataSource> {
+    let c = cfg(quick);
+    let corpus = Arc::new(SyntheticCorpus::new(2048, c.vocab, 17));
+    let rows = c.rows;
+    Arc::new(FnSource(move |b: &InputBinding, piece: usize| {
+        let (ids, labels) = corpus.batch(piece, 1, rows);
+        match b.name.as_str() {
+            "ids" => Tensor::new([rows], oneflow::tensor::DType::I32, ids.data),
+            "labels" => Tensor::new([rows], oneflow::tensor::DType::I32, labels.data),
+            _ => Tensor::full(b.shape.clone(), b.dtype, 1.0),
+        }
+    }))
+}
+
+fn plain_run(quick: bool, pieces: usize) -> oneflow::actor::RunReport {
+    Engine::new(build(quick), Arc::new(NativeBackend))
+        .with_source(source(quick))
+        .run_with(RunOptions { pieces, timeout: Some(Duration::from_secs(120)) })
+        .expect("plain run")
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.flag("quick");
+    let (p_short, p_long) = if quick { (8usize, 16usize) } else { (16usize, 48usize) };
+    let every = 4usize;
+    let dir = std::env::temp_dir().join(format!("ofck-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut tab = Table::new("Checkpoint plane", &["metric", "value"]);
+
+    // 1. zero-allocation claim: buffer allocs are warm-up only, so the
+    // delta between a short and a long run — the steady-state pieces — must
+    // allocate nothing. Checkpointing off; this is the baseline invariant.
+    let short = plain_run(quick, p_short);
+    let long = plain_run(quick, p_long);
+    let steady_allocs = long.buffer_allocs as i64 - short.buffer_allocs as i64;
+    let steady_pieces = (p_long - p_short) as f64;
+    let allocs_per_step = steady_allocs as f64 / steady_pieces;
+    tab.row(&["steady-state buffer allocs/step (ckpt off)".into(), format!("{allocs_per_step:.3}")]);
+    assert_eq!(
+        steady_allocs, 0,
+        "steady-state training must not allocate: {steady_allocs} pool misses over \
+         {steady_pieces} pieces"
+    );
+
+    // 2. per-step cost: the plain engine vs the segmented session driver
+    // (engine rebuild + capture + snapshot every `every` pieces)
+    let t_plain = time_n(1, if quick { 2 } else { 3 }, || {
+        let _ = plain_run(quick, p_short);
+    });
+    let step_plain = t_plain.mean_secs / p_short as f64;
+
+    let connect = |_e: u32, _r: u64| -> oneflow::Result<Arc<dyn Transport>> {
+        Ok(Arc::new(Loopback::default()))
+    };
+    let session = |pieces: usize| {
+        run_session(
+            Arc::new(build(quick)),
+            Arc::new(NativeBackend),
+            source(quick),
+            &connect,
+            &SessionOptions {
+                pieces,
+                every,
+                dir: dir.clone(),
+                timeout: Some(Duration::from_secs(120)),
+                ..Default::default()
+            },
+            |_, _, _| {},
+        )
+        .expect("checkpointed session")
+    };
+    let t_sess = time_n(1, if quick { 2 } else { 3 }, || {
+        let _ = session(p_short);
+    });
+    let step_sess = t_sess.mean_secs / p_short as f64;
+    let overhead = step_sess / step_plain - 1.0;
+    tab.row(&["step (plain engine)".into(), fmt::secs(step_plain)]);
+    tab.row(&[format!("step (session, snapshot every {every})"), fmt::secs(step_sess)]);
+    tab.row(&["session overhead".into(), format!("{:.1}%", overhead * 100.0)]);
+
+    // 3. invariant 14 smoke: the session's losses match the plain run's
+    // bitwise (the full matrix lives in tests/checkpoint.rs)
+    let plan = build(quick);
+    let tid = plan.fetches[0].tensor;
+    let want: Vec<Vec<u32>> = short.fetched[&tid]
+        .iter()
+        .map(|t| t.data.iter().map(|x| x.to_bits()).collect())
+        .collect();
+    let rep = session(p_short);
+    for (fetch, piece, t) in &rep.losses {
+        assert_eq!(*fetch, tid);
+        let got: Vec<u32> = t.data.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(
+            got, want[*piece as usize],
+            "session loss at piece {piece} diverged from the plain run"
+        );
+    }
+
+    // 4. snapshot encode/write and load/restore costs, plus the bytes a
+    // boundary costs on disk
+    let captured = Engine::new(build(quick), Arc::new(NativeBackend))
+        .with_source(source(quick))
+        .with_capture()
+        .run_with(RunOptions { pieces: every, timeout: Some(Duration::from_secs(120)) })
+        .expect("capture run");
+    let snap =
+        snapshot(&plan, 0, 1, every as u64, &captured.var_state).expect("snapshot from capture");
+    let snap_bytes = snap.encode().len();
+    let t_write = time_n(1, if quick { 5 } else { 20 }, || {
+        snap.write(&dir).expect("snapshot write");
+    });
+    let path = oneflow::checkpoint::snapshot_path(&dir, 0, every as u64);
+    let t_load = time_n(1, if quick { 5 } else { 20 }, || {
+        let s = Snapshot::load(&path).expect("snapshot load");
+        let _ = restore(&plan, &s).expect("restore");
+    });
+    tab.row(&["snapshot size".into(), fmt::bytes(snap_bytes as f64)]);
+    tab.row(&["snapshot encode+write".into(), fmt::secs(t_write.mean_secs)]);
+    tab.row(&["snapshot load+restore".into(), fmt::secs(t_load.mean_secs)]);
+
+    tab.print();
+
+    let json = format!(
+        "{{\n  \"bench\": \"checkpoint\",\n  \"quick\": {quick},\n  \"pieces\": {p_short},\n  \
+         \"every\": {every},\n  \"steady_allocs_per_step\": {allocs_per_step:.3},\n  \
+         \"step_plain_secs\": {step_plain:.6},\n  \"step_session_secs\": {step_sess:.6},\n  \
+         \"session_overhead_frac\": {overhead:.4},\n  \"snapshot_bytes\": {snap_bytes},\n  \
+         \"snapshot_write_secs\": {:.6},\n  \"restore_load_secs\": {:.6}\n}}\n",
+        t_write.mean_secs, t_load.mean_secs
+    );
+    std::fs::write("BENCH_checkpoint.json", &json).expect("write BENCH_checkpoint.json");
+    println!("\nwrote BENCH_checkpoint.json");
+    let _ = std::fs::remove_dir_all(&dir);
+}

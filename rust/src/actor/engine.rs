@@ -97,6 +97,17 @@ pub struct RunReport {
     /// The merged event timeline ([`Engine::with_trace`]); on multi-rank
     /// jobs only rank 0 carries it (peers ship their buffers to rank 0).
     pub trace: Option<crate::trace::Trace>,
+    /// Final value of every local Var shard (plan node id → tensors),
+    /// captured at run end when [`Engine::with_capture`] is on — the raw
+    /// material of a [`crate::checkpoint`] snapshot. Vars whose final
+    /// update never arrived are *absent* (the snapshot builder then fails
+    /// by name instead of writing stale state).
+    pub var_state: HashMap<usize, Vec<Tensor>>,
+    /// Segment-barrier frames that arrived *during* this run (a peer
+    /// already finished the segment and announced its boundary while we
+    /// were still draining finalizes). The checkpoint session counts these
+    /// toward its barrier so an early peer is never waited on twice.
+    pub seg_barriers: Vec<(usize, u64)>,
 }
 
 impl RunReport {
@@ -152,6 +163,13 @@ enum Control {
     /// A peer rank's full event buffer (decoded from a
     /// [`wire::Frame::Trace`] frame after the peer's barrier completed).
     PeerTrace { rank: usize, events: Vec<crate::trace::Event> },
+    /// A local Var actor's final value (capture mode): `None` when the
+    /// actor never saw its final optimizer update — reported so the
+    /// checkpoint layer can refuse by name rather than snapshot staleness.
+    VarState { node: usize, value: Option<Vec<Tensor>> },
+    /// A peer's segment barrier arrived mid-run (see
+    /// [`RunReport::seg_barriers`]).
+    SegBarrier { rank: usize, boundary: u64 },
 }
 
 /// The runtime engine (see module docs).
@@ -161,11 +179,41 @@ pub struct Engine {
     source: Option<Arc<dyn DataSource>>,
     transport: Option<Arc<dyn Transport>>,
     trace: bool,
+    /// Absolute piece index of this run's first piece: data sources are fed
+    /// `start_piece + k` for local piece `k`, so a checkpointed run resumed
+    /// mid-stream reads exactly the batches an uninterrupted run would.
+    start_piece: usize,
+    /// Capture every local Var actor's final value into
+    /// [`RunReport::var_state`].
+    capture: bool,
+    /// Snapshot state overriding the seeded Var init (plan node id →
+    /// tensors), from [`crate::checkpoint::restore`].
+    var_state: Option<HashMap<usize, Vec<Tensor>>>,
+    /// Frames a previous segment's barrier wait pulled off the transport
+    /// that belong to *this* run (an early peer's new-segment traffic);
+    /// dispatched by the ingress thread before it reads the transport.
+    carryover: Mutex<Vec<(usize, Vec<u8>)>>,
 }
 
 impl Engine {
     pub fn new(plan: PhysPlan, backend: Arc<dyn Backend>) -> Self {
-        Engine { plan: Arc::new(plan), backend, source: None, transport: None, trace: false }
+        Self::from_arc(Arc::new(plan), backend)
+    }
+
+    /// [`Engine::new`] without re-wrapping an already-shared plan — the
+    /// checkpoint session rebuilds an engine per segment over one plan.
+    pub fn from_arc(plan: Arc<PhysPlan>, backend: Arc<dyn Backend>) -> Self {
+        Engine {
+            plan,
+            backend,
+            source: None,
+            transport: None,
+            trace: false,
+            start_piece: 0,
+            capture: false,
+            var_state: None,
+            carryover: Mutex::new(Vec::new()),
+        }
     }
 
     /// Attach a data source (real-execution mode).
@@ -181,6 +229,37 @@ impl Engine {
     /// identical to no transport at all.
     pub fn with_transport(mut self, t: Arc<dyn Transport>) -> Self {
         self.transport = Some(t);
+        self
+    }
+
+    /// Feed data sources absolute pieces `start + k` (checkpoint segments).
+    /// Must align to a round boundary (multiple of M) when the plan
+    /// accumulates gradients — validated at run start.
+    pub fn with_start_piece(mut self, start: usize) -> Self {
+        self.start_piece = start;
+        self
+    }
+
+    /// Capture final Var values into [`RunReport::var_state`] at run end.
+    pub fn with_capture(mut self) -> Self {
+        self.capture = true;
+        self
+    }
+
+    /// Override the seeded Var init with restored snapshot state (plan node
+    /// id → tensors). A variable is overridden only when every one of its
+    /// local shards is present; [`crate::checkpoint::restore`] guarantees
+    /// that for states it returns.
+    pub fn with_var_state(mut self, state: HashMap<usize, Vec<Tensor>>) -> Self {
+        self.var_state = Some(state);
+        self
+    }
+
+    /// Pre-load frames for the ingress thread to dispatch before reading
+    /// the transport (an early peer's frames caught by the checkpoint
+    /// session's segment-barrier wait). Consumed by the next run.
+    pub fn with_carryover(self, frames: Vec<(usize, Vec<u8>)>) -> Self {
+        *self.carryover.lock().unwrap_or_else(|p| p.into_inner()) = frames;
         self
     }
 
@@ -223,6 +302,13 @@ impl Engine {
             return Err(format!(
                 "pieces ({pieces}) must be a multiple of microbatches (M={m}) \
                  when the plan accumulates gradients"
+            ));
+        }
+        if plan.has_accumulation() && self.start_piece % m != 0 {
+            return Err(format!(
+                "start piece ({}) must be a multiple of microbatches (M={m}) when the \
+                 plan accumulates gradients: checkpoint segments align to round boundaries",
+                self.start_piece
             ));
         }
 
@@ -307,6 +393,26 @@ impl Engine {
             for vb in &plan.vars {
                 if !vb.phys.iter().any(|&p| is_local(&addrs[p.0])) {
                     continue; // every shard is another rank's problem
+                }
+                // Restored snapshot state overrides the seeded init — but
+                // only when *every* local shard of the variable is covered
+                // (checkpoint::restore validates completeness; a partial
+                // override would mix fresh and restored state and silently
+                // break the restored ≡ uninterrupted invariant).
+                if let Some(vs) = &self.var_state {
+                    let covered = vb
+                        .phys
+                        .iter()
+                        .filter(|p| is_local(&addrs[p.0]))
+                        .all(|p| vs.contains_key(&p.0));
+                    if covered {
+                        for &pid in &vb.phys {
+                            if is_local(&addrs[pid.0]) {
+                                init_values.insert(pid.0, Arc::new(vs[&pid.0].clone()));
+                            }
+                        }
+                        continue;
+                    }
                 }
                 let mut rng = crate::util::Rng::new(
                     plan.options.seed ^ (vb.node.0 as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
@@ -411,6 +517,8 @@ impl Engine {
             let comm_rt = comm_rt.clone();
             let peak = cache_peak.clone();
             let shard_counts = local_input_shards.clone();
+            let start_piece = self.start_piece;
+            let capture = self.capture;
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("of-{:?}-n{}d{}", key.queue, key.node, key.device))
@@ -418,6 +526,7 @@ impl Engine {
                         thread_main(
                             actors, rx, senders, tindex, ctl, stop, backend, plan, key, cache,
                             peak, shard_counts, src, bindings, router, comm_rt, trace_start,
+                            start_piece, capture,
                         )
                     })
                     .expect("spawn queue thread"),
@@ -435,6 +544,8 @@ impl Engine {
                 let ctl = ctl_tx.clone();
                 let stop = comm_stop.clone();
                 let hub = hub.clone();
+                let carry =
+                    std::mem::take(&mut *self.carryover.lock().unwrap_or_else(|p| p.into_inner()));
                 ingress = Some(
                     std::thread::Builder::new()
                         .name("of-comm-ingress".into())
@@ -448,6 +559,66 @@ impl Engine {
                                     t0,
                                 )
                             });
+                            let dispatch = |src_rank: usize, frame: &[u8]| match wire::decode(
+                                frame,
+                            ) {
+                                Ok(wire::Frame::Envelope(env)) => {
+                                    if let Some(tb) = &tbuf {
+                                        tb.recv(&env);
+                                    }
+                                    match tindex.get(&env.to.thread()) {
+                                        Some(&ti) => {
+                                            let _ = senders[ti].send(env);
+                                        }
+                                        None => eprintln!(
+                                            "comm: rank {src_rank} sent a message for non-local actor {}",
+                                            env.to
+                                        ),
+                                    }
+                                }
+                                Ok(wire::Frame::Finalize { rank, makespan }) => {
+                                    let _ = ctl.send(Control::PeerDone {
+                                        rank: rank as usize,
+                                        makespan,
+                                    });
+                                }
+                                Ok(wire::Frame::Collective { key, src, dst, data }) => {
+                                    // a peer member's ring chunk: park it
+                                    // where the blocked member waits
+                                    hub.push(key, src, dst, data);
+                                }
+                                Ok(wire::Frame::Shard { chan, piece, src, dst, data }) => {
+                                    // a routed-transfer payload: the
+                                    // ShardRecv actor collects it by key
+                                    hub.push(wire::shard_key(chan, piece), src, dst, data);
+                                }
+                                Ok(wire::Frame::Trace { rank, events }) => {
+                                    // a peer's end-of-run event buffer
+                                    // for the rank-0 timeline merge
+                                    let _ = ctl.send(Control::PeerTrace {
+                                        rank: rank as usize,
+                                        events,
+                                    });
+                                }
+                                Ok(wire::Frame::SegBarrier { rank, boundary }) => {
+                                    // a peer finished its checkpoint segment
+                                    // while we're still running ours: count it
+                                    // toward the session's barrier via the
+                                    // report instead of dropping it
+                                    let _ = ctl.send(Control::SegBarrier {
+                                        rank: rank as usize,
+                                        boundary,
+                                    });
+                                }
+                                Err(e) => eprintln!(
+                                    "comm: undecodable frame from rank {src_rank}: {e}"
+                                ),
+                            };
+                            // frames a previous segment's barrier wait already
+                            // pulled off the transport for us
+                            for (src_rank, frame) in carry {
+                                dispatch(src_rank, &frame);
+                            }
                             loop {
                                 if stop.load(Ordering::SeqCst) {
                                     break;
@@ -455,49 +626,7 @@ impl Engine {
                                 // recv returns as soon as a frame arrives; the
                                 // timeout only paces the stop-flag re-check
                                 match t.recv_timeout(Duration::from_millis(25)) {
-                                    Ok(Some((src_rank, frame))) => match wire::decode(&frame) {
-                                        Ok(wire::Frame::Envelope(env)) => {
-                                            if let Some(tb) = &tbuf {
-                                                tb.recv(&env);
-                                            }
-                                            match tindex.get(&env.to.thread()) {
-                                                Some(&ti) => {
-                                                    let _ = senders[ti].send(env);
-                                                }
-                                                None => eprintln!(
-                                                    "comm: rank {src_rank} sent a message for non-local actor {}",
-                                                    env.to
-                                                ),
-                                            }
-                                        }
-                                        Ok(wire::Frame::Finalize { rank, makespan }) => {
-                                            let _ = ctl.send(Control::PeerDone {
-                                                rank: rank as usize,
-                                                makespan,
-                                            });
-                                        }
-                                        Ok(wire::Frame::Collective { key, src, dst, data }) => {
-                                            // a peer member's ring chunk: park it
-                                            // where the blocked member waits
-                                            hub.push(key, src, dst, data);
-                                        }
-                                        Ok(wire::Frame::Shard { chan, piece, src, dst, data }) => {
-                                            // a routed-transfer payload: the
-                                            // ShardRecv actor collects it by key
-                                            hub.push(wire::shard_key(chan, piece), src, dst, data);
-                                        }
-                                        Ok(wire::Frame::Trace { rank, events }) => {
-                                            // a peer's end-of-run event buffer
-                                            // for the rank-0 timeline merge
-                                            let _ = ctl.send(Control::PeerTrace {
-                                                rank: rank as usize,
-                                                events,
-                                            });
-                                        }
-                                        Err(e) => eprintln!(
-                                            "comm: undecodable frame from rank {src_rank}: {e}"
-                                        ),
-                                    },
+                                    Ok(Some((src_rank, frame))) => dispatch(src_rank, &frame),
                                     Ok(None) => {}
                                     Err(e) => {
                                         // The main loop can tell a graceful
@@ -626,6 +755,16 @@ impl Engine {
                     if !peer_traces.iter().any(|(r, _)| *r == rank) {
                         peer_traces.push((rank, events));
                     }
+                }
+                Control::VarState { node, value } => {
+                    // None stays absent: checkpoint::snapshot treats a
+                    // missing shard as a named error, never stale state
+                    if let Some(v) = value {
+                        report.var_state.insert(node, v);
+                    }
+                }
+                Control::SegBarrier { rank, boundary } => {
+                    report.seg_barriers.push((rank, boundary));
                 }
                 Control::Failed(why) => {
                     // a transfer action errored: tear the run down promptly
@@ -760,6 +899,8 @@ fn thread_main(
     router: Option<Arc<comm::Router>>,
     comm_rt: Arc<CommRt>,
     trace_start: Option<Instant>,
+    start_piece: usize,
+    capture: bool,
 ) {
     let feeder = move |nid: NodeId, shard: usize, piece: usize, outs: &mut Vec<Tensor>| {
         let Some(src) = &src else {
@@ -769,7 +910,10 @@ fn thread_main(
         let binding = &bindings[&nid];
         let mut cache = cache.lock().unwrap();
         let (shards, remaining) = cache.entry((nid.0, piece)).or_insert_with(|| {
-            let logical = src.logical(binding, piece);
+            // sources key batches by *absolute* piece, so a checkpoint
+            // segment starting mid-stream reads the same data an
+            // uninterrupted run would (actor indices stay run-relative)
+            let logical = src.logical(binding, start_piece + piece);
             assert_eq!(
                 logical.shape, binding.shape,
                 "data source fed input `{}` a wrong-shaped batch",
@@ -811,15 +955,28 @@ fn thread_main(
     let mut actions = 0u64;
     let mut last_ts = 0.0f64;
     let mut busy_secs = 0.0f64;
+    let mut draining = false;
     loop {
         let env = if let Some(e) = local.pop_front() {
             e
+        } else if draining {
+            // apply whatever is still queued, then exit
+            match rx.try_recv() {
+                Ok(e) => e,
+                Err(_) => break,
+            }
         } else {
             match rx.recv_timeout(Duration::from_micros(200)) {
                 Ok(e) => e,
                 Err(mpsc::RecvTimeoutError::Timeout) => {
                     if stop.load(Ordering::SeqCst) {
-                        break;
+                        // Drain before exiting: the stop flag is set only
+                        // after every actor reported Done, and each thread
+                        // pushes its final outgoing Reqs *before* its Done
+                        // — so anything still in our channel (e.g. a Var's
+                        // last optimizer update) was already sent and must
+                        // be applied for captured Var state to be final.
+                        draining = true;
                     }
                     continue;
                 }
@@ -840,9 +997,6 @@ fn thread_main(
             for (piece, data) in fx.fetched {
                 let _ = ctl.send(Control::Fetched(tensor, piece, data));
             }
-        }
-        if fx.done {
-            let _ = ctl.send(Control::Done);
         }
         for out in fx.outgoing {
             let tkey = out.to.thread();
@@ -869,6 +1023,13 @@ fn thread_main(
                 panic!("thread {key:?} produced a message for unknown thread {tkey:?}");
             }
         }
+        // Done is reported only after the action's outgoing messages are on
+        // their channels: the engine raises the stop flag after the last
+        // Done, so a stopping thread's drain is guaranteed to find every
+        // final Req (the capture-determinism ordering).
+        if fx.done {
+            let _ = ctl.send(Control::Done);
+        }
         if let Some(e) = fx.failed {
             // a transfer action failed: report and stop this queue thread —
             // the engine aborts the whole run. The report says *when* the
@@ -883,6 +1044,18 @@ fn thread_main(
                 actors[ai].failure_context()
             )));
             break;
+        }
+    }
+    if capture {
+        // Sent before Stats (same channel): once every thread's stats are
+        // in, the engine's report holds every local Var's final value.
+        for a in actors.iter() {
+            if matches!(a.node.kernel, PhysKernel::Var { .. }) {
+                let _ = ctl.send(Control::VarState {
+                    node: a.node.id.0,
+                    value: a.final_var_state(),
+                });
+            }
         }
     }
     if let Some(tb) = &tbuf {

@@ -606,6 +606,30 @@ impl Actor {
         self.var_value = Some(v);
     }
 
+    /// The parameter value a checkpoint must record for this Var actor
+    /// (real mode, at run end).
+    ///
+    /// With an optimizer back edge, the *final* update round is published
+    /// to us but never demanded by any action — the Upsample back edge
+    /// consumes round `r` at piece `(r+1)·f`, which lies past the run — so
+    /// the post-run parameter lives undisturbed in the back edge's ready
+    /// map (max key, since all earlier rounds were consumed). `None` means
+    /// the final update never arrived (a capture race or broken update
+    /// wiring): callers must refuse to snapshot rather than record the
+    /// stale held value. Vars without a back edge (frozen parameters)
+    /// report the held value itself.
+    pub fn final_var_state(&self) -> Option<Vec<Tensor>> {
+        match self.node.update_from {
+            Some((ureg, elem)) => {
+                let ir = self.in_regs.iter().find(|r| r.reg == ureg)?;
+                let k = ir.ready.keys().max()?;
+                let (data, _) = &ir.ready[k];
+                data.as_ref().map(|d| vec![d[elem].clone()])
+            }
+            None => self.var_value.as_ref().map(|v| v.as_ref().to_vec()),
+        }
+    }
+
     /// One-line context for failure reports: which actor failed, how far
     /// through its piece stream it was, and the virtual end time of its
     /// last completed action — the *when* of the failure. The engine

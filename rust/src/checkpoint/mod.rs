@@ -1,0 +1,430 @@
+//! Deterministic checkpoint/restore (DESIGN.md §3 checkpoint/rejoin row,
+//! invariant 14).
+//!
+//! The paper's compile-everything-ahead-of-time design makes the *entire*
+//! mutable state of a training run enumerable from the compiled plan: the
+//! Var register buffers (optimizer moment buffers are ordinary Variables
+//! with their own update back edges, so they are included by construction),
+//! plus the data-iterator cursor — and the cursor is just a piece index,
+//! because every [`crate::actor::DataSource`] keys batches by absolute
+//! piece (`seed ^ piece`). A snapshot is therefore: *plan signature + piece
+//! boundary + every local Var shard's bits*, serialized through the wire
+//! codec's exact-bit tensor format into a versioned, checksummed file per
+//! rank. [`restore`] + [`crate::actor::Engine::with_var_state`] +
+//! [`crate::actor::Engine::with_start_piece`] rebuild a run that continues
+//! with losses bitwise-identical to one that was never interrupted.
+//!
+//! [`session`] drives segmented runs (snapshot every N rounds), the
+//! cross-rank segment barrier, and the killed-rank rejoin loop.
+
+mod session;
+
+pub use session::{run_session, SessionOptions, SessionReport};
+
+use crate::comm::wire;
+use crate::compiler::{PhysKernel, PhysPlan};
+use crate::tensor::Tensor;
+use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
+
+/// Snapshot file magic ("OneFlow SNapshot").
+pub const SNAPSHOT_MAGIC: [u8; 4] = *b"OFSN";
+
+/// Current snapshot format version; bumped on any layout change so stale
+/// files fail restore by name instead of parsing as garbage.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// FNV-1a 64 running hash — the snapshot trailer checksum (and the plan
+/// signature fold). Deliberately simple: it guards against truncation and
+/// bit rot, not adversaries.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+}
+
+/// Digest of everything the mutable state's shape depends on: a snapshot
+/// taken under one plan must refuse to restore into a differently-compiled
+/// one (other var set, other sharding, other seed) — those would not be
+/// "the same run paused".
+pub fn plan_signature(plan: &PhysPlan) -> u64 {
+    let mut h = Fnv::new();
+    h.u64(plan.nodes.len() as u64);
+    h.u64(plan.regs.len() as u64);
+    h.u64(plan.vars.len() as u64);
+    h.u64(plan.options.seed);
+    h.u64(plan.schedule.microbatches as u64);
+    for vb in &plan.vars {
+        h.u64(vb.node.0 as u64);
+        h.bytes(vb.name.as_bytes());
+        for d in 0..vb.shape.rank() {
+            h.u64(vb.shape.dim(d) as u64);
+        }
+        for &p in &vb.phys {
+            h.u64(p.0 as u64);
+        }
+    }
+    h.0
+}
+
+/// One rank's checkpoint: the complete local mutable state at an absolute
+/// piece boundary, as enumerated by the plan.
+#[derive(Debug)]
+pub struct Snapshot {
+    pub rank: u32,
+    pub world: u32,
+    /// Absolute piece boundary this state is valid at: the run resumes by
+    /// feeding piece `piece` next.
+    pub piece: u64,
+    /// [`plan_signature`] of the compiling plan.
+    pub plan_sig: u64,
+    /// Var state per local shard: (plan node id, tensors), sorted by node.
+    pub state: Vec<(u32, Vec<Tensor>)>,
+}
+
+impl Snapshot {
+    /// Serialize: magic, version, header, entries (wire-codec tensors, so
+    /// f32 bits round-trip exactly), FNV-1a trailer over everything before
+    /// it.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&SNAPSHOT_MAGIC);
+        wire::put_u32(&mut out, SNAPSHOT_VERSION);
+        wire::put_u32(&mut out, self.rank);
+        wire::put_u32(&mut out, self.world);
+        wire::put_u64(&mut out, self.piece);
+        wire::put_u64(&mut out, self.plan_sig);
+        wire::put_u32(&mut out, self.state.len() as u32);
+        for (node, tensors) in &self.state {
+            wire::put_u32(&mut out, *node);
+            wire::put_u32(&mut out, tensors.len() as u32);
+            for t in tensors {
+                wire::put_tensor(&mut out, t);
+            }
+        }
+        let mut f = Fnv::new();
+        f.bytes(&out);
+        wire::put_u64(&mut out, f.0);
+        out
+    }
+
+    /// Parse and verify. Truncated, bit-flipped, or foreign bytes yield a
+    /// named `Err` (magic / version / checksum / structure) — never a panic
+    /// and never silently-garbage state.
+    pub fn decode(bytes: &[u8]) -> crate::Result<Snapshot> {
+        anyhow::ensure!(
+            bytes.len() >= 4 + 4 + 8,
+            "snapshot truncated: {} bytes is shorter than any valid snapshot",
+            bytes.len()
+        );
+        anyhow::ensure!(
+            bytes[0..4] == SNAPSHOT_MAGIC,
+            "not a oneflow snapshot (bad magic)"
+        );
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        anyhow::ensure!(
+            version == SNAPSHOT_VERSION,
+            "snapshot format version {version} unsupported (this build reads version \
+             {SNAPSHOT_VERSION})"
+        );
+        let (payload, trailer) = bytes.split_at(bytes.len() - 8);
+        let want = u64::from_le_bytes(trailer.try_into().unwrap());
+        let mut f = Fnv::new();
+        f.bytes(payload);
+        anyhow::ensure!(
+            f.0 == want,
+            "snapshot checksum mismatch (file truncated or corrupt)"
+        );
+        let mut c = wire::Cursor { buf: &payload[8..], pos: 0 };
+        let rank = c.u32()?;
+        let world = c.u32()?;
+        let piece = c.u64()?;
+        let plan_sig = c.u64()?;
+        let n = c.u32()? as usize;
+        anyhow::ensure!(n <= 1 << 24, "absurd snapshot entry count {n}");
+        let mut state = Vec::with_capacity(n);
+        for _ in 0..n {
+            let node = c.u32()?;
+            let k = c.u32()? as usize;
+            anyhow::ensure!(k <= 1 << 16, "absurd tensor count {k} in snapshot entry");
+            let mut tensors = Vec::with_capacity(k);
+            for _ in 0..k {
+                tensors.push(wire::take_tensor(&mut c)?);
+            }
+            state.push((node, tensors));
+        }
+        anyhow::ensure!(
+            c.remaining() == 0,
+            "{} trailing bytes inside a checksummed snapshot",
+            c.remaining()
+        );
+        Ok(Snapshot { rank, world, piece, plan_sig, state })
+    }
+
+    /// Rank- and boundary-tagged file name; zero-padded so lexicographic
+    /// directory order is boundary order.
+    pub fn file_name(rank: u32, piece: u64) -> String {
+        format!("ck-r{rank:03}-p{piece:012}.ofck")
+    }
+
+    /// Write atomically (temp file + rename): a crash mid-write leaves the
+    /// previous snapshot intact, never a half-written latest. All boundary
+    /// files are kept — the rejoin negotiation may roll any rank back to an
+    /// older boundary, which must still be loadable.
+    pub fn write(&self, dir: &Path) -> crate::Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("creating checkpoint dir {}: {e}", dir.display()))?;
+        let path = dir.join(Self::file_name(self.rank, self.piece));
+        let tmp = dir.join(format!(".{}.tmp", Self::file_name(self.rank, self.piece)));
+        std::fs::write(&tmp, self.encode())
+            .map_err(|e| anyhow::anyhow!("writing snapshot {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| anyhow::anyhow!("publishing snapshot {}: {e}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Load one snapshot file; errors carry the path.
+    pub fn load(path: &Path) -> crate::Result<Snapshot> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading snapshot {}: {e}", path.display()))?;
+        Self::decode(&bytes).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+
+    /// The newest *valid* snapshot this rank holds in `dir`, if any —
+    /// corrupt or truncated files are skipped with a warning (a crash while
+    /// writing must not brick the restart; the atomic rename makes this
+    /// nearly impossible anyway, but belt and braces).
+    pub fn latest_valid(dir: &Path, rank: u32) -> crate::Result<Option<Snapshot>> {
+        let Ok(entries) = std::fs::read_dir(dir) else {
+            return Ok(None); // no dir yet ⇒ no snapshots
+        };
+        let prefix = format!("ck-r{rank:03}-p");
+        let mut names: Vec<String> = entries
+            .filter_map(|e| e.ok())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .filter(|n| n.starts_with(&prefix) && n.ends_with(".ofck"))
+            .collect();
+        names.sort();
+        for name in names.iter().rev() {
+            match Self::load(&dir.join(name)) {
+                Ok(s) => return Ok(Some(s)),
+                Err(e) => eprintln!("checkpoint: skipping unusable snapshot: {e}"),
+            }
+        }
+        Ok(None)
+    }
+}
+
+/// Path of this rank's snapshot at an exact boundary (the rejoin rollback
+/// loads by negotiated piece, not "latest").
+pub fn snapshot_path(dir: &Path, rank: u32, piece: u64) -> PathBuf {
+    dir.join(Snapshot::file_name(rank, piece))
+}
+
+/// Build a snapshot from a run's captured Var state
+/// ([`crate::actor::RunReport::var_state`] under
+/// [`crate::actor::Engine::with_capture`]), walking the plan to enumerate
+/// what *must* be present: every Var shard the launch partition places on
+/// this rank. A missing shard means the capture raced or the update wiring
+/// is broken — refuse by name rather than write a silently-stale
+/// checkpoint.
+pub fn snapshot(
+    plan: &PhysPlan,
+    rank: usize,
+    world: usize,
+    piece: u64,
+    var_state: &HashMap<usize, Vec<Tensor>>,
+) -> crate::Result<Snapshot> {
+    let node_rank = crate::comm::launch::node_rank_map(plan, world);
+    let mut state = Vec::new();
+    for vb in &plan.vars {
+        for &pid in &vb.phys {
+            let n = &plan.nodes[pid.0];
+            let local = node_rank
+                .get(&(n.device.node as u16))
+                .map(|&r| r == rank)
+                .unwrap_or(true);
+            if !local {
+                continue;
+            }
+            let Some(tensors) = var_state.get(&pid.0) else {
+                anyhow::bail!(
+                    "checkpoint: var `{}` shard (plan node {}) missing from the captured \
+                     run state — refusing to write a stale snapshot",
+                    vb.name,
+                    pid.0
+                );
+            };
+            state.push((pid.0 as u32, tensors.clone()));
+        }
+    }
+    state.sort_by_key(|(n, _)| *n);
+    Ok(Snapshot {
+        rank: rank as u32,
+        world: world as u32,
+        piece,
+        plan_sig: plan_signature(plan),
+        state,
+    })
+}
+
+/// Validate a snapshot against a plan and return the Var-state override an
+/// engine resumes from ([`crate::actor::Engine::with_var_state`]).
+pub fn restore(plan: &PhysPlan, snap: &Snapshot) -> crate::Result<HashMap<usize, Vec<Tensor>>> {
+    let sig = plan_signature(plan);
+    anyhow::ensure!(
+        snap.plan_sig == sig,
+        "snapshot was taken under a different plan (signature {:016x}, this plan is \
+         {sig:016x}): refusing to restore mismatched state",
+        snap.plan_sig
+    );
+    let var_nodes: HashSet<usize> = plan.vars.iter().flat_map(|vb| &vb.phys).map(|p| p.0).collect();
+    let mut out = HashMap::with_capacity(snap.state.len());
+    for (node, tensors) in &snap.state {
+        let id = *node as usize;
+        anyhow::ensure!(
+            var_nodes.contains(&id)
+                && matches!(plan.nodes[id].kernel, PhysKernel::Var { .. }),
+            "snapshot entry for plan node {id} which is not a Var shard of this plan"
+        );
+        anyhow::ensure!(!tensors.is_empty(), "snapshot entry for plan node {id} is empty");
+        anyhow::ensure!(
+            out.insert(id, tensors.clone()).is_none(),
+            "snapshot carries plan node {id} twice"
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+
+    fn sample() -> Snapshot {
+        Snapshot {
+            rank: 1,
+            world: 2,
+            piece: 12,
+            plan_sig: 0xDEAD_BEEF_1234_5678,
+            state: vec![
+                (3, vec![Tensor::f32([2, 2], vec![0.1, -0.0, f32::MIN_POSITIVE, -7.5])]),
+                (9, vec![Tensor::new([3], DType::I32, vec![1.0, 2.0, 3.0])]),
+            ],
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ofck-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn roundtrip_exact_bits() {
+        let s = sample();
+        let d = Snapshot::decode(&s.encode()).unwrap();
+        assert_eq!((d.rank, d.world, d.piece, d.plan_sig), (1, 2, 12, s.plan_sig));
+        assert_eq!(d.state.len(), s.state.len());
+        for ((na, ta), (nb, tb)) in s.state.iter().zip(&d.state) {
+            assert_eq!(na, nb);
+            for (a, b) in ta.iter().zip(tb) {
+                assert_eq!(a.shape, b.shape);
+                assert_eq!(a.dtype, b.dtype);
+                let bits = |t: &Tensor| t.data.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(a), bits(b), "tensor bits did not round-trip");
+            }
+        }
+    }
+
+    /// Satellite: corrupt snapshots fail restore with *named* errors —
+    /// truncation, bit flips, a foreign magic, and a future version all
+    /// report what is wrong instead of panicking or resuming garbage.
+    #[test]
+    fn corrupt_snapshots_fail_by_name() {
+        let bytes = sample().encode();
+
+        // truncated anywhere: checksum (or length) catches it
+        for cut in [3, 8, 17, bytes.len() - 1] {
+            let err = Snapshot::decode(&bytes[..cut]).unwrap_err().to_string();
+            assert!(
+                err.contains("truncated") || err.contains("checksum"),
+                "truncation at {cut} not named: {err}"
+            );
+        }
+        // a flipped payload bit: checksum mismatch
+        for i in [9, 20, bytes.len() / 2, bytes.len() - 9] {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            let err = Snapshot::decode(&bad).unwrap_err().to_string();
+            assert!(
+                err.contains("checksum") || err.contains("version") || err.contains("magic"),
+                "bit flip at {i} not named: {err}"
+            );
+        }
+        // wrong magic
+        let mut bad = bytes.clone();
+        bad[0..4].copy_from_slice(b"NOPE");
+        assert!(Snapshot::decode(&bad).unwrap_err().to_string().contains("magic"));
+        // future version (checksum fixed up so the version check speaks)
+        let mut future = sample().encode();
+        future[4] = 99;
+        let body = future[..future.len() - 8].to_vec();
+        let mut f = Fnv::new();
+        f.bytes(&body);
+        let n = future.len();
+        future[n - 8..].copy_from_slice(&f.0.to_le_bytes());
+        let err = Snapshot::decode(&future).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "future version not named: {err}");
+    }
+
+    #[test]
+    fn write_load_and_latest_valid_skip_corrupt() {
+        let dir = tmpdir("latest");
+        let mut a = sample();
+        a.piece = 4;
+        let mut b = sample();
+        b.piece = 8;
+        a.write(&dir).unwrap();
+        let b_path = b.write(&dir).unwrap();
+        // other ranks' files are not ours
+        let mut other = sample();
+        other.rank = 0;
+        other.piece = 100;
+        other.write(&dir).unwrap();
+
+        let latest = Snapshot::latest_valid(&dir, 1).unwrap().unwrap();
+        assert_eq!(latest.piece, 8);
+
+        // corrupt the newest: latest_valid falls back to the older one
+        let mut bytes = std::fs::read(&b_path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 1;
+        std::fs::write(&b_path, &bytes).unwrap();
+        assert!(Snapshot::load(&b_path).is_err(), "corrupt file must not load");
+        let fallback = Snapshot::latest_valid(&dir, 1).unwrap().unwrap();
+        assert_eq!(fallback.piece, 4, "latest_valid must skip the corrupt newest");
+
+        assert_eq!(snapshot_path(&dir, 1, 4), dir.join("ck-r001-p000000000004.ofck"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_dir_means_fresh_start() {
+        let dir = tmpdir("fresh");
+        assert!(Snapshot::latest_valid(&dir, 0).unwrap().is_none());
+    }
+}

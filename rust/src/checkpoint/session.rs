@@ -1,0 +1,343 @@
+//! The checkpointed training session: segmented runs with a snapshot at
+//! every segment boundary, a cross-rank barrier between segments, and the
+//! killed-rank rejoin loop that turns a dead worker into a rollback instead
+//! of a funeral.
+//!
+//! A session slices a `pieces`-long run into segments of
+//! `every × microbatches` pieces. Each segment is an ordinary
+//! [`Engine::run_with`] whose engine is rebuilt from the *same* plan with
+//! [`Engine::with_start_piece`] — bitwise-identical to the uninterrupted
+//! run because data sources key on absolute piece and Var state is carried
+//! over exactly ([`Engine::with_var_state`] from the previous segment's
+//! capture). After a segment, every rank snapshots, then exchanges
+//! `SegBarrier` frames so nobody races into the next segment while a peer
+//! is still draining the last (data frames that arrive during the barrier
+//! wait are parked and handed to the next engine as carryover).
+//!
+//! When a segment errors (peer died, watchdog tripped) and there are peers
+//! to rejoin: drop the engine and transport (closing our sockets so the
+//! restarted rank can rendezvous), re-run rendezvous with a bumped epoch
+//! proposing our newest boundary, and let the mesh-minimum resume
+//! negotiation ([`Transport::resume_piece`]) pick the boundary *everyone*
+//! holds — survivors that ran ahead roll back by reloading their own
+//! snapshot at that boundary. The restarted rank does the same with
+//! `--restore`. Losses from re-run pieces are bitwise-identical to the
+//! first attempt (invariant 14), so the overlap is harmless.
+
+use super::{restore, snapshot, snapshot_path, Snapshot};
+use crate::actor::{DataSource, Engine, RunOptions};
+use crate::comm::{wire, Loopback, Transport};
+use crate::compiler::PhysPlan;
+use crate::graph::TensorId;
+use crate::runtime::Backend;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How a checkpointed run is driven (`--checkpoint-every`,
+/// `--checkpoint-dir`, `--restore`, ... in the CLI).
+pub struct SessionOptions {
+    /// Total pieces to train (absolute; a restore counts from 0).
+    pub pieces: usize,
+    /// Snapshot every N rounds (N ≥ 1). One round = `microbatches` pieces
+    /// when the plan accumulates gradients, else one piece.
+    pub every: usize,
+    /// Snapshot directory (shared or per-rank; files are rank-tagged).
+    pub dir: PathBuf,
+    /// Start from this rank's newest valid snapshot instead of fresh init.
+    pub restore: bool,
+    /// This worker's rank (must match the transport the factory builds).
+    pub rank: usize,
+    /// Per-segment watchdog; `None` ⇒ a 120 s default (checkpointed runs
+    /// must fail fast enough to rejoin, so "no watchdog" is not offered).
+    pub timeout: Option<Duration>,
+    /// How many rendezvous re-runs to attempt before giving up.
+    pub max_rejoins: usize,
+    /// Failpoint for chaos tests: `exit(9)` when the cursor crosses this
+    /// piece, *after* the segment computes but *before* its snapshot is
+    /// written — the worst-honest crash point.
+    pub kill_at_piece: Option<u64>,
+}
+
+impl Default for SessionOptions {
+    fn default() -> Self {
+        SessionOptions {
+            pieces: 0,
+            every: 1,
+            dir: PathBuf::from("checkpoints"),
+            restore: false,
+            rank: 0,
+            timeout: None,
+            max_rejoins: 2,
+            kill_at_piece: None,
+        }
+    }
+}
+
+/// What a session did, for summaries and tests.
+pub struct SessionReport {
+    /// Every fetched loss this rank observed: (fetch tensor, absolute
+    /// piece, value). Re-run pieces appear twice with bitwise-equal values.
+    pub losses: Vec<(TensorId, u64, Tensor)>,
+    /// Segments completed (including re-runs after a rollback).
+    pub segments: usize,
+    /// Rendezvous re-runs performed.
+    pub rejoins: usize,
+    /// Wall-clock for the whole session.
+    pub wall: Duration,
+}
+
+/// Exchange segment barriers at `boundary`: announce ours to every peer,
+/// then wait for every peer's. Frames that are *not* our barrier (early
+/// data from a peer already in the next segment, or a stale barrier from a
+/// rolled-back round) are parked in `carry` for the next engine's ingress.
+fn segment_barrier(
+    t: &dyn Transport,
+    rank: usize,
+    world: usize,
+    boundary: u64,
+    seen_in_run: &[(usize, u64)],
+    carry: &mut Vec<(usize, Vec<u8>)>,
+    timeout: Duration,
+) -> crate::Result<()> {
+    let mut seen = vec![false; world];
+    seen[rank] = true;
+    for &(r, b) in seen_in_run {
+        if b == boundary && r < world {
+            seen[r] = true;
+        }
+    }
+    for dst in 0..world {
+        if dst != rank {
+            t.send(dst, wire::encode_seg_barrier(rank as u32, boundary))?;
+        }
+    }
+    let deadline = Instant::now() + timeout;
+    while seen.iter().any(|s| !s) {
+        let left = deadline.saturating_duration_since(Instant::now());
+        anyhow::ensure!(
+            left > Duration::ZERO,
+            "rank {rank}: segment barrier at piece {boundary} timed out waiting for rank(s) {:?}",
+            seen.iter().enumerate().filter(|(_, s)| !**s).map(|(r, _)| r).collect::<Vec<_>>()
+        );
+        match t.recv_timeout(left.min(Duration::from_millis(100)))? {
+            Some((src, frame)) => match wire::decode(&frame) {
+                Ok(wire::Frame::SegBarrier { rank: r, boundary: b }) if b == boundary => {
+                    if (r as usize) < world {
+                        seen[r as usize] = true;
+                    }
+                }
+                // stale barrier (pre-rollback) — drop it
+                Ok(wire::Frame::SegBarrier { .. }) => {}
+                // a peer already started the next segment: park its data
+                // for the next engine's ingress
+                _ => carry.push((src, frame)),
+            },
+            None => {}
+        }
+    }
+    Ok(())
+}
+
+fn load_state(
+    plan: &PhysPlan,
+    opts: &SessionOptions,
+    piece: u64,
+) -> crate::Result<HashMap<usize, Vec<Tensor>>> {
+    let path = snapshot_path(&opts.dir, opts.rank as u32, piece);
+    let snap = Snapshot::load(&path).map_err(|e| {
+        anyhow::anyhow!(
+            "rank {}: resuming at piece {piece} requires this rank's snapshot there: {e}",
+            opts.rank
+        )
+    })?;
+    anyhow::ensure!(
+        snap.piece == piece && snap.rank == opts.rank as u32,
+        "snapshot {} is tagged rank {} piece {} (wanted rank {} piece {piece})",
+        path.display(),
+        snap.rank,
+        snap.piece,
+        opts.rank
+    );
+    restore(plan, &snap)
+}
+
+/// Drive a whole checkpointed run. `connect` builds a transport for a given
+/// `(rejoin epoch, resume proposal)` — called once up front and once per
+/// rejoin (after the previous transport is dropped, so its ports are free
+/// for the rendezvous re-run). `on_loss` fires per fetched loss as soon as
+/// its segment completes, so a rank that is killed later still reported the
+/// losses it computed.
+pub fn run_session(
+    plan: Arc<PhysPlan>,
+    backend: Arc<dyn Backend>,
+    source: Arc<dyn DataSource>,
+    connect: &dyn Fn(u32, u64) -> crate::Result<Arc<dyn Transport>>,
+    opts: &SessionOptions,
+    mut on_loss: impl FnMut(TensorId, u64, &Tensor),
+) -> crate::Result<SessionReport> {
+    anyhow::ensure!(
+        backend.has_data(),
+        "checkpointing captures real tensor state: pick a data-carrying backend \
+         (e.g. `--backend native`)"
+    );
+    anyhow::ensure!(opts.every >= 1, "--checkpoint-every must be at least 1");
+    let m = if plan.has_accumulation() { plan.schedule.microbatches.max(1) } else { 1 };
+    anyhow::ensure!(
+        opts.pieces % m == 0,
+        "pieces ({}) must be a multiple of microbatches (M={m}) for a checkpointed run",
+        opts.pieces
+    );
+    let seg_pieces = opts.every * m;
+    let total = opts.pieces as u64;
+    let watchdog = opts.timeout.unwrap_or(Duration::from_secs(120));
+    let started = Instant::now();
+
+    // Our resume proposal: the newest boundary we can prove we hold.
+    let mut proposal = 0u64;
+    if opts.restore {
+        match Snapshot::latest_valid(&opts.dir, opts.rank as u32)? {
+            Some(s) => proposal = s.piece,
+            None => eprintln!(
+                "rank {}: --restore found no usable snapshot in {}; starting fresh",
+                opts.rank,
+                opts.dir.display()
+            ),
+        }
+    }
+
+    let mut epoch = 0u32;
+    let mut transport = connect(epoch, proposal)?;
+    anyhow::ensure!(
+        transport.rank() == opts.rank,
+        "transport rank {} does not match session rank {}",
+        transport.rank(),
+        opts.rank
+    );
+    let world = transport.world_size();
+    // Worlds of one have nobody to negotiate with: trust our own snapshot.
+    let mut cursor = if world > 1 { transport.resume_piece() } else { proposal };
+    if opts.restore && cursor != proposal {
+        eprintln!(
+            "rank {}: resume negotiation settled on piece {cursor} (we proposed {proposal})",
+            opts.rank
+        );
+    }
+    let mut state: Option<HashMap<usize, Vec<Tensor>>> =
+        if cursor > 0 { Some(load_state(&plan, opts, cursor)?) } else { None };
+
+    let mut carry: Vec<(usize, Vec<u8>)> = Vec::new();
+    let mut losses: Vec<(TensorId, u64, Tensor)> = Vec::new();
+    let mut segments = 0usize;
+    let mut rejoins = 0usize;
+
+    while cursor < total {
+        let seg = seg_pieces.min((total - cursor) as usize);
+        let mut engine = Engine::from_arc(plan.clone(), backend.clone())
+            .with_source(source.clone())
+            .with_transport(transport.clone())
+            .with_start_piece(cursor as usize)
+            .with_capture()
+            .with_carryover(std::mem::take(&mut carry));
+        if let Some(s) = &state {
+            engine = engine.with_var_state(s.clone());
+        }
+        let outcome: crate::Result<()> =
+            match engine.run_with(RunOptions { pieces: seg, timeout: Some(watchdog) }) {
+                Ok(report) => {
+                    segments += 1;
+                    for f in &plan.fetches {
+                        if let Some(vals) = report.fetched.get(&f.tensor) {
+                            for (i, v) in vals.iter().enumerate() {
+                                on_loss(f.tensor, cursor + i as u64, v);
+                                losses.push((f.tensor, cursor + i as u64, v.clone()));
+                            }
+                        }
+                    }
+                    let boundary = cursor + seg as u64;
+                    if let Some(kill) = opts.kill_at_piece {
+                        if cursor < kill && kill <= boundary {
+                            eprintln!(
+                                "rank {}: failpoint: dying at piece {boundary} before \
+                                 writing the snapshot",
+                                opts.rank
+                            );
+                            std::process::exit(9);
+                        }
+                    }
+                    // Snapshot failures are bugs (incomplete capture), not
+                    // crashes to rejoin from: propagate hard.
+                    snapshot(&plan, opts.rank, world, boundary, &report.var_state)?
+                        .write(&opts.dir)?;
+                    state = Some(report.var_state);
+                    cursor = boundary;
+                    if world > 1 && cursor < total {
+                        segment_barrier(
+                            transport.as_ref(),
+                            opts.rank,
+                            world,
+                            cursor,
+                            &report.seg_barriers,
+                            &mut carry,
+                            watchdog,
+                        )
+                    } else {
+                        Ok(())
+                    }
+                }
+                Err(e) => Err(anyhow::anyhow!(e)),
+            };
+        // The engine holds a transport clone; release it before any rejoin
+        // reconnect so our sockets actually close.
+        drop(engine);
+        if let Err(e) = outcome {
+            anyhow::ensure!(
+                world > 1,
+                "rank {}: segment at piece {cursor} failed with no peers to rejoin: {e}",
+                opts.rank
+            );
+            rejoins += 1;
+            anyhow::ensure!(
+                rejoins <= opts.max_rejoins,
+                "rank {}: giving up after {} rejoin attempt(s); last failure: {e}",
+                opts.rank,
+                rejoins - 1
+            );
+            epoch += 1;
+            eprintln!(
+                "rank {}: segment at piece {cursor} failed ({e}); quiescing at last \
+                 completed boundary and re-running rendezvous (epoch {epoch})",
+                opts.rank
+            );
+            carry.clear();
+            // Swap in a placeholder so the old TcpTransport drops *now*
+            // (its Drop closes sockets and joins reader threads), freeing
+            // our rendezvous port for the reconnect.
+            let placeholder: Arc<dyn Transport> = Arc::new(Loopback::default());
+            drop(std::mem::replace(&mut transport, placeholder));
+            let t = connect(epoch, cursor)?;
+            anyhow::ensure!(
+                t.rank() == opts.rank && t.world_size() == world,
+                "rank {}: rejoin changed the job shape (rank {} world {})",
+                opts.rank,
+                t.rank(),
+                t.world_size()
+            );
+            let res = t.resume_piece();
+            if res != cursor {
+                eprintln!(
+                    "rank {}: rejoin rolled the run back from piece {cursor} to the \
+                     mesh-agreed boundary {res}",
+                    opts.rank
+                );
+                cursor = res;
+                state = if res == 0 { None } else { Some(load_state(&plan, opts, res)?) };
+            }
+            transport = t;
+        }
+    }
+
+    Ok(SessionReport { losses, segments, rejoins, wall: started.elapsed() })
+}

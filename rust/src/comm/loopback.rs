@@ -6,13 +6,24 @@
 //! the determinism and parity suites pin down. `Loopback` exists so the
 //! transport choice is *uniform*: callers always hold an
 //! `Arc<dyn Transport>` and single-process is just the degenerate world.
+//!
+//! Self-sends (`dst == 0`) are queued and delivered back through
+//! `recv_timeout`, so rank-generic code (the checkpoint session's segment
+//! barrier, a future shm fabric) works unchanged at world 1. The queue is
+//! condvar-signaled: a frame arriving early wakes a blocked receiver
+//! immediately instead of the receiver sleeping out its whole timeout.
 
-use super::Transport;
-use std::time::Duration;
+use super::{lock_recover, Transport};
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Single-process transport (see module docs).
 #[derive(Debug, Default)]
-pub struct Loopback;
+pub struct Loopback {
+    q: Mutex<VecDeque<Vec<u8>>>,
+    cv: Condvar,
+}
 
 impl Transport for Loopback {
     fn name(&self) -> &'static str {
@@ -27,16 +38,34 @@ impl Transport for Loopback {
         1
     }
 
-    fn send(&self, dst: usize, _frame: Vec<u8>) -> crate::Result<()> {
-        anyhow::bail!("loopback transport has no peer rank {dst}")
+    fn send(&self, dst: usize, frame: Vec<u8>) -> crate::Result<()> {
+        if dst != 0 {
+            anyhow::bail!("loopback transport has no peer rank {dst}");
+        }
+        lock_recover(&self.q).push_back(frame);
+        self.cv.notify_one();
+        Ok(())
     }
 
     fn recv_timeout(&self, timeout: Duration) -> crate::Result<Option<(usize, Vec<u8>)>> {
-        // Nothing ever arrives; honor the contract (None only after the
-        // timeout elapses) so generic `dyn Transport` consumers that poll
-        // anyway neither busy-spin nor misread an instant None as a wait.
-        std::thread::sleep(timeout);
-        Ok(None)
+        let deadline = Instant::now() + timeout;
+        let mut q = lock_recover(&self.q);
+        loop {
+            if let Some(frame) = q.pop_front() {
+                return Ok(Some((0, frame)));
+            }
+            let Some(left) = deadline.checked_duration_since(Instant::now()) else {
+                return Ok(None);
+            };
+            let (guard, res) = self
+                .cv
+                .wait_timeout(q, left)
+                .unwrap_or_else(|p| p.into_inner());
+            q = guard;
+            if res.timed_out() && q.is_empty() {
+                return Ok(None);
+            }
+        }
     }
 }
 
@@ -46,9 +75,40 @@ mod tests {
 
     #[test]
     fn loopback_is_a_world_of_one() {
-        let t = Loopback;
+        let t = Loopback::default();
         assert_eq!((t.rank(), t.world_size()), (0, 1));
         assert!(t.send(1, vec![0]).is_err());
         assert!(t.recv_timeout(Duration::from_millis(1)).unwrap().is_none());
+    }
+
+    #[test]
+    fn self_send_round_trips() {
+        let t = Loopback::default();
+        t.send(0, vec![1, 2, 3]).unwrap();
+        let (src, frame) = t.recv_timeout(Duration::from_millis(50)).unwrap().unwrap();
+        assert_eq!((src, frame), (0, vec![1, 2, 3]));
+        assert!(t.recv_timeout(Duration::from_millis(1)).unwrap().is_none());
+    }
+
+    /// Regression for the full-timeout sleep: a frame arriving *while* the
+    /// receiver blocks must be delivered as it lands, not after the whole
+    /// timeout has been slept out.
+    #[test]
+    fn early_frame_is_delivered_early() {
+        let t = std::sync::Arc::new(Loopback::default());
+        let sender = t.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            sender.send(0, vec![9]).unwrap();
+        });
+        let start = Instant::now();
+        let got = t.recv_timeout(Duration::from_secs(10)).unwrap();
+        let waited = start.elapsed();
+        h.join().unwrap();
+        assert_eq!(got, Some((0, vec![9])));
+        assert!(
+            waited < Duration::from_secs(5),
+            "receiver slept the full timeout instead of waking on arrival ({waited:?})"
+        );
     }
 }

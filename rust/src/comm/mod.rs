@@ -50,9 +50,10 @@ pub mod wire;
 pub use collective::{CollectiveHub, GroupComm};
 pub use loopback::Loopback;
 pub use registry::{
-    create_transport, register_transport, transport_from_args, transport_names, TransportFactory,
+    create_transport, register_transport, transport_config_from_args, transport_from_args,
+    transport_names, TransportFactory,
 };
-pub use tcp::{free_local_ports, tcp_local_world, TcpTransport};
+pub use tcp::{free_local_ports, tcp_local_world, ConnectOpts, TcpTransport, RENDEZVOUS_TIMEOUT};
 
 use crate::actor::msg::Envelope;
 use std::collections::HashMap;
@@ -111,6 +112,17 @@ pub trait Transport: Send + Sync {
 
     /// Next frame from any peer, or `None` if `timeout` elapses first.
     fn recv_timeout(&self, timeout: Duration) -> crate::Result<Option<(usize, Vec<u8>)>>;
+
+    /// The piece boundary the job agreed to resume from, negotiated during
+    /// rendezvous (the checkpoint/rejoin protocol: every rank proposes its
+    /// newest snapshot boundary and the mesh minimum wins, so a restarted
+    /// rank that died before its last snapshot rolls every survivor back to
+    /// a boundary *everyone* holds). Transports without a rendezvous — or
+    /// worlds of one, where there is nobody to disagree with — report 0 and
+    /// the checkpoint session uses its own snapshot instead.
+    fn resume_piece(&self) -> u64 {
+        0
+    }
 }
 
 /// Engine-side egress: maps an envelope's destination node to the rank that

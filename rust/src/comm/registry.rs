@@ -28,7 +28,7 @@ fn loopback_factory(cfg: &TransportConfig) -> crate::Result<Arc<dyn Transport>> 
         "loopback is single-process; --rank {} makes no sense without --transport tcp",
         cfg.rank
     );
-    Ok(Arc::new(Loopback))
+    Ok(Arc::new(Loopback::default()))
 }
 
 fn tcp_factory(cfg: &TransportConfig) -> crate::Result<Arc<dyn Transport>> {
@@ -77,16 +77,24 @@ pub fn create_transport(name: &str, cfg: &TransportConfig) -> crate::Result<Arc<
     }
 }
 
-/// Resolve `--transport NAME --rank R --peers h:p,h:p` from parsed CLI
-/// arguments; defaults to the in-process loopback.
-pub fn transport_from_args(args: &Args) -> crate::Result<Arc<dyn Transport>> {
-    let cfg = TransportConfig {
+/// Parse `--rank R --peers h:p,h:p` into a [`TransportConfig`] without
+/// connecting anything — the checkpoint session reuses this to rebuild the
+/// same config for each rendezvous re-run (rejoin epochs reconnect with
+/// fresh [`super::ConnectOpts`] rather than going through the registry).
+pub fn transport_config_from_args(args: &Args) -> TransportConfig {
+    TransportConfig {
         rank: args.usize("rank", 0),
         peers: args
             .get("peers")
             .map(|p| p.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect())
             .unwrap_or_default(),
-    };
+    }
+}
+
+/// Resolve `--transport NAME --rank R --peers h:p,h:p` from parsed CLI
+/// arguments; defaults to the in-process loopback.
+pub fn transport_from_args(args: &Args) -> crate::Result<Arc<dyn Transport>> {
+    let cfg = transport_config_from_args(args);
     create_transport(args.get("transport").unwrap_or("loopback"), &cfg)
 }
 
@@ -114,7 +122,7 @@ mod tests {
     #[test]
     fn double_registration_is_an_error() {
         fn null_factory(_: &TransportConfig) -> crate::Result<Arc<dyn Transport>> {
-            Ok(Arc::new(super::super::Loopback))
+            Ok(Arc::new(super::super::Loopback::default()))
         }
         register_transport("null-test-transport", null_factory).unwrap();
         let again = register_transport("null-test-transport", null_factory);

@@ -3,11 +3,21 @@
 //! **Rendezvous.** Every worker is launched with the same rank-indexed peer
 //! list (`--peers h0:p0,h1:p1,...`) and its own `--rank`. Rank `i` binds a
 //! listener on `peers[i]`, dials every lower rank, and accepts one
-//! connection from every higher rank; the dialer opens with a 12-byte
-//! handshake (`b"OFC1"`, dialer rank, world size) so both sides agree on the
-//! rank ↔ socket mapping and on the job shape before any actor traffic
-//! flows. Dials retry until the peer's listener is up (workers may start in
-//! any order), bounded by [`RENDEZVOUS_TIMEOUT`].
+//! connection from every higher rank; both sides exchange a 24-byte
+//! handshake (`b"OFC2"`, rank, world size, rejoin epoch, resume-piece
+//! proposal) so they agree on the rank ↔ socket mapping, the job shape,
+//! *and* — for checkpointed jobs — the piece boundary to resume from before
+//! any actor traffic flows. Dials retry with exponential backoff until the
+//! peer's listener is up (workers may start in any order), bounded by a
+//! total rendezvous deadline that surfaces a named error (peer address +
+//! elapsed time) instead of spinning forever on a never-starting peer.
+//!
+//! **Rejoin.** A restarted rank simply re-runs this rendezvous via
+//! [`TcpTransport::connect_with`] with a bumped epoch: survivors tear their
+//! old transport down (closing sockets frees the listen ports; bind retries
+//! absorb `AddrInUse` residue) and reconnect. The handshake's resume
+//! proposals are folded over the full mesh with `min`, so every rank lands
+//! on a boundary every rank holds a snapshot for ([`Transport::resume_piece`]).
 //!
 //! **Framing.** `u32` little-endian length, then the [`super::wire`] frame.
 //! One reader thread per peer pushes `(peer, frame)` into a shared inbox;
@@ -21,8 +31,11 @@ use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::{mpsc, Mutex};
 use std::time::{Duration, Instant};
 
-/// Handshake magic ("OneFlow Comm v1").
-const MAGIC: [u8; 4] = *b"OFC1";
+/// Handshake magic ("OneFlow Comm v2": v1's 12 bytes grew epoch + resume).
+const MAGIC: [u8; 4] = *b"OFC2";
+
+/// Handshake length: magic + rank + world + epoch (each u32) + resume (u64).
+const HS_LEN: usize = 24;
 
 /// How long workers wait for their peers to show up.
 pub const RENDEZVOUS_TIMEOUT: Duration = Duration::from_secs(30);
@@ -31,10 +44,42 @@ pub const RENDEZVOUS_TIMEOUT: Duration = Duration::from_secs(30);
 /// limit; a 256M-element f32 tensor still fits).
 const MAX_FRAME: usize = 1 << 30;
 
+/// Rendezvous tuning for [`TcpTransport::connect_with`]: the rejoin
+/// generation and resume proposal carried in the handshake, plus the total
+/// deadline (rejoins typically pass a longer one — the restarted peer has to
+/// be relaunched before it can dial back).
+#[derive(Clone, Debug)]
+pub struct ConnectOpts {
+    /// Rejoin generation: 0 for a fresh job, bumped by the checkpoint
+    /// session on every recovery. Informational (logged on mismatch) — the
+    /// resume negotiation is what carries the recovery semantics.
+    pub epoch: u32,
+    /// This rank's resume proposal: the newest snapshot boundary it holds
+    /// (0 = no snapshot, start fresh). The mesh minimum wins.
+    pub resume: u64,
+    /// Total rendezvous deadline covering bind retries, dials and accepts.
+    pub deadline: Duration,
+}
+
+impl Default for ConnectOpts {
+    fn default() -> Self {
+        ConnectOpts { epoch: 0, resume: 0, deadline: RENDEZVOUS_TIMEOUT }
+    }
+}
+
+/// A peer's half of the handshake.
+struct Hello {
+    rank: usize,
+    epoch: u32,
+    resume: u64,
+}
+
 /// TCP transport (see module docs).
 pub struct TcpTransport {
     rank: usize,
     world: usize,
+    /// Mesh-min resume piece negotiated at rendezvous.
+    resume: u64,
     /// Per-peer write half (`None` at our own rank).
     writers: Vec<Option<Mutex<TcpStream>>>,
     inbox: Mutex<mpsc::Receiver<(usize, Vec<u8>)>>,
@@ -49,6 +94,15 @@ pub struct TcpTransport {
 impl TcpTransport {
     /// Run the rendezvous and return the connected transport.
     pub fn connect(cfg: &TransportConfig) -> crate::Result<std::sync::Arc<Self>> {
+        Self::connect_with(cfg, &ConnectOpts::default())
+    }
+
+    /// [`Self::connect`] with explicit epoch / resume proposal / deadline —
+    /// the rejoin entry point.
+    pub fn connect_with(
+        cfg: &TransportConfig,
+        opts: &ConnectOpts,
+    ) -> crate::Result<std::sync::Arc<Self>> {
         let world = cfg.peers.len();
         anyhow::ensure!(world >= 1, "tcp transport needs --peers with every rank's host:port");
         anyhow::ensure!(
@@ -57,16 +111,34 @@ impl TcpTransport {
             cfg.rank,
             world
         );
-        let listener = TcpListener::bind(cfg.peers[cfg.rank].as_str()).map_err(|e| {
-            anyhow::anyhow!("rank {}: bind {}: {e}", cfg.rank, cfg.peers[cfg.rank])
-        })?;
+        let deadline = Instant::now() + opts.deadline;
+        let hello = hello_bytes(cfg.rank, world, opts.epoch, opts.resume);
+        // A rejoining rank (or a survivor reconnecting) may race its own old
+        // sockets' teardown for the listen port: retry AddrInUse within the
+        // deadline instead of failing the whole recovery on residue.
+        let listener = loop {
+            match TcpListener::bind(cfg.peers[cfg.rank].as_str()) {
+                Ok(l) => break l,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::AddrInUse
+                        && Instant::now() < deadline =>
+                {
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                Err(e) => {
+                    anyhow::bail!("rank {}: bind {}: {e}", cfg.rank, cfg.peers[cfg.rank])
+                }
+            }
+        };
         listener.set_nonblocking(true)?;
 
+        let mut resume = opts.resume;
         let mut streams: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
         for peer in 0..cfg.rank {
-            streams[peer] = Some(dial(&cfg.peers[peer], cfg.rank, world)?);
+            let (s, h) = dial(&cfg.peers[peer], cfg.rank, world, &hello, deadline)?;
+            note_peer(&mut resume, opts.epoch, &h);
+            streams[peer] = Some(s);
         }
-        let deadline = Instant::now() + RENDEZVOUS_TIMEOUT;
         let expected = world - 1 - cfg.rank;
         let mut accepted = 0usize;
         while accepted < expected {
@@ -76,18 +148,21 @@ impl TcpTransport {
                     // client) must not kill the worker: drop it and keep
                     // accepting. Only a rank claimed twice is fatal — that
                     // means the job itself is misconfigured.
-                    match accept_handshake(&s, world) {
-                        Ok(peer) if peer > cfg.rank && peer < world => {
+                    match accept_handshake(&s, world, &hello) {
+                        Ok(h) if h.rank > cfg.rank && h.rank < world => {
                             anyhow::ensure!(
-                                streams[peer].is_none(),
-                                "rank {peer} connected twice (duplicate --rank in the job?)"
+                                streams[h.rank].is_none(),
+                                "rank {} connected twice (duplicate --rank in the job?)",
+                                h.rank
                             );
-                            streams[peer] = Some(s);
+                            note_peer(&mut resume, opts.epoch, &h);
+                            streams[h.rank] = Some(s);
                             accepted += 1;
                         }
-                        Ok(peer) => eprintln!(
-                            "comm: dropping handshake from unexpected rank {peer} \
-                             (dialers have lower rank)"
+                        Ok(h) => eprintln!(
+                            "comm: dropping handshake from unexpected rank {} \
+                             (dialers have lower rank)",
+                            h.rank
                         ),
                         Err(e) => {
                             eprintln!("comm: dropping non-worker connection from {from}: {e}")
@@ -129,6 +204,7 @@ impl TcpTransport {
         Ok(std::sync::Arc::new(TcpTransport {
             rank: cfg.rank,
             world,
+            resume,
             writers,
             inbox: Mutex::new(rx),
             _inbox_tx: if world == 1 { Some(tx) } else { None },
@@ -137,20 +213,71 @@ impl TcpTransport {
     }
 }
 
-/// Dial `addr`, retrying until its listener is up, then send the handshake.
-/// Only transient failures (peer not yet listening) are retried; a bad
-/// address or unresolvable host fails fast instead of eating the window.
-fn dial(addr: &str, my_rank: usize, world: usize) -> crate::Result<TcpStream> {
-    let deadline = Instant::now() + RENDEZVOUS_TIMEOUT;
+fn hello_bytes(rank: usize, world: usize, epoch: u32, resume: u64) -> [u8; HS_LEN] {
+    let mut hs = [0u8; HS_LEN];
+    hs[0..4].copy_from_slice(&MAGIC);
+    hs[4..8].copy_from_slice(&(rank as u32).to_le_bytes());
+    hs[8..12].copy_from_slice(&(world as u32).to_le_bytes());
+    hs[12..16].copy_from_slice(&epoch.to_le_bytes());
+    hs[16..24].copy_from_slice(&resume.to_le_bytes());
+    hs
+}
+
+fn parse_hello(hs: &[u8; HS_LEN], world: usize) -> crate::Result<Hello> {
+    anyhow::ensure!(hs[0..4] == MAGIC, "bad handshake magic (not a oneflow worker?)");
+    let rank = u32::from_le_bytes(hs[4..8].try_into().unwrap()) as usize;
+    let w = u32::from_le_bytes(hs[8..12].try_into().unwrap()) as usize;
+    anyhow::ensure!(w == world, "world size mismatch: peer says {w}, we say {world}");
+    let epoch = u32::from_le_bytes(hs[12..16].try_into().unwrap());
+    let resume = u64::from_le_bytes(hs[16..24].try_into().unwrap());
+    Ok(Hello { rank, epoch, resume })
+}
+
+/// Fold one peer's handshake into the negotiated resume: mesh minimum, so
+/// the job resumes from a boundary *every* rank holds a snapshot for.
+fn note_peer(resume: &mut u64, my_epoch: u32, h: &Hello) {
+    if h.epoch != my_epoch {
+        eprintln!(
+            "comm: rank {} joined with rejoin epoch {} (ours is {my_epoch}); resuming from \
+             the negotiated boundary regardless",
+            h.rank, h.epoch
+        );
+    }
+    *resume = (*resume).min(h.resume);
+}
+
+/// Dial `addr` with exponential backoff until its listener is up, then
+/// exchange handshakes. Only transient failures (peer not yet listening) are
+/// retried; a bad address or unresolvable host fails fast instead of eating
+/// the window, and exhausting the deadline names the peer and the elapsed
+/// time instead of spinning forever.
+fn dial(
+    addr: &str,
+    my_rank: usize,
+    world: usize,
+    hello: &[u8; HS_LEN],
+    deadline: Instant,
+) -> crate::Result<(TcpStream, Hello)> {
+    let started = Instant::now();
+    let mut backoff = Duration::from_millis(5);
     loop {
         match TcpStream::connect(addr) {
             Ok(mut s) => {
-                let mut hs = Vec::with_capacity(12);
-                hs.extend_from_slice(&MAGIC);
-                hs.extend_from_slice(&(my_rank as u32).to_le_bytes());
-                hs.extend_from_slice(&(world as u32).to_le_bytes());
-                s.write_all(&hs)?;
-                return Ok(s);
+                s.write_all(hello)?;
+                // The acceptor replies with its own hello (rank + resume
+                // proposal) once it has validated ours — the "two-way" in
+                // the v2 handshake that makes resume negotiation symmetric.
+                let left = deadline.saturating_duration_since(Instant::now());
+                s.set_read_timeout(Some(left.max(Duration::from_secs(1))))?;
+                let mut reply = [0u8; HS_LEN];
+                s.read_exact(&mut reply).map_err(|e| {
+                    anyhow::anyhow!(
+                        "rank {my_rank}: peer `{addr}` accepted but never replied to the \
+                         handshake: {e}"
+                    )
+                })?;
+                s.set_read_timeout(None)?;
+                return Ok((s, parse_hello(&reply, world)?));
             }
             Err(e) => {
                 let transient = matches!(
@@ -166,18 +293,23 @@ fn dial(addr: &str, my_rank: usize, world: usize) -> crate::Result<TcpStream> {
                     transient,
                     "rank {my_rank}: cannot dial peer `{addr}`: {e}"
                 );
+                let now = Instant::now();
                 anyhow::ensure!(
-                    Instant::now() < deadline,
-                    "rank {my_rank}: rendezvous with {addr} timed out: {e}"
+                    now < deadline,
+                    "rank {my_rank}: gave up dialing peer `{addr}` after {:.1}s of retries \
+                     (last error: {e})",
+                    started.elapsed().as_secs_f64()
                 );
-                std::thread::sleep(Duration::from_millis(25));
+                std::thread::sleep(backoff.min(deadline - now));
+                backoff = (backoff * 2).min(Duration::from_millis(200));
             }
         }
     }
 }
 
-/// Validate a dialer's handshake; returns the dialer's rank.
-fn accept_handshake(s: &TcpStream, world: usize) -> crate::Result<usize> {
+/// Validate a dialer's handshake and reply with ours; returns the dialer's
+/// hello.
+fn accept_handshake(s: &TcpStream, world: usize, hello: &[u8; HS_LEN]) -> crate::Result<Hello> {
     // Accepted sockets must not inherit the listener's non-blocking mode.
     s.set_nonblocking(false)?;
     // Workers write the handshake in dial() before connect() returns, so it
@@ -186,15 +318,14 @@ fn accept_handshake(s: &TcpStream, world: usize) -> crate::Result<usize> {
     // loop; a genuine peer delayed past it is dropped here and the job
     // fails loudly at this rank's rendezvous deadline rather than hanging.
     s.set_read_timeout(Some(Duration::from_secs(2)))?;
-    let mut hs = [0u8; 12];
+    let mut hs = [0u8; HS_LEN];
     let mut r: &TcpStream = s; // std implements Read for &TcpStream
     r.read_exact(&mut hs)?;
     s.set_read_timeout(None)?;
-    anyhow::ensure!(hs[0..4] == MAGIC, "bad handshake magic (not a oneflow worker?)");
-    let peer = u32::from_le_bytes(hs[4..8].try_into().unwrap()) as usize;
-    let w = u32::from_le_bytes(hs[8..12].try_into().unwrap()) as usize;
-    anyhow::ensure!(w == world, "world size mismatch: peer says {w}, we say {world}");
-    Ok(peer)
+    let h = parse_hello(&hs, world)?;
+    let mut w: &TcpStream = s;
+    w.write_all(hello)?;
+    Ok(h)
 }
 
 /// Per-peer reader: length-prefixed frames into the shared inbox until the
@@ -266,6 +397,10 @@ impl Transport for TcpTransport {
                 )
             }
         }
+    }
+
+    fn resume_piece(&self) -> u64 {
+        self.resume
     }
 }
 
@@ -352,5 +487,47 @@ mod tests {
             peers: vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()],
         })
         .is_err());
+    }
+
+    /// Satellite: the dial loop is bounded — a peer that never starts yields
+    /// a named error carrying the peer address and the elapsed retry time,
+    /// well within the configured deadline (not the old infinite spin).
+    #[test]
+    fn dial_gives_up_with_named_error() {
+        let port = free_local_ports(1).unwrap()[0]; // discovered then released: nobody listens
+        let peers = vec![format!("127.0.0.1:{port}"), "127.0.0.1:1".into()];
+        let me = free_local_ports(1).unwrap()[0];
+        let cfg = TransportConfig { rank: 1, peers: vec![peers[0].clone(), format!("127.0.0.1:{me}")] };
+        let opts = ConnectOpts { deadline: Duration::from_millis(300), ..Default::default() };
+        let start = Instant::now();
+        let err = TcpTransport::connect_with(&cfg, &opts).err().expect("must not connect");
+        let msg = format!("{err:#}");
+        assert!(start.elapsed() < Duration::from_secs(10), "dial loop not bounded");
+        assert!(msg.contains(&peers[0]), "error does not name the peer: {msg}");
+        assert!(msg.contains("gave up dialing"), "error does not say it gave up: {msg}");
+        assert!(msg.contains("s of retries"), "error does not carry elapsed time: {msg}");
+    }
+
+    /// The v2 handshake negotiates the mesh-min resume proposal both ways.
+    #[test]
+    fn resume_negotiation_takes_mesh_min() {
+        let ports = free_local_ports(2).unwrap();
+        let peers: Vec<String> = ports.iter().map(|p| format!("127.0.0.1:{p}")).collect();
+        let c0 = TransportConfig { rank: 0, peers: peers.clone() };
+        let c1 = TransportConfig { rank: 1, peers };
+        let h = std::thread::spawn(move || {
+            TcpTransport::connect_with(
+                &c1,
+                &ConnectOpts { epoch: 1, resume: 12, ..Default::default() },
+            )
+        });
+        let t0 = TcpTransport::connect_with(
+            &c0,
+            &ConnectOpts { epoch: 1, resume: 8, ..Default::default() },
+        )
+        .unwrap();
+        let t1 = h.join().unwrap().unwrap();
+        assert_eq!(t0.resume_piece(), 8);
+        assert_eq!(t1.resume_piece(), 8);
     }
 }

@@ -37,6 +37,7 @@ const TAG_FINALIZE: u8 = 1;
 const TAG_COLLECTIVE: u8 = 2;
 const TAG_SHARD: u8 = 3;
 const TAG_TRACE: u8 = 4;
+const TAG_SEG_BARRIER: u8 = 5;
 
 /// Encoded size of one trace event (see [`encode_trace`]).
 const TRACE_EVENT_BYTES: usize = 73;
@@ -73,6 +74,14 @@ pub enum Frame {
     /// trace events to rank 0, which merges the global timeline. Virtual
     /// timestamps travel as raw f64 bits so the merged timeline is exact.
     Trace { rank: u32, events: Vec<crate::trace::Event> },
+    /// Segment barrier between checkpointed engine runs: `rank` has fully
+    /// finished the run segment ending at absolute piece `boundary` (its
+    /// engine — ingress included — is torn down, so frames it receives next
+    /// can only be seen by its *next* segment's engine). The checkpoint
+    /// session waits for every peer's barrier before starting the next
+    /// segment, closing the window where an early peer's new-segment frames
+    /// could land in a finished engine and be dropped.
+    SegBarrier { rank: u32, boundary: u64 },
 }
 
 /// Hub mailbox key of a shard frame: bit 63 marks the shard namespace so
@@ -135,6 +144,15 @@ pub fn encode_finalize(rank: u32, makespan: f64) -> Vec<u8> {
     out.push(TAG_FINALIZE);
     put_u32(&mut out, rank);
     put_u64(&mut out, makespan.to_bits());
+    out
+}
+
+/// Encode a segment-barrier frame (see [`Frame::SegBarrier`]).
+pub fn encode_seg_barrier(rank: u32, boundary: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(13);
+    out.push(TAG_SEG_BARRIER);
+    put_u32(&mut out, rank);
+    put_u64(&mut out, boundary);
     out
 }
 
@@ -251,6 +269,7 @@ pub fn decode(bytes: &[u8]) -> crate::Result<Frame> {
             Frame::Envelope(Envelope { to, msg })
         }
         TAG_FINALIZE => Frame::Finalize { rank: c.u32()?, makespan: f64::from_bits(c.u64()?) },
+        TAG_SEG_BARRIER => Frame::SegBarrier { rank: c.u32()?, boundary: c.u64()? },
         TAG_COLLECTIVE => {
             let key = c.u64()?;
             let src = c.u32()?;
@@ -313,12 +332,14 @@ pub fn decode(bytes: &[u8]) -> crate::Result<Frame> {
 }
 
 // ---- primitives ----
+// (pub(crate): the checkpoint snapshot codec reuses them, so snapshots
+// inherit the wire format's exact-bit tensor round-trips)
 
-fn put_u32(out: &mut Vec<u8>, v: u32) {
+pub(crate) fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_u64(out: &mut Vec<u8>, v: u64) {
+pub(crate) fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
@@ -339,7 +360,7 @@ fn dtype_from_tag(t: u8) -> crate::Result<DType> {
     })
 }
 
-fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
+pub(crate) fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
     out.push(dtype_tag(t.dtype));
     out.push(t.shape.rank() as u8);
     for d in 0..t.shape.rank() {
@@ -351,7 +372,7 @@ fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
     }
 }
 
-fn take_tensor(c: &mut Cursor<'_>) -> crate::Result<Tensor> {
+pub(crate) fn take_tensor(c: &mut Cursor<'_>) -> crate::Result<Tensor> {
     let dtype = dtype_from_tag(c.u8()?)?;
     let rank = c.u8()? as usize;
     let mut dims = Vec::with_capacity(rank);
@@ -376,13 +397,13 @@ fn take_tensor(c: &mut Cursor<'_>) -> crate::Result<Tensor> {
     Ok(Tensor { shape: dims.into(), dtype, data })
 }
 
-struct Cursor<'a> {
-    buf: &'a [u8],
-    pos: usize,
+pub(crate) struct Cursor<'a> {
+    pub(crate) buf: &'a [u8],
+    pub(crate) pos: usize,
 }
 
 impl Cursor<'_> {
-    fn remaining(&self) -> usize {
+    pub(crate) fn remaining(&self) -> usize {
         self.buf.len() - self.pos
     }
 
@@ -393,15 +414,15 @@ impl Cursor<'_> {
         Ok(s)
     }
 
-    fn u8(&mut self) -> crate::Result<u8> {
+    pub(crate) fn u8(&mut self) -> crate::Result<u8> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> crate::Result<u32> {
+    pub(crate) fn u32(&mut self) -> crate::Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> crate::Result<u64> {
+    pub(crate) fn u64(&mut self) -> crate::Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 }
@@ -558,6 +579,19 @@ mod tests {
             f => panic!("wrong frame {f:?}"),
         }
         assert!(decode(&b[..b.len() - 1]).is_err(), "truncated payload must reject");
+        assert!(!frame_is_shard(&b));
+    }
+
+    #[test]
+    fn seg_barrier_roundtrip() {
+        let b = encode_seg_barrier(3, 0x1_0000_0004);
+        match decode(&b).unwrap() {
+            Frame::SegBarrier { rank, boundary } => {
+                assert_eq!((rank, boundary), (3, 0x1_0000_0004));
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+        assert!(decode(&b[..b.len() - 1]).is_err(), "truncated barrier must reject");
         assert!(!frame_is_shard(&b));
     }
 

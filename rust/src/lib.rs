@@ -70,6 +70,7 @@ pub mod boxing;
 pub mod exec;
 pub mod compiler;
 pub mod actor;
+pub mod checkpoint;
 pub mod comm;
 pub mod runtime;
 pub mod memory;

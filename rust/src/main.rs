@@ -5,22 +5,29 @@
 //! * `simulate` — run a paper workload on the simulated cluster.
 //! * `plan`     — compile a workload and dump the physical plan + memory.
 
-use oneflow::actor::Engine;
+use oneflow::actor::{DataSource, Engine, FnSource};
 use oneflow::bench::Table;
+use oneflow::checkpoint;
 use oneflow::comm;
-use oneflow::compiler::{compile, search, CompileOptions, Frontier, ScheduleMode, SearchSpace};
+use oneflow::compiler::{
+    compile, search, CompileOptions, Frontier, InputBinding, ScheduleMode, SearchSpace,
+};
 use oneflow::config::Args;
-use oneflow::data::RandomSource;
+use oneflow::data::{RandomSource, SyntheticCorpus};
 use oneflow::exec::{CostModel, QueueKind};
 use oneflow::memory;
 use oneflow::models::{
-    gpt_hybrid_auto, gpt_sim_checked, resnet50, GptModelSpec, GptSimConfig, ResnetConfig,
+    gpt_hybrid_auto, gpt_pipeline_real_checked, gpt_sim_checked, resnet50, GptModelSpec,
+    GptPipelineConfig, GptSimConfig, ResnetConfig,
 };
 use oneflow::placement::Placement;
 use oneflow::runtime::{backend_from_args, backend_names};
+use oneflow::tensor::{DType, Tensor};
 use oneflow::util::fmt;
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     let args = Args::from_env();
@@ -36,8 +43,11 @@ fn main() {
             eprintln!(
                 "usage: oneflow <train|simulate|plan|trace-validate> [--flags]\n\
                  train:    --steps N --artifacts DIR --lr F  (needs a build with --features pjrt)\n\
-                 simulate: --model gpt|resnet --dp N --mp N --pp N --batch N --hidden N --layers N --pieces N [--devs-per-node N] [--zero] [--checkpoint] [--backend {}]\n\
+                 simulate: --model gpt|gpt-real|resnet --dp N --mp N --pp N --batch N --hidden N --layers N --pieces N [--devs-per-node N] [--zero] [--checkpoint] [--backend {}]\n\
                  \x20          [--transport {}] [--rank R --peers h:p,h:p,...]  (multi-process: one worker per rank)\n\
+                 \x20          [--checkpoint-every N --checkpoint-dir D [--restore]]  (snapshot every N rounds; restore resumes bitwise from the newest snapshot)\n\
+                 \x20          [--max-rejoins N] [--print-losses] [--kill-at-piece P]  (rejoin budget / LOSS lines per piece / chaos-test failpoint)\n\
+                 \x20          [--vocab V]  (token vocabulary of gpt-real and of --model gpt's embedding)\n\
                  \x20          [--intraop N]  (row-parallel matmul threads, default 1, bitwise-deterministic)\n\
                  \x20          [--microbatches M] [--unoverlapped]  (1F1B in-flight cap / single-slot baseline schedule)\n\
                  \x20          [--timeout-secs N]  (wall-clock watchdog; 0 = none, the default)\n\
@@ -112,6 +122,26 @@ fn build_model(args: &Args) -> Built {
             let (g, loss, upd) = resnet50(&cfg, &pl);
             (g, loss, upd, batch)
         }
+        // small real-numerics pipeline GPT (the checkpoint/rejoin chaos
+        // suite's workload): runs on `--backend native` with a token corpus
+        "gpt-real" => {
+            let cfg = GptPipelineConfig {
+                stages: args.usize("pp", 2).max(1),
+                vocab: args.usize("vocab", 32),
+                hidden: args.usize("hidden", 16),
+                ff: args.usize("ff", 32),
+                blocks_per_stage: args.usize("layers", 1).max(1),
+                rows: args.usize("batch", 32),
+                lr: args.f64("lr", 0.2) as f32,
+                microbatches: args.usize("microbatches", 1).max(1),
+            };
+            let rows = cfg.rows;
+            let (g, loss, upd) = gpt_pipeline_real_checked(&cfg).unwrap_or_else(|e| {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            });
+            (g, loss, upd, rows)
+        }
         _ => {
             let mut cfg = GptSimConfig::new(
                 args.usize("dp", 2),
@@ -126,6 +156,7 @@ fn build_model(args: &Args) -> Built {
             // multi-process launch gives each rank one replica and gradient
             // all-reduces run as ring collectives across the transport
             cfg.devs_per_node = args.usize("devs-per-node", 8).max(1);
+            cfg.vocab = args.usize("vocab", cfg.vocab);
             cfg.checkpoint = args.flag("checkpoint");
             cfg.zero = args.flag("zero");
             let gb = cfg.global_batch;
@@ -234,6 +265,12 @@ fn simulate(args: &Args) {
     };
     let mem = memory::check_plan(&plan, &opts.cluster.device);
     let pieces = args.usize("pieces", 8);
+    // `--checkpoint-every` / `--restore` route through the checkpointed
+    // session driver: segmented runs, per-boundary snapshots, rejoin loop
+    if args.usize("checkpoint-every", 0) > 0 || args.flag("restore") {
+        run_checkpointed(args, plan);
+        return;
+    }
     // the backend is a runtime choice through the registry; `sim` (data-free)
     // is the right default for simulate
     let backend = backend_from_args(args, "sim").unwrap_or_else(|e| {
@@ -271,7 +308,7 @@ fn simulate(args: &Args) {
         // real-numerics backends must be fed; synthetic batches keep every
         // advertised `--backend` choice runnable (native is CPU-slow at
         // paper scale — use small --hidden/--layers/--batch)
-        engine = engine.with_source(Arc::new(RandomSource { seed: 7 }));
+        engine = engine.with_source(data_source(args));
     }
     // no watchdog by default for interactive runs: slow-but-progressing
     // native math is not a deadlock (Engine::run's DEFAULT_TIMEOUT_SECS is
@@ -286,6 +323,15 @@ fn simulate(args: &Args) {
             eprintln!("error: {e}");
             std::process::exit(1);
         });
+    if args.flag("print-losses") {
+        for f in &engine.plan().fetches {
+            if let Some(vals) = report.fetched.get(&f.tensor) {
+                for (i, v) in vals.iter().enumerate() {
+                    println!("{}", loss_line(f.tensor, i as u64, v));
+                }
+            }
+        }
+    }
     let mut t = Table::new("simulation", &["metric", "value"]);
     t.row(&["pieces".into(), pieces.to_string()]);
     t.row(&["virtual makespan".into(), fmt::secs(report.makespan)]);
@@ -322,6 +368,106 @@ fn simulate(args: &Args) {
             oneflow::metrics::trace_summary(trace, engine.plan()).table().print();
         }
     }
+}
+
+/// The synthetic feed for data-carrying backends: a token corpus for
+/// `--model gpt-real` (its `ids`/`labels` inputs must hold valid token
+/// ids), random batches for everything else.
+fn data_source(args: &Args) -> Arc<dyn DataSource> {
+    if args.get("model").unwrap_or("gpt") == "gpt-real" {
+        let vocab = args.usize("vocab", 32);
+        let rows = args.usize("batch", 32);
+        let corpus = Arc::new(SyntheticCorpus::new(2048, vocab, 17));
+        Arc::new(FnSource(move |b: &InputBinding, piece: usize| {
+            let (ids, labels) = corpus.batch(piece, 1, rows);
+            match b.name.as_str() {
+                "ids" => Tensor::new([rows], DType::I32, ids.data),
+                "labels" => Tensor::new([rows], DType::I32, labels.data),
+                _ => Tensor::full(b.shape.clone(), b.dtype, 1.0),
+            }
+        }))
+    } else {
+        Arc::new(RandomSource { seed: 7 })
+    }
+}
+
+/// One greppable line per fetched loss: the FNV-1a of the exact f32 bits
+/// (so two runs can be compared bitwise from stdout alone) plus a human
+/// mean. The chaos suite diffs these across kill/restore runs.
+fn loss_line(tid: oneflow::graph::TensorId, piece: u64, t: &Tensor) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for x in &t.data {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    let mean = if t.data.is_empty() {
+        0.0
+    } else {
+        t.data.iter().map(|v| *v as f64).sum::<f64>() / t.data.len() as f64
+    };
+    format!("LOSS t{} piece={piece} bits={h:016x} mean={mean:.6}", tid.0)
+}
+
+/// The `--checkpoint-every` / `--restore` arm of `simulate`: drive the run
+/// through [`checkpoint::run_session`] — segmented engine runs, a snapshot
+/// per segment boundary, segment barriers across ranks, and the rejoin loop
+/// when a peer dies. Defaults to the native backend (snapshots capture real
+/// tensor state).
+fn run_checkpointed(args: &Args, plan: oneflow::compiler::PhysPlan) {
+    let backend = backend_from_args(args, "native").unwrap_or_else(|e| die(e.to_string()));
+    let plan = Arc::new(plan);
+    let source = data_source(args);
+    let tname = args.get("transport").unwrap_or("loopback").to_string();
+    let tcfg = comm::transport_config_from_args(args);
+    // The session reconnects through this factory on every rejoin epoch:
+    // TCP re-runs the rendezvous with the epoch + our resume proposal (a
+    // restarted peer gets a generous deadline to come back up); other
+    // transports go through the registry unchanged.
+    let connect = move |epoch: u32, resume: u64| -> oneflow::Result<Arc<dyn comm::Transport>> {
+        if tname == "tcp" {
+            let deadline =
+                if epoch > 0 { Duration::from_secs(60) } else { comm::RENDEZVOUS_TIMEOUT };
+            let t = comm::TcpTransport::connect_with(
+                &tcfg,
+                &comm::ConnectOpts { epoch, resume, deadline },
+            )?;
+            Ok(t as Arc<dyn comm::Transport>)
+        } else {
+            comm::create_transport(&tname, &tcfg)
+        }
+    };
+    let opts = checkpoint::SessionOptions {
+        pieces: args.usize("pieces", 8),
+        every: args.usize("checkpoint-every", 1).max(1),
+        dir: PathBuf::from(args.get("checkpoint-dir").unwrap_or("checkpoints")),
+        restore: args.flag("restore"),
+        rank: args.usize("rank", 0),
+        timeout: match args.usize("timeout-secs", 0) {
+            0 => None,
+            secs => Some(Duration::from_secs(secs as u64)),
+        },
+        max_rejoins: args.usize("max-rejoins", 2),
+        kill_at_piece: args.get("kill-at-piece").map(|s| {
+            s.parse().unwrap_or_else(|_| die(format!("--kill-at-piece: bad piece `{s}`")))
+        }),
+    };
+    let print_losses = args.flag("print-losses");
+    let report = checkpoint::run_session(plan, backend, source, &connect, &opts, |tid, piece, t| {
+        if print_losses {
+            println!("{}", loss_line(tid, piece, t));
+        }
+    })
+    .unwrap_or_else(|e| die(e.to_string()));
+    let mut t = Table::new("checkpointed run", &["metric", "value"]);
+    t.row(&["pieces".into(), opts.pieces.to_string()]);
+    t.row(&["checkpoint every".into(), format!("{} round(s) -> {}", opts.every, opts.dir.display())]);
+    t.row(&["segments".into(), report.segments.to_string()]);
+    t.row(&["rejoins".into(), report.rejoins.to_string()]);
+    t.row(&["losses fetched".into(), report.losses.len().to_string()]);
+    t.row(&["wall".into(), format!("{:.2}s", report.wall.as_secs_f64())]);
+    t.print();
 }
 
 fn plan(args: &Args) {

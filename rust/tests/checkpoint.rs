@@ -1,0 +1,241 @@
+//! Deterministic checkpoint/restore (DESIGN.md invariant 14): a run that is
+//! paused at a piece boundary and resumed from its snapshot produces losses
+//! bitwise-identical to a run that was never interrupted. The in-process
+//! half of the chaos suite — `tests/failure_injection.rs` adds the
+//! multi-process kill/rejoin leg over TCP.
+
+use oneflow::actor::{DataSource, Engine, FnSource, RunOptions};
+use oneflow::checkpoint::{restore, run_session, snapshot, SessionOptions, Snapshot};
+use oneflow::comm::{Loopback, Transport};
+use oneflow::compiler::{compile, CompileOptions, InputBinding, PhysPlan};
+use oneflow::data::SyntheticCorpus;
+use oneflow::models::{gpt_pipeline_real, GptPipelineConfig};
+use oneflow::runtime::NativeBackend;
+use oneflow::tensor::Tensor;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn cfg() -> GptPipelineConfig {
+    GptPipelineConfig {
+        stages: 2,
+        vocab: 32,
+        hidden: 16,
+        ff: 32,
+        blocks_per_stage: 1,
+        rows: 32,
+        lr: 0.2,
+        microbatches: 1,
+    }
+}
+
+fn build() -> PhysPlan {
+    let (g, loss, upd) = gpt_pipeline_real(&cfg());
+    compile(&g, &[loss], &upd, &CompileOptions::default())
+}
+
+fn source() -> Arc<dyn DataSource> {
+    let c = cfg();
+    let corpus = Arc::new(SyntheticCorpus::new(2048, c.vocab, 17));
+    let rows = c.rows;
+    Arc::new(FnSource(move |b: &InputBinding, piece: usize| {
+        let (ids, labels) = corpus.batch(piece, 1, rows);
+        match b.name.as_str() {
+            "ids" => Tensor::new([rows], oneflow::tensor::DType::I32, ids.data),
+            "labels" => Tensor::new([rows], oneflow::tensor::DType::I32, labels.data),
+            _ => Tensor::full(b.shape.clone(), b.dtype, 1.0),
+        }
+    }))
+}
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data.iter().map(|x| x.to_bits()).collect()
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ofck-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// The uninterrupted reference run: loss bits per piece.
+fn baseline(pieces: usize) -> Vec<Vec<u32>> {
+    let plan = build();
+    let tid = plan.fetches[0].tensor;
+    let report = Engine::new(plan, Arc::new(NativeBackend))
+        .with_source(source())
+        .run_with(RunOptions { pieces, timeout: Some(Duration::from_secs(60)) })
+        .expect("uninterrupted run");
+    report.fetched[&tid].iter().map(bits).collect()
+}
+
+/// A connect factory for single-process sessions: a fresh loopback per call.
+fn loopback_connect(_epoch: u32, _resume: u64) -> oneflow::Result<Arc<dyn Transport>> {
+    Ok(Arc::new(Loopback::default()))
+}
+
+/// Fold a session's losses into per-piece bits, asserting any piece the
+/// session visited twice (a re-run after rollback) reproduced the same bits.
+fn per_piece(
+    losses: &[(oneflow::graph::TensorId, u64, Tensor)],
+    pieces: usize,
+) -> Vec<Option<Vec<u32>>> {
+    let mut got: Vec<Option<Vec<u32>>> = vec![None; pieces];
+    for (_tid, piece, t) in losses {
+        let b = bits(t);
+        match &got[*piece as usize] {
+            Some(prev) => assert_eq!(prev, &b, "re-run piece {piece} diverged bitwise"),
+            None => got[*piece as usize] = Some(b),
+        }
+    }
+    got
+}
+
+/// Invariant 14, pause-free case: slicing a run into checkpointed segments
+/// (capture + snapshot + rebuild the engine per segment) must not perturb a
+/// single loss bit relative to the monolithic run.
+#[test]
+fn segmented_session_matches_uninterrupted_run_bitwise() {
+    let pieces = 8;
+    let want = baseline(pieces);
+    let dir = tmpdir("segmented");
+
+    let opts = SessionOptions {
+        pieces,
+        every: 2,
+        dir: dir.clone(),
+        timeout: Some(Duration::from_secs(60)),
+        ..Default::default()
+    };
+    let report = run_session(
+        Arc::new(build()),
+        Arc::new(NativeBackend),
+        source(),
+        &loopback_connect,
+        &opts,
+        |_, _, _| {},
+    )
+    .expect("checkpointed session");
+    assert_eq!(report.segments, 4, "8 pieces at every=2 is 4 segments");
+    assert_eq!(report.rejoins, 0);
+
+    let got = per_piece(&report.losses, pieces);
+    for (p, want_bits) in want.iter().enumerate() {
+        let got_bits = got[p].as_ref().unwrap_or_else(|| panic!("no loss for piece {p}"));
+        assert_eq!(got_bits, want_bits, "piece {p} loss diverged from the uninterrupted run");
+    }
+    // every boundary's snapshot is on disk (rollback may need any of them)
+    for boundary in [2u64, 4, 6, 8] {
+        assert!(
+            oneflow::checkpoint::snapshot_path(&dir, 0, boundary).exists(),
+            "missing snapshot at boundary {boundary}"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Invariant 14, pause/resume case: stop after 4 pieces, then `restore` a
+/// fresh session to 8 — the tail pieces match the uninterrupted run exactly.
+#[test]
+fn restore_resumes_bitwise_where_the_run_paused() {
+    let pieces = 8;
+    let want = baseline(pieces);
+    let dir = tmpdir("restore");
+
+    let first = run_session(
+        Arc::new(build()),
+        Arc::new(NativeBackend),
+        source(),
+        &loopback_connect,
+        &SessionOptions {
+            pieces: 4,
+            every: 2,
+            dir: dir.clone(),
+            timeout: Some(Duration::from_secs(60)),
+            ..Default::default()
+        },
+        |_, _, _| {},
+    )
+    .expect("first half");
+
+    let second = run_session(
+        Arc::new(build()),
+        Arc::new(NativeBackend),
+        source(),
+        &loopback_connect,
+        &SessionOptions {
+            pieces,
+            every: 2,
+            dir: dir.clone(),
+            restore: true,
+            timeout: Some(Duration::from_secs(60)),
+            ..Default::default()
+        },
+        |_, _, _| {},
+    )
+    .expect("restored second half");
+
+    // the restored session must not re-run what the snapshot already covers
+    assert!(
+        second.losses.iter().all(|(_, p, _)| *p >= 4),
+        "restore re-ran pieces before the snapshot boundary"
+    );
+
+    let mut all = first.losses.clone();
+    all.extend(second.losses.iter().cloned());
+    let got = per_piece(&all, pieces);
+    for (p, want_bits) in want.iter().enumerate() {
+        let got_bits = got[p].as_ref().unwrap_or_else(|| panic!("no loss for piece {p}"));
+        assert_eq!(got_bits, want_bits, "piece {p} loss diverged across the pause");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The snapshot round trip at the API level: capture a run's Var state,
+/// serialize, reload, and get bitwise the same state map back.
+#[test]
+fn snapshot_roundtrips_captured_var_state() {
+    let plan = Arc::new(build());
+    let report = Engine::from_arc(plan.clone(), Arc::new(NativeBackend))
+        .with_source(source())
+        .with_capture()
+        .run_with(RunOptions { pieces: 4, timeout: Some(Duration::from_secs(60)) })
+        .expect("captured run");
+    assert!(!report.var_state.is_empty(), "capture produced no Var state");
+
+    let dir = tmpdir("roundtrip");
+    let snap = snapshot(&plan, 0, 1, 4, &report.var_state).expect("snapshot");
+    let path = snap.write(&dir).expect("write");
+    let loaded = Snapshot::load(&path).expect("load");
+    let state = restore(&plan, &loaded).expect("restore");
+
+    assert_eq!(state.len(), report.var_state.len());
+    for (node, tensors) in &report.var_state {
+        let got = state.get(node).unwrap_or_else(|| panic!("node {node} missing after restore"));
+        assert_eq!(got.len(), tensors.len());
+        for (a, b) in tensors.iter().zip(got) {
+            assert_eq!(bits(a), bits(b), "node {node} state diverged through the snapshot");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A snapshot taken under one plan refuses to restore into another: the
+/// plan signature names the mismatch instead of resuming garbage.
+#[test]
+fn restore_rejects_a_snapshot_from_a_different_plan() {
+    let plan = Arc::new(build());
+    let report = Engine::from_arc(plan.clone(), Arc::new(NativeBackend))
+        .with_source(source())
+        .with_capture()
+        .run_with(RunOptions { pieces: 2, timeout: Some(Duration::from_secs(60)) })
+        .expect("captured run");
+    let snap = snapshot(&plan, 0, 1, 2, &report.var_state).expect("snapshot");
+
+    // same graph, different seed ⇒ different initial parameters ⇒ a
+    // different run: restoring across them must be refused by name
+    let (g, loss, upd) = gpt_pipeline_real(&cfg());
+    let other = compile(&g, &[loss], &upd, &CompileOptions { seed: 4242, ..Default::default() });
+    let err = restore(&other, &snap).expect_err("cross-plan restore must fail").to_string();
+    assert!(err.contains("different plan"), "mismatch not named: {err}");
+}

@@ -198,7 +198,7 @@ fn tcp_two_rank_dataparallel_training_matches_loopback_bitwise() {
     let loss = dp_loss();
     let base = Engine::new(dp_build(), Arc::new(NativeBackend))
         .with_source(dp_source())
-        .with_transport(Arc::new(Loopback))
+        .with_transport(Arc::new(Loopback::default()))
         .run_with(RunOptions { pieces, timeout: Some(Duration::from_secs(120)) })
         .expect("loopback run");
     let base_bits = loss_bits(&base, loss);

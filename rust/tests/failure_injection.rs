@@ -4,7 +4,11 @@
 //! plane: a lost point-to-point shard frame surfaces as a rank-tagged run
 //! error naming the route, within the comm deadline — never a hang. ISSUE 7
 //! enriches every failure report with the failing actor's virtual clock,
-//! piece progress, and the queue thread's last recorded trace event.
+//! piece progress, and the queue thread's last recorded trace event. ISSUE
+//! 10 adds the checkpoint/rejoin chaos leg: a rank killed at a piece
+//! boundary is restarted with `--restore`, the survivors roll back to the
+//! boundary everyone holds, and the finished run's losses are bitwise-equal
+//! to a run that was never interrupted (DESIGN.md invariant 14).
 
 use oneflow::actor::{Engine, RunOptions};
 use oneflow::compiler::{compile, CompileOptions};
@@ -187,6 +191,123 @@ fn tcp_dropped_shard_frame_surfaces_named_route_error() {
     // the producer rank cannot complete either (its consumers never ack);
     // it must also surface an error rather than hang past its watchdog
     assert!(r0.is_err(), "rank 0 unexpectedly succeeded after the fault");
+}
+
+/// `LOSS t.. piece=P bits=H ..` lines from a process's stdout, keyed by
+/// absolute piece. A piece printed twice by the *same* process (a re-run
+/// segment after a rollback) must carry identical bits.
+fn parse_loss_lines(stdout: &[u8]) -> HashMap<u64, String> {
+    let mut out = HashMap::new();
+    for line in String::from_utf8_lossy(stdout).lines() {
+        if !line.starts_with("LOSS ") {
+            continue;
+        }
+        let field = |key: &str| {
+            line.split_whitespace()
+                .find_map(|tok| tok.strip_prefix(key))
+                .unwrap_or_else(|| panic!("malformed LOSS line `{line}`"))
+                .to_string()
+        };
+        let piece: u64 = field("piece=").parse().expect("piece index");
+        let bits = field("bits=");
+        if let Some(prev) = out.insert(piece, bits.clone()) {
+            assert_eq!(prev, bits, "piece {piece} printed twice with different bits");
+        }
+    }
+    out
+}
+
+/// ISSUE 10 acceptance: a 2-process TCP GPT run loses rank 1 to `exit(9)`
+/// at the piece-4 boundary (the failpoint fires *before* that boundary's
+/// snapshot is written — the worst honest crash). Rank 1 is restarted with
+/// `--restore`; the resume negotiation rolls both ranks back to boundary 2
+/// (the newest snapshot everyone holds) and the run finishes. The union of
+/// LOSS lines across all three processes must be bitwise-identical to an
+/// uninterrupted world-of-one run, and re-run pieces must reproduce their
+/// first-attempt bits exactly.
+#[test]
+fn tcp_killed_rank_restores_and_rejoins_bitwise() {
+    use std::process::{Command, Stdio};
+
+    let exe = env!("CARGO_BIN_EXE_oneflow");
+    let dir = std::env::temp_dir().join(format!("ofck-chaos-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let dir_s = dir.to_str().expect("utf-8 tmp dir").to_string();
+
+    let base = [
+        "simulate", "--model", "gpt-real", "--backend", "native", "--pieces", "8",
+        "--print-losses",
+    ];
+
+    // the reference: one process, never interrupted
+    let out = Command::new(exe).args(base).output().expect("baseline run");
+    assert!(out.status.success(), "baseline failed: {}", String::from_utf8_lossy(&out.stderr));
+    let want = parse_loss_lines(&out.stdout);
+    assert_eq!(want.len(), 8, "baseline must print one loss per piece, got {want:?}");
+
+    let ports = oneflow::comm::free_local_ports(2).expect("free ports");
+    let peers = format!("127.0.0.1:{},127.0.0.1:{}", ports[0], ports[1]);
+    let worker = |rank: usize, extra: &[&str]| {
+        Command::new(exe)
+            .args(base)
+            .args(["--transport", "tcp", "--rank", &rank.to_string(), "--peers", &peers])
+            .args(["--checkpoint-every", "2", "--checkpoint-dir", &dir_s])
+            .args(["--timeout-secs", "15", "--max-rejoins", "3"])
+            .args(extra)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .unwrap_or_else(|e| panic!("spawning rank {rank}: {e}"))
+    };
+
+    let h0 = worker(0, &[]);
+    let h1 = worker(1, &["--kill-at-piece", "4"]);
+
+    // the victim dies with the failpoint's exit code, having printed the
+    // losses of every segment it completed
+    let out1a = h1.wait_with_output().expect("victim first run");
+    assert_eq!(
+        out1a.status.code(),
+        Some(9),
+        "victim must die at the failpoint; stderr: {}",
+        String::from_utf8_lossy(&out1a.stderr)
+    );
+
+    // restart it with --restore while the survivor is quiescing
+    let h1b = worker(1, &["--restore"]);
+    let out0 = h0.wait_with_output().expect("survivor run");
+    let out1b = h1b.wait_with_output().expect("victim restarted run");
+    assert!(
+        out0.status.success(),
+        "survivor (rank 0) failed: {}",
+        String::from_utf8_lossy(&out0.stderr)
+    );
+    assert!(
+        out1b.status.success(),
+        "restarted rank 1 failed: {}",
+        String::from_utf8_lossy(&out1b.stderr)
+    );
+
+    // merge all three processes' LOSS lines; overlapping pieces (re-run
+    // after the rollback) must agree bitwise across processes too
+    let mut got: HashMap<u64, String> = HashMap::new();
+    for stdout in [&out1a.stdout, &out0.stdout, &out1b.stdout] {
+        for (piece, bits) in parse_loss_lines(stdout) {
+            if let Some(prev) = got.insert(piece, bits.clone()) {
+                assert_eq!(prev, bits, "re-run piece {piece} diverged bitwise across the kill");
+            }
+        }
+    }
+    for (piece, bits) in &want {
+        assert_eq!(
+            got.get(piece),
+            Some(bits),
+            "piece {piece}: killed-and-rejoined run diverged from the uninterrupted run \
+             (got {got:?})"
+        );
+    }
+    assert_eq!(got.len(), want.len(), "extra pieces appeared: {got:?}");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// Data-integrity guard: feeding a wrong-shaped batch panics loudly in the

@@ -138,7 +138,7 @@ fn tcp_two_worker_makespan_equals_loopback() {
     let pieces = 8;
     let plain = Engine::new(build(), Arc::new(SimBackend)).run(pieces);
     let looped = Engine::new(build(), Arc::new(SimBackend))
-        .with_transport(Arc::new(Loopback))
+        .with_transport(Arc::new(Loopback::default()))
         .run(pieces);
     assert_eq!(
         plain.makespan.to_bits(),
@@ -224,7 +224,7 @@ fn tcp_two_worker_training_matches_loopback_bitwise() {
     let loss = pipeline_loss();
     let base = Engine::new(pipeline_build(), Arc::new(NativeBackend))
         .with_source(corpus_source())
-        .with_transport(Arc::new(Loopback))
+        .with_transport(Arc::new(Loopback::default()))
         .run_with(RunOptions { pieces, timeout: Some(Duration::from_secs(60)) })
         .expect("loopback run");
     let base_bits = loss_bits(&base, loss);
